@@ -1,0 +1,98 @@
+"""Micro-benchmarks of the rollout-plane hot paths (pure-Python) and the
+kernels (CPU, interpret/XLA — structural, not TPU wall-clock).
+
+CSV rows: name,us_per_call,derived
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.proxy import ProxyGateway
+from repro.core.reconstruct import build
+from repro.core.testing import Scripted, ScriptedBackend
+
+
+def _time(fn, n=5, warmup=1):
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6   # us
+
+
+def bench_reconstruction(turns=40):
+    gw = ProxyGateway(ScriptedBackend(
+        [Scripted(f"turn {t} " + "y" * 50) for t in range(turns)]))
+    messages = [{"role": "system", "content": "agent"}]
+    for t in range(turns):
+        messages.append({"role": "user", "content": f"u{t}"})
+        resp = gw.handle("/v1/chat/completions",
+                         {"model": "m", "messages": list(messages)},
+                         session_id="bench")
+        messages.append(resp["choices"][0]["message"])
+    sess = gw.session("bench")
+    tokens = sum(len(r.prompt_ids) + len(r.response_ids)
+                 for r in sess.completions)
+    rows = []
+    for strategy in ("per_request", "prefix_merging"):
+        us = _time(lambda: build(sess, strategy), n=20)
+        rows.append((f"reconstruct/{strategy}/{turns}turns", us,
+                     f"tokens_per_s={tokens/us*1e6:.0f}"))
+    return rows
+
+
+def bench_proxy_overhead():
+    gw = ProxyGateway(ScriptedBackend([Scripted("x") for _ in range(2000)]))
+    body = {"model": "m", "messages": [{"role": "user", "content": "q"}]}
+
+    def call():
+        gw.handle("/v1/messages",
+                  {"model": "m", "max_tokens": 4,
+                   "messages": [{"role": "user", "content": "q"}]},
+                  session_id="p")
+
+    us = _time(call, n=200, warmup=10)
+    return [("proxy/anthropic_roundtrip", us, "capture+transform+record")]
+
+
+def bench_kernels():
+    from repro.kernels import ops as OPS
+    rows = []
+    B, L, H, Hkv, D = 1, 256, 4, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, L, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, L, Hkv, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, L, Hkv, D), jnp.float32)
+    f_xla = jax.jit(lambda q, k, v: OPS.attention(q, k, v, impl="xla"))
+    f_xla(q, k, v).block_until_ready()
+    us = _time(lambda: f_xla(q, k, v).block_until_ready(), n=10)
+    rows.append((f"attention/xla_flash/{L}", us, "CPU structural"))
+
+    T, V, d = 512, 4096, 128
+    hid = jax.random.normal(ks[0], (T, d), jnp.float32)
+    tab = jax.random.normal(ks[1], (V, d), jnp.float32)
+    tgt = jax.random.randint(ks[2], (T,), 0, V, jnp.int32)
+    f_ce = jax.jit(lambda h, t, g: OPS.token_logprob(h, t, g, impl="xla",
+                                                     chunk=1024))
+    f_ce(hid, tab, tgt)[0].block_until_ready()
+    us = _time(lambda: f_ce(hid, tab, tgt)[0].block_until_ready(), n=10)
+    rows.append((f"token_logprob/xla_chunked/T{T}xV{V}", us, "CPU structural"))
+    return rows
+
+
+def main():
+    rows = []
+    rows += bench_proxy_overhead()
+    rows += bench_reconstruction()
+    rows += bench_kernels()
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""§Dry-run report: markdown summary of every (arch × shape × mesh) cell
+from results/dryrun.json — status, per-device analysis, collective mix,
+sharding fallbacks.
+
+    PYTHONPATH=src python -m benchmarks.dryrun_report > results/dryrun.md
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PiB"
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="results/dryrun.json")
+    args = ap.parse_args(argv)
+    with open(args.json) as f:
+        results = json.load(f)
+
+    n_ok = sum(1 for r in results.values() if r["status"] == "ok")
+    n_skip = sum(1 for r in results.values() if r["status"] == "skipped")
+    n_fail = sum(1 for r in results.values() if r["status"] == "fail")
+    print(f"## Dry-run summary: {n_ok} compiled ok, {n_skip} skipped "
+          f"(assignment rules), {n_fail} failed\n")
+    print("| arch | shape | mesh | status | flops/dev | hbm/dev | coll/dev "
+          "| top collective | lower+compile |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for key in sorted(results):
+        r = results[key]
+        if r["status"] == "skipped":
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | skipped "
+                  f"({r['reason'][:40]}…) | | | | | |")
+            continue
+        if r["status"] != "ok":
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | FAIL: "
+                  f"{r.get('error','')[:60]} | | | | | |")
+            continue
+        hlo = r.get("hlo", {})
+        colls = hlo.get("collectives", {})
+        top = max(colls.items(), key=lambda kv: kv[1]["bytes"])[0] if colls else "-"
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok "
+              f"| {hlo.get('flops', 0):.2e} | {fmt_bytes(hlo.get('hbm_bytes'))} "
+              f"| {fmt_bytes(hlo.get('collective_bytes'))} | {top} "
+              f"| {r.get('lower_s', 0)}+{r.get('compile_s', 0)}s |")
+    # fallbacks appendix
+    print("\n### Sharding fallbacks (divisibility)\n")
+    seen = set()
+    for r in results.values():
+        for fb in r.get("sharding_fallbacks", []):
+            fb_key = fb.split(":")[0].split("/")[-1] + fb.split("→")[-1]
+            if (r["arch"], fb_key) not in seen:
+                seen.add((r["arch"], fb_key))
+                print(f"- {r['arch']}: {fb}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Perf-iteration driver: re-lower ONE cell with knob overrides and diff the
+roofline terms against the recorded baseline.
+
+    PYTHONPATH=src python -m benchmarks.perf_iter --arch qwen3-32b \
+        --shape train_4k --set REPRO_FLASH_BF16_PV=1 --tag bf16_pv
+
+Knobs (env, read at trace time):
+    REPRO_REMAT=full|dots|none      activation-checkpoint policy
+    REPRO_CE_CHUNK=N                fused-CE vocab chunk
+    REPRO_FLASH_QB / REPRO_FLASH_KB blocked-attention tile sizes
+    REPRO_FLASH_BF16_PV=1           bf16 p·v matmul in the flash inner loop
+    REPRO_MOE_CF=F                  MoE capacity factor
+
+Each run appends a record to results/perf_iters.json so the §Perf log is
+reproducible.
+"""
+import argparse    # noqa: E402
+import json        # noqa: E402
+
+from repro.launch.dryrun import run_cell      # noqa: E402
+from benchmarks.roofline import analyze_record  # noqa: E402
+
+
+def terms(rec):
+    r = analyze_record(rec)
+    return {k: r[k] for k in ("compute_s", "memory_s", "collective_s",
+                              "dominant", "roofline_fraction", "useful_ratio")}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--set", action="append", default=[],
+                    metavar="KEY=VAL", help="env knob override")
+    ap.add_argument("--tag", default="variant")
+    ap.add_argument("--baseline", default="results/dryrun.json")
+    ap.add_argument("--log", default="results/perf_iters.json")
+    args = ap.parse_args(argv)
+
+    for kv in args.set:
+        k, _, v = kv.partition("=")
+        os.environ[k] = v
+
+    mesh_key = "pod2x16x16" if args.multi_pod else "16x16"
+    base = None
+    if os.path.exists(args.baseline):
+        with open(args.baseline) as f:
+            base = json.load(f).get(f"{args.arch}|{args.shape}|{mesh_key}")
+
+    rec = run_cell(args.arch, args.shape, multi_pod=args.multi_pod)
+    assert rec["status"] == "ok", rec.get("error")
+    after = terms(rec)
+    row = {"arch": args.arch, "shape": args.shape, "mesh": mesh_key,
+           "tag": args.tag, "knobs": args.set, "after": after}
+    print(f"== {args.arch} {args.shape} [{args.tag}]  knobs={args.set}")
+    if base and base.get("status") == "ok":
+        before = terms(base)
+        row["before"] = before
+        for k in ("compute_s", "memory_s", "collective_s"):
+            d = (after[k] - before[k]) / max(before[k], 1e-12)
+            print(f"  {k:<13} {before[k]:>10.3f} → {after[k]:>10.3f}  "
+                  f"({d:+.1%})")
+        print(f"  dominant      {before['dominant']} → {after['dominant']}")
+        print(f"  roofline      {before['roofline_fraction']:.2%} → "
+              f"{after['roofline_fraction']:.2%}")
+    else:
+        for k, v in after.items():
+            print(f"  {k}: {v}")
+    hist = []
+    if os.path.exists(args.log):
+        with open(args.log) as f:
+            hist = json.load(f)
+    hist.append(row)
+    os.makedirs(os.path.dirname(args.log) or ".", exist_ok=True)
+    with open(args.log, "w") as f:
+        json.dump(hist, f, indent=1)
+    return row
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,123 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+Per (arch × shape × mesh):
+    compute term    = HLO_FLOPs_global / (chips × 197 TFLOP/s bf16)
+    memory term     = HLO_bytes_global / (chips × 819 GB/s)
+    collective term = collective_bytes_global / (chips × 50 GB/s per link)
+
+All three from the trip-count-aware HLO analysis of the compiled dry-run
+(per-device values × chips = global).  Also reported:
+    MODEL_FLOPS = 6·N_active·D (train) or 2·N_active·D (inference),
+    useful ratio = MODEL_FLOPS / HLO_FLOPs (remat/redundancy waste),
+    dominant bottleneck + roofline fraction = compute / max(all three).
+
+    PYTHONPATH=src python -m benchmarks.roofline [--json results/dryrun.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+PEAK_FLOPS = 197e12          # bf16 per chip (TPU v5e)
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+MESH_CHIPS = {"16x16": 256, "pod2x16x16": 512}
+
+
+def analyze_record(rec):
+    chips = MESH_CHIPS[rec["mesh"]]
+    hlo = rec.get("hlo", {})
+    f_dev = hlo.get("flops", 0.0)
+    b_dev = hlo.get("hbm_bytes", 0.0)
+    c_dev = hlo.get("collective_bytes", 0.0)
+    compute_s = f_dev / PEAK_FLOPS
+    memory_s = b_dev / HBM_BW
+    coll_s = c_dev / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values()) or 1e-12
+    model_flops = rec.get("model_flops_global", 0.0)
+    hlo_flops_global = f_dev * chips
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "kind": rec["kind"],
+        "compute_s": compute_s, "memory_s": memory_s, "collective_s": coll_s,
+        "dominant": dominant,
+        "roofline_fraction": compute_s / bound,
+        "model_flops": model_flops,
+        "hlo_flops_global": hlo_flops_global,
+        "useful_ratio": (model_flops / hlo_flops_global
+                         if hlo_flops_global else 0.0),
+        "tokens_per_s_bound": (1.0 / bound),
+        "collectives": hlo.get("collectives", {}),
+        "fallbacks": rec.get("sharding_fallbacks", []),
+    }
+
+
+def what_would_help(row) -> str:
+    d = row["dominant"]
+    if d == "collective":
+        big = sorted(row["collectives"].items(),
+                     key=lambda kv: -kv[1]["bytes"])[:1]
+        name = big[0][0] if big else "?"
+        return f"cut {name} traffic (resharding/overlap)"
+    if d == "memory":
+        if row["useful_ratio"] < 0.3:
+            return "reduce recompute/materialization (remat policy, fusion)"
+        return "raise arithmetic intensity (larger per-chip tiles, bf16 temps)"
+    if row["useful_ratio"] < 0.5:
+        return "recompute waste: relax remat policy / causal block skipping"
+    return "compute-bound at good efficiency — scale batch or accept"
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="results/dryrun.json")
+    ap.add_argument("--out", default="results/roofline.json")
+    ap.add_argument("--mesh", default="16x16",
+                    help="roofline table mesh (single-pod per assignment)")
+    ap.add_argument("--md", default=None, help="write a markdown table here")
+    args = ap.parse_args(argv)
+
+    with open(args.json) as f:
+        results = json.load(f)
+
+    rows = []
+    for key, rec in sorted(results.items()):
+        if rec.get("status") != "ok" or rec["mesh"] != args.mesh:
+            continue
+        rows.append(analyze_record(rec))
+
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    hdr = (f"{'arch':<26} {'shape':<12} {'compute_s':>10} {'memory_s':>10} "
+           f"{'collect_s':>10} {'dominant':>10} {'roofl%':>7} {'useful%':>8}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        print(f"{r['arch']:<26} {r['shape']:<12} "
+              f"{r['compute_s']:>10.4f} {r['memory_s']:>10.4f} "
+              f"{r['collective_s']:>10.4f} {r['dominant']:>10} "
+              f"{100*r['roofline_fraction']:>6.1f}% "
+              f"{100*min(r['useful_ratio'],9.99):>7.1f}%")
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1)
+
+    if args.md:
+        with open(args.md, "w") as f:
+            f.write("| arch | shape | compute (s) | memory (s) | collective (s) "
+                    "| dominant | roofline | useful | next lever |\n")
+            f.write("|---|---|---|---|---|---|---|---|---|\n")
+            for r in rows:
+                f.write(f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} "
+                        f"| {r['memory_s']:.4f} | {r['collective_s']:.4f} "
+                        f"| {r['dominant']} | {100*r['roofline_fraction']:.1f}% "
+                        f"| {100*r['useful_ratio']:.1f}% "
+                        f"| {what_would_help(r)} |\n")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

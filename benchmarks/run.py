@@ -1,0 +1,67 @@
+"""Benchmark orchestrator — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Sections:
+  bench_core         — rollout-plane + kernel micro-benchmarks (CSV)
+  fig5_utilization   — per_request vs prefix_merging trainer load (Fig. 5b)
+  table1_rl          — GRPO reward climb across 4 harnesses (Table 1/Fig. 6)
+  table2_offline     — offline SFT accept/reject generation (Table 2)
+  roofline           — roofline table from the dry-run (assignment §g);
+                       skipped when results/dryrun.json is absent
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduce RL steps (CI-speed run)")
+    ap.add_argument("--skip-rl", action="store_true")
+    args = ap.parse_args(argv)
+    if args.fast:
+        os.environ.setdefault("POLAR_BENCH_STEPS", "3")
+        os.environ.setdefault("POLAR_BENCH_SAMPLES", "4")
+
+    t0 = time.time()
+    print("=" * 72)
+    print("== bench_core (name,us_per_call,derived)")
+    from benchmarks import bench_core
+    bench_core.main()
+
+    print("=" * 72)
+    print("== fig5_utilization")
+    from benchmarks import fig5_utilization
+    fig5_utilization.main()
+
+    if not args.skip_rl:
+        print("=" * 72)
+        print("== table1_rl")
+        from benchmarks import table1_rl
+        table1_rl.main()
+
+        print("=" * 72)
+        print("== table2_offline")
+        from benchmarks import table2_offline
+        table2_offline.main()
+
+    print("=" * 72)
+    print("== roofline (single-pod 16x16)")
+    if os.path.exists("results/dryrun.json"):
+        from benchmarks import roofline
+        roofline.main(["--json", "results/dryrun.json",
+                       "--md", "results/roofline.md"])
+    else:
+        print("  results/dryrun.json not found — run "
+              "`python -m repro.launch.dryrun --all` first")
+    print("=" * 72)
+    print(f"benchmarks done in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Offline SFT data generation (paper §4.2): fixed checkpoint + pi harness
+fanned out over tasks; accept a trajectory iff the verifier passes; write
+the released-format JSONL.
+
+    PYTHONPATH=src python examples/offline_datagen.py
+"""
+import json
+import os
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.inference import Engine
+from repro.rollout import (AgentSpec, GatewayNode, RolloutServer, RuntimeSpec,
+                           TaskRequest)
+
+TASKS = [
+    {"repo": "getmoto/moto", "instruction": "make the mock return 'a'",
+     "target": "a"},
+    {"repo": "python/mypy", "instruction": "the checker should print 'ok'",
+     "target": "ok"},
+]
+
+
+def main():
+    cfg = get_smoke_config("qwen3-32b").replace(vocab_size=512)
+    engine = Engine(cfg, rng=jax.random.PRNGKey(7), max_len=384, max_new=8)
+    server = RolloutServer()
+    server.register_node(GatewayNode(engine, run_workers=2))
+
+    os.makedirs("results", exist_ok=True)
+    out_path = "results/sft_corpus.jsonl"
+    accepted = attempts = 0
+    with open(out_path, "w") as out:
+        for i, t in enumerate(TASKS):
+            tid = server.submit_task(TaskRequest(
+                task_id=f"gen-{i}", instruction=t["instruction"],
+                num_samples=4, timeout_seconds=120.0,
+                runtime=RuntimeSpec(),
+                agent=AgentSpec(harness="pi", max_turns=2,
+                                config={"max_tokens": 8}),
+                builder={"strategy": "prefix_merging"},
+                evaluator={"strategy": "swebench_sim",
+                           "config": {"target": t["target"],
+                                      "partial_credit": False}},
+            ))
+            st = server.wait(tid, timeout=120)
+            for r in st.results:
+                attempts += 1
+                if r.reward == 1.0 and r.trajectory:   # single-bit filter
+                    accepted += 1
+                    tr = r.trajectory.traces[0]
+                    out.write(json.dumps({
+                        "instance_id": r.session_id, "repo": t["repo"],
+                        "problem_statement": t["instruction"],
+                        "messages": tr.prompt_messages + tr.response_messages,
+                    }) + "\n")
+    server.shutdown()
+    print(f"accepted {accepted}/{attempts} → {out_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Rollout-as-a-service demo: start the HTTP service, then drive it like an
+external trainer would — submit a task over HTTP, poll until done, and also
+talk to the provider proxy directly with a raw Anthropic-shaped request.
+
+    PYTHONPATH=src python examples/serve_black_box.py
+"""
+import json
+import threading
+import time
+import urllib.request
+from http.server import ThreadingHTTPServer
+
+from repro.launch.serve import build_stack, make_handler
+
+
+def main():
+    engine, server, nodes = build_stack("qwen3-32b")
+    httpd = ThreadingHTTPServer(("127.0.0.1", 0), make_handler(server, nodes))
+    port = httpd.server_address[1]
+    threading.Thread(target=httpd.serve_forever, daemon=True).start()
+    base = f"http://127.0.0.1:{port}"
+    print(f"service at {base}")
+
+    def post(path, obj):
+        req = urllib.request.Request(base + path, data=json.dumps(obj).encode(),
+                                     headers={"Content-Type": "application/json"})
+        return json.loads(urllib.request.urlopen(req, timeout=60).read())
+
+    # raw provider call through the proxy (what a harness binary does)
+    resp = post("/v1/messages", {"model": "policy", "max_tokens": 8,
+                                 "messages": [{"role": "user",
+                                               "content": "hello"}]})
+    print("anthropic-shaped response:",
+          resp["stop_reason"], [b["type"] for b in resp["content"]])
+
+    # rollout task over the service API (paper A.3/A.5)
+    post("/rollout/task/submit", {
+        "task_id": "demo-1",
+        "instruction": "Fix the issue in /polar/session/workspace.",
+        "num_samples": 2,
+        "agent": {"harness": "codex", "config": {"max_tokens": 8}},
+        "builder": {"strategy": "prefix_merging"},
+        "evaluator": {"strategy": "session_completion"},
+    })
+    for _ in range(300):
+        st = json.loads(urllib.request.urlopen(
+            base + "/rollout/task/demo-1", timeout=60).read())
+        if st["finished"] >= st["total"]:
+            break
+        time.sleep(0.2)
+    print("task status:", st)
+    httpd.shutdown()
+    server.shutdown()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""End-to-end driver (paper §4.1 at CPU scale): asynchronous GRPO over an
+unchanged coding harness on simulated SWE tasks.
+
+Full pipeline: rollout server + gateway staging + provider proxy + JAX
+engine + trajectory reconstruction + group advantages + GRPO/TIS + async
+weight push + checkpointing.
+
+    PYTHONPATH=src python examples/train_grpo_swe_sim.py --steps 12 \
+        --harness codex
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    main(sys.argv[1:] or ["--steps", "12", "--harness", "codex",
+                          "--ckpt-dir", "results/ckpt_swe_sim"])

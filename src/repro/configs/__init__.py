@@ -1,0 +1,21 @@
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES
+from repro.configs.registry import (
+    ARCH_IDS,
+    all_cells,
+    cell_is_applicable,
+    get_config,
+    get_shape,
+    get_smoke_config,
+)
+
+__all__ = [
+    "ModelConfig",
+    "ShapeConfig",
+    "SHAPES",
+    "ARCH_IDS",
+    "all_cells",
+    "cell_is_applicable",
+    "get_config",
+    "get_shape",
+    "get_smoke_config",
+]

@@ -1,0 +1,141 @@
+"""Config schema shared by every architecture in the zoo.
+
+One frozen dataclass covers all assigned families (dense / ssm / hybrid /
+moe / encdec / vlm).  Family-specific fields default to "off" values so a
+config only sets what it uses.  Configs are pure data — no jax imports here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    # --- identity ---------------------------------------------------------
+    name: str
+    family: str  # "dense" | "ssm" | "hybrid" | "moe" | "encdec" | "vlm"
+
+    # --- trunk dimensions -------------------------------------------------
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+
+    # --- norms / activations ---------------------------------------------
+    mlp_type: str = "swiglu"          # "swiglu" | "geglu" | "gelu"
+    norm_type: str = "rmsnorm"        # "rmsnorm" | "layernorm"
+    rmsnorm_unit_offset: bool = False  # gemma-style (1 + w) scale
+    norm_eps: float = 1e-6
+    qk_norm: bool = False              # qwen3 / gemma3 per-head RMSNorm on q,k
+
+    # --- positions ---------------------------------------------------------
+    rope_theta: float = 1e4
+    rope_local_theta: float = 1e4      # gemma3 separate local-layer theta
+    rope_style: str = "full"           # "full" | "half" (chatglm 2d) | "mrope" | "none"
+    mrope_sections: Tuple[int, ...] = ()
+    max_position_embeddings: int = 1 << 20
+    learned_positions: bool = False    # whisper
+
+    # --- embeddings ---------------------------------------------------------
+    embedding_scale: bool = False      # gemma sqrt(d_model) input scaling
+    tie_embeddings: bool = True
+
+    # --- attention pattern --------------------------------------------------
+    sliding_window: int = 0            # 0 = full attention
+    # gemma3 5:1 pattern — every `global_every`-th layer is global, rest local
+    global_every: int = 0              # 0 = all layers follow sliding_window
+
+    # --- SSM (mamba2 / zamba2) ----------------------------------------------
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_ngroups: int = 1
+    ssm_conv: int = 4
+    ssm_chunk: int = 256               # SSD chunk length
+
+    # --- hybrid (zamba2) ------------------------------------------------------
+    shared_attn_every: int = 0         # apply the shared attn block every k layers
+
+    # --- MoE -------------------------------------------------------------------
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    num_shared_experts: int = 0
+    moe_every: int = 1                 # llama4: MoE on every 2nd layer
+    moe_capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+
+    # --- encoder/decoder (whisper) ------------------------------------------------
+    encoder_layers: int = 0
+    encoder_seq: int = 0               # canonical encoder length (frames)
+
+    # --- vlm (qwen2-vl) --------------------------------------------------------
+    vision_tokens: int = 0             # patch embeddings provided by input_specs
+
+    # --- numerics ---------------------------------------------------------------
+    dtype: str = "bfloat16"
+    param_dtype: str = "bfloat16"
+    # optimizer-state dtype lives in TrainConfig, but very large models need to
+    # signal a preference (llama4-maverick → bf16 moments to fit 16G HBM).
+    opt_state_dtype: str = "float32"
+
+    # ----------------------------------------------------------------------------
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    @property
+    def d_inner(self) -> int:
+        """SSM inner width."""
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_nheads(self) -> int:
+        return self.d_inner // self.ssm_headdim if self.ssm_headdim else 0
+
+    @property
+    def attn_out_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    def is_global_layer(self, idx: int) -> bool:
+        """gemma3 5:1 pattern — layer idx (0-based) is a global-attention layer."""
+        if self.global_every <= 0:
+            return self.sliding_window == 0
+        return (idx % self.global_every) == (self.global_every - 1)
+
+    def uses_full_attention_everywhere(self) -> bool:
+        """True for archs where *every* attention layer is unbounded full
+        attention (→ long_500k is skipped per assignment)."""
+        if self.family in ("ssm",):
+            return False
+        if self.family == "hybrid":
+            return False
+        if self.sliding_window > 0:
+            return False  # at least partially local (gemma3)
+        return True
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input-shape cell."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+    @property
+    def tokens_per_step(self) -> int:
+        if self.kind == "decode":
+            return self.global_batch  # one new token per sequence
+        return self.seq_len * self.global_batch
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": ShapeConfig("prefill_32k", seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": ShapeConfig("decode_32k", seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": ShapeConfig("long_500k", seq_len=524288, global_batch=1, kind="decode"),
+}

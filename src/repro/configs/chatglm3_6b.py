@@ -1,0 +1,33 @@
+"""chatglm3-6b — dense, 2D (partial) RoPE, near-MQA GQA.  [arXiv:2406.12793]
+
+28L d_model=4096 32H (GQA kv=2) head_dim=128 d_ff=13696 vocab=65024.
+Rotary applied to half of head_dim (rope_style="half").
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="chatglm3-6b",
+    family="dense",
+    num_layers=28,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=2,
+    head_dim=128,
+    d_ff=13696,
+    vocab_size=65024,
+    mlp_type="swiglu",
+    rope_style="half",
+    rope_theta=10_000.0,
+    tie_embeddings=False,
+)
+
+SMOKE = CONFIG.replace(
+    name="chatglm3-smoke",
+    num_layers=2,
+    d_model=64,
+    num_heads=8,
+    num_kv_heads=2,
+    head_dim=8,
+    d_ff=128,
+    vocab_size=256,
+)

@@ -1,0 +1,41 @@
+"""gemma3-27b — dense, 5:1 local:global attention, 128k context.
+
+62L d_model=5376 32H (GQA kv=16) head_dim=128 d_ff=21504 (GeGLU) vocab=262144.
+Local layers: sliding window 1024, theta 10k.  Global layers (every 6th):
+full attention, theta 1M.  qk-norm, RMSNorm(1+w), sqrt(d) embedding scale.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-27b",
+    family="dense",
+    num_layers=62,
+    d_model=5376,
+    num_heads=32,
+    num_kv_heads=16,
+    head_dim=128,
+    d_ff=21504,
+    vocab_size=262144,
+    mlp_type="geglu",
+    rmsnorm_unit_offset=True,
+    embedding_scale=True,
+    qk_norm=True,
+    rope_theta=1_000_000.0,
+    rope_local_theta=10_000.0,
+    sliding_window=1024,
+    global_every=6,  # 5 local : 1 global
+    tie_embeddings=True,
+)
+
+SMOKE = CONFIG.replace(
+    name="gemma3-smoke",
+    num_layers=6,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=256,
+    sliding_window=8,
+    global_every=3,
+)

@@ -1,0 +1,34 @@
+"""gemma-7b — dense, GeGLU, head_dim=256.  [arXiv:2403.08295]
+
+28L d_model=3072 16H (kv=16) head_dim=256 d_ff=24576 vocab=256000.
+sqrt(d) embedding scale, RMSNorm(1+w), theta 10k.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma-7b",
+    family="dense",
+    num_layers=28,
+    d_model=3072,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=256,
+    d_ff=24576,
+    vocab_size=256000,
+    mlp_type="geglu",
+    rmsnorm_unit_offset=True,
+    embedding_scale=True,
+    rope_theta=10_000.0,
+    tie_embeddings=True,
+)
+
+SMOKE = CONFIG.replace(
+    name="gemma-smoke",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=32,  # keep head_dim > d_model/num_heads, like the real config
+    d_ff=128,
+    vocab_size=256,
+)

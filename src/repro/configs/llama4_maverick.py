@@ -1,0 +1,44 @@
+"""llama4-maverick-400b-a17b — MoE 128 experts top-1 + shared expert.
+
+48L d_model=5120 40H (GQA kv=8) head_dim=128, per-expert d_ff=8192,
+128 experts top-1, MoE on every 2nd layer, 1 shared expert, vocab=202048.
+[hf:meta-llama/Llama-4 family]
+
+NOTE: at 400B params, Adam f32 moments exceed v5e-256 HBM; config selects
+bf16 optimizer state (see DESIGN.md §8).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-maverick-400b-a17b",
+    family="moe",
+    num_layers=48,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=202048,
+    mlp_type="swiglu",
+    rope_theta=500_000.0,
+    num_experts=128,
+    num_experts_per_tok=1,
+    num_shared_experts=1,
+    moe_every=2,
+    tie_embeddings=False,
+    opt_state_dtype="bfloat16",
+)
+
+SMOKE = CONFIG.replace(
+    name="llama4-smoke",
+    num_layers=4,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=16,
+    d_ff=96,
+    vocab_size=256,
+    num_experts=4,
+    num_experts_per_tok=1,
+    moe_every=2,
+)

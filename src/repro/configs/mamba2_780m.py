@@ -1,0 +1,36 @@
+"""mamba2-780m — SSD (state-space duality), attention-free.  [arXiv:2405.21060]
+
+48L d_model=1536 d_ff=0 vocab=50280, ssm_state=128, expand=2 → d_inner=3072,
+headdim=64 → 48 SSD heads, ngroups=1.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-780m",
+    family="ssm",
+    num_layers=48,
+    d_model=1536,
+    num_heads=0,
+    num_kv_heads=0,
+    head_dim=0,
+    d_ff=0,
+    vocab_size=50280,
+    rope_style="none",
+    ssm_state=128,
+    ssm_expand=2,
+    ssm_headdim=64,
+    ssm_ngroups=1,
+    ssm_conv=4,
+    norm_type="rmsnorm",
+    tie_embeddings=True,
+)
+
+SMOKE = CONFIG.replace(
+    name="mamba2-smoke",
+    num_layers=2,
+    d_model=64,
+    vocab_size=256,
+    ssm_state=16,
+    ssm_headdim=16,  # d_inner=128 → 8 heads
+    ssm_chunk=16,
+)

@@ -1,0 +1,38 @@
+"""phi3.5-moe-42b-a6.6b — MoE 16 experts top-2.  [hf:microsoft/Phi-3.5-MoE-instruct]
+
+32L d_model=4096 32H (GQA kv=8) head_dim=128, per-expert d_ff=6400,
+16 experts top-2, vocab=32064.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi3.5-moe-42b-a6.6b",
+    family="moe",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=6400,
+    vocab_size=32064,
+    mlp_type="swiglu",
+    rope_theta=10_000.0,
+    num_experts=16,
+    num_experts_per_tok=2,
+    num_shared_experts=0,
+    moe_every=1,
+    tie_embeddings=False,
+)
+
+SMOKE = CONFIG.replace(
+    name="phi35-moe-smoke",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=16,
+    d_ff=96,
+    vocab_size=256,
+    num_experts=4,
+    num_experts_per_tok=2,
+)

@@ -1,0 +1,39 @@
+"""qwen2-vl-7b — VLM backbone with M-RoPE.  [arXiv:2409.12191]
+
+28L d_model=3584 28H (GQA kv=4) head_dim=128 d_ff=18944 vocab=152064.
+Vision frontend is a STUB per assignment: input_specs() provides precomputed
+patch embeddings merged at reserved positions, plus 3D (t,h,w) position ids
+for M-RoPE (sections 16/24/24 of the 64 frequency pairs).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-7b",
+    family="vlm",
+    num_layers=28,
+    d_model=3584,
+    num_heads=28,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=18944,
+    vocab_size=152064,
+    mlp_type="swiglu",
+    rope_style="mrope",
+    mrope_sections=(16, 24, 24),
+    rope_theta=1_000_000.0,
+    vision_tokens=256,
+    tie_embeddings=False,
+)
+
+SMOKE = CONFIG.replace(
+    name="qwen2-vl-smoke",
+    num_layers=2,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=256,
+    mrope_sections=(2, 3, 3),
+    vision_tokens=8,
+)

@@ -1,0 +1,32 @@
+"""qwen3-32b — dense, GQA + qk-norm.  [hf:Qwen/Qwen3-8B family]
+
+64L d_model=5120 64H (GQA kv=8) head_dim=128 d_ff=25600 vocab=151936.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-32b",
+    family="dense",
+    num_layers=64,
+    d_model=5120,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=25600,
+    vocab_size=151936,
+    mlp_type="swiglu",
+    qk_norm=True,
+    rope_theta=1_000_000.0,
+    tie_embeddings=False,
+)
+
+SMOKE = CONFIG.replace(
+    name="qwen3-smoke",
+    num_layers=2,
+    d_model=64,
+    num_heads=8,
+    num_kv_heads=2,
+    head_dim=8,
+    d_ff=128,
+    vocab_size=256,
+)

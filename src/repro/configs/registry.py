@@ -1,0 +1,55 @@
+"""Architecture registry — ``--arch <id>`` resolution for every entrypoint."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, Tuple
+
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES
+
+_ARCH_MODULES: Dict[str, str] = {
+    "mamba2-780m": "repro.configs.mamba2_780m",
+    "gemma3-27b": "repro.configs.gemma3_27b",
+    "qwen3-32b": "repro.configs.qwen3_32b",
+    "gemma-7b": "repro.configs.gemma_7b",
+    "chatglm3-6b": "repro.configs.chatglm3_6b",
+    "whisper-small": "repro.configs.whisper_small",
+    "zamba2-1.2b": "repro.configs.zamba2_1p2b",
+    "phi3.5-moe-42b-a6.6b": "repro.configs.phi35_moe",
+    "llama4-maverick-400b-a17b": "repro.configs.llama4_maverick",
+    "qwen2-vl-7b": "repro.configs.qwen2_vl_7b",
+}
+
+ARCH_IDS = tuple(_ARCH_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(_ARCH_MODULES[arch]).CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(_ARCH_MODULES[arch]).SMOKE
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+def cell_is_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Assignment rules: long_500k skipped for pure full-attention archs;
+    decode shapes skipped for encoder-only archs (none assigned)."""
+    if shape.name == "long_500k" and cfg.uses_full_attention_everywhere():
+        return False, "long_500k skipped: pure full attention (see DESIGN.md)"
+    return True, ""
+
+
+def all_cells():
+    """Yield (arch_id, shape_name, applicable, reason) for the 40 cells."""
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape_name, shape in SHAPES.items():
+            ok, why = cell_is_applicable(cfg, shape)
+            yield arch, shape_name, ok, why

@@ -1,0 +1,41 @@
+"""whisper-small — encoder-decoder audio backbone.  [arXiv:2212.04356]
+
+12L enc + 12L dec, d_model=768 12H d_ff=3072 vocab=51865.  LayerNorm + GELU,
+learned positions, no RoPE.  Conv frontend is a STUB per the assignment:
+input_specs() provides precomputed frame embeddings [B, frames, d_model].
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-small",
+    family="encdec",
+    num_layers=12,           # decoder layers
+    encoder_layers=12,
+    encoder_seq=1500,        # canonical 30 s of audio at 50 Hz
+    d_model=768,
+    num_heads=12,
+    num_kv_heads=12,
+    head_dim=64,
+    d_ff=3072,
+    vocab_size=51865,
+    mlp_type="gelu",
+    norm_type="layernorm",
+    norm_eps=1e-5,
+    rope_style="none",
+    learned_positions=True,
+    max_position_embeddings=1 << 16,
+    tie_embeddings=True,
+)
+
+SMOKE = CONFIG.replace(
+    name="whisper-smoke",
+    num_layers=2,
+    encoder_layers=2,
+    encoder_seq=32,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=256,
+)

@@ -1,0 +1,43 @@
+"""zamba2-1.2b — hybrid Mamba2 + shared attention blocks.  [arXiv:2411.15242]
+
+38 Mamba2 layers, d_model=2048, ssm_state=64; a SHARED attention+MLP block
+(32H kv=32 head_dim=64, d_ff=8192) is applied every 6 layers with shared
+parameters (7 applications).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-1.2b",
+    family="hybrid",
+    num_layers=38,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=32000,
+    mlp_type="geglu",
+    rope_theta=10_000.0,
+    ssm_state=64,
+    ssm_expand=2,
+    ssm_headdim=64,   # d_inner=4096 → 64 SSD heads
+    ssm_ngroups=1,
+    ssm_conv=4,
+    shared_attn_every=6,
+    tie_embeddings=True,
+)
+
+SMOKE = CONFIG.replace(
+    name="zamba2-smoke",
+    num_layers=5,
+    d_model=64,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=16,
+    d_ff=128,
+    vocab_size=256,
+    ssm_state=16,
+    ssm_headdim=16,
+    ssm_chunk=16,
+    shared_attn_every=2,
+)

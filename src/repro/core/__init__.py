@@ -1,0 +1,13 @@
+"""Polar core — the paper's primary contribution: proxy-based rollout
+capture (proxy, providers) and token-faithful trajectory reconstruction
+(reconstruct), over the shared data contracts in types."""
+from repro.core.types import (CompletionRecord, CompletionSession, SessionResult,
+                              Trace, Trajectory)
+from repro.core.proxy import InferenceBackend, ProxyGateway
+from repro.core.reconstruct import build, get_builder, register
+
+__all__ = [
+    "CompletionRecord", "CompletionSession", "SessionResult", "Trace",
+    "Trajectory", "InferenceBackend", "ProxyGateway", "build", "get_builder",
+    "register",
+]

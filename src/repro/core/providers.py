@@ -1,0 +1,318 @@
+"""Provider API transformers (paper §3.2 steps 1, 2 and 4).
+
+The gateway proxy accepts Anthropic Messages, OpenAI Chat Completions,
+OpenAI Responses and Google generateContent-style requests; normalizes them
+to the OpenAI Chat Completions shape consumed by the local inference
+backend (adding the fields training needs, e.g. logprobs=true); and
+transforms the backend response back into the provider shape the harness
+expects — including a synthetic SSE stream for streaming requests
+(non-streaming upstream → provider-shaped events, paper §3.2 step 4).
+"""
+from __future__ import annotations
+
+import json
+import uuid
+from typing import Any, Dict, List, Optional, Tuple
+
+PROVIDERS = ("anthropic", "openai_chat", "openai_responses", "google")
+
+
+# ---------------------------------------------------------------------------
+# 1. detection — request path + headers
+# ---------------------------------------------------------------------------
+
+def detect_provider(path: str, headers: Optional[Dict[str, str]] = None) -> str:
+    headers = headers or {}
+    if path.endswith("/v1/messages") or "/messages" in path:
+        return "anthropic"
+    if ":generateContent" in path or ":streamGenerateContent" in path:
+        return "google"
+    if path.endswith("/v1/responses") or path.endswith("/responses"):
+        return "openai_responses"
+    if "chat/completions" in path:
+        return "openai_chat"
+    if "anthropic-version" in {k.lower() for k in headers}:
+        return "anthropic"
+    raise ValueError(f"cannot detect provider API from path {path!r}")
+
+
+# ---------------------------------------------------------------------------
+# content helpers
+# ---------------------------------------------------------------------------
+
+def _anthropic_content_to_text(content) -> Tuple[str, List[Dict[str, Any]]]:
+    """Anthropic content blocks → (text, tool_calls in OpenAI shape)."""
+    if isinstance(content, str):
+        return content, []
+    text_parts, tool_calls = [], []
+    for block in content or []:
+        t = block.get("type")
+        if t == "text":
+            text_parts.append(block.get("text", ""))
+        elif t == "tool_use":
+            tool_calls.append({
+                "id": block.get("id", f"call_{uuid.uuid4().hex[:8]}"),
+                "type": "function",
+                "function": {"name": block.get("name", ""),
+                             "arguments": json.dumps(block.get("input", {}))},
+            })
+        elif t == "tool_result":
+            c = block.get("content", "")
+            if isinstance(c, list):
+                c = "".join(p.get("text", "") for p in c if isinstance(p, dict))
+            text_parts.append(c)
+    return "".join(text_parts), tool_calls
+
+
+# ---------------------------------------------------------------------------
+# 2. normalization — provider request → OpenAI Chat shape
+# ---------------------------------------------------------------------------
+
+def to_openai_chat(provider: str, body: Dict[str, Any]) -> Dict[str, Any]:
+    if provider == "openai_chat":
+        req = dict(body)
+    elif provider == "anthropic":
+        messages: List[Dict[str, Any]] = []
+        sys = body.get("system")
+        if sys:
+            if isinstance(sys, list):
+                sys = "".join(b.get("text", "") for b in sys)
+            messages.append({"role": "system", "content": sys})
+        for m in body.get("messages", []):
+            role = m["role"]
+            content = m.get("content")
+            if isinstance(content, list) and any(
+                    b.get("type") == "tool_result" for b in content):
+                for b in content:
+                    if b.get("type") == "tool_result":
+                        c = b.get("content", "")
+                        if isinstance(c, list):
+                            c = "".join(p.get("text", "") for p in c
+                                        if isinstance(p, dict))
+                        messages.append({"role": "tool",
+                                         "tool_call_id": b.get("tool_use_id", ""),
+                                         "content": c})
+                    elif b.get("type") == "text":
+                        messages.append({"role": role, "content": b.get("text", "")})
+                continue
+            text, tool_calls = _anthropic_content_to_text(content)
+            msg: Dict[str, Any] = {"role": role, "content": text}
+            if tool_calls:
+                msg["tool_calls"] = tool_calls
+            messages.append(msg)
+        req = {
+            "model": body.get("model"),
+            "messages": messages,
+            "max_tokens": body.get("max_tokens"),
+            "temperature": body.get("temperature"),
+            "stop": body.get("stop_sequences"),
+        }
+        tools = body.get("tools")
+        if tools:
+            req["tools"] = [{"type": "function",
+                             "function": {"name": t["name"],
+                                          "description": t.get("description", ""),
+                                          "parameters": t.get("input_schema", {})}}
+                            for t in tools]
+        tc = body.get("tool_choice")
+        if tc:
+            req["tool_choice"] = tc
+    elif provider == "openai_responses":
+        messages = []
+        if body.get("instructions"):
+            messages.append({"role": "system", "content": body["instructions"]})
+        inp = body.get("input", [])
+        if isinstance(inp, str):
+            messages.append({"role": "user", "content": inp})
+        else:
+            for item in inp:
+                itype = item.get("type", "message")
+                if itype == "message":
+                    content = item.get("content")
+                    if isinstance(content, list):
+                        content = "".join(p.get("text", "") for p in content
+                                          if isinstance(p, dict))
+                    messages.append({"role": item.get("role", "user"),
+                                     "content": content})
+                elif itype == "function_call":
+                    messages.append({"role": "assistant", "content": "",
+                                     "tool_calls": [{
+                                         "id": item.get("call_id", ""),
+                                         "type": "function",
+                                         "function": {"name": item.get("name", ""),
+                                                      "arguments": item.get("arguments", "")}}]})
+                elif itype == "function_call_output":
+                    messages.append({"role": "tool",
+                                     "tool_call_id": item.get("call_id", ""),
+                                     "content": item.get("output", "")})
+        req = {
+            "model": body.get("model"),
+            "messages": messages,
+            "max_tokens": body.get("max_output_tokens"),
+            "temperature": body.get("temperature"),
+        }
+        if body.get("tools"):
+            req["tools"] = [{"type": "function",
+                             "function": {"name": t.get("name", ""),
+                                          "description": t.get("description", ""),
+                                          "parameters": t.get("parameters", {})}}
+                            for t in body["tools"]]
+    elif provider == "google":
+        messages = []
+        si = body.get("systemInstruction") or body.get("system_instruction")
+        if si:
+            parts = si.get("parts", []) if isinstance(si, dict) else []
+            messages.append({"role": "system",
+                             "content": "".join(p.get("text", "") for p in parts)})
+        for c in body.get("contents", []):
+            role = {"user": "user", "model": "assistant",
+                    "function": "tool"}.get(c.get("role", "user"), "user")
+            text = "".join(p.get("text", "") for p in c.get("parts", [])
+                           if "text" in p)
+            fcalls = [p["functionCall"] for p in c.get("parts", [])
+                      if "functionCall" in p]
+            fresps = [p["functionResponse"] for p in c.get("parts", [])
+                      if "functionResponse" in p]
+            if fresps:
+                for fr in fresps:
+                    messages.append({"role": "tool",
+                                     "tool_call_id": fr.get("name", ""),
+                                     "content": json.dumps(fr.get("response", {}))})
+                continue
+            msg: Dict[str, Any] = {"role": role, "content": text}
+            if fcalls:
+                msg["tool_calls"] = [{
+                    "id": fc.get("name", f"call_{i}"),
+                    "type": "function",
+                    "function": {"name": fc.get("name", ""),
+                                 "arguments": json.dumps(fc.get("args", {}))}}
+                    for i, fc in enumerate(fcalls)]
+            messages.append(msg)
+        gen = body.get("generationConfig", {})
+        req = {
+            "model": body.get("model", "gemini"),
+            "messages": messages,
+            "max_tokens": gen.get("maxOutputTokens"),
+            "temperature": gen.get("temperature"),
+        }
+    else:
+        raise ValueError(f"unknown provider {provider!r}")
+
+    # fields the trainer needs (paper §3.2 step 2)
+    req["logprobs"] = True
+    req.setdefault("model", "policy")
+    req["messages"] = [m for m in req.get("messages", []) if m is not None]
+    return req
+
+
+# ---------------------------------------------------------------------------
+# 4. response transformation — backend response → provider shape
+# ---------------------------------------------------------------------------
+
+def from_openai_chat(provider: str, resp: Dict[str, Any]) -> Dict[str, Any]:
+    """resp is an OpenAI Chat Completions response produced by the backend."""
+    choice = resp["choices"][0]
+    msg = choice["message"]
+    finish = choice.get("finish_reason", "stop")
+    if provider == "openai_chat":
+        return resp
+    if provider == "anthropic":
+        content: List[Dict[str, Any]] = []
+        if msg.get("content"):
+            content.append({"type": "text", "text": msg["content"]})
+        for tc in msg.get("tool_calls") or []:
+            fn = tc["function"]
+            try:
+                args = json.loads(fn.get("arguments") or "{}")
+            except json.JSONDecodeError:
+                args = {"_raw": fn.get("arguments")}
+            content.append({"type": "tool_use", "id": tc["id"],
+                            "name": fn["name"], "input": args})
+        stop_reason = {"stop": "end_turn", "length": "max_tokens",
+                       "tool_calls": "tool_use"}.get(finish, "end_turn")
+        return {"id": resp.get("id", f"msg_{uuid.uuid4().hex[:12]}"),
+                "type": "message", "role": "assistant", "model": resp.get("model"),
+                "content": content, "stop_reason": stop_reason,
+                "usage": resp.get("usage", {})}
+    if provider == "openai_responses":
+        output: List[Dict[str, Any]] = []
+        if msg.get("content"):
+            output.append({"type": "message", "role": "assistant",
+                           "content": [{"type": "output_text",
+                                        "text": msg["content"]}]})
+        for tc in msg.get("tool_calls") or []:
+            output.append({"type": "function_call", "call_id": tc["id"],
+                           "name": tc["function"]["name"],
+                           "arguments": tc["function"]["arguments"]})
+        return {"id": resp.get("id", f"resp_{uuid.uuid4().hex[:12]}"),
+                "object": "response", "model": resp.get("model"),
+                "output": output, "status": "completed",
+                "usage": resp.get("usage", {})}
+    if provider == "google":
+        parts: List[Dict[str, Any]] = []
+        if msg.get("content"):
+            parts.append({"text": msg["content"]})
+        for tc in msg.get("tool_calls") or []:
+            try:
+                args = json.loads(tc["function"].get("arguments") or "{}")
+            except json.JSONDecodeError:
+                args = {}
+            parts.append({"functionCall": {"name": tc["function"]["name"],
+                                           "args": args}})
+        return {"candidates": [{
+            "content": {"role": "model", "parts": parts},
+            "finishReason": {"stop": "STOP", "length": "MAX_TOKENS",
+                             "tool_calls": "STOP"}.get(finish, "STOP"),
+        }], "usageMetadata": resp.get("usage", {})}
+    raise ValueError(f"unknown provider {provider!r}")
+
+
+# ---------------------------------------------------------------------------
+# synthetic streaming (paper §3.2 step 4): non-streaming upstream response →
+# provider-shaped server-sent events
+# ---------------------------------------------------------------------------
+
+def to_stream_events(provider: str, resp: Dict[str, Any]) -> List[Dict[str, Any]]:
+    shaped = from_openai_chat(provider, resp)
+    if provider == "anthropic":
+        events = [{"type": "message_start",
+                   "message": {**shaped, "content": []}}]
+        for i, block in enumerate(shaped["content"]):
+            if block["type"] == "text":
+                events.append({"type": "content_block_start", "index": i,
+                               "content_block": {"type": "text", "text": ""}})
+                events.append({"type": "content_block_delta", "index": i,
+                               "delta": {"type": "text_delta",
+                                         "text": block["text"]}})
+            else:
+                events.append({"type": "content_block_start", "index": i,
+                               "content_block": {k: v for k, v in block.items()
+                                                 if k != "input"} | {"input": {}}})
+                events.append({"type": "content_block_delta", "index": i,
+                               "delta": {"type": "input_json_delta",
+                                         "partial_json": json.dumps(block["input"])}})
+            events.append({"type": "content_block_stop", "index": i})
+        events.append({"type": "message_delta",
+                       "delta": {"stop_reason": shaped["stop_reason"]}})
+        events.append({"type": "message_stop"})
+        return events
+    if provider == "openai_chat":
+        choice = resp["choices"][0]
+        msg = choice["message"]
+        events = [{"object": "chat.completion.chunk",
+                   "choices": [{"delta": {"role": "assistant"}, "index": 0}]}]
+        if msg.get("content"):
+            events.append({"object": "chat.completion.chunk",
+                           "choices": [{"delta": {"content": msg["content"]},
+                                        "index": 0}]})
+        for tc in msg.get("tool_calls") or []:
+            events.append({"object": "chat.completion.chunk",
+                           "choices": [{"delta": {"tool_calls": [tc]},
+                                        "index": 0}]})
+        events.append({"object": "chat.completion.chunk",
+                       "choices": [{"delta": {},
+                                    "finish_reason": choice.get("finish_reason"),
+                                    "index": 0}]})
+        return events
+    # responses / google: single-shot completed event stream
+    return [{"type": "response.completed", "response": shaped}]

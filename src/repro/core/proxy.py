@@ -1,0 +1,116 @@
+"""The gateway model-API proxy (paper §3.2, Fig. 2).
+
+The proxy sits at the LLM API boundary between the (black-box) harness and
+the inference backend.  For each incoming model request it:
+
+  1. detects the provider API from path + headers,
+  2. normalizes the request to the OpenAI Chat shape (adding logprobs=true),
+  3. forwards to the inference backend and captures a CompletionRecord
+     (prompt/response messages, prompt token IDs, sampled token IDs, log
+     probabilities, finish reason) into the session registry,
+  4. returns the provider-shaped response — synthesizing a provider-shaped
+     SSE stream from the non-streaming upstream response when asked.
+
+The proxy is deliberately *below* the agent framework: it never inspects how
+the harness plans or uses tools; it only preserves API compatibility and
+records enough to reconstruct training samples.
+"""
+from __future__ import annotations
+
+import threading
+import uuid
+from typing import Any, Callable, Dict, List, Optional, Protocol
+
+from repro.core import providers as P
+from repro.core.types import CompletionRecord, CompletionSession
+
+
+class InferenceBackend(Protocol):
+    """What the proxy needs from an inference server: an OpenAI-chat-shaped
+    completion that ALSO exposes token ids + logprobs (no retokenization
+    drift — ids come from the backend, paper §2.4)."""
+
+    def complete(self, request: Dict[str, Any]) -> Dict[str, Any]:
+        """request: normalized OpenAI Chat request.
+        returns: {message, prompt_ids, response_ids, logprobs,
+                  finish_reason, usage}"""
+        ...
+
+
+class ProxyGateway:
+    def __init__(self, backend: InferenceBackend, model_name: str = "policy"):
+        self.backend = backend
+        self.model_name = model_name
+        self._sessions: Dict[str, CompletionSession] = {}
+        self._lock = threading.Lock()
+
+    # -- session registry ---------------------------------------------------
+    def session(self, session_id: str) -> CompletionSession:
+        with self._lock:
+            if session_id not in self._sessions:
+                self._sessions[session_id] = CompletionSession(session_id)
+            return self._sessions[session_id]
+
+    def pop_session(self, session_id: str) -> Optional[CompletionSession]:
+        with self._lock:
+            return self._sessions.pop(session_id, None)
+
+    def delete_session(self, session_id: str) -> None:
+        """Best-effort cleanup after a terminal result (paper §A.5)."""
+        self.pop_session(session_id)
+
+    # -- request handling ----------------------------------------------------
+    def handle(self, path: str, body: Dict[str, Any],
+               headers: Optional[Dict[str, str]] = None,
+               session_id: Optional[str] = None):
+        """Returns the provider-shaped response dict, or a list of
+        provider-shaped SSE events when the request asks to stream."""
+        headers = headers or {}
+        session_id = session_id or headers.get("x-polar-session", "default")
+        provider = P.detect_provider(path, headers)
+        normalized = P.to_openai_chat(provider, body)
+        stream = bool(body.get("stream", False))
+
+        result = self.backend.complete(normalized)
+
+        message = result["message"]
+        finish = result.get("finish_reason", "stop")
+        rec = CompletionRecord(
+            request_id=f"req_{uuid.uuid4().hex[:12]}",
+            session_id=session_id,
+            provider=provider,
+            model=normalized.get("model", self.model_name),
+            prompt_messages=list(normalized.get("messages", [])),
+            response_messages=[message],
+            prompt_ids=list(result["prompt_ids"]),
+            response_ids=list(result["response_ids"]),
+            response_logprobs=list(result["logprobs"]),
+            finish_reason=finish,
+            tools=normalized.get("tools"),
+        )
+        self.session(session_id).append(rec)
+
+        usage = result.get("usage", {
+            "prompt_tokens": len(rec.prompt_ids),
+            "completion_tokens": len(rec.response_ids),
+            "total_tokens": len(rec.prompt_ids) + len(rec.response_ids),
+        })
+        oai_resp = {
+            "id": f"chatcmpl-{uuid.uuid4().hex[:12]}",
+            "object": "chat.completion",
+            "model": rec.model,
+            "choices": [{
+                "index": 0,
+                "message": message,
+                "finish_reason": finish,
+                "logprobs": {"content": [
+                    {"token": "", "token_id": t, "logprob": lp}
+                    for t, lp in zip(rec.response_ids, rec.response_logprobs)
+                ]},
+            }],
+            "usage": usage,
+        }
+        if stream:
+            # non-streaming upstream → synthetic provider-shaped SSE events
+            return P.to_stream_events(provider, oai_resp)
+        return P.from_openai_chat(provider, oai_resp)

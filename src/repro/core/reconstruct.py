@@ -1,0 +1,236 @@
+"""Trajectory reconstruction — the paper's §3.4.
+
+Converts an ordered CompletionSession (proxy-captured model calls) into a
+Trajectory of trainer-facing Traces.  Two built-in strategies:
+
+  * ``per_request``   — one trace per completion (conservative baseline).
+  * ``prefix_merging`` — partition completions into append-only chains via a
+    normalized message-level grouping key + the strict token-prefix relation,
+    then merge each chain into one long trace:
+        z = p_1 ‖ a_1 ‖ u_1 ‖ a_2 ‖ u_2 ‖ … ‖ a_K
+    with loss_mask 1 on sampled tokens a_m and 0 on canonical interstitials
+    u_m; real log-probs on a_m slots, synthetic entries on u_m slots.
+
+Correctness invariant (paper, boxed): every trainable token matches the
+behavior policy during rollout; any non-generated token is masked out.
+
+The registry is extensible (paper: "registry-based extensible interfaces").
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.core.tokenizer import END_OF_TURN, decode_with_specials
+from repro.core.types import (CompletionRecord, CompletionSession, Trace,
+                              Trajectory, logprob_entry)
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_BUILDERS: Dict[str, Callable[[CompletionSession], Trajectory]] = {}
+
+
+def register(name: str):
+    def deco(fn):
+        _BUILDERS[name] = fn
+        return fn
+    return deco
+
+
+def get_builder(name: str) -> Callable[[CompletionSession], Trajectory]:
+    if name not in _BUILDERS:
+        raise KeyError(f"unknown trajectory builder {name!r}; "
+                       f"known: {sorted(_BUILDERS)}")
+    return _BUILDERS[name]
+
+
+def build(session: CompletionSession, strategy: str) -> Trajectory:
+    return get_builder(strategy)(session)
+
+
+# ---------------------------------------------------------------------------
+# per_request
+# ---------------------------------------------------------------------------
+
+def _real_logprobs(rec: CompletionRecord) -> List[Dict[str, Any]]:
+    out = []
+    for tid, lp in zip(rec.response_ids, rec.response_logprobs):
+        out.append(logprob_entry(tid, lp, decode_with_specials([tid])))
+    return out
+
+
+@register("per_request")
+def build_per_request(session: CompletionSession) -> Trajectory:
+    """Every completion becomes one trace — lossless per call, but fragments
+    a session into many short samples (paper §3.4.1)."""
+    traces = []
+    for rec in session.completions:
+        traces.append(Trace(
+            prompt_ids=list(rec.prompt_ids),
+            response_ids=list(rec.response_ids),
+            loss_mask=[1] * len(rec.response_ids),
+            response_logprobs=_real_logprobs(rec),
+            prompt_messages=rec.prompt_messages,
+            response_messages=rec.response_messages,
+            tools=rec.tools,
+            finish_reason=rec.finish_reason,
+            metadata={"session_id": session.session_id, "seq": rec.seq,
+                      "builder": "per_request",
+                      **session.metadata},
+        ))
+    return Trajectory(session_id=session.session_id, traces=traces,
+                      metadata={"builder": "per_request"})
+
+
+# ---------------------------------------------------------------------------
+# prefix merging
+# ---------------------------------------------------------------------------
+
+def _norm_messages(msgs: List[Dict[str, Any]]):
+    """Normalized message-level view used by the grouping key: (role,
+    whitespace-stripped content) tuples.  Tool payloads participate via their
+    textual content."""
+    out = []
+    for m in msgs:
+        content = m.get("content")
+        if not isinstance(content, str):
+            content = str(content)
+        out.append((m.get("role", ""), content.strip()))
+    return out
+
+
+def _is_candidate_continuation(prev: CompletionRecord,
+                               new: CompletionRecord) -> bool:
+    """Message-level grouping key: the new prompt must extend the previous
+    prompt + its assistant response (append-only conversation)."""
+    prev_view = _norm_messages(prev.prompt_messages + prev.response_messages)
+    new_view = _norm_messages(new.prompt_messages)
+    if len(new_view) < len(prev_view):
+        return False
+    return new_view[:len(prev_view)] == prev_view
+
+
+def _token_prefix_holds(prev: CompletionRecord, new: CompletionRecord) -> bool:
+    lp = len(prev.prompt_ids)
+    return (len(new.prompt_ids) > lp
+            and list(new.prompt_ids[:lp]) == list(prev.prompt_ids))
+
+
+def partition_chains(session: CompletionSession) -> List[List[CompletionRecord]]:
+    """Greedy ordered partition (paper §3.4.2): each completion joins the
+    first chain whose last element admits it (grouping key + strict token
+    prefix); otherwise it opens a new chain.  Sub-agents, compaction, prompt
+    rewriting and parallel branches naturally open new chains."""
+    chains: List[List[CompletionRecord]] = []
+    for rec in session.completions:
+        placed = False
+        for chain in chains:
+            last = chain[-1]
+            if (_is_candidate_continuation(last, rec)
+                    and _token_prefix_holds(last, rec)):
+                chain.append(rec)
+                placed = True
+                break
+        if not placed:
+            chains.append([rec])
+    return chains
+
+
+def _interstitial(prev: CompletionRecord, new: CompletionRecord) -> List[int]:
+    """u_m per the paper: t = p_{m+1}[|p_m|:]; find the first end-of-turn
+    token e in t.  If a_m already ends with e → u is the suffix after that e;
+    otherwise u starts at that e (so the assistant turn is closed before the
+    next prompt context)."""
+    t = list(new.prompt_ids[len(prev.prompt_ids):])
+    a = prev.response_ids
+    try:
+        e_pos = t.index(END_OF_TURN)
+    except ValueError:
+        return t  # malformed harness rendering — keep everything, masked
+    if a and a[-1] == END_OF_TURN:
+        return t[e_pos + 1:]
+    return t[e_pos:]
+
+
+def merge_chain(chain: List[CompletionRecord],
+                session: CompletionSession) -> Trace:
+    first, last = chain[0], chain[-1]
+    response_ids: List[int] = []
+    loss_mask: List[int] = []
+    logprobs: List[Dict[str, Any]] = []
+    response_messages: List[Dict[str, Any]] = []
+
+    for m, rec in enumerate(chain):
+        response_ids += list(rec.response_ids)
+        loss_mask += [1] * len(rec.response_ids)
+        logprobs += _real_logprobs(rec)
+        response_messages += rec.response_messages
+        if m + 1 < len(chain):
+            u = _interstitial(rec, chain[m + 1])
+            response_ids += u
+            loss_mask += [0] * len(u)
+            # synthetic entries keep response_logprobs aligned with
+            # response_ids; trainability is controlled by loss_mask.
+            logprobs += [logprob_entry(t, 0.0, decode_with_specials([t]),
+                                       synthetic=True) for t in u]
+
+    return Trace(
+        prompt_ids=list(first.prompt_ids),
+        response_ids=response_ids,
+        loss_mask=loss_mask,
+        response_logprobs=logprobs,
+        prompt_messages=first.prompt_messages,
+        response_messages=response_messages,
+        tools=first.tools,
+        finish_reason=last.finish_reason,
+        metadata={"session_id": session.session_id,
+                  "builder": "prefix_merging",
+                  "chain_len": len(chain),
+                  "chain_seqs": [r.seq for r in chain],
+                  "first_seq": first.seq, "last_seq": last.seq,
+                  **session.metadata},
+    )
+
+
+@register("prefix_merging")
+def build_prefix_merging(session: CompletionSession) -> Trajectory:
+    chains = partition_chains(session)
+    traces = [merge_chain(c, session) for c in chains]
+    return Trajectory(session_id=session.session_id, traces=traces,
+                      metadata={"builder": "prefix_merging",
+                                "num_chains": len(chains),
+                                "num_completions": len(session.completions)})
+
+
+# ---------------------------------------------------------------------------
+# invariant checker (used by tests and the gateway's debug mode)
+# ---------------------------------------------------------------------------
+
+def check_invariant(session: CompletionSession, traj: Trajectory) -> None:
+    """Every trainable token must match the behavior policy: the mask-1
+    slice of each trace equals the concatenation of the sampled response ids
+    of its source completions, in order; and real (non-synthetic) logprob
+    entries appear exactly on mask-1 slots."""
+    by_builder = traj.metadata.get("builder")
+    sampled_by_seq = {r.seq: list(r.response_ids) for r in session.completions}
+    seen_seqs: List[int] = []
+    for tr in traj.traces:
+        trainable = tr.trainable_ids()
+        if by_builder == "per_request":
+            expect = sampled_by_seq[tr.metadata["seq"]]
+            seen_seqs.append(tr.metadata["seq"])
+        else:
+            seqs = tr.metadata["chain_seqs"]
+            assert seqs == sorted(seqs), "chain order must follow capture order"
+            seen_seqs += seqs
+            expect = [t for s in seqs for t in sampled_by_seq[s]]
+        assert trainable == expect, (trainable, expect)
+        for mask, entry in zip(tr.loss_mask, tr.response_logprobs):
+            if mask == 1:
+                assert not entry.get("synthetic", False)
+            else:
+                assert entry.get("synthetic", False)
+    # chains partition the session: every completion appears exactly once
+    assert sorted(seen_seqs) == sorted(sampled_by_seq), (
+        "builders must neither drop nor duplicate completions")

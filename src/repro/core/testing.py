@@ -1,0 +1,85 @@
+"""Deterministic scripted inference backend for tests and simulations.
+
+Implements the InferenceBackend protocol without a model: prompt ids come
+from the canonical chat template; sampled response ids are the canonical
+rendering of the scripted assistant message — optionally truncated (no
+end-of-turn token, finish_reason="length") or with injected "drift" (the
+sampled ids differ from what the server will canonically re-render in the
+next prompt, reproducing retokenization-drift-like conditions, paper §2.4).
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterator, List, Optional
+
+from repro.core import tokenizer as tok
+
+
+@dataclass
+class Scripted:
+    """One scripted assistant turn."""
+    content: str = ""
+    tool_calls: Optional[List[Dict[str, Any]]] = None
+    truncate: int = 0          # drop this many trailing ids (>=1 removes e)
+    drift_prefix: str = ""     # extra sampled-only prefix (never re-rendered)
+
+    def message(self) -> Dict[str, Any]:
+        m: Dict[str, Any] = {"role": "assistant", "content": self.content}
+        if self.tool_calls:
+            m["tool_calls"] = self.tool_calls
+        return m
+
+
+class ScriptedBackend:
+    """Yields scripted turns in order; token accounting is real."""
+
+    def __init__(self, script: List[Scripted]):
+        self._it: Iterator[Scripted] = iter(script)
+        self.calls: List[Dict[str, Any]] = []
+
+    def complete(self, request: Dict[str, Any]) -> Dict[str, Any]:
+        self.calls.append(request)
+        s = next(self._it)
+        msg = s.message()
+        prompt_ids = tok.apply_chat_template(request["messages"])
+        ids = tok.render_assistant_body(msg)
+        if s.drift_prefix:
+            ids = tok.encode_text(s.drift_prefix) + ids
+        finish = "stop" if not s.truncate else "length"
+        if s.tool_calls and not s.truncate:
+            finish = "tool_calls"
+        if s.truncate:
+            ids = ids[:-s.truncate]
+        logprobs = [-0.1 - 0.001 * (i % 7) for i in range(len(ids))]
+        return {
+            "message": msg,
+            "prompt_ids": prompt_ids,
+            "response_ids": ids,
+            "logprobs": logprobs,
+            "finish_reason": finish,
+        }
+
+
+class EchoBackend:
+    """Unbounded backend: replies deterministically based on call count."""
+
+    def __init__(self, reply_fn=None):
+        self._n = itertools.count()
+        self._reply_fn = reply_fn or (lambda n, req: f"reply {n}")
+        self.calls: List[Dict[str, Any]] = []
+
+    def complete(self, request: Dict[str, Any]) -> Dict[str, Any]:
+        self.calls.append(request)
+        n = next(self._n)
+        content = self._reply_fn(n, request)
+        msg = {"role": "assistant", "content": content}
+        prompt_ids = tok.apply_chat_template(request["messages"])
+        ids = tok.render_assistant_body(msg)
+        return {
+            "message": msg,
+            "prompt_ids": prompt_ids,
+            "response_ids": ids,
+            "logprobs": [-0.25] * len(ids),
+            "finish_reason": "stop",
+        }

@@ -1,0 +1,133 @@
+"""Deterministic byte-level tokenizer with a canonical chat template.
+
+The simulation stack needs a real tokenizer contract — not a mock — because
+the paper's trajectory-reconstruction math is defined over token IDs:
+
+  * canonical prompt tokenization p_i (what the inference server sees),
+  * raw sampled response ids a_i,
+  * the end-of-turn token `e` that closes an assistant turn,
+  * the strict prefix relation p_{m+1}[:|p_m|] == p_m for append-only chats.
+
+Design: ids 0..255 are raw bytes (lossless round-trip for any text), then
+special tokens.  The chat template renders an OpenAI-chat message list to
+ids; rendering is append-only for append-only conversations, which is what
+makes prefix merging possible — and harness-side compaction/rewriting breaks
+the prefix exactly like it does in production.
+
+Template (canonical server rendering, one turn):
+  <|start|> role-bytes <|sep|> content-bytes [tool-call-bytes] <|end|>
+Assistant generation prompt ends with "<|start|>assistant<|sep|>" so sampled
+ids begin at the content and SHOULD end with <|end|> (= the paper's `e`)
+unless truncated by max_tokens.
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+BYTE_VOCAB = 256
+TOK_START = 256     # <|start|>
+TOK_SEP = 257       # <|sep|>
+TOK_END = 258       # <|end|>  — the end-of-turn token `e`
+TOK_BOS = 259
+VOCAB_SIZE = 260
+
+END_OF_TURN = TOK_END
+
+
+def encode_text(text: str) -> List[int]:
+    return list(text.encode("utf-8"))
+
+
+def decode_text(ids: Sequence[int]) -> str:
+    return bytes(i for i in ids if i < BYTE_VOCAB).decode("utf-8", errors="replace")
+
+
+def decode_with_specials(ids: Sequence[int]) -> str:
+    out = []
+    buf = []
+    names = {TOK_START: "<|start|>", TOK_SEP: "<|sep|>", TOK_END: "<|end|>",
+             TOK_BOS: "<|bos|>"}
+    for i in ids:
+        if i < BYTE_VOCAB:
+            buf.append(i)
+        else:
+            if buf:
+                out.append(bytes(buf).decode("utf-8", errors="replace"))
+                buf = []
+            out.append(names.get(i, f"<|{i}|>"))
+    if buf:
+        out.append(bytes(buf).decode("utf-8", errors="replace"))
+    return "".join(out)
+
+
+def _content_str(content: Any) -> str:
+    """Normalize message content (string or content-part list) to text."""
+    if content is None:
+        return ""
+    if isinstance(content, str):
+        return content
+    parts = []
+    for p in content:
+        if isinstance(p, dict):
+            parts.append(p.get("text", "") or p.get("content", "") or "")
+        else:
+            parts.append(str(p))
+    return "".join(parts)
+
+
+def render_message(msg: Dict[str, Any]) -> List[int]:
+    """Canonical rendering of ONE message (server-side template)."""
+    ids = [TOK_START]
+    ids += encode_text(msg.get("role", "user"))
+    ids.append(TOK_SEP)
+    ids += encode_text(_content_str(msg.get("content")))
+    for tc in msg.get("tool_calls") or []:
+        fn = tc.get("function", tc)
+        ids += encode_text("\x00call:" + fn.get("name", "") + ":"
+                           + _content_str(fn.get("arguments", "")))
+    ids.append(TOK_END)
+    return ids
+
+
+def apply_chat_template(messages: List[Dict[str, Any]],
+                        add_generation_prompt: bool = True) -> List[int]:
+    """OpenAI-chat messages → canonical prompt ids.  Append-only message
+    lists produce strictly-extending id sequences (the prefix property)."""
+    ids = [TOK_BOS]
+    for m in messages:
+        ids += render_message(m)
+    if add_generation_prompt:
+        ids += [TOK_START] + encode_text("assistant") + [TOK_SEP]
+    return ids
+
+
+def render_assistant_body(msg: Dict[str, Any]) -> List[int]:
+    """The canonical ids of an assistant turn body + <|end|> — what the
+    server would re-render the sampled turn as inside the NEXT prompt."""
+    ids = encode_text(_content_str(msg.get("content")))
+    for tc in msg.get("tool_calls") or []:
+        fn = tc.get("function", tc)
+        ids += encode_text("\x00call:" + fn.get("name", "") + ":"
+                           + _content_str(fn.get("arguments", "")))
+    ids.append(TOK_END)
+    return ids
+
+
+def parse_sampled(ids: Sequence[int]) -> Tuple[str, List[Dict[str, Any]], bool]:
+    """Sampled assistant ids → (text content, tool_calls, closed?).
+
+    Inverse of render_assistant_body for well-formed generations."""
+    closed = len(ids) > 0 and ids[-1] == TOK_END
+    body = list(ids[:-1]) if closed else list(ids)
+    text = decode_text([i for i in body if i < BYTE_VOCAB])
+    tool_calls = []
+    if "\x00call:" in text:
+        head, *calls = text.split("\x00call:")
+        text = head
+        for c in calls:
+            name, _, args = c.partition(":")
+            tool_calls.append({"id": f"call_{len(tool_calls)}",
+                               "type": "function",
+                               "function": {"name": name, "arguments": args}})
+    return text, tool_calls, closed

@@ -1,0 +1,98 @@
+"""Data contracts shared by the proxy, trajectory builders, rollout service
+and trainer.  Mirrors the paper's §3.4 and Appendix A.4 schemas."""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+
+@dataclass
+class CompletionRecord:
+    """One proxy-captured model call (paper §3.2 step 3)."""
+    request_id: str
+    session_id: str
+    provider: str                     # anthropic | openai_chat | openai_responses | google
+    model: str
+    prompt_messages: List[Dict[str, Any]]     # normalized OpenAI-chat shape
+    response_messages: List[Dict[str, Any]]
+    prompt_ids: List[int]
+    response_ids: List[int]
+    response_logprobs: List[float]
+    finish_reason: str                # stop | length | tool_calls | timeout
+    tools: Optional[List[Dict[str, Any]]] = None
+    seq: int = 0                      # capture order within the session
+    metadata: Dict[str, Any] = field(default_factory=dict)
+
+
+@dataclass
+class CompletionSession:
+    """The stored, ordered sequence of proxy-captured model calls for one
+    harness session (paper §3.4)."""
+    session_id: str
+    completions: List[CompletionRecord] = field(default_factory=list)
+    metadata: Dict[str, Any] = field(default_factory=dict)
+
+    def append(self, rec: CompletionRecord) -> None:
+        rec.seq = len(self.completions)
+        self.completions.append(rec)
+
+
+@dataclass
+class Trace:
+    """One trainer-facing sample (paper Appendix A.4)."""
+    prompt_ids: List[int]
+    response_ids: List[int]
+    loss_mask: List[int]              # 1 = behavior-policy token, 0 = masked
+    response_logprobs: List[Dict[str, Any]]   # aligned with response_ids
+    prompt_messages: List[Dict[str, Any]]
+    response_messages: List[Dict[str, Any]]
+    tools: Optional[List[Dict[str, Any]]] = None
+    finish_reason: str = "stop"
+    reward: Optional[float] = None
+    metadata: Dict[str, Any] = field(default_factory=dict)
+
+    def __post_init__(self):
+        assert len(self.response_ids) == len(self.loss_mask), (
+            len(self.response_ids), len(self.loss_mask))
+        assert len(self.response_ids) == len(self.response_logprobs), (
+            len(self.response_ids), len(self.response_logprobs))
+
+    @property
+    def num_trainable(self) -> int:
+        return sum(self.loss_mask)
+
+    def trainable_ids(self) -> List[int]:
+        return [t for t, m in zip(self.response_ids, self.loss_mask) if m]
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self))
+
+
+@dataclass
+class Trajectory:
+    """Builder output for one session: one or more traces (paper §3.4)."""
+    session_id: str
+    traces: List[Trace] = field(default_factory=list)
+    metadata: Dict[str, Any] = field(default_factory=dict)
+
+
+def logprob_entry(token_id: int, logprob: float, token: str = "",
+                  synthetic: bool = False) -> Dict[str, Any]:
+    e = {"token": token, "token_id": int(token_id), "logprob": float(logprob)}
+    if synthetic:
+        e["synthetic"] = True
+    return e
+
+
+@dataclass
+class SessionResult:
+    """Terminal result a gateway reports back to the rollout server."""
+    session_id: str
+    task_id: str
+    status: str                       # completed | timeout | error | cancelled
+    trajectory: Optional[Trajectory] = None
+    reward: Optional[float] = None
+    error: Optional[str] = None
+    metadata: Dict[str, Any] = field(default_factory=dict)

@@ -1,0 +1,4 @@
+from repro.data.packing import PackedBatch, pack_traces
+from repro.data.batcher import GroupBatcher
+
+__all__ = ["PackedBatch", "pack_traces", "GroupBatcher"]

@@ -1,0 +1,123 @@
+"""Group batcher: the trainer-side consumer of rollout callbacks.
+
+Implements the async-RL data plane from the paper's Fig. 5a: session results
+stream in via callbacks; trajectory GROUPS (all samples of one task) are the
+advantage-normalization unit (GRPO); the trainer steps only when a full
+batch of evaluated groups is available.
+
+Features:
+  * group quorum — a group is usable once ≥ quorum of its num_samples
+    sessions finished (straggler mitigation; the rest can be cancelled),
+  * staleness filter — traces whose policy_version lags the current version
+    by more than `max_staleness` are dropped (TIS handles the small lags),
+  * GRPO advantages — A_i = (r_i − mean_g) / (std_g + eps) per group,
+  * zero-variance groups (all same reward) are skipped, like the reference
+    GRPO implementations.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.types import SessionResult, Trace
+from repro.data.packing import PackedBatch, pack_traces
+
+
+@dataclass
+class _Group:
+    task_id: str
+    expected: int
+    results: List[SessionResult] = field(default_factory=list)
+    consumed: bool = False
+
+
+class GroupBatcher:
+    def __init__(self, *, quorum_fraction: float = 1.0, max_staleness: int = 4,
+                 min_groups_per_batch: int = 1, skip_zero_variance: bool = True):
+        self.quorum_fraction = quorum_fraction
+        self.max_staleness = max_staleness
+        self.min_groups = min_groups_per_batch
+        self.skip_zero_variance = skip_zero_variance
+        self._groups: Dict[str, _Group] = {}
+        self._lock = threading.Lock()
+        self._ready = threading.Condition(self._lock)
+        self.stats = {"results": 0, "groups_emitted": 0, "groups_skipped": 0,
+                      "traces_stale_dropped": 0}
+
+    # -- ingestion (rollout callback) -----------------------------------------
+    def expect_group(self, task_id: str, num_samples: int) -> None:
+        with self._lock:
+            self._groups.setdefault(task_id, _Group(task_id, num_samples))
+
+    def on_result(self, result: SessionResult) -> None:
+        with self._ready:
+            g = self._groups.setdefault(result.task_id,
+                                        _Group(result.task_id, 1))
+            g.results.append(result)
+            self.stats["results"] += 1
+            self._ready.notify_all()
+
+    def _quorum(self, g: _Group) -> int:
+        return max(1, int(np.ceil(g.expected * self.quorum_fraction)))
+
+    def ready_groups(self) -> List[_Group]:
+        return [g for g in self._groups.values()
+                if not g.consumed and len(g.results) >= self._quorum(g)]
+
+    def wait_for_groups(self, n: int, timeout: float = 60.0) -> bool:
+        import time
+        deadline = time.monotonic() + timeout
+        with self._ready:
+            while len(self.ready_groups()) < n:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    return False
+                self._ready.wait(timeout=min(remaining, 0.25))
+            return True
+
+    # -- advantage computation + batch emission ---------------------------------
+    def _group_traces(self, g: _Group,
+                      current_version: Optional[int]) -> List[Tuple[Trace, float]]:
+        rewards = np.array([r.reward if r.reward is not None else 0.0
+                            for r in g.results], np.float32)
+        if self.skip_zero_variance and float(rewards.std()) < 1e-6:
+            self.stats["groups_skipped"] += 1
+            return []
+        adv = (rewards - rewards.mean()) / (rewards.std() + 1e-6)
+        out: List[Tuple[Trace, float]] = []
+        for r, a in zip(g.results, adv):
+            if r.trajectory is None:
+                continue
+            for tr in r.trajectory.traces:
+                v = tr.metadata.get("policy_version")
+                if (current_version is not None and v is not None
+                        and current_version - int(v) > self.max_staleness):
+                    self.stats["traces_stale_dropped"] += 1
+                    continue
+                out.append((tr, float(a)))
+        return out
+
+    def next_batch(self, batch: int, seqlen: int,
+                   current_version: Optional[int] = None,
+                   max_groups: int = 8) -> Optional[PackedBatch]:
+        """Consume up to max_groups ready groups into one packed batch."""
+        with self._lock:
+            ready = self.ready_groups()[:max_groups]
+            if len(ready) < self.min_groups:
+                return None
+            traces: List[Tuple[Trace, float]] = []
+            for g in ready:
+                g.consumed = True
+                got = self._group_traces(g, current_version)
+                if got:
+                    self.stats["groups_emitted"] += 1
+                traces.extend(got)
+        if not traces:
+            return None
+        pb = pack_traces(traces, batch, seqlen)
+        pb.meta["num_groups"] = len(ready)
+        pb.meta["num_traces"] = len(traces)
+        return pb

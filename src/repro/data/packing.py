@@ -1,0 +1,112 @@
+"""Trace packing: variable-length Polar traces → fixed [B, L] training
+batches with segment ids.
+
+Packing layout per row (multiple traces per row, greedy first-fit):
+  tokens       [B, L] i32 — prompt ‖ response token ids per segment
+  positions    [B, L] i32 — restart at 0 per segment (rope correctness)
+  segment_ids  [B, L] i32 — 1-based segment tags; 0 = padding
+  target_ids   [B, L] i32 — tokens shifted left within the segment
+  target_mask  [B, L] f32 — 1 where the TARGET token is a trainable
+                            behavior-policy token (trace loss_mask ∧ shift)
+  behavior_lp  [B, L] f32 — behavior log-prob of the target token
+  advantage    [B, L] f32 — per-token advantage (GRPO group-normalized,
+                            broadcast across the trace's trainable tokens)
+
+The attention mask is derived from segment_ids inside the model (packed
+traces never attend across segments).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.types import Trace
+
+
+@dataclass
+class PackedBatch:
+    tokens: np.ndarray
+    positions: np.ndarray
+    segment_ids: np.ndarray
+    target_ids: np.ndarray
+    target_mask: np.ndarray
+    behavior_lp: np.ndarray
+    advantage: np.ndarray
+    meta: Dict[str, Any]
+
+    def as_dict(self) -> Dict[str, np.ndarray]:
+        return {"tokens": self.tokens, "positions": self.positions,
+                "segment_ids": self.segment_ids, "target_ids": self.target_ids,
+                "target_mask": self.target_mask, "behavior_lp": self.behavior_lp,
+                "advantage": self.advantage}
+
+
+def _trace_arrays(trace: Trace, advantage: float):
+    """Per-trace flat arrays: token stream + per-token (is-trainable, lp)."""
+    toks = list(trace.prompt_ids) + list(trace.response_ids)
+    # mask/lp indexed per TOKEN (prompt tokens are never trainable)
+    m = [0] * len(trace.prompt_ids) + [int(x) for x in trace.loss_mask]
+    lp = [0.0] * len(trace.prompt_ids) + [float(e["logprob"])
+                                          for e in trace.response_logprobs]
+    a = [advantage] * len(toks)
+    return toks, m, lp, a
+
+
+def pack_traces(traces: List[Tuple[Trace, float]], batch: int, seqlen: int,
+                max_segments_per_row: int = 64) -> PackedBatch:
+    """traces: [(trace, advantage)].  Greedy first-fit into `batch` rows of
+    `seqlen`.  Traces longer than seqlen are tail-truncated (logged in meta);
+    traces that do not fit the remaining capacity start a new row."""
+    B, L = batch, seqlen
+    tokens = np.zeros((B, L), np.int32)
+    positions = np.zeros((B, L), np.int32)
+    segment_ids = np.zeros((B, L), np.int32)
+    target_ids = np.zeros((B, L), np.int32)
+    target_mask = np.zeros((B, L), np.float32)
+    behavior_lp = np.zeros((B, L), np.float32)
+    advantage = np.zeros((B, L), np.float32)
+
+    fill = [0] * B           # next free column per row
+    nseg = [0] * B
+    dropped, truncated, placed = 0, 0, 0
+
+    order = sorted(range(len(traces)),
+                   key=lambda i: -(len(traces[i][0].prompt_ids)
+                                   + len(traces[i][0].response_ids)))
+    for idx in order:
+        trace, adv = traces[idx]
+        toks, m, lp, a = _trace_arrays(trace, adv)
+        if len(toks) > L:
+            toks, m, lp, a = toks[:L], m[:L], lp[:L], a[:L]
+            truncated += 1
+        n = len(toks)
+        row = next((r for r in range(B)
+                    if fill[r] + n <= L and nseg[r] < max_segments_per_row),
+                   None)
+        if row is None:
+            dropped += 1
+            continue
+        c0 = fill[row]
+        seg = nseg[row] + 1
+        tokens[row, c0:c0 + n] = toks
+        positions[row, c0:c0 + n] = np.arange(n)
+        segment_ids[row, c0:c0 + n] = seg
+        # targets: shift-left within the segment
+        target_ids[row, c0:c0 + n - 1] = toks[1:]
+        target_mask[row, c0:c0 + n - 1] = m[1:]
+        behavior_lp[row, c0:c0 + n - 1] = lp[1:]
+        advantage[row, c0:c0 + n - 1] = a[1:]
+        fill[row] = c0 + n
+        nseg[row] = seg
+        placed += 1
+
+    return PackedBatch(
+        tokens=tokens, positions=positions, segment_ids=segment_ids,
+        target_ids=target_ids, target_mask=target_mask,
+        behavior_lp=behavior_lp, advantage=advantage,
+        meta={"placed": placed, "dropped": dropped, "truncated": truncated,
+              "fill_fraction": float(sum(fill)) / (B * L),
+              "trainable_tokens": float(target_mask.sum())},
+    )

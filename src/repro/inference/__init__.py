@@ -1,0 +1,3 @@
+from repro.inference.engine import Engine
+
+__all__ = ["Engine"]

@@ -1,0 +1,191 @@
+"""JAX inference engine — the "local inference server" behind the proxy.
+
+Implements the InferenceBackend protocol: normalized OpenAI-chat request in,
+assistant message + token-level capture out.  The whole generation loop
+(prompt feed + sampling) is ONE jitted function per (prompt-bucket,
+max-new) pair: prompt tokens are fed through the decode path with a
+``fori_loop``, then a ``while_loop`` samples until the end-of-turn token or
+the budget — everything stays on device, and the engine returns the exact
+sampled ids + their behavior log-probs (no retokenization anywhere,
+paper §2.4).
+
+Weight updates are atomic swaps tagged with a policy version — the async
+RL loop pushes new params mid-flight and in-progress requests keep their
+old version (stale-policy semantics handled by the trainer's TIS).
+"""
+from __future__ import annotations
+
+import threading
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import tokenizer as tok
+from repro.models import registry as M
+
+
+def _bucket(n: int, sizes=(64, 128, 256, 512, 1024, 2048)) -> int:
+    for s in sizes:
+        if n <= s:
+            return s
+    return -(-n // 2048) * 2048
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params=None, rng=None,
+                 max_len: int = 1024, max_new: int = 64,
+                 temperature: float = 1.0, top_k: int = 0,
+                 model_name: str = "policy"):
+        assert cfg.vocab_size >= tok.VOCAB_SIZE, (
+            "engine models must cover the tokenizer vocab")
+        self.cfg = cfg
+        self.rng = rng if rng is not None else jax.random.PRNGKey(0)
+        self.params = params if params is not None else M.init_params(
+            cfg, jax.random.PRNGKey(42))
+        self.max_len = max_len
+        self.max_new = max_new
+        self.temperature = temperature
+        self.top_k = top_k
+        self.model_name = model_name
+        self.policy_version = 0
+        self._lock = threading.Lock()
+        self._gen_cache: Dict[Any, Any] = {}
+        self.stats = {"requests": 0, "prompt_tokens": 0, "sampled_tokens": 0}
+
+    # -- async weight updates -------------------------------------------------
+    def update_params(self, params, version: Optional[int] = None) -> int:
+        with self._lock:
+            self.params = params
+            self.policy_version = (version if version is not None
+                                   else self.policy_version + 1)
+            return self.policy_version
+
+    # -- generation ------------------------------------------------------------
+    def _make_generate(self, plen_bucket: int, max_new: int):
+        cfg = self.cfg
+        temp = self.temperature
+        top_k = self.top_k
+
+        def sample_logits(hidden, params, rng):
+            from repro.models import common as C
+            logits = C.logits_from_hidden(cfg, params["embed"], hidden[:, -1])[0]
+            # restrict to the tokenizer's live vocab
+            valid = jnp.arange(logits.shape[-1]) < tok.VOCAB_SIZE
+            logits = jnp.where(valid, logits, -jnp.inf)
+            logp_full = jax.nn.log_softmax(logits.astype(jnp.float32))
+            if temp <= 0.0:
+                nxt = jnp.argmax(logits).astype(jnp.int32)
+            else:
+                scaled = logits / temp
+                if top_k > 0:
+                    kth = jax.lax.top_k(scaled, top_k)[0][-1]
+                    scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+                nxt = jax.random.categorical(rng, scaled).astype(jnp.int32)
+            return nxt, logp_full[nxt]
+
+        def generate(params, prompt, plen, rng):
+            B = 1
+            if cfg.family in ("dense", "moe", "vlm"):
+                # batch prefill: one parallel forward fills the KV cache
+                from repro.models import transformer as TF
+                Lp = prompt.shape[0]
+                pos = jnp.arange(Lp, dtype=jnp.int32)[None]
+                hidden_all, cache = TF.prefill(
+                    cfg, params, {"tokens": prompt[None], "positions": pos},
+                    self.max_len)
+                hidden = jax.lax.dynamic_slice_in_dim(
+                    hidden_all, plen - 1, 1, axis=1)
+            else:
+                cache = M.init_decode_cache(cfg, B, self.max_len)
+
+                def feed(t, carry):
+                    cache, _ = carry
+                    batch = {"tokens": prompt[None, t][None],
+                             "cache_len": t}
+                    hidden, cache = M.forward_decode(cfg, params, cache, batch)
+                    return cache, hidden
+
+                # feed prompt tokens [0, plen); keep the last hidden
+                cache, hidden = jax.lax.fori_loop(
+                    0, plen, feed,
+                    (cache, jnp.zeros((B, 1, cfg.d_model),
+                                      jnp.dtype(cfg.dtype))))
+
+            out_ids = jnp.zeros((max_new,), jnp.int32)
+            out_lps = jnp.zeros((max_new,), jnp.float32)
+
+            def cond(state):
+                i, done, *_ = state
+                return (~done) & (i < max_new)
+
+            def body(state):
+                i, done, hidden, cache, rng, out_ids, out_lps = state
+                rng, k1 = jax.random.split(rng)
+                nxt, lp = sample_logits(hidden, params, k1)
+                out_ids = out_ids.at[i].set(nxt)
+                out_lps = out_lps.at[i].set(lp)
+                done = nxt == tok.END_OF_TURN
+                batch = {"tokens": nxt[None, None], "cache_len": plen + i}
+                hidden, cache = M.forward_decode(cfg, params, cache, batch)
+                return (i + 1, done, hidden, cache, rng, out_ids, out_lps)
+
+            i, done, *_rest, out_ids, out_lps = jax.lax.while_loop(
+                cond, body,
+                (jnp.int32(0), jnp.bool_(False), hidden, cache, rng,
+                 out_ids, out_lps))
+            return out_ids, out_lps, i, done
+
+        return jax.jit(generate)
+
+    def generate_ids(self, prompt_ids, max_new: Optional[int] = None):
+        """prompt_ids list[int] → (ids list[int], logps list[float], finish)."""
+        max_new = max_new or self.max_new
+        plen = len(prompt_ids)
+        bucket = _bucket(plen, sizes=(64, 256, self.max_len))
+        bucket = min(bucket, self.max_len - max_new)
+        assert plen <= bucket, (plen, bucket, "prompt too long for engine")
+        key = (bucket, max_new)
+        if key not in self._gen_cache:
+            self._gen_cache[key] = self._make_generate(bucket, max_new)
+        prompt = jnp.zeros((bucket,), jnp.int32).at[:plen].set(
+            jnp.asarray(prompt_ids, jnp.int32))
+        with self._lock:
+            params = self.params
+            self.rng, k = jax.random.split(self.rng)
+        out_ids, out_lps, n, done = self._gen_cache[key](
+            params, prompt, jnp.int32(plen), k)
+        n = int(n)
+        ids = [int(t) for t in out_ids[:n]]
+        lps = [float(l) for l in out_lps[:n]]
+        finish = "stop" if bool(done) else "length"
+        return ids, lps, finish
+
+    # -- InferenceBackend protocol ----------------------------------------------
+    def complete(self, request: Dict[str, Any]) -> Dict[str, Any]:
+        messages = request["messages"]
+        prompt_ids = tok.apply_chat_template(messages)
+        max_new = min(request.get("max_tokens") or self.max_new, self.max_new)
+        ids, lps, finish = self.generate_ids(prompt_ids, max_new)
+        content, tool_calls, _closed = tok.parse_sampled(ids)
+        message: Dict[str, Any] = {"role": "assistant", "content": content}
+        if tool_calls:
+            message["tool_calls"] = tool_calls
+            if finish == "stop":
+                finish = "tool_calls"
+        self.stats["requests"] += 1
+        self.stats["prompt_tokens"] += len(prompt_ids)
+        self.stats["sampled_tokens"] += len(ids)
+        return {
+            "message": message,
+            "prompt_ids": prompt_ids,
+            "response_ids": ids,
+            "logprobs": lps,
+            "finish_reason": finish,
+            "usage": {"prompt_tokens": len(prompt_ids),
+                      "completion_tokens": len(ids),
+                      "total_tokens": len(prompt_ids) + len(ids)},
+            "policy_version": self.policy_version,
+        }

@@ -1,0 +1,199 @@
+"""Pallas TPU flash attention (forward) with GQA, causal, sliding-window and
+segment-id masking.
+
+TPU adaptation (vs the CUDA FlashAttention schedule): instead of warp-level
+tiling, blocks are HBM→VMEM tiles selected by BlockSpecs; the online-softmax
+state (m, s, acc) lives in VMEM scratch and is carried across the innermost
+sequential grid dimension (kv blocks).  Score blocks are [q_block, kv_block]
+f32 on the MXU; q/kv blocks default to 128 (MXU-aligned).
+
+Backward: jax.custom_vjp whose residuals are the raw inputs; the backward
+pass recomputes attention with the blocked-XLA implementation and
+differentiates through it (one recompute, flash-style memory).  A fully
+hand-written Pallas backward is a potential §Perf iteration; on TPU the XLA
+backward is already fused reasonably by Mosaic/XLA.
+
+All masking is index-arithmetic on prefetched [q_block] / [kv_block] index
+rows — no [Lq, Lkv] tensor ever exists.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import xla_flash as XF
+
+NEG_INF = -1e30
+INT_MAX = jnp.iinfo(jnp.int32).max
+
+
+def _kernel(win_ref,                        # SMEM (1,1) int32
+            q_ref, k_ref, v_ref,            # VMEM blocks
+            iq_ref, ik_ref, sq_ref, sk_ref,  # index/segment rows
+            o_ref,                           # output block
+            m_scr, s_scr, acc_scr,           # VMEM scratch carries
+            *, causal: bool, nk: int, scale: float):
+    ik_blk = pl.program_id(3)
+
+    @pl.when(ik_blk == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        s_scr[...] = jnp.zeros_like(s_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, :, 0, :]                    # [qb, D]
+    k = k_ref[0, :, 0, :]                    # [kb, D]
+    v = v_ref[0, :, 0, :]
+    iq = iq_ref[0, :]                        # [qb] i32
+    ik = ik_ref[0, :]                        # [kb]
+    sq = sq_ref[0, :]
+    sk = sk_ref[0, :]
+    win = win_ref[0, 0]
+
+    scores = jax.lax.dot_general(
+        q.astype(jnp.float32), k.astype(jnp.float32),
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale   # [qb, kb]
+
+    ok = jnp.ones(scores.shape, jnp.bool_)
+    if causal:
+        ok &= ik[None, :] <= iq[:, None]
+    else:
+        ok &= ik[None, :] != INT_MAX
+    ok &= jnp.where(win > 0, ik[None, :] > (iq[:, None] - win), True)
+    ok &= sk[None, :] == sq[:, None]
+    scores = jnp.where(ok, scores, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new[:, None])
+    s_scr[...] = s_scr[...] * alpha + jnp.sum(p, axis=-1)
+    pv = jax.lax.dot_general(
+        p, v.astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)           # [qb, D]
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + pv
+    m_scr[...] = m_new
+
+    @pl.when(ik_blk == nk - 1)
+    def _finalize():
+        s = s_scr[...]
+        s = jnp.where(s == 0.0, 1.0, s)
+        o_ref[0, :, 0, :] = (acc_scr[...] / s[:, None]).astype(o_ref.dtype)
+
+
+def _pad_axis(x, size, axis, value=0):
+    pad = size - x.shape[axis]
+    if pad == 0:
+        return x
+    cfg = [(0, 0)] * x.ndim
+    cfg[axis] = (0, pad)
+    return jnp.pad(x, cfg, constant_values=value)
+
+
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(7, 8, 9, 10, 11))
+def _flash(q, k, v, idx_q, idx_kv, seg_q, seg_kv,
+           causal, window_static, q_block, kv_block, interpret):
+    return _flash_fwd_impl(q, k, v, idx_q, idx_kv, seg_q, seg_kv,
+                           causal, window_static, q_block, kv_block, interpret)
+
+
+def _flash_fwd_impl(q, k, v, idx_q, idx_kv, seg_q, seg_kv,
+                    causal, window_static, q_block, kv_block, interpret):
+    B, Lq, H, D = q.shape
+    Lkv, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = 1.0 / math.sqrt(D)
+
+    qb = min(q_block, max(Lq, 8))
+    kb = min(kv_block, max(Lkv, 8))
+    nq = -(-Lq // qb)
+    nk = -(-Lkv // kb)
+    Lq_p, Lkv_p = nq * qb, nk * kb
+
+    qp = _pad_axis(q, Lq_p, 1)
+    kp = _pad_axis(k, Lkv_p, 1)
+    vp = _pad_axis(v, Lkv_p, 1)
+    iq = _pad_axis(idx_q, Lq_p, 1, 0)
+    ik = _pad_axis(idx_kv, Lkv_p, 1, INT_MAX)
+    sq = _pad_axis(seg_q, Lq_p, 1, -1)
+    sk = _pad_axis(seg_kv, Lkv_p, 1, -2)
+    win = jnp.asarray(window_static, jnp.int32).reshape(1, 1)
+
+    grid = (B, H, nq, nk)
+    kern = functools.partial(_kernel, causal=causal, nk=nk, scale=scale)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # win
+            pl.BlockSpec((1, qb, 1, D), lambda b, h, i, j: (b, i, h, 0)),
+            pl.BlockSpec((1, kb, 1, D), lambda b, h, i, j: (b, j, h // G, 0)),
+            pl.BlockSpec((1, kb, 1, D), lambda b, h, i, j: (b, j, h // G, 0)),
+            pl.BlockSpec((1, qb), lambda b, h, i, j: (b, i)),
+            pl.BlockSpec((1, kb), lambda b, h, i, j: (b, j)),
+            pl.BlockSpec((1, qb), lambda b, h, i, j: (b, i)),
+            pl.BlockSpec((1, kb), lambda b, h, i, j: (b, j)),
+        ],
+        out_specs=pl.BlockSpec((1, qb, 1, D), lambda b, h, i, j: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Lq_p, H, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((qb,), jnp.float32),
+            pltpu.VMEM((qb,), jnp.float32),
+            pltpu.VMEM((qb, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(win, qp, kp, vp, iq, ik, sq, sk)
+    return out[:, :Lq]
+
+
+def _flash_fwd(q, k, v, idx_q, idx_kv, seg_q, seg_kv,
+               causal, window_static, q_block, kv_block, interpret):
+    out = _flash_fwd_impl(q, k, v, idx_q, idx_kv, seg_q, seg_kv,
+                          causal, window_static, q_block, kv_block, interpret)
+    return out, (q, k, v, idx_q, idx_kv, seg_q, seg_kv)
+
+
+def _flash_bwd(causal, window_static, q_block, kv_block, interpret,
+               res, g):
+    q, k, v, idx_q, idx_kv, seg_q, seg_kv = res
+
+    def f(q, k, v):
+        return XF.flash_attention_xla(q, k, v, idx_q, idx_kv, seg_q, seg_kv,
+                                      causal=causal, window=window_static,
+                                      q_block=q_block, kv_block=kv_block)
+
+    _, vjp = jax.vjp(f, q, k, v)
+    dq, dk, dv = vjp(g)
+    return dq, dk, dv, None, None, None, None
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(q, k, v, *, idx_q=None, idx_kv=None, seg_q=None,
+                    seg_kv=None, causal: bool = True, window=0,
+                    q_block: int = 128, kv_block: int = 128,
+                    interpret: bool = False):
+    """Public entry — fills default index/segment rows, dispatches to the
+    kernel.  `window` must be static here (Python int); traced windows go
+    through the xla path (ops.attention handles the choice)."""
+    B, Lq = q.shape[0], q.shape[1]
+    Lkv = k.shape[1]
+    if idx_q is None:
+        idx_q = jnp.broadcast_to(jnp.arange(Lq, dtype=jnp.int32)[None], (B, Lq))
+    if idx_kv is None:
+        idx_kv = jnp.broadcast_to(jnp.arange(Lkv, dtype=jnp.int32)[None], (B, Lkv))
+    if seg_q is None or seg_kv is None:
+        seg_q = jnp.zeros((B, Lq), jnp.int32)
+        seg_kv = jnp.zeros((B, Lkv), jnp.int32)
+    window_static = int(window)
+    return _flash(q, k, v, idx_q, idx_kv, seg_q, seg_kv,
+                  causal, window_static, q_block, kv_block, interpret)

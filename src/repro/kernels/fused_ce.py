@@ -1,0 +1,165 @@
+"""Pallas TPU kernel: fused sampled-token log-probability + log-normalizer.
+
+This is the paper-technique-critical kernel: Polar's trainer consumes
+loss-masked token streams and the GRPO policy gradient needs the behavior
+log-probability of every sampled token.  Computing it naively materializes
+[T, V] logits in HBM — at gemma3's V=262144 and T=32k/device that is 32 GB.
+This kernel streams vocab chunks HBM→VMEM, keeping an online
+(max, sumexp, target-score) carry per token row, so HBM traffic is
+O(T·d + V·d) and the [T, V] tensor never exists.
+
+Grid: (token_blocks, vocab_chunks), vocab innermost-sequential; carries in
+VMEM scratch.  Matmul [tb, d] × [d, vb] runs on the MXU in f32.
+
+Backward (custom_vjp): d_hidden = (softmax − onehot(target)) @ table and
+d_table = (softmax − onehot)ᵀ @ hidden, computed with a vocab-chunked XLA
+recompute loop (same O(V·d) streaming; no [T, V] residual is stored).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(hid_ref, tab_ref, tgt_ref,
+            logp_ref, lse_ref,
+            m_scr, s_scr, t_scr,
+            *, nv: int, vb: int, V: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        s_scr[...] = jnp.zeros_like(s_scr)
+        t_scr[...] = jnp.zeros_like(t_scr)
+
+    hid = hid_ref[...].astype(jnp.float32)          # [tb, d]
+    tab = tab_ref[...].astype(jnp.float32)          # [vb, d]
+    tgt = tgt_ref[...]                               # [tb] i32
+
+    logits = jax.lax.dot_general(hid, tab, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # [tb,vb]
+    base = j * vb
+    col = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1) + base
+    logits = jnp.where(col < V, logits, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1))
+    s_scr[...] = (s_scr[...] * jnp.exp(m_prev - m_new)
+                  + jnp.sum(jnp.exp(logits - m_new[:, None]), axis=-1))
+    m_scr[...] = m_new
+
+    hit = col == tgt[:, None]                        # [tb, vb]
+    t_val = jnp.sum(jnp.where(hit, logits, 0.0), axis=-1)
+    t_scr[...] = t_scr[...] + t_val
+
+    @pl.when(j == nv - 1)
+    def _final():
+        lse = m_scr[...] + jnp.log(s_scr[...])
+        lse_ref[...] = lse
+        logp_ref[...] = t_scr[...] - lse
+
+
+def _fwd_impl(hidden, table, targets, t_block, v_block, interpret):
+    T, d = hidden.shape
+    V = table.shape[0]
+    tb = min(t_block, max(T, 8))
+    vb = min(v_block, V)
+    nt = -(-T // tb)
+    nv = -(-V // vb)
+    Tp, Vp = nt * tb, nv * vb
+    hid = jnp.pad(hidden, ((0, Tp - T), (0, 0))) if Tp != T else hidden
+    tab = jnp.pad(table, ((0, Vp - V), (0, 0))) if Vp != V else table
+    tgt = jnp.pad(targets, (0, Tp - T)) if Tp != T else targets
+
+    kern = functools.partial(_kernel, nv=nv, vb=vb, V=V)
+    logp, lse = pl.pallas_call(
+        kern,
+        grid=(nt, nv),
+        in_specs=[
+            pl.BlockSpec((tb, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((vb, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((tb,), lambda i, j: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tb,), lambda i, j: (i,)),
+            pl.BlockSpec((tb,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Tp,), jnp.float32),
+            jax.ShapeDtypeStruct((Tp,), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((tb,), jnp.float32),
+            pltpu.VMEM((tb,), jnp.float32),
+            pltpu.VMEM((tb,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(hid, tab, tgt)
+    return logp[:T], lse[:T]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _fused(hidden, table, targets, t_block, v_block, interpret):
+    return _fwd_impl(hidden, table, targets, t_block, v_block, interpret)
+
+
+def _fused_fwd(hidden, table, targets, t_block, v_block, interpret):
+    logp, lse = _fwd_impl(hidden, table, targets, t_block, v_block, interpret)
+    return (logp, lse), (hidden, table, targets, lse)
+
+
+def _fused_bwd(t_block, v_block, interpret, res, g):
+    """d logp/d hidden = table[tgt] − softmax @ table  (row-wise), and the
+    lse cotangent adds softmax @ table.  Streamed over vocab chunks."""
+    hidden, table, targets, lse = res
+    g_logp, g_lse = g
+    T, d = hidden.shape
+    V = table.shape[0]
+    vb = v_block
+    nv = -(-V // vb)
+    Vp = nv * vb
+    tab = jnp.pad(table, ((0, Vp - V), (0, 0))) if Vp != V else table
+    tab = tab.reshape(nv, vb, d)
+    hf = hidden.astype(jnp.float32)
+    # coefficient of the softmax term: g_lse − g_logp  (target term separate)
+    coef = (g_lse - g_logp).astype(jnp.float32)       # [T]
+
+    def body(carry, inp):
+        dh = carry
+        tab_c, c_idx = inp
+        tabf = tab_c.astype(jnp.float32)
+        logits = jnp.einsum("td,vd->tv", hf, tabf,
+                            preferred_element_type=jnp.float32)
+        base = c_idx * vb
+        col = base + jnp.arange(vb)
+        probs = jnp.exp(jnp.where(col[None, :] < V, logits, NEG_INF)
+                        - lse[:, None])               # [T, vb]
+        w = probs * coef[:, None]
+        hit = (col[None, :] == targets[:, None])
+        w = w + jnp.where(hit, g_logp[:, None], 0.0)
+        dh = dh + jnp.einsum("tv,vd->td", w, tabf,
+                             preferred_element_type=jnp.float32)
+        dtab_c = jnp.einsum("tv,td->vd", w, hf,
+                            preferred_element_type=jnp.float32)
+        return dh, dtab_c
+
+    dh0 = jnp.zeros((T, d), jnp.float32)
+    dh, dtab = jax.lax.scan(body, dh0, (tab, jnp.arange(nv, dtype=jnp.int32)))
+    dtab = dtab.reshape(Vp, d)[:V]
+    return dh.astype(hidden.dtype), dtab.astype(table.dtype), None
+
+
+_fused.defvjp(_fused_fwd, _fused_bwd)
+
+
+def token_logprob_pallas(hidden, table, targets, *, chunk: int = 1024,
+                         t_block: int = 128, interpret: bool = False):
+    """hidden [T,d] @ table [V,d] → (logp(target) [T] f32, lse [T] f32)."""
+    return _fused(hidden, table, targets, t_block, chunk, interpret)

@@ -1,0 +1,115 @@
+"""Jit-ready wrappers + implementation dispatch for every kernel.
+
+Every op has (at least) three interchangeable implementations:
+  * ``xla_naive``  — the pure-jnp oracle in ``ref.py`` (small shapes / tests)
+  * ``xla_flash``/``xla_chunked`` — blocked, memory-lean XLA versions used by
+    the models at scale and by the CPU dry-run
+  * ``pallas``     — the Pallas TPU kernel (VMEM BlockSpec tiling); executed
+    in interpret mode when not on TPU so CPU tests exercise the kernel body
+
+Selection: explicit ``impl=`` argument wins; otherwise the env var
+``REPRO_KERNEL_IMPL``; otherwise "auto" = pallas on TPU, xla elsewhere.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as REF
+from repro.kernels import xla_flash as XF
+
+
+def _default_impl() -> str:
+    env = os.environ.get("REPRO_KERNEL_IMPL", "auto")
+    if env != "auto":
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def attention(q, k, v, *, idx_q=None, idx_kv=None, seg_q=None, seg_kv=None,
+              causal: bool = True, window=0, impl: Optional[str] = None,
+              q_block: int = 512, kv_block: int = 512):
+    """Unified attention entrypoint — see xla_flash.flash_attention_xla."""
+    impl = impl or _default_impl()
+    if impl == "xla_naive":
+        B, Lq = q.shape[0], q.shape[1]
+        Lkv = k.shape[1]
+        if idx_q is None:
+            idx_q = jnp.broadcast_to(jnp.arange(Lq, dtype=jnp.int32)[None], (B, Lq))
+        if idx_kv is None:
+            idx_kv = jnp.broadcast_to(jnp.arange(Lkv, dtype=jnp.int32)[None], (B, Lkv))
+        ok = jnp.ones((B, Lq, Lkv), jnp.bool_)
+        if causal:
+            ok &= idx_kv[:, None, :] <= idx_q[:, :, None]
+        win = jnp.asarray(window, jnp.int32)
+        ok &= jnp.where(win > 0, idx_kv[:, None, :] > (idx_q[:, :, None] - win), True)
+        if seg_q is not None and seg_kv is not None:
+            ok &= seg_kv[:, None, :] == seg_q[:, :, None]
+        bias = jnp.where(ok, 0.0, -1e30).astype(jnp.float32)[:, None]
+        return REF.attention_reference(q, k, v, bias)
+    if impl == "pallas":
+        from repro.kernels import flash_attention as FA
+        return FA.flash_attention(
+            q, k, v, idx_q=idx_q, idx_kv=idx_kv, seg_q=seg_q, seg_kv=seg_kv,
+            causal=causal, window=window, interpret=_interpret())
+    # default: blocked xla
+    return XF.flash_attention_xla(
+        q, k, v, idx_q, idx_kv, seg_q, seg_kv,
+        causal=causal, window=window, q_block=q_block, kv_block=kv_block)
+
+
+def decode_attention(q, k, v, idx_kv, q_pos, *, window=0, seg_kv=None,
+                     seg_q=None, impl: Optional[str] = None):
+    """Single-token attention against a KV cache (no Pallas path needed —
+    decode is bandwidth-bound and XLA's fused softmax is already roofline)."""
+    return XF.decode_attention_xla(q, k, v, idx_kv, q_pos, window=window,
+                                   seg_kv=seg_kv, seg_q=seg_q)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 SSD
+# ---------------------------------------------------------------------------
+
+def ssd(x, dt, A, B, C, *, chunk: int = 256, impl: Optional[str] = None,
+        initial_state=None):
+    """Chunked state-space-duality scan.  Returns (y, final_state)."""
+    impl = impl or _default_impl()
+    if impl == "xla_naive":
+        return REF.ssd_sequential(x, dt, A, B, C, initial_state)
+    if impl == "pallas":
+        from repro.kernels import ssd as SSD
+        return SSD.ssd_pallas(x, dt, A, B, C, chunk=chunk,
+                              initial_state=initial_state,
+                              interpret=_interpret())
+    return REF.ssd_chunked(x, dt, A, B, C, chunk=chunk,
+                           initial_state=initial_state)
+
+
+# ---------------------------------------------------------------------------
+# fused sampled-token logprob (GRPO loss hot path)
+# ---------------------------------------------------------------------------
+
+def token_logprob(hidden, table, targets, *, chunk: int = 8192,
+                  impl: Optional[str] = None):
+    """hidden [T,d] @ table [V,d] → (logprob(target) [T], logsumexp [T]).
+
+    Never materializes [T, V] in HBM (vocab-chunked streaming)."""
+    impl = impl or _default_impl()
+    if impl == "xla_naive":
+        return REF.fused_logprob_reference(hidden, table, targets)
+    if impl == "pallas":
+        from repro.kernels import fused_ce as FCE
+        return FCE.token_logprob_pallas(hidden, table, targets, chunk=chunk,
+                                        interpret=_interpret())
+    return REF.fused_logprob_chunked(hidden, table, targets, chunk=chunk)

@@ -1,0 +1,208 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground-truth implementations: kernels are validated against
+them (interpret mode on CPU) and the XLA model path uses them directly when
+Pallas is disabled (e.g. the CPU dry-run).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def attention_reference(q, k, v, bias=None):
+    """q [B,Lq,H,D], k/v [B,Lkv,Hkv,D], bias [B,1,Lq,Lkv] additive f32.
+    GQA by head grouping; f32 softmax. Returns [B,Lq,H,D]."""
+    B, Lq, H, D = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Lq, Hkv, G, D)
+    scale = 1.0 / math.sqrt(D)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    if bias is not None:
+        scores = scores + bias[:, :, None, :, :]
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(q.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Lq, H, D).astype(q.dtype)
+
+
+def causal_bias(Lq: int, Lkv: int, window: int = 0, offset: int = 0):
+    """Additive f32 bias [1,1,Lq,Lkv]; offset = index of query 0 in kv space."""
+    iq = jnp.arange(Lq)[:, None] + offset
+    ik = jnp.arange(Lkv)[None, :]
+    ok = ik <= iq
+    if window > 0:
+        ok &= ik > (iq - window)
+    return jnp.where(ok, 0.0, -1e30).astype(jnp.float32)[None, None]
+
+
+# ---------------------------------------------------------------------------
+# SSD (Mamba-2 state-space duality)
+# ---------------------------------------------------------------------------
+
+def ssd_sequential(x, dt, A, B, C, initial_state=None):
+    """Ground-truth recurrence (O(L) sequential scan).
+
+    x  [b, L, H, P]   per-head inputs
+    dt [b, L, H]      post-softplus step sizes
+    A  [H]            negative decay rates
+    B  [b, L, G, N]   input projections (G groups, H % G == 0)
+    C  [b, L, G, N]   output projections
+    Returns (y [b,L,H,P], final_state [b,H,N,P])."""
+    b, L, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(B, rep, axis=2)  # [b, L, H, N]
+    Ch = jnp.repeat(C, rep, axis=2)
+    if initial_state is None:
+        initial_state = jnp.zeros((b, H, N, P), jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, Bt, Ct = inp  # [b,H,P], [b,H], [b,H,N], [b,H,N]
+        decay = jnp.exp(dtt.astype(jnp.float32) * A.astype(jnp.float32))  # [b,H]
+        upd = (dtt.astype(jnp.float32)[..., None, None]
+               * Bt.astype(jnp.float32)[..., :, None]
+               * xt.astype(jnp.float32)[..., None, :])  # [b,H,N,P]
+        state = decay[..., None, None] * state + upd
+        y = jnp.einsum("bhn,bhnp->bhp", Ct.astype(jnp.float32), state)
+        return state, y
+
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(Bh, 1, 0), jnp.moveaxis(Ch, 1, 0))
+    state, ys = jax.lax.scan(step, initial_state, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), state
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, initial_state=None):
+    """Chunked SSD (the algorithm the Pallas kernel implements).
+
+    Within-chunk quadratic (attention-like) term + inter-chunk state carry.
+    Matches ssd_sequential to fp tolerance.  Returns (y, final_state)."""
+    b, L, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    Q = chunk
+    assert L % Q == 0, (L, Q)
+    nc = L // Q
+
+    xf = x.astype(jnp.float32).reshape(b, nc, Q, H, P)
+    dtf = dt.astype(jnp.float32).reshape(b, nc, Q, H)
+    Bf = jnp.repeat(B, rep, axis=2).astype(jnp.float32).reshape(b, nc, Q, H, N)
+    Cf = jnp.repeat(C, rep, axis=2).astype(jnp.float32).reshape(b, nc, Q, H, N)
+    dA = dtf * A.astype(jnp.float32)                       # [b,nc,Q,H]
+    cs = jnp.cumsum(dA, axis=2)                            # inclusive cumsum
+
+    # --- intra-chunk quadratic term ---------------------------------------
+    # att[i,j] = (C_i . B_j) * exp(cs_i - cs_j) * dt_j   for j <= i
+    seg = cs[:, :, :, None, :] - cs[:, :, None, :, :]      # [b,nc,Q,Q,H]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    # mask BEFORE exp: exp on the masked (j>i) side can overflow, and the
+    # where-grad would then propagate inf*0 = nan into the backward pass.
+    seg = jnp.where(mask[None, None, :, :, None], seg, -1e9)
+    decay = jnp.exp(seg)
+    cb = jnp.einsum("bcihn,bcjhn->bcijh", Cf, Bf)
+    att = cb * decay * dtf[:, :, None, :, :]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", att, xf)
+
+    # --- chunk states -------------------------------------------------------
+    last = cs[:, :, -1:, :]                                # [b,nc,1,H]
+    w = jnp.exp(last - cs) * dtf                           # [b,nc,Q,H]
+    states = jnp.einsum("bcqhn,bcqh,bcqhp->bchnp", Bf, w, xf)  # [b,nc,H,N,P]
+
+    # --- inter-chunk carry ----------------------------------------------------
+    chunk_decay = jnp.exp(last[:, :, 0, :])                # [b,nc,H]
+    if initial_state is None:
+        initial_state = jnp.zeros((b, H, N, P), jnp.float32)
+
+    def carry(state, inp):
+        s_c, d_c = inp                                     # [b,H,N,P], [b,H]
+        prev = state
+        state = d_c[..., None, None] * state + s_c
+        return state, prev
+
+    final, prevs = jax.lax.scan(
+        carry, initial_state,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prevs = jnp.moveaxis(prevs, 0, 1)                      # [b,nc,H,N,P]
+
+    y_inter = jnp.einsum("bcqhn,bchnp->bcqhp", Cf * jnp.exp(cs)[..., None], prevs)
+    y = (y_intra + y_inter).reshape(b, L, H, P)
+    return y.astype(x.dtype), final
+
+
+def ssd_decode_step(state, x, dt, A, B, C):
+    """Single-token SSD update.  state [b,H,N,P] f32; x [b,H,P]; dt [b,H];
+    B/C [b,G,N].  Returns (y [b,H,P], new_state)."""
+    H = x.shape[1]
+    G = B.shape[1]
+    rep = H // G
+    Bh = jnp.repeat(B, rep, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(C, rep, axis=1).astype(jnp.float32)
+    decay = jnp.exp(dt.astype(jnp.float32) * A.astype(jnp.float32))
+    upd = (dt.astype(jnp.float32)[..., None, None]
+           * Bh[..., :, None] * x.astype(jnp.float32)[..., None, :])
+    state = decay[..., None, None] * state + upd
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, state)
+    return y.astype(x.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# fused cross-entropy / sampled-token logprob (GRPO hot loss)
+# ---------------------------------------------------------------------------
+
+def fused_logprob_reference(hidden, table, targets):
+    """hidden [T, d], table [V, d], targets [T] int32.
+    Returns (logprob_of_target [T] f32, logsumexp [T] f32) — computed with the
+    naive full-logits materialization (the thing the kernel avoids)."""
+    logits = jnp.einsum("td,vd->tv", hidden, table,
+                        preferred_element_type=jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[:, None], axis=-1)[:, 0]
+    return tgt - lse, lse
+
+
+def fused_logprob_chunked(hidden, table, targets, chunk: int = 8192):
+    """Vocab-chunked streaming version (never materializes [T, V]).  This is
+    the XLA analogue of the Pallas kernel; also used as the sharded model
+    loss path."""
+    T, d = hidden.shape
+    V = table.shape[0]
+    nchunks = (V + chunk - 1) // chunk
+    Vp = nchunks * chunk
+    tab = jnp.pad(table, ((0, Vp - V), (0, 0))) if Vp != V else table
+    tab = tab.reshape(nchunks, chunk, d)
+
+    def body(carry, tab_c_and_idx):
+        m, s, tgt = carry
+        tab_c, c_idx = tab_c_and_idx
+        logits = jnp.einsum("td,vd->tv", hidden, tab_c,
+                            preferred_element_type=jnp.float32)
+        base = c_idx * chunk
+        # mask padded vocab tail
+        valid = (base + jnp.arange(chunk)) < V
+        logits = jnp.where(valid[None, :], logits, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        s = s * jnp.exp(m - m_new) + jnp.sum(jnp.exp(logits - m_new[:, None]), axis=-1)
+        local = targets - base
+        in_c = (local >= 0) & (local < chunk)
+        t_val = jnp.take_along_axis(logits, jnp.clip(local, 0, chunk - 1)[:, None],
+                                    axis=-1)[:, 0]
+        tgt = jnp.where(in_c, t_val, tgt)
+        return (m_new, s, tgt), None
+
+    init = (jnp.full((T,), -jnp.inf, jnp.float32),
+            jnp.zeros((T,), jnp.float32),
+            jnp.zeros((T,), jnp.float32))
+    (m, s, tgt), _ = jax.lax.scan(body, init,
+                                  (tab, jnp.arange(nchunks, dtype=jnp.int32)))
+    lse = m + jnp.log(s)
+    return tgt - lse, lse

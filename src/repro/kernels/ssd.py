@@ -1,0 +1,156 @@
+"""Pallas TPU kernel for the Mamba-2 SSD (state-space duality) chunked scan.
+
+TPU adaptation of the GPU SSD algorithm (arXiv:2405.21060): the GPU version
+uses warp-level parallel scans; here the inter-chunk state carry is the
+innermost *sequential* grid dimension, with the running state [N, P] held in
+VMEM scratch across chunk steps.  The intra-chunk quadratic term is a
+[Q, Q] masked matmul on the MXU; chunk length Q defaults to 128
+(MXU-aligned).  All math is f32 inside the kernel regardless of input dtype.
+
+Per (batch b, head h) lane the kernel computes, chunk by chunk c:
+  dA   = dt * A                  [Q]
+  cs   = cumsum(dA)              [Q]   (inclusive)
+  Lmat = exp(cs_i - cs_j) · 1[j<=i]          intra-chunk decay
+  att  = (C B^T ⊙ Lmat) · diag(dt)
+  y    = att @ x + (C ⊙ exp(cs)) @ state
+  state = exp(cs_Q) * state + B^T diag(exp(cs_Q - cs)·dt) x
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import ref as REF
+
+
+def _kernel(A_ref,                     # SMEM [1] f32  (per-head decay)
+            x_ref, dt_ref, B_ref, C_ref, s0_ref,
+            y_ref, sf_ref,
+            state_scr,                 # VMEM [N, P] f32 carry
+            *, nc: int):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        state_scr[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)      # [Q, P]
+    dt = dt_ref[0, :, 0].astype(jnp.float32)       # [Q]
+    Bm = B_ref[0, :, 0, :].astype(jnp.float32)     # [Q, N]
+    Cm = C_ref[0, :, 0, :].astype(jnp.float32)     # [Q, N]
+    A = A_ref[pl.program_id(1)]                    # this head's decay rate
+
+    Q = x.shape[0]
+    dA = dt * A                                    # [Q]
+    cs = jnp.cumsum(dA)                            # [Q] inclusive
+    # intra-chunk decay matrix (mask BEFORE exp → no overflow)
+    seg = cs[:, None] - cs[None, :]                # [Q, Q]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    seg = jnp.where(jj <= ii, seg, -1e9)
+    Lmat = jnp.exp(seg)
+
+    cb = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [Q, Q]
+    att = cb * Lmat * dt[None, :]
+    y_intra = jax.lax.dot_general(att, x, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)  # [Q,P]
+
+    state = state_scr[...]                          # [N, P]
+    y_inter = jax.lax.dot_general(Cm * jnp.exp(cs)[:, None], state,
+                                  (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    y_ref[0, :, 0, :] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # state update
+    last = cs[-1]
+    w = jnp.exp(last - cs) * dt                     # [Q]
+    s_new = jax.lax.dot_general(Bm * w[:, None], x, (((0,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # [N, P]
+    state_scr[...] = jnp.exp(last) * state + s_new
+
+    @pl.when(c == nc - 1)
+    def _final():
+        sf_ref[0, 0] = state_scr[...]
+
+
+def ssd_pallas(x, dt, A, B, C, *, chunk: int = 128, initial_state=None,
+               interpret: bool = False):
+    """x [b,L,H,P]; dt [b,L,H]; A [H]; B/C [b,L,G,N].  Returns
+    (y [b,L,H,P], final_state [b,H,N,P] f32).  L % chunk == 0 required
+    (the wrapper in ops pads if needed).
+
+    Differentiable: custom_vjp whose backward recomputes through the chunked
+    XLA formulation (flash-style recompute — no [L,Q,Q] residuals stored)."""
+    return _ssd(x, dt, A, B, C, initial_state, chunk, interpret)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7))
+def _ssd(x, dt, A, B, C, initial_state, chunk, interpret):
+    return _ssd_fwd_impl(x, dt, A, B, C, initial_state, chunk, interpret)
+
+
+def _ssd_fwd(x, dt, A, B, C, initial_state, chunk, interpret):
+    out = _ssd_fwd_impl(x, dt, A, B, C, initial_state, chunk, interpret)
+    return out, (x, dt, A, B, C, initial_state)
+
+
+def _ssd_bwd(chunk, interpret, res, g):
+    x, dt, A, B, C, initial_state = res
+    has_init = initial_state is not None
+
+    def f(x, dt, A, B, C, s0):
+        return REF.ssd_chunked(x, dt, A, B, C, chunk=chunk, initial_state=s0)
+
+    if has_init:
+        _, vjp = jax.vjp(f, x, dt, A, B, C, initial_state)
+        dx, ddt, dA, dB, dC, ds0 = vjp(g)
+        return dx, ddt, dA, dB, dC, ds0
+    _, vjp = jax.vjp(lambda x, dt, A, B, C: f(x, dt, A, B, C, None),
+                     x, dt, A, B, C)
+    dx, ddt, dA, dB, dC = vjp(g)
+    return dx, ddt, dA, dB, dC, None
+
+
+_ssd.defvjp(_ssd_fwd, _ssd_bwd)
+
+
+def _ssd_fwd_impl(x, dt, A, B, C, initial_state, chunk, interpret):
+    b, L, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    Q = min(chunk, L)
+    assert L % Q == 0, (L, Q)
+    nc = L // Q
+    if initial_state is None:
+        initial_state = jnp.zeros((b, H, N, P), jnp.float32)
+
+    kern = functools.partial(_kernel, nc=nc)
+    grid = (b, H, nc)
+    y, sf = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),                     # A [H]
+            pl.BlockSpec((1, Q, 1, P), lambda i, h, c: (i, c, h, 0)),   # x
+            pl.BlockSpec((1, Q, 1), lambda i, h, c: (i, c, h)),         # dt
+            pl.BlockSpec((1, Q, 1, N), lambda i, h, c: (i, c, h // rep, 0)),  # B
+            pl.BlockSpec((1, Q, 1, N), lambda i, h, c: (i, c, h // rep, 0)),  # C
+            pl.BlockSpec((1, 1, N, P), lambda i, h, c: (i, h, 0, 0)),   # s0
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, 1, P), lambda i, h, c: (i, c, h, 0)),
+            pl.BlockSpec((1, 1, N, P), lambda i, h, c: (i, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, L, H, P), x.dtype),
+            jax.ShapeDtypeStruct((b, H, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(A.astype(jnp.float32), x, dt, B, C, initial_state)
+    return y, sf

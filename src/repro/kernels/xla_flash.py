@@ -1,0 +1,231 @@
+"""Blocked online-softmax attention in pure XLA (jnp + lax.scan).
+
+This is the memory-lean attention path used by every model forward at scale:
+it never materializes the [Lq, Lkv] score matrix (only [Qb, Kb] blocks live
+inside the scan), so 32k-prefill fits HBM where the naive path needs
+O(L^2) f32.  The Pallas TPU kernel (repro.kernels.flash_attention) implements
+the same algorithm with explicit VMEM BlockSpecs; this function doubles as
+its shape/semantics oracle at scale and as the CPU/dry-run lowering path.
+
+Mask model (all masks are derived from index arrays, never materialized
+globally):
+  ok(i, j) = [causal → idx_kv[j] <= idx_q[i]]
+           & [window  → idx_kv[j] >  idx_q[i] - window]   (window may be traced)
+           & [segments → seg_kv[j] == seg_q[i]]
+
+`window` may be a traced scalar (gemma3 selects local/global per scanned
+layer), with `window <= 0` meaning "no window".
+"""
+from __future__ import annotations
+
+import math
+import os
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _env_int(name: str, default: int) -> int:
+    return int(os.environ.get(name, default))
+
+
+def _env_flag(name: str) -> bool:
+    return os.environ.get(name, "0") not in ("0", "", "false")
+
+
+def _pad_to(x, size: int, axis: int):
+    pad = size - x.shape[axis]
+    if pad == 0:
+        return x
+    cfg = [(0, 0)] * x.ndim
+    cfg[axis] = (0, pad)
+    return jnp.pad(x, cfg)
+
+
+def flash_attention_xla(
+    q, k, v,
+    idx_q=None, idx_kv=None,
+    seg_q=None, seg_kv=None,
+    *,
+    causal: bool = True,
+    window=0,
+    q_block: int = 512,
+    kv_block: int = 512,
+    scale: Optional[float] = None,
+):
+    """q [B,Lq,H,D]; k/v [B,Lkv,Hkv,D] (GQA via head grouping).
+
+    idx_q [B,Lq] / idx_kv [B,Lkv]: token positions in the shared index space
+    (defaults to arange).  seg_* optional segment ids for packed sequences.
+    Returns [B,Lq,H,D] in q.dtype.
+    """
+    B, Lq, H, D = q.shape
+    Lkv, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    # perf-iteration knobs (read at trace time; see EXPERIMENTS.md §Perf)
+    q_block = _env_int("REPRO_FLASH_QB", q_block)
+    kv_block = _env_int("REPRO_FLASH_KB", kv_block)
+    bf16_pv = _env_flag("REPRO_FLASH_BF16_PV")
+
+    if idx_q is None:
+        idx_q = jnp.broadcast_to(jnp.arange(Lq, dtype=jnp.int32)[None], (B, Lq))
+    if idx_kv is None:
+        idx_kv = jnp.broadcast_to(jnp.arange(Lkv, dtype=jnp.int32)[None], (B, Lkv))
+
+    qb = min(q_block, Lq)
+    kb = min(kv_block, Lkv)
+    nq = -(-Lq // qb)
+    nk = -(-Lkv // kb)
+    Lq_p, Lkv_p = nq * qb, nk * kb
+
+    # static banding: when the window is a PYTHON int (> 0) and attention is
+    # causal over the canonical index space, each q block only touches the
+    # kv blocks inside its band — attention work drops from nq·nk block
+    # pairs to nq·nbw (sliding-window layers: gemma3 local layers at 32k go
+    # from 64 to 3 kv blocks per q block).
+    band = None
+    if (causal and isinstance(window, int) and window > 0
+            and qb == kb and Lq_p == Lkv_p):
+        band = (window + qb - 1) // kb + 1   # kv blocks per q block
+
+    # pad: padded kv slots get segment id -2 (never matches), padded q rows
+    # are sliced away at the end.
+    qp = _pad_to(q, Lq_p, 1).reshape(B, nq, qb, H, D)
+    kp = _pad_to(k, Lkv_p, 1).reshape(B, nk, kb, Hkv, D)
+    vp = _pad_to(v, Lkv_p, 1).reshape(B, nk, kb, Hkv, D)
+    iq = _pad_to(idx_q, Lq_p, 1).reshape(B, nq, qb)
+    ik = jnp.pad(idx_kv, ((0, 0), (0, Lkv_p - Lkv)), constant_values=jnp.iinfo(jnp.int32).max)
+    ik = ik.reshape(B, nk, kb)
+    if seg_q is not None and seg_kv is not None:
+        sq = _pad_to(seg_q, Lq_p, 1).reshape(B, nq, qb)
+        sk = jnp.pad(seg_kv, ((0, 0), (0, Lkv_p - Lkv)), constant_values=-2)
+        sk = sk.reshape(B, nk, kb)
+    else:
+        sq = sk = None
+
+    win = jnp.asarray(window, jnp.int32)
+    kp_m = jnp.moveaxis(kp, 1, 0)      # [nk, B, kb, Hkv, D]
+    vp_m = jnp.moveaxis(vp, 1, 0)
+    ik_m = jnp.moveaxis(ik, 1, 0)      # [nk, B, kb]
+    sk_m = jnp.moveaxis(sk, 1, 0) if sk is not None else None
+
+    def q_block_body(_, q_inputs):
+        if sq is not None:
+            q_c, iq_c, sq_c, qi = q_inputs
+        else:
+            q_c, iq_c, qi = q_inputs
+            sq_c = None
+        # q_c [B, qb, H, D] → grouped [B, qb, Hkv, G, D]
+        qg = q_c.reshape(B, qb, Hkv, G, D)
+
+        def step(carry, k_c, v_c, ik_c, sk_c, extra_ok):
+            m, s, acc = carry
+            scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_c,
+                                preferred_element_type=jnp.float32) * scale
+            ok = jnp.ones((B, qb, kb), jnp.bool_)
+            # padded kv (ik=INT_MAX) always fails causal; for non-causal full
+            # attention we must mask padding explicitly.
+            if causal:
+                ok &= ik_c[:, None, :] <= iq_c[:, :, None]
+            else:
+                ok &= ik_c[:, None, :] != jnp.iinfo(jnp.int32).max
+            ok &= jnp.where(win > 0,
+                            ik_c[:, None, :] > (iq_c[:, :, None] - win),
+                            True)
+            if sq_c is not None and sk_c is not None:
+                ok &= sk_c[:, None, :] == sq_c[:, :, None]
+            if extra_ok is not None:
+                ok &= extra_ok
+            bias = jnp.where(ok, 0.0, NEG_INF)[:, None, None, :, :]
+            scores = scores + bias  # [B,Hkv,G,qb,kb]
+            m_new = jnp.maximum(m, jnp.max(scores, axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(scores - m_new[..., None])
+            s_new = s * alpha + jnp.sum(p, axis=-1)
+            p_mat = p.astype(jnp.bfloat16) if bf16_pv else p.astype(v_c.dtype)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p_mat, v_c,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * alpha[..., None] + pv
+            return (m_new, s_new, acc_new)
+
+        m0 = jnp.full((B, Hkv, G, qb), NEG_INF, jnp.float32)
+        s0 = jnp.zeros((B, Hkv, G, qb), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, qb, D), jnp.float32)
+
+        if band is None:
+            def kv_block_body(carry, kv_inputs):
+                if sk is not None:
+                    k_c, v_c, ik_c, sk_c = kv_inputs
+                else:
+                    k_c, v_c, ik_c = kv_inputs
+                    sk_c = None
+                return step(carry, k_c, v_c, ik_c, sk_c, None), None
+
+            kv_xs = (kp_m, vp_m, ik_m)
+            if sk_m is not None:
+                kv_xs = kv_xs + (sk_m,)
+            (m, s, acc), _ = jax.lax.scan(kv_block_body, (m0, s0, a0), kv_xs)
+        else:
+            def band_body(carry, o):
+                j_int = qi - (band - 1) + o            # intended kv block
+                j = jnp.clip(j_int, 0, nk - 1)
+                k_c = jax.lax.dynamic_index_in_dim(kp_m, j, 0, keepdims=False)
+                v_c = jax.lax.dynamic_index_in_dim(vp_m, j, 0, keepdims=False)
+                ik_c = jax.lax.dynamic_index_in_dim(ik_m, j, 0, keepdims=False)
+                sk_c = (jax.lax.dynamic_index_in_dim(sk_m, j, 0, keepdims=False)
+                        if sk_m is not None else None)
+                valid = (j_int >= 0)[..., None, None]   # kill clamped blocks
+                extra = jnp.broadcast_to(valid, (B, qb, kb))
+                return step(carry, k_c, v_c, ik_c, sk_c, extra), None
+
+            (m, s, acc), _ = jax.lax.scan(
+                band_body, (m0, s0, a0), jnp.arange(band, dtype=jnp.int32))
+
+        # rows with no valid kv (fully masked, e.g. padding) → zeros
+        s_safe = jnp.where(s == 0.0, 1.0, s)
+        out = acc / s_safe[..., None]
+        out = jnp.moveaxis(out, 3, 1).reshape(B, qb, H, D)  # [B,qb,Hkv,G,D]→
+        return None, out.astype(q.dtype)
+
+    qidx = jnp.arange(nq, dtype=jnp.int32)
+    q_xs = (jnp.moveaxis(qp, 1, 0), jnp.moveaxis(iq, 1, 0))
+    if sq is not None:
+        q_xs = q_xs + (jnp.moveaxis(sq, 1, 0),)
+    q_xs = q_xs + (qidx,)
+    _, outs = jax.lax.scan(q_block_body, None, q_xs)   # [nq, B, qb, H, D]
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Lq_p, H, D)
+    return out[:, :Lq]
+
+
+def decode_attention_xla(q, k, v, idx_kv, q_pos, *, window=0, seg_kv=None,
+                         seg_q=None, scale: Optional[float] = None):
+    """Single-query attention against a (possibly longer-than-valid) KV cache.
+
+    q [B,1,H,D]; k/v [B,S,Hkv,D]; idx_kv [B,S] buffer indices; q_pos [B]
+    (the position of the new token).  Entries with idx_kv > q_pos are masked
+    (cache tail).  Memory: O(B*H*S) — no blocking needed even at 500k.
+    """
+    B, _, H, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qg = q.reshape(B, Hkv, G, D)
+    scores = jnp.einsum("bhgd,bkhd->bhgk", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    ok = idx_kv <= q_pos[:, None]
+    win = jnp.asarray(window, jnp.int32)
+    ok &= jnp.where(win > 0, idx_kv > (q_pos[:, None] - win), True)
+    if seg_kv is not None and seg_q is not None:
+        ok &= seg_kv == seg_q[:, None]
+    scores = scores + jnp.where(ok, 0.0, NEG_INF)[:, None, None, :]
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    s = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhgk,bkhd->bhgd", (p / s).astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, D).astype(q.dtype)

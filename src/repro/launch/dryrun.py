@@ -1,0 +1,195 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+cell on the production meshes, record memory/cost/collective analysis.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun.json
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+
+The 512 placeholder host devices exist ONLY here (set before any jax
+import).  Compilation uses ShapeDtypeStructs — nothing is allocated; the
+compiled executable is thrown away after memory_analysis/cost_analysis and
+the collective-bytes parse of the post-SPMD HLO.
+"""
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import numpy as np   # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import (ARCH_IDS, SHAPES, cell_is_applicable, get_config)  # noqa: E402
+from repro.launch import specs as SP        # noqa: E402
+from repro.launch.mesh import data_axes, make_production_mesh  # noqa: E402
+from repro.launch.sharding import ShardingPlan  # noqa: E402
+from repro.models import common as C        # noqa: E402
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             logprob_chunk: int = 4096, save_hlo: str = "") -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "pod2x16x16" if multi_pod else "16x16",
+           "kind": shape.kind, "status": "running"}
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    plan = ShardingPlan(mesh)
+    C.set_activation_sharding(mesh, data_axes(mesh), "model")
+    try:
+        if shape.kind == "train":
+            step_fn, adamw = SP.build_train_step(cfg, logprob_chunk=logprob_chunk)
+            state_tree = SP.train_state_specs(cfg, adamw)
+            batch_tree = SP.train_batch_specs(cfg, shape)
+            state_specs = plan.state_specs(state_tree)
+            batch_specs = plan.batch_specs(batch_tree)
+            jitted = jax.jit(step_fn,
+                             in_shardings=(plan.named(state_specs),
+                                           plan.named(batch_specs)),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state_tree, batch_tree)
+        elif shape.kind == "prefill":
+            step_fn = SP.build_prefill_step(cfg)
+            params_tree = SP.params_specs_tree(cfg)
+            batch_tree = SP.prefill_batch_specs(cfg, shape)
+            jitted = jax.jit(step_fn,
+                             in_shardings=(plan.named(plan.params_specs(params_tree)),
+                                           plan.named(plan.batch_specs(batch_tree))))
+            lowered = jitted.lower(params_tree, batch_tree)
+        else:  # decode
+            step_fn = SP.build_serve_step(cfg)
+            params_tree = SP.params_specs_tree(cfg)
+            cache_tree = SP.cache_shape_specs(cfg, shape)
+            batch_tree = SP.decode_batch_specs(cfg, shape)
+            seq_shard = shape.name == "long_500k"
+            cache_specs = plan.cache_specs(cache_tree, seq_shard=seq_shard)
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(plan.named(plan.params_specs(params_tree)),
+                              plan.named(cache_specs),
+                              plan.named(plan.batch_specs(batch_tree))),
+                donate_argnums=(1,))
+            lowered = jitted.lower(params_tree, cache_tree, batch_tree)
+
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        }
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0] if cost else {}
+        # raw XLA numbers (loop bodies counted ONCE — see hlo_analysis)
+        rec["cost_raw"] = {k: float(v) for k, v in cost.items()
+                           if isinstance(v, (int, float))
+                           and k in ("flops", "transcendentals",
+                                     "bytes accessed")}
+        # trip-count-aware per-device accounting
+        from repro.launch.hlo_analysis import analyze
+        hlo = compiled.as_text()
+        if save_hlo:
+            import gzip
+            os.makedirs(save_hlo, exist_ok=True)
+            key = f"{arch}_{shape_name}_{rec['mesh']}".replace("/", "-")
+            with gzip.open(os.path.join(save_hlo, key + ".txt.gz"), "wt") as f:
+                f.write(hlo)
+        summary = analyze(hlo)
+        rec["hlo"] = summary.as_dict()
+        rec["collectives"] = summary.collectives
+        rec["collective_bytes"] = int(summary.collective_bytes)
+        rec["model_flops_global"] = SP.model_flops(cfg, shape)
+        rec["params_total"] = SP.count_params(SP.params_specs_tree(cfg))
+        rec["params_active"] = SP.active_params(cfg)
+        rec["sharding_fallbacks"] = sorted(set(plan.fallbacks))
+        rec["status"] = "ok"
+    except Exception as e:  # noqa: BLE001
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    finally:
+        C.clear_activation_sharding()
+    rec["total_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--logprob-chunk", type=int, default=4096)
+    ap.add_argument("--save-hlo", default="",
+                    help="directory for gzipped post-opt HLO per cell")
+    ap.add_argument("--skip-done", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape_name in SHAPES:
+                ok, why = cell_is_applicable(get_config(arch), SHAPES[shape_name])
+                meshes = ([False, True] if args.both_meshes
+                          else [args.multi_pod])
+                for mp in meshes:
+                    cells.append((arch, shape_name, mp, ok, why))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        ok, why = cell_is_applicable(get_config(args.arch), SHAPES[args.shape])
+        cells.append((args.arch, args.shape, args.multi_pod, ok, why))
+
+    for arch, shape_name, mp, ok, why in cells:
+        key = f"{arch}|{shape_name}|{'pod2x16x16' if mp else '16x16'}"
+        if not ok:
+            results[key] = {"arch": arch, "shape": shape_name,
+                            "mesh": "pod2x16x16" if mp else "16x16",
+                            "status": "skipped", "reason": why}
+            continue
+        if args.skip_done and results.get(key, {}).get("status") == "ok":
+            print(f"[dryrun] {key}: cached ok", flush=True)
+            continue
+        print(f"[dryrun] {key}: lowering...", flush=True)
+        rec = run_cell(arch, shape_name, multi_pod=mp,
+                       logprob_chunk=args.logprob_chunk,
+                       save_hlo=args.save_hlo)
+        results[key] = rec
+        status = rec["status"]
+        extra = (f" ({rec.get('error', '')[:120]})" if status == "fail" else
+                 f" lower={rec.get('lower_s')}s compile={rec.get('compile_s')}s "
+                 f"coll={rec.get('collective_bytes', 0)/2**20:.0f}MiB")
+        print(f"[dryrun] {key}: {status}{extra}", flush=True)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1)
+    n_ok = sum(1 for r in results.values() if r["status"] == "ok")
+    n_fail = sum(1 for r in results.values() if r["status"] == "fail")
+    n_skip = sum(1 for r in results.values() if r["status"] == "skipped")
+    print(f"[dryrun] done: {n_ok} ok, {n_fail} fail, {n_skip} skipped "
+          f"→ {args.out}", flush=True)
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

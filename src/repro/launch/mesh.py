@@ -1,0 +1,34 @@
+"""Production meshes.
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips across DCN.
+
+Defined as a FUNCTION so importing this module never touches jax device
+state (the dry-run forces 512 host devices before any jax import)."""
+from __future__ import annotations
+
+import math
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()
+    assert len(devices) >= n, (
+        f"need {n} devices for the production mesh, have {len(devices)} — "
+        "run under dryrun.py (XLA_FLAGS=--xla_force_host_platform_device_count=512)")
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def data_axes(mesh) -> tuple:
+    """The combined batch/FSDP axes: ("pod", "data") or ("data",)."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def make_dev_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh for CPU tests of the sharding rules."""
+    return jax.make_mesh((data, model), ("data", "model"),
+                         devices=jax.devices()[:data * model])

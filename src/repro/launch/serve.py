@@ -1,0 +1,132 @@
+"""Rollout-as-a-service over HTTP — the paper's §A.5 surface, for real.
+
+Starts (1) gateway proxy endpoints that speak all four provider protocols
+(any OpenAI/Anthropic/Google-compatible client or harness can point its
+base URL here) and (2) the rollout service API:
+
+    POST /rollout/task/submit
+    GET  /rollout/task/{task_id}
+    GET  /rollout/status
+    POST /nodes/register            (membership is in-process; returns ids)
+    POST /v1/chat/completions | /v1/messages | /v1/responses |
+         /v1beta/models/<m>:generateContent   (proxy surface)
+
+    PYTHONPATH=src python -m repro.launch.serve --port 8089 --arch qwen3-32b
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.inference import Engine
+from repro.rollout import (AgentSpec, GatewayNode, RolloutServer, RuntimeSpec,
+                           TaskRequest)
+
+
+def build_stack(arch: str, gateways: int = 1):
+    cfg = get_smoke_config(arch).replace(vocab_size=512)
+    engine = Engine(cfg, rng=jax.random.PRNGKey(0), max_len=512, max_new=32)
+    server = RolloutServer()
+    nodes = []
+    for _ in range(gateways):
+        gw = GatewayNode(engine, run_workers=2)
+        server.register_node(gw)
+        nodes.append(gw)
+    return engine, server, nodes
+
+
+def make_handler(server: RolloutServer, nodes):
+    proxy = nodes[0].proxy
+
+    class Handler(BaseHTTPRequestHandler):
+        def log_message(self, *a):  # quiet
+            pass
+
+        def _json(self, code, obj):
+            body = json.dumps(obj).encode()
+            self.send_response(code)
+            self.send_header("Content-Type", "application/json")
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def do_GET(self):
+            if self.path == "/rollout/status":
+                return self._json(200, server.status())
+            if self.path.startswith("/rollout/task/"):
+                task_id = self.path.rsplit("/", 1)[-1]
+                try:
+                    st = server.poll(task_id)
+                except KeyError:
+                    return self._json(404, {"error": "unknown task"})
+                return self._json(200, {
+                    "task_id": st.task_id, "total": st.total,
+                    "finished": st.finished, "by_status": st.by_status,
+                    "rewards": [r.reward for r in st.results],
+                    "statuses": [r.status for r in st.results],
+                })
+            return self._json(404, {"error": "not found"})
+
+        def do_POST(self):
+            n = int(self.headers.get("Content-Length", "0"))
+            body = json.loads(self.rfile.read(n) or b"{}")
+            if self.path == "/rollout/task/submit":
+                task = TaskRequest(
+                    task_id=body["task_id"],
+                    instruction=body.get("instruction", ""),
+                    num_samples=body.get("num_samples", 1),
+                    timeout_seconds=body.get("timeout_seconds", 120.0),
+                    runtime=RuntimeSpec(**body.get("runtime", {})),
+                    agent=AgentSpec(**body.get("agent", {})),
+                    builder=body.get("builder", {"strategy": "prefix_merging"}),
+                    evaluator=body.get("evaluator",
+                                       {"strategy": "session_completion"}),
+                    metadata=body.get("metadata", {}),
+                )
+                return self._json(200, {"task_id": server.submit_task(task)})
+            # everything else → provider proxy surface
+            try:
+                resp = proxy.handle(self.path, body, dict(self.headers))
+            except ValueError as e:
+                return self._json(400, {"error": str(e)})
+            if isinstance(resp, list):   # synthetic SSE stream
+                payload = b"".join(
+                    b"data: " + json.dumps(e).encode() + b"\n\n" for e in resp
+                ) + b"data: [DONE]\n\n"
+                self.send_response(200)
+                self.send_header("Content-Type", "text/event-stream")
+                self.send_header("Content-Length", str(len(payload)))
+                self.end_headers()
+                self.wfile.write(payload)
+                return
+            return self._json(200, resp)
+
+    return Handler
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--port", type=int, default=8089)
+    ap.add_argument("--arch", default="qwen3-32b")
+    ap.add_argument("--gateways", type=int, default=1)
+    args = ap.parse_args(argv)
+    engine, server, nodes = build_stack(args.arch, args.gateways)
+    httpd = ThreadingHTTPServer(("127.0.0.1", args.port),
+                                make_handler(server, nodes))
+    print(f"[serve] rollout service + provider proxy on :{args.port}",
+          flush=True)
+    try:
+        httpd.serve_forever()
+    except KeyboardInterrupt:
+        pass
+    finally:
+        server.shutdown()
+
+
+if __name__ == "__main__":
+    main()

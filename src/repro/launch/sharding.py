@@ -1,0 +1,188 @@
+"""Sharding rules: parameter / optimizer / batch / cache PartitionSpecs.
+
+Scheme (DESIGN.md §4): FSDP over the combined ("pod","data") axes +
+tensor-parallel over "model".
+
+  * weights: fan-in/d_model dims → DATA (FSDP), head/ff/expert/vocab dims →
+    "model" (TP).  Scan-stacked leading layer dims are never sharded.
+  * every TP assignment is divisibility-checked against the mesh; a
+    non-divisible dim falls back to replication and the fallback is recorded
+    (surfaces in the dry-run report — e.g. whisper's 12 heads on a 16-way
+    model axis).
+  * batches: batch dim → DATA.  Decode caches: batch → DATA, kv-heads →
+    "model"; for long_500k (batch=1) the KV cache SEQUENCE dim is sharded
+    over DATA instead (sequence-parallel decode).
+
+Rules are keyed on the last two path components of each leaf, so the same
+table covers plain stacks, llama4's grouped stacks and zamba2's shared
+block without special cases.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import data_axes
+
+# base specs: leaf key (parent, name) → per-dim roles, innermost (non-stack)
+# dims only.  roles: "data" (FSDP), "model" (TP), None (replicated)
+_RULES: Dict[Tuple[str, str], Tuple[Optional[str], ...]] = {
+    ("embed", "table"): ("model", "data"),
+    ("embed", "head"): ("model", "data"),
+    ("attn", "wq"): ("data", "model", None),
+    ("attn", "wk"): ("data", "model", None),
+    ("attn", "wv"): ("data", "model", None),
+    ("attn", "wo"): ("model", None, "data"),
+    ("self_attn", "wq"): ("data", "model", None),
+    ("self_attn", "wk"): ("data", "model", None),
+    ("self_attn", "wv"): ("data", "model", None),
+    ("self_attn", "wo"): ("model", None, "data"),
+    ("cross_attn", "wq"): ("data", "model", None),
+    ("cross_attn", "wk"): ("data", "model", None),
+    ("cross_attn", "wv"): ("data", "model", None),
+    ("cross_attn", "wo"): ("model", None, "data"),
+    ("mlp", "w_gate"): ("data", "model"),
+    ("mlp", "w_up"): ("data", "model"),
+    ("mlp", "w_down"): ("model", "data"),
+    ("mlp", "w_in"): ("data", "model"),
+    ("mlp", "w_out"): ("model", "data"),
+    ("mlp", "b_in"): ("model",),
+    ("mlp", "b_out"): (None,),
+    ("moe", "router"): ("data", None),
+    ("moe", "w_gate"): ("model", "data", None),
+    ("moe", "w_up"): ("model", "data", None),
+    ("moe", "w_down"): ("model", None, "data"),
+    ("shared", "w_gate"): ("data", "model"),   # MoE shared expert
+    ("shared", "w_up"): ("data", "model"),
+    ("shared", "w_down"): ("model", "data"),
+    # mamba2 (head-parallel TP: d_inner == heads × headdim → "model")
+    ("*", "w_z"): ("data", "model"),
+    ("*", "w_x"): ("data", "model"),
+    ("*", "w_bc"): ("data", None),
+    ("*", "w_dt"): ("data", None),
+    ("*", "conv_x_w"): (None, "model"),
+    ("*", "conv_x_b"): ("model",),
+    ("*", "conv_bc_w"): (None, None),
+    ("*", "conv_bc_b"): (None,),
+    ("*", "A_log"): ("model",),
+    ("*", "D"): ("model",),
+    ("*", "dt_bias"): ("model",),
+    ("*", "gate_norm"): ("model",),
+    ("*", "out_proj"): ("model", "data"),
+    # positions / norms
+    ("*", "pos_dec"): (None, "data"),
+    ("*", "pos_enc"): (None, "data"),
+    ("*", "q_norm"): (None,),
+    ("*", "k_norm"): (None,),
+    ("*", "w"): (None,),     # norm scale
+    ("*", "b"): (None,),     # norm bias
+}
+
+
+def _path_names(path) -> List[str]:
+    return [re.sub(r"[^A-Za-z0-9_]", "", str(p)) for p in path]
+
+
+def _axis_size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+class ShardingPlan:
+    """Resolved specs + a log of divisibility fallbacks."""
+
+    def __init__(self, mesh):
+        self.mesh = mesh
+        self.data = data_axes(mesh)
+        self.fallbacks: List[str] = []
+
+    def _role_axes(self, role: Optional[str]):
+        if role == "data":
+            return self.data
+        if role == "model":
+            return "model"
+        return None
+
+    def _fit(self, name: str, dim_size: int, role: Optional[str]):
+        axes = self._role_axes(role)
+        if axes is None:
+            return None
+        if dim_size % _axis_size(self.mesh, axes) != 0:
+            self.fallbacks.append(
+                f"{name}: dim {dim_size} % {axes} ({_axis_size(self.mesh, axes)}) → replicated")
+            return None
+        return axes
+
+    def spec_for(self, path, leaf) -> P:
+        names = _path_names(path)
+        key2 = tuple(names[-2:]) if len(names) >= 2 else ("", names[-1])
+        rule = _RULES.get(key2) or _RULES.get(("*", key2[1]))
+        if rule is None:
+            return P()   # unknown leaf → replicate (safe default)
+        nd = len(leaf.shape)
+        lead = nd - len(rule)
+        assert lead >= 0, (names, leaf.shape, rule)
+        dims: List[Any] = [None] * lead
+        for size, role in zip(leaf.shape[lead:], rule):
+            dims.append(self._fit("/".join(names), size, role))
+        return P(*dims)
+
+    # -- public builders ---------------------------------------------------------
+    def params_specs(self, params_tree):
+        return jax.tree_util.tree_map_with_path(
+            lambda p, l: self.spec_for(p, l), params_tree)
+
+    def state_specs(self, state_tree):
+        """{'params':…, 'opt_state': {'m':…,'v':…,'count':…}, 'step':…} —
+        moments shard like their parameters (path tails match)."""
+        return jax.tree_util.tree_map_with_path(
+            lambda p, l: (P() if len(l.shape) == 0 else self.spec_for(p, l)),
+            state_tree)
+
+    def batch_specs(self, batch_tree):
+        def f(path, leaf):
+            nd = len(leaf.shape)
+            if nd == 0:
+                return P()
+            b = leaf.shape[0]
+            lead = self._fit("batch", b, "data")
+            return P(lead, *([None] * (nd - 1)))
+        return jax.tree_util.tree_map_with_path(f, batch_tree)
+
+    def cache_specs(self, cache_tree, *, seq_shard: bool = False):
+        """Decode caches: [L, B, S, Hkv, D] (attn) / [L, B, H, N, P] (ssm) /
+        [L, B, K, C] (conv).  batch → DATA; kv-heads → model; when
+        seq_shard (long-context, batch=1) the attention S dim → DATA."""
+        def f(path, leaf):
+            names = _path_names(path)
+            name = names[-1]
+            shp = leaf.shape
+            if name in ("k", "v", "attn_k", "attn_v", "cross_k", "cross_v"):
+                _, B, S, H, _ = shp
+                if seq_shard:
+                    return P(None, None,
+                             self._fit(name + ".seq", S, "data"),
+                             self._fit(name + ".heads", H, "model"), None)
+                return P(None, self._fit(name + ".batch", B, "data"), None,
+                         self._fit(name + ".heads", H, "model"), None)
+            if name == "ssm":
+                _, B, H, _, _ = shp
+                return P(None, self._fit(name + ".batch", B, "data"),
+                         self._fit(name + ".heads", H, "model"), None, None)
+            if name in ("conv_x", "conv_bc"):
+                _, B, _, Cd = shp
+                return P(None, self._fit(name + ".batch", B, "data"), None,
+                         self._fit(name + ".chan", Cd, "model"))
+            return P(*([None] * len(shp)))
+        return jax.tree_util.tree_map_with_path(f, cache_tree)
+
+    def named(self, spec_tree):
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s), spec_tree)

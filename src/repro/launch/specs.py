@@ -1,0 +1,157 @@
+"""Per-(arch × shape) input specs + step functions for the dry-run.
+
+Everything here is ShapeDtypeStruct-only — no device allocation.  The same
+step builders are used by launch/train.py and launch/serve.py with real
+arrays.
+
+Cell semantics (assignment):
+  train_4k     → train_step  (full GRPO: fwd + fused-CE loss + bwd + AdamW)
+  prefill_32k  → prefill_step (inference forward + last-position logits)
+  decode_32k   → serve_step  (one new token against a KV cache of seq_len)
+  long_500k    → serve_step, KV cache sequence-sharded (batch = 1)
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import common as C
+from repro.models import registry as M
+from repro.training.grpo import GRPOConfig, make_train_step
+from repro.training.optimizer import AdamWConfig, init_opt_state
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# input specs
+# ---------------------------------------------------------------------------
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, L = shape.global_batch, shape.seq_len
+    pos = sds((B, L, 3), "int32") if cfg.rope_style == "mrope" else sds((B, L), "int32")
+    batch = {
+        "tokens": sds((B, L), "int32"),
+        "positions": pos,
+        "segment_ids": sds((B, L), "int32"),
+        "target_ids": sds((B, L), "int32"),
+        "target_mask": sds((B, L), "float32"),
+        "behavior_lp": sds((B, L), "float32"),
+        "advantage": sds((B, L), "float32"),
+    }
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = sds((B, cfg.vision_tokens, cfg.d_model), "float32")
+    if cfg.family == "encdec":
+        batch["encoder_embeds"] = sds((B, L, cfg.d_model), "float32")
+    return batch
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, L = shape.global_batch, shape.seq_len
+    pos = sds((B, L, 3), "int32") if cfg.rope_style == "mrope" else sds((B, L), "int32")
+    batch = {"tokens": sds((B, L), "int32"), "positions": pos}
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = sds((B, cfg.vision_tokens, cfg.d_model), "float32")
+    if cfg.family == "encdec":
+        batch["encoder_embeds"] = sds((B, L, cfg.d_model), "float32")
+    return batch
+
+
+def decode_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B = shape.global_batch
+    return {"tokens": sds((B, 1), "int32"),
+            "cache_len": sds((), "int32")}
+
+
+def cache_shape_specs(cfg: ModelConfig, shape: ShapeConfig):
+    B, S = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(lambda: M.init_decode_cache(cfg, B, S))
+    return cache
+
+
+def params_specs_tree(cfg: ModelConfig):
+    return jax.eval_shape(lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def train_state_specs(cfg: ModelConfig, adamw: AdamWConfig):
+    params = params_specs_tree(cfg)
+    opt = jax.eval_shape(lambda: init_opt_state(params_concrete_like(params),
+                                                adamw))
+    return {"params": params, "opt_state": opt, "step": sds((), "int32")}
+
+
+def params_concrete_like(tree):
+    """eval_shape helper: init_opt_state only reads shapes/dtypes."""
+    return tree
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+def build_train_step(cfg: ModelConfig, *, logprob_chunk: int = 4096,
+                     remat: str = "full"):
+    import os
+    remat = os.environ.get("REPRO_REMAT", remat)
+    logprob_chunk = int(os.environ.get("REPRO_CE_CHUNK", logprob_chunk))
+    gcfg = GRPOConfig(remat=remat, logprob_chunk=logprob_chunk)
+    adamw = AdamWConfig(moment_dtype=cfg.opt_state_dtype)
+    return make_train_step(cfg, gcfg, adamw), adamw
+
+
+def build_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        hidden, _ = M.forward_train(cfg, params, batch, remat="none")
+        last = hidden[:, -1]                       # sample-ready position
+        logits = C.logits_from_hidden(cfg, params["embed"], last)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return prefill_step
+
+
+def build_serve_step(cfg: ModelConfig):
+    def serve_step(params, cache, batch):
+        hidden, cache = M.forward_decode(cfg, params, cache, batch)
+        logits = C.logits_from_hidden(cfg, params["embed"], hidden[:, 0])
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# model-flops estimate (6·N_active·D) for the §Roofline useful-compute ratio
+# ---------------------------------------------------------------------------
+
+def count_params(tree) -> int:
+    return sum(math.prod(l.shape) for l in jax.tree.leaves(tree))
+
+
+def active_params(cfg: ModelConfig) -> int:
+    """Total params with MoE experts counted at top-k/E utilization."""
+    params = params_specs_tree(cfg)
+    total = count_params(params)
+    if not cfg.num_experts:
+        return total
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    expert_params = sum(
+        math.prod(l.shape) for path, l in flat
+        if any("moe" in str(p) for p in path)
+        and not any("shared" in str(p) for p in path)
+        and any(str(p).strip("[]'\"") in ("w_gate", "w_up", "w_down")
+                for p in path[-1:]))
+    # shared experts + router are always active; routed experts scale by k/E
+    k_frac = cfg.num_experts_per_tok / cfg.num_experts
+    return int(total - expert_params * (1.0 - k_frac))
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """6·N_active·D for train, 2·N_active·D for inference-shaped steps."""
+    n = active_params(cfg)
+    tokens = shape.tokens_per_step
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n * tokens

@@ -1,0 +1,19 @@
+from repro.models.registry import (
+    forward_decode,
+    forward_train,
+    get_model,
+    init_decode_cache,
+    init_params,
+    make_decode_batch,
+    make_train_batch,
+)
+
+__all__ = [
+    "forward_decode",
+    "forward_train",
+    "get_model",
+    "init_decode_cache",
+    "init_params",
+    "make_decode_batch",
+    "make_train_batch",
+]

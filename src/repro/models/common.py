@@ -1,0 +1,443 @@
+"""Shared neural-net components for the architecture zoo.
+
+Pure-functional JAX: parameters are nested dicts of arrays, every op is a
+plain function.  Matmuls run in the config compute dtype (bf16 on TPU);
+softmax / norm statistics accumulate in f32.
+
+Dim-order conventions (chosen so sharding rules are positional):
+  embed table      [vocab, d_model]          vocab → "model" axis
+  wq               [d_model, H,  head_dim]   H → "model"
+  wk / wv          [d_model, Hkv, head_dim]  Hkv → "model"
+  wo               [H, head_dim, d_model]    H → "model"
+  mlp w_gate/w_up  [d_model, d_ff]           d_ff → "model"
+  mlp w_down       [d_ff, d_model]           d_ff → "model"
+  moe experts      [E, ...mlp dims...]       E → "model"
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+Params = Dict[str, Any]
+
+# ---------------------------------------------------------------------------
+# activation-sharding hook (set by the launch layer; no-op on bare CPU).
+#
+# Megatron-style sequence parallelism, GSPMD-style: the layer-boundary
+# residual stream [B, L, d] is constrained to (batch→DATA, seq→"model"),
+# so the per-layer saved activations under remat are 1/|model| per chip;
+# GSPMD inserts the all-gather before attention/MLP and the reduce-scatter
+# after the output projections.  The flat loss stream [T, d] is constrained
+# to rows→(DATA ∪ model) — the fused-CE loss is token-parallel over ALL
+# chips.
+# ---------------------------------------------------------------------------
+
+_ACT_SHARDING: Dict[str, Any] = {"mesh": None, "batch": None, "seq": None}
+
+
+def set_activation_sharding(mesh, batch_axes, seq_axes) -> None:
+    _ACT_SHARDING.update(mesh=mesh, batch=batch_axes, seq=seq_axes)
+
+
+def clear_activation_sharding() -> None:
+    _ACT_SHARDING.update(mesh=None, batch=None, seq=None)
+
+
+def constrain_residual(x):
+    """x [B, L, d] at a layer boundary.  REPRO_SEQ_SHARD=0 disables the
+    sequence-parallel constraint (§Perf iteration A2)."""
+    import os
+    mesh = _ACT_SHARDING["mesh"]
+    if mesh is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    seq = _ACT_SHARDING["seq"]
+    if os.environ.get("REPRO_SEQ_SHARD", "1") in ("0", "false"):
+        seq = None
+    if x.shape[1] % (mesh.shape[seq] if isinstance(seq, str) else 1) != 0:
+        seq = None
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(_ACT_SHARDING["batch"], seq, None)))
+
+
+def constrain_token_rows(x):
+    """x [T, d] — loss path.
+
+    Two schemes (REPRO_CE_ROWS, §Perf iteration A1):
+      "all"  — rows spread over every chip (data ∪ model): maximally
+               token-parallel, but costs an all-to-all of the full hidden
+               (and its gradient) against the seq-sharded residual.
+      "data" — rows stay data-sharded; the vocab-sharded embedding table
+               then makes the fused-CE *vocab-parallel* (Megatron-style):
+               each model shard scores its vocab slice and the online
+               (max, sumexp) merge is a tiny [T] all-reduce.
+    """
+    import os
+    mesh = _ACT_SHARDING["mesh"]
+    if mesh is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    batch = _ACT_SHARDING["batch"]
+    axes = (batch if isinstance(batch, tuple) else (batch,))
+    if os.environ.get("REPRO_CE_ROWS", "all") == "all" and _ACT_SHARDING["seq"]:
+        axes = axes + (_ACT_SHARDING["seq"],)
+    total = 1
+    for a in axes:
+        total *= mesh.shape[a]
+    if x.shape[0] % total != 0:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(axes, None)))
+
+
+# ---------------------------------------------------------------------------
+# dtype helpers
+# ---------------------------------------------------------------------------
+
+def dt(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def pdt(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# initialisation
+# ---------------------------------------------------------------------------
+
+def _normal(rng, shape, dtype, scale=0.02):
+    return (scale * jax.random.normal(rng, shape, jnp.float32)).astype(dtype)
+
+
+def init_linear(rng, shape, dtype, fan_in: Optional[int] = None):
+    fan_in = fan_in or shape[0]
+    scale = 1.0 / math.sqrt(fan_in)
+    return _normal(rng, shape, dtype, scale)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, w, eps: float, unit_offset: bool = False):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    xf = xf * jax.lax.rsqrt(var + eps)
+    scale = (1.0 + w.astype(jnp.float32)) if unit_offset else w.astype(jnp.float32)
+    return (xf * scale).astype(x.dtype)
+
+
+def layer_norm(x, w, b, eps: float):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    xf = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (xf * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_norm(cfg: ModelConfig, p: Params, x):
+    if cfg.norm_type == "layernorm":
+        return layer_norm(x, p["w"], p["b"], cfg.norm_eps)
+    return rms_norm(x, p["w"], cfg.norm_eps, cfg.rmsnorm_unit_offset)
+
+
+def init_norm(cfg: ModelConfig, rng, d: int) -> Params:
+    if cfg.norm_type == "layernorm":
+        return {"w": jnp.ones((d,), pdt(cfg)), "b": jnp.zeros((d,), pdt(cfg))}
+    init = jnp.zeros if cfg.rmsnorm_unit_offset else jnp.ones
+    return {"w": init((d,), pdt(cfg))}
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings (full / half / mrope)
+# ---------------------------------------------------------------------------
+
+def rope_sin_cos(positions, head_dim: int, theta: float, rotary_dim: int = 0,
+                 mrope_sections: Tuple[int, ...] = ()):
+    """positions: [B, L] (or [B, L, 3] for mrope) → (sin, cos) [B, L, rd/2] f32."""
+    rd = rotary_dim or head_dim
+    half = rd // 2
+    inv = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    if mrope_sections:
+        assert positions.ndim == 3 and positions.shape[-1] == len(mrope_sections)
+        parts = []
+        off = 0
+        for s_idx, sec in enumerate(mrope_sections):
+            ang = positions[..., s_idx].astype(jnp.float32)[..., None] * inv[off:off + sec]
+            parts.append(ang)
+            off += sec
+        assert off == half, f"mrope sections {mrope_sections} must sum to {half}"
+        angles = jnp.concatenate(parts, axis=-1)
+    else:
+        angles = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.sin(angles), jnp.cos(angles)
+
+
+def apply_rotary(x, sin, cos, rotary_dim: int = 0):
+    """x: [B, L, H, D].  Rotate the first `rotary_dim` dims (default all) using
+    the rotate-half convention; pass-through the tail dims."""
+    D = x.shape[-1]
+    rd = rotary_dim or D
+    xr, xp = x[..., :rd], x[..., rd:]
+    half = rd // 2
+    x1, x2 = xr[..., :half], xr[..., half:]
+    sin = sin[:, :, None, :].astype(jnp.float32)
+    cos = cos[:, :, None, :].astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    r1 = x1f * cos - x2f * sin
+    r2 = x2f * cos + x1f * sin
+    out = jnp.concatenate([r1.astype(x.dtype), r2.astype(x.dtype)], axis=-1)
+    if rd < D:
+        out = jnp.concatenate([out, xp], axis=-1)
+    return out
+
+
+def rope_for_layer(cfg: ModelConfig, positions, is_global=None):
+    """Build (sin, cos) for one attention layer.  For gemma3 the local/global
+    layers use different thetas — both tables are built and selected by the
+    traced `is_global` flag so the layer stack stays scannable."""
+    rotary_dim = cfg.head_dim // 2 if cfg.rope_style == "half" else cfg.head_dim
+    sections = cfg.mrope_sections if cfg.rope_style == "mrope" else ()
+    sg, cg = rope_sin_cos(positions, cfg.head_dim, cfg.rope_theta, rotary_dim, sections)
+    if is_global is None or cfg.rope_local_theta == cfg.rope_theta:
+        return sg, cg
+    sl, cl = rope_sin_cos(positions, cfg.head_dim, cfg.rope_local_theta, rotary_dim, sections)
+    flag = is_global.astype(jnp.float32)
+    return flag * sg + (1 - flag) * sl, flag * cg + (1 - flag) * cl
+
+
+# ---------------------------------------------------------------------------
+# attention — all model paths route through repro.kernels.ops so the
+# implementation (Pallas kernel / blocked-XLA flash / naive oracle) is
+# selectable without touching model code.  Masks are *specs* (index arrays +
+# flags), never materialized [Lq, Lkv] tensors.
+# ---------------------------------------------------------------------------
+
+def make_mask(idx_q, idx_kv, seg_q=None, seg_kv=None, *, causal: bool = True,
+              window=0):
+    """Mask spec consumed by attention_block.  `window` may be a traced
+    scalar (gemma3 local/global selection inside lax.scan); <=0 = no window."""
+    return {"idx_q": idx_q, "idx_kv": idx_kv, "seg_q": seg_q, "seg_kv": seg_kv,
+            "causal": causal, "window": window}
+
+
+def init_attention(cfg: ModelConfig, rng) -> Params:
+    ks = jax.random.split(rng, 6)
+    d, H, Hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    p = {
+        "wq": init_linear(ks[0], (d, H, hd), pdt(cfg), fan_in=d),
+        "wk": init_linear(ks[1], (d, Hkv, hd), pdt(cfg), fan_in=d),
+        "wv": init_linear(ks[2], (d, Hkv, hd), pdt(cfg), fan_in=d),
+        "wo": init_linear(ks[3], (H, hd, d), pdt(cfg), fan_in=H * hd),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), pdt(cfg))
+        p["k_norm"] = jnp.ones((hd,), pdt(cfg))
+    return p
+
+
+def attention_block(cfg: ModelConfig, p: Params, x, sin, cos, mask,
+                    kv_override=None, x_kv=None):
+    """Project → rope → attend → project.  `mask` is a make_mask() spec.
+    If `kv_override=(k, v)` is given (cached decode) skip k/v projection;
+    if `x_kv` is given (cross-attention) project k/v from it instead."""
+    from repro.kernels import ops as OPS  # local import: avoid cycle at init
+    q = jnp.einsum("bld,dhk->blhk", x, p["wq"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+    rotary_dim = cfg.head_dim // 2 if cfg.rope_style == "half" else cfg.head_dim
+    if sin is not None:
+        q = apply_rotary(q, sin, cos, rotary_dim)
+    if kv_override is None:
+        src = x if x_kv is None else x_kv
+        k = jnp.einsum("bld,dhk->blhk", src, p["wk"].astype(src.dtype))
+        v = jnp.einsum("bld,dhk->blhk", src, p["wv"].astype(src.dtype))
+        if cfg.qk_norm:
+            k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+        if sin is not None and x_kv is None:
+            k = apply_rotary(k, sin, cos, rotary_dim)
+    else:
+        k, v = kv_override
+    out = OPS.attention(q, k, v, idx_q=mask["idx_q"], idx_kv=mask["idx_kv"],
+                        seg_q=mask["seg_q"], seg_kv=mask["seg_kv"],
+                        causal=mask["causal"], window=mask["window"])
+    return jnp.einsum("blhk,hkd->bld", out, p["wo"].astype(x.dtype)), (k, v)
+
+
+def decode_attention_block(cfg: ModelConfig, p: Params, x, sin, cos, lk, lv,
+                           cache_len, *, window=0):
+    """One-new-token attention against a KV cache [B,S,Hkv,D]; the new kv is
+    already written at index cache_len.  Returns [B,1,d]."""
+    from repro.kernels import ops as OPS
+    B = x.shape[0]
+    S = lk.shape[1]
+    q = jnp.einsum("bld,dhk->blhk", x, p["wq"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+    rotary_dim = cfg.head_dim // 2 if cfg.rope_style == "half" else cfg.head_dim
+    if sin is not None:
+        q = apply_rotary(q, sin, cos, rotary_dim)
+    idx_kv = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    q_pos = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (B,))
+    out = OPS.decode_attention(q, lk.astype(x.dtype), lv.astype(x.dtype),
+                               idx_kv, q_pos, window=window)
+    return jnp.einsum("blhk,hkd->bld", out, p["wo"].astype(x.dtype))
+
+
+def project_kv(cfg: ModelConfig, p: Params, x, sin, cos):
+    """k/v projection + rope only (decode: project the new token's kv)."""
+    k = jnp.einsum("bld,dhk->blhk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bld,dhk->blhk", x, p["wv"].astype(x.dtype))
+    if cfg.qk_norm:
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    rotary_dim = cfg.head_dim // 2 if cfg.rope_style == "half" else cfg.head_dim
+    if sin is not None:
+        k = apply_rotary(k, sin, cos, rotary_dim)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(cfg: ModelConfig, rng, d_ff: Optional[int] = None) -> Params:
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(rng, 3)
+    if cfg.mlp_type == "gelu":
+        return {
+            "w_in": init_linear(ks[0], (d, ff), pdt(cfg)),
+            "b_in": jnp.zeros((ff,), pdt(cfg)),
+            "w_out": init_linear(ks[1], (ff, d), pdt(cfg), fan_in=ff),
+            "b_out": jnp.zeros((d,), pdt(cfg)),
+        }
+    return {
+        "w_gate": init_linear(ks[0], (d, ff), pdt(cfg)),
+        "w_up": init_linear(ks[1], (d, ff), pdt(cfg)),
+        "w_down": init_linear(ks[2], (ff, d), pdt(cfg), fan_in=ff),
+    }
+
+
+def mlp_block(cfg: ModelConfig, p: Params, x):
+    if cfg.mlp_type == "gelu":
+        h = jnp.einsum("bld,df->blf", x, p["w_in"].astype(x.dtype)) + p["b_in"].astype(x.dtype)
+        h = jax.nn.gelu(h)
+        return jnp.einsum("blf,fd->bld", h, p["w_out"].astype(x.dtype)) + p["b_out"].astype(x.dtype)
+    g = jnp.einsum("bld,df->blf", x, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("bld,df->blf", x, p["w_up"].astype(x.dtype))
+    act = jax.nn.gelu(g, approximate=True) if cfg.mlp_type == "geglu" else jax.nn.silu(g)
+    return jnp.einsum("blf,fd->bld", act * u, p["w_down"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# MoE (capacity-dropped scatter dispatch — GShard-style but without the
+# [T, E, C] one-hot; per-row capacity keeps the cumsum local to each row so
+# GSPMD never has to all-gather the routing tensors)
+# ---------------------------------------------------------------------------
+
+def init_moe(cfg: ModelConfig, rng) -> Params:
+    E, d, ff = cfg.num_experts, cfg.d_model, cfg.d_ff
+    ks = jax.random.split(rng, 5)
+    p = {
+        "router": _normal(ks[0], (d, E), jnp.float32, 0.02),
+        "w_gate": init_linear(ks[1], (E, d, ff), pdt(cfg), fan_in=d),
+        "w_up": init_linear(ks[2], (E, d, ff), pdt(cfg), fan_in=d),
+        "w_down": init_linear(ks[3], (E, ff, d), pdt(cfg), fan_in=ff),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = init_mlp(cfg, ks[4], cfg.d_ff * cfg.num_shared_experts)
+    return p
+
+
+def moe_block(cfg: ModelConfig, p: Params, x):
+    """x [B, L, d] → ([B, L, d], aux_loss scalar)."""
+    import os
+    B, L, d = x.shape
+    E, K = cfg.num_experts, cfg.num_experts_per_tok
+    cf = float(os.environ.get("REPRO_MOE_CF", cfg.moe_capacity_factor))
+    C = max(1, int(math.ceil(L * K * cf / E)))
+    C = min(C, L * K)
+
+    router_logits = jnp.einsum("bld,de->ble", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(router_logits, axis=-1)        # [B, L, E] f32
+    gates, idx = jax.lax.top_k(probs, K)                  # [B, L, K]
+    gates = gates / jnp.clip(jnp.sum(gates, -1, keepdims=True), 1e-9)
+
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.int32)      # [B, L, K, E]
+    flat = onehot.reshape(B, L * K, E)
+    pos_flat = jnp.cumsum(flat, axis=1) - flat            # 0-based slot id
+    pos = jnp.take_along_axis(
+        pos_flat.reshape(B, L, K, E), idx[..., None], axis=-1)[..., 0]  # [B,L,K]
+    keep = (pos < C).astype(x.dtype)                      # [B, L, K]
+    slot = jnp.clip(pos, 0, C - 1)
+
+    b_ix = jnp.arange(B, dtype=jnp.int32)[:, None, None] * jnp.ones((1, L, K), jnp.int32)
+    updates = x[:, :, None, :] * keep[..., None]          # [B, L, K, d]
+    buffer = jnp.zeros((B, E, C, d), x.dtype).at[b_ix, idx, slot].add(updates)
+
+    w_gate, w_up, w_down = p["w_gate"], p["w_up"], p["w_down"]
+    if os.environ.get("REPRO_MOE_GATHER_W", "0") == "1":
+        # §Perf B3: expert matmuls contract over d, which FSDP shards over
+        # "data" — GSPMD then partial-sums the [B,E,C,ff] activations with
+        # an all-reduce.  Gathering the (smaller) expert weights instead
+        # trades that for a per-layer weight all-gather.
+        mesh = _ACT_SHARDING["mesh"]
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            gspec = NamedSharding(mesh, P("model", None, None))
+            w_gate = jax.lax.with_sharding_constraint(w_gate, gspec)
+            w_up = jax.lax.with_sharding_constraint(w_up, gspec)
+            w_down = jax.lax.with_sharding_constraint(w_down, gspec)
+
+    g = jnp.einsum("becd,edf->becf", buffer, w_gate.astype(x.dtype))
+    u = jnp.einsum("becd,edf->becf", buffer, w_up.astype(x.dtype))
+    act = jax.nn.gelu(g, approximate=True) if cfg.mlp_type == "geglu" else jax.nn.silu(g)
+    out_buf = jnp.einsum("becf,efd->becd", act * u, w_down.astype(x.dtype))
+
+    gathered = out_buf[b_ix, idx, slot]                   # [B, L, K, d]
+    y = jnp.sum(gathered * (gates.astype(x.dtype) * keep)[..., None], axis=2)
+
+    if "shared" in p:
+        y = y + mlp_block(cfg, p["shared"], x)
+
+    # switch-style load-balance aux loss
+    frac_tokens = jnp.mean(jnp.sum(onehot, axis=2).astype(jnp.float32), axis=(0, 1))  # [E]
+    frac_probs = jnp.mean(probs, axis=(0, 1))                                          # [E]
+    aux = E * jnp.sum(frac_tokens / K * frac_probs)
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+
+def init_embed(cfg: ModelConfig, rng) -> Params:
+    p = {"table": _normal(rng, (cfg.vocab_size, cfg.d_model), pdt(cfg))}
+    if not cfg.tie_embeddings:
+        p["head"] = _normal(jax.random.fold_in(rng, 1),
+                            (cfg.vocab_size, cfg.d_model), pdt(cfg))
+    return p
+
+
+def embed_tokens(cfg: ModelConfig, p: Params, tokens):
+    x = jnp.take(p["table"], tokens, axis=0).astype(dt(cfg))
+    if cfg.embedding_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), dt(cfg))
+    return x
+
+
+def head_table(cfg: ModelConfig, p: Params):
+    return p["head"] if "head" in p else p["table"]
+
+
+def logits_from_hidden(cfg: ModelConfig, p: Params, hidden):
+    """hidden [..., d] → logits [..., vocab] (f32)."""
+    tab = head_table(cfg, p).astype(hidden.dtype)
+    return jnp.einsum("...d,vd->...v", hidden, tab,
+                      preferred_element_type=jnp.float32)

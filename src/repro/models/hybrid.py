@@ -1,0 +1,176 @@
+"""Zamba2-style hybrid: Mamba-2 trunk with a SHARED attention+MLP block
+applied every `shared_attn_every` layers (parameters shared across all
+applications; each application has its own KV cache in decode).
+
+38 layers / every-6 → 7 applications (6 full groups of 6 + remainder of 2).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common as C
+from repro.models import mamba2 as M
+
+
+def _n_groups(cfg: ModelConfig):
+    k = cfg.shared_attn_every
+    full, rem = divmod(cfg.num_layers, k)
+    return k, full, rem
+
+
+def n_shared_applications(cfg: ModelConfig) -> int:
+    _, full, rem = _n_groups(cfg)
+    return full + (1 if rem else 0)
+
+
+def _init_shared_block(cfg: ModelConfig, rng) -> Dict[str, Any]:
+    ks = jax.random.split(rng, 4)
+    return {
+        "ln1": C.init_norm(cfg, ks[0], cfg.d_model),
+        "attn": C.init_attention(cfg, ks[1]),
+        "ln2": C.init_norm(cfg, ks[2], cfg.d_model),
+        "mlp": C.init_mlp(cfg, ks[3]),
+    }
+
+
+def init_params(cfg: ModelConfig, rng) -> Dict[str, Any]:
+    k_embed, k_shared, k_layers, k_final = jax.random.split(rng, 4)
+    k, full, rem = _n_groups(cfg)
+    keys = jax.random.split(k_layers, cfg.num_layers)
+    stack = lambda ts: jax.tree.map(lambda *xs: jnp.stack(xs), *ts)
+    groups = [stack([M.init_mamba_layer(cfg, keys[g * k + j]) for j in range(k)])
+              for g in range(full)]
+    p = {
+        "embed": C.init_embed(cfg, k_embed),
+        "shared": _init_shared_block(cfg, k_shared),
+        "groups": stack(groups),
+        "final_norm": C.init_norm(cfg, k_final, cfg.d_model),
+    }
+    if rem:
+        p["rem"] = stack([M.init_mamba_layer(cfg, keys[full * k + j])
+                          for j in range(rem)])
+    return p
+
+
+def _shared_train(cfg, sp, x, sin, cos, mask):
+    x = C.constrain_residual(x)
+    h = C.apply_norm(cfg, sp["ln1"], x)
+    attn, _ = C.attention_block(cfg, sp["attn"], h, sin, cos, mask)
+    x = x + attn
+    h = C.apply_norm(cfg, sp["ln2"], x)
+    return x + C.mlp_block(cfg, sp["mlp"], h)
+
+
+def forward_train(cfg: ModelConfig, params, batch, remat: str = "full"):
+    x = C.embed_tokens(cfg, params["embed"], batch["tokens"])
+    B, L, _ = x.shape
+    pos = batch["positions"]
+    seg = batch.get("segment_ids")
+    idx = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32)[None], (B, L))
+    mask = C.make_mask(idx, idx, seg, seg, causal=True, window=0)
+    sin, cos = C.rope_sin_cos(pos, cfg.head_dim, cfg.rope_theta)
+
+    def mamba_body(x, lp):
+        return M.mamba_layer_train(cfg, lp, x), None
+
+    if remat != "none":
+        mamba_body = jax.checkpoint(mamba_body)
+
+    def group_body(x, gp):
+        x = _shared_train(cfg, params["shared"], x, sin, cos, mask)
+        x, _ = jax.lax.scan(mamba_body, x, gp)
+        return x, None
+
+    if remat != "none":
+        group_body_r = jax.checkpoint(group_body)
+    else:
+        group_body_r = group_body
+    x, _ = jax.lax.scan(group_body_r, x, params["groups"])
+    if "rem" in params:
+        x = _shared_train(cfg, params["shared"], x, sin, cos, mask)
+        x, _ = jax.lax.scan(mamba_body, x, params["rem"])
+    x = C.apply_norm(cfg, params["final_norm"], x)
+    return x, jnp.float32(0.0)
+
+
+def init_decode_cache(cfg: ModelConfig, batch_size: int, max_len: int, dtype=None):
+    dtype = dtype or C.dt(cfg)
+    L, B = cfg.num_layers, batch_size
+    apps = n_shared_applications(cfg)
+    return {
+        "conv_x": jnp.zeros((L, B, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+        "conv_bc": jnp.zeros((L, B, cfg.ssm_conv - 1, M.bc_dim(cfg)), dtype),
+        "ssm": jnp.zeros((L, B, cfg.ssm_nheads, cfg.ssm_state, cfg.ssm_headdim),
+                         jnp.float32),
+        "attn_k": jnp.zeros((apps, B, max_len, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "attn_v": jnp.zeros((apps, B, max_len, cfg.num_kv_heads, cfg.head_dim), dtype),
+    }
+
+
+def _shared_decode(cfg, sp, x, lk, lv, cache_len, sin, cos):
+    h = C.apply_norm(cfg, sp["ln1"], x)
+    k_new, v_new = C.project_kv(cfg, sp["attn"], h, sin, cos)
+    lk = jax.lax.dynamic_update_slice_in_dim(lk, k_new.astype(lk.dtype), cache_len, axis=1)
+    lv = jax.lax.dynamic_update_slice_in_dim(lv, v_new.astype(lv.dtype), cache_len, axis=1)
+    attn = C.decode_attention_block(cfg, sp["attn"], h, sin, cos, lk, lv,
+                                    cache_len, window=0)
+    x = x + attn
+    h = C.apply_norm(cfg, sp["ln2"], x)
+    return x + C.mlp_block(cfg, sp["mlp"], h), lk, lv
+
+
+def forward_decode(cfg: ModelConfig, params, cache, batch):
+    tokens, cache_len = batch["tokens"], batch["cache_len"]
+    x = C.embed_tokens(cfg, params["embed"], tokens)
+    B = x.shape[0]
+    S = cache["attn_k"].shape[2]
+    k, full, rem = _n_groups(cfg)
+
+    pos = jnp.full((B, 1), cache_len, jnp.int32)
+    sin, cos = C.rope_sin_cos(pos, cfg.head_dim, cfg.rope_theta)
+
+    def mamba_body(x, scanned):
+        lp, cx, cbc, ssm = scanned
+        x, cx, cbc, ssm = M.mamba_layer_decode(cfg, lp, x, cx, cbc, ssm)
+        return x, (cx, cbc, ssm)
+
+    def gslice(name):
+        return cache[name][: full * k].reshape(full, k, *cache[name].shape[1:])
+
+    def group_body(x, scanned):
+        gp, gcx, gcbc, gssm, gk, gv = scanned
+        x, gk, gv = _shared_decode(cfg, params["shared"], x, gk, gv, cache_len,
+                                   sin, cos)
+        x, (gcx, gcbc, gssm) = jax.lax.scan(mamba_body, x, (gp, gcx, gcbc, gssm))
+        return x, (gcx, gcbc, gssm, gk, gv)
+
+    x, (ncx, ncbc, nssm, nk, nv) = jax.lax.scan(
+        group_body, x,
+        (params["groups"], gslice("conv_x"), gslice("conv_bc"), gslice("ssm"),
+         cache["attn_k"][:full], cache["attn_v"][:full]))
+    new_cx = ncx.reshape(full * k, *cache["conv_x"].shape[1:])
+    new_cbc = ncbc.reshape(full * k, *cache["conv_bc"].shape[1:])
+    new_ssm = nssm.reshape(full * k, *cache["ssm"].shape[1:])
+    new_k, new_v = nk, nv
+
+    if rem:
+        x, rk, rv = _shared_decode(cfg, params["shared"], x,
+                                   cache["attn_k"][full], cache["attn_v"][full],
+                                   cache_len, sin, cos)
+        x, (rcx, rcbc, rssm) = jax.lax.scan(
+            mamba_body, x,
+            (params["rem"], cache["conv_x"][full * k:],
+             cache["conv_bc"][full * k:], cache["ssm"][full * k:]))
+        new_cx = jnp.concatenate([new_cx, rcx], axis=0)
+        new_cbc = jnp.concatenate([new_cbc, rcbc], axis=0)
+        new_ssm = jnp.concatenate([new_ssm, rssm], axis=0)
+        new_k = jnp.concatenate([new_k, rk[None]], axis=0)
+        new_v = jnp.concatenate([new_v, rv[None]], axis=0)
+
+    x = C.apply_norm(cfg, params["final_norm"], x)
+    return x, {"conv_x": new_cx, "conv_bc": new_cbc, "ssm": new_ssm,
+               "attn_k": new_k, "attn_v": new_v}

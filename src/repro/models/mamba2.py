@@ -1,0 +1,173 @@
+"""Mamba-2 (SSD) trunk — mamba2-780m and the SSM half of zamba2.
+
+Layer = {z, x, BC, dt} projections; causal depthwise conv on x and BC; SSD
+over (x, dt, A, B, C); gated RMSNorm; out_proj.  The SSD itself is the
+chunked state-space-duality algorithm (repro.kernels.ops.ssd → Pallas kernel
+on TPU / chunked-XLA elsewhere).
+
+TP note: the reference CUDA implementation fuses one in_proj; here the
+projection is SPLIT by output group (z | x | BC | dt) — mathematically the
+same matmul, but it lets GSPMD shard d_inner (= heads × headdim) over the
+"model" axis while the (small, grouped) B/C projections stay replicated —
+the same head-parallel scheme Mamba-2 uses for tensor parallelism.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common as C
+from repro.kernels import ref as KREF
+
+
+def bc_dim(cfg: ModelConfig) -> int:
+    return 2 * cfg.ssm_ngroups * cfg.ssm_state
+
+
+def init_mamba_layer(cfg: ModelConfig, rng) -> Dict[str, Any]:
+    ks = jax.random.split(rng, 8)
+    H = cfg.ssm_nheads
+    d, di = cfg.d_model, cfg.d_inner
+    return {
+        "ln": C.init_norm(cfg, ks[0], d),
+        "w_z": C.init_linear(ks[1], (d, di), C.pdt(cfg)),
+        "w_x": C.init_linear(ks[2], (d, di), C.pdt(cfg)),
+        "w_bc": C.init_linear(ks[3], (d, bc_dim(cfg)), C.pdt(cfg)),
+        "w_dt": C.init_linear(ks[4], (d, H), C.pdt(cfg)),
+        "conv_x_w": C._normal(ks[5], (cfg.ssm_conv, di), C.pdt(cfg), 0.1),
+        "conv_x_b": jnp.zeros((di,), C.pdt(cfg)),
+        "conv_bc_w": C._normal(ks[6], (cfg.ssm_conv, bc_dim(cfg)), C.pdt(cfg), 0.1),
+        "conv_bc_b": jnp.zeros((bc_dim(cfg),), C.pdt(cfg)),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "gate_norm": jnp.ones((di,), C.pdt(cfg)),
+        "out_proj": C.init_linear(ks[7], (di, d), C.pdt(cfg), fan_in=di),
+    }
+
+
+def _causal_conv(u, w, b):
+    """u [B, L, Cd]; w [K, Cd] depthwise causal conv; silu activation."""
+    K = w.shape[0]
+    pads = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pads[:, k:k + u.shape[1], :] * w[k].astype(u.dtype)
+              for k in range(K))
+    return jax.nn.silu(out + b.astype(u.dtype))
+
+
+def _conv_step(conv_state, u_new, w, b):
+    """conv_state [B, K-1, Cd] (last K-1 inputs); u_new [B, Cd]."""
+    window = jnp.concatenate([conv_state, u_new[:, None, :]], axis=1)  # [B,K,Cd]
+    out = jnp.einsum("bkc,kc->bc", window, w.astype(u_new.dtype))
+    out = jax.nn.silu(out + b.astype(u_new.dtype))
+    return out, window[:, 1:, :]
+
+
+def mamba_layer_train(cfg: ModelConfig, p, x, ssd_fn=None):
+    """x [B, L, d] → [B, L, d]."""
+    B, L, _ = x.shape
+    H, P, G, N = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_ngroups, cfg.ssm_state
+    x = C.constrain_residual(x)
+    h = C.apply_norm(cfg, p["ln"], x)
+    z = jnp.einsum("bld,dk->blk", h, p["w_z"].astype(h.dtype))
+    xu = jnp.einsum("bld,dk->blk", h, p["w_x"].astype(h.dtype))
+    bc = jnp.einsum("bld,dk->blk", h, p["w_bc"].astype(h.dtype))
+    dt = jnp.einsum("bld,dk->blk", h, p["w_dt"].astype(h.dtype))
+    xu = _causal_conv(xu, p["conv_x_w"], p["conv_x_b"])
+    bc = _causal_conv(bc, p["conv_bc_w"], p["conv_bc_b"])
+    xs = xu.reshape(B, L, H, P)
+    Bm = bc[..., :G * N].reshape(B, L, G, N)
+    Cm = bc[..., G * N:].reshape(B, L, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    from repro.kernels import ops as OPS
+    ssd = ssd_fn or (lambda *a: OPS.ssd(*a, chunk=cfg.ssm_chunk))
+    y, _ = ssd(xs, dt, A, Bm, Cm)
+    y = y + xs * p["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(B, L, cfg.d_inner)
+    y = C.rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    return x + jnp.einsum("blk,kd->bld", y, p["out_proj"].astype(y.dtype))
+
+
+def mamba_layer_decode(cfg: ModelConfig, p, x, conv_x, conv_bc, ssm_state):
+    """x [B, 1, d]; conv_x [B, K-1, d_inner]; conv_bc [B, K-1, 2GN];
+    ssm_state [B, H, N, P] f32."""
+    B = x.shape[0]
+    H, P, G, N = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_ngroups, cfg.ssm_state
+    h = C.apply_norm(cfg, p["ln"], x)[:, 0]
+    z = jnp.einsum("bd,dk->bk", h, p["w_z"].astype(h.dtype))
+    xu = jnp.einsum("bd,dk->bk", h, p["w_x"].astype(h.dtype))
+    bc = jnp.einsum("bd,dk->bk", h, p["w_bc"].astype(h.dtype))
+    dt = jnp.einsum("bd,dk->bk", h, p["w_dt"].astype(h.dtype))
+    xu, conv_x = _conv_step(conv_x, xu, p["conv_x_w"], p["conv_x_b"])
+    bc, conv_bc = _conv_step(conv_bc, bc, p["conv_bc_w"], p["conv_bc_b"])
+    xs = xu.reshape(B, H, P)
+    Bm = bc[..., :G * N].reshape(B, G, N)
+    Cm = bc[..., G * N:].reshape(B, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, ssm_state = KREF.ssd_decode_step(ssm_state, xs, dt, A, Bm, Cm)
+    y = y + xs * p["D"][None, :, None].astype(y.dtype)
+    y = y.reshape(B, cfg.d_inner)
+    y = C.rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = x + jnp.einsum("bk,kd->bd", y, p["out_proj"].astype(y.dtype))[:, None, :]
+    return out, conv_x, conv_bc, ssm_state
+
+
+# ---------------------------------------------------------------------------
+# pure-SSM model (mamba2-780m)
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, rng) -> Dict[str, Any]:
+    k_embed, k_layers, k_final = jax.random.split(rng, 3)
+    keys = jax.random.split(k_layers, cfg.num_layers)
+    layers = jax.tree.map(lambda *xs: jnp.stack(xs),
+                          *[init_mamba_layer(cfg, k) for k in keys])
+    return {
+        "embed": C.init_embed(cfg, k_embed),
+        "layers": layers,
+        "final_norm": C.init_norm(cfg, k_final, cfg.d_model),
+    }
+
+
+def forward_train(cfg: ModelConfig, params, batch, remat: str = "full"):
+    x = C.embed_tokens(cfg, params["embed"], batch["tokens"])
+
+    def body(x, lp):
+        return mamba_layer_train(cfg, lp, x), None
+
+    if remat != "none":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = C.apply_norm(cfg, params["final_norm"], x)
+    return x, jnp.float32(0.0)
+
+
+def init_decode_cache(cfg: ModelConfig, batch_size: int, max_len: int, dtype=None):
+    del max_len  # SSM state is O(1) in sequence length
+    dtype = dtype or C.dt(cfg)
+    L, B = cfg.num_layers, batch_size
+    return {
+        "conv_x": jnp.zeros((L, B, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+        "conv_bc": jnp.zeros((L, B, cfg.ssm_conv - 1, bc_dim(cfg)), dtype),
+        "ssm": jnp.zeros((L, B, cfg.ssm_nheads, cfg.ssm_state, cfg.ssm_headdim),
+                         jnp.float32),
+    }
+
+
+def forward_decode(cfg: ModelConfig, params, cache, batch):
+    x = C.embed_tokens(cfg, params["embed"], batch["tokens"])
+
+    def body(x, scanned):
+        lp, cx, cbc, ssm = scanned
+        x, cx, cbc, ssm = mamba_layer_decode(cfg, lp, x, cx, cbc, ssm)
+        return x, (cx, cbc, ssm)
+
+    x, (cx, cbc, ssm) = jax.lax.scan(
+        body, x, (params["layers"], cache["conv_x"], cache["conv_bc"],
+                  cache["ssm"]))
+    x = C.apply_norm(cfg, params["final_norm"], x)
+    return x, {"conv_x": cx, "conv_bc": cbc, "ssm": ssm}

@@ -1,0 +1,84 @@
+"""Uniform model API — dispatch by config family.
+
+Every family module exposes:
+  init_params(cfg, rng)                     -> params pytree
+  forward_train(cfg, params, batch, remat)  -> (hidden [B,L,d], aux scalar)
+  init_decode_cache(cfg, B, max_len)        -> cache pytree
+  forward_decode(cfg, params, cache, batch) -> (hidden [B,1,d], new cache)
+
+`batch` keys by family:
+  all     : tokens [B,L] i32, positions [B,L] i32
+  packed  : segment_ids [B,L] i32 (optional; RL trace packing)
+  vlm     : vision_embeds [B,Nv,d], positions [B,L,3] (m-rope)
+  encdec  : encoder_embeds [B,S_enc,d]
+  decode  : tokens [B,1], cache_len scalar i32
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import hybrid, mamba2, transformer, whisper
+
+_FAMILY = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": transformer,
+    "ssm": mamba2,
+    "hybrid": hybrid,
+    "encdec": whisper,
+}
+
+
+def get_model(cfg: ModelConfig):
+    return _FAMILY[cfg.family]
+
+
+def init_params(cfg: ModelConfig, rng):
+    return get_model(cfg).init_params(cfg, rng)
+
+
+def forward_train(cfg: ModelConfig, params, batch, remat: str = "full"):
+    return get_model(cfg).forward_train(cfg, params, batch, remat)
+
+
+def init_decode_cache(cfg: ModelConfig, batch_size: int, max_len: int, dtype=None):
+    return get_model(cfg).init_decode_cache(cfg, batch_size, max_len, dtype)
+
+
+def forward_decode(cfg: ModelConfig, params, cache, batch):
+    return get_model(cfg).forward_decode(cfg, params, cache, batch)
+
+
+# ---------------------------------------------------------------------------
+# dummy batches (smoke tests / local runs; the dry-run uses launch/specs.py
+# ShapeDtypeStructs of the same trees)
+# ---------------------------------------------------------------------------
+
+def make_train_batch(cfg: ModelConfig, batch_size: int, seq_len: int, rng=None):
+    import jax
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    ks = jax.random.split(rng, 3)
+    tokens = jax.random.randint(ks[0], (batch_size, seq_len), 0, cfg.vocab_size,
+                                jnp.int32)
+    positions = jnp.broadcast_to(
+        jnp.arange(seq_len, dtype=jnp.int32)[None], (batch_size, seq_len))
+    batch = {"tokens": tokens, "positions": positions}
+    if cfg.family == "vlm":
+        nv = min(cfg.vision_tokens, seq_len)
+        batch["vision_embeds"] = 0.02 * jax.random.normal(
+            ks[1], (batch_size, nv, cfg.d_model), jnp.float32)
+        batch["positions"] = jnp.broadcast_to(
+            positions[..., None], (batch_size, seq_len, 3))
+    if cfg.family == "encdec":
+        batch["encoder_embeds"] = 0.02 * jax.random.normal(
+            ks[2], (batch_size, min(seq_len, cfg.encoder_seq), cfg.d_model),
+            jnp.float32)
+    return batch
+
+
+def make_decode_batch(cfg: ModelConfig, batch_size: int, cache_len: int, rng=None):
+    import jax
+    rng = rng if rng is not None else jax.random.PRNGKey(1)
+    tokens = jax.random.randint(rng, (batch_size, 1), 0, cfg.vocab_size, jnp.int32)
+    return {"tokens": tokens, "cache_len": jnp.int32(cache_len)}

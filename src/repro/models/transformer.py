@@ -1,0 +1,419 @@
+"""Decoder-only transformer trunk — covers the dense (gemma3 / qwen3 / gemma /
+chatglm3), MoE (phi3.5-moe / llama4-maverick) and VLM-backbone (qwen2-vl)
+assigned architectures.
+
+Layers are stacked and iterated with ``lax.scan`` so the HLO stays O(1) in
+depth (critical for 512-way GSPMD compile times).  For ``moe_every = k > 1``
+the scanned unit is a *group* of k layers whose last layer is MoE (llama4
+alternating pattern); the intra-group loop is a static Python unroll.
+
+Attention runs through repro.kernels.ops (blocked flash / Pallas) — masks are
+index-array specs, never materialized [L, L] tensors.  The gemma3 5:1
+local:global pattern is expressed as a *traced* per-layer window scalar so the
+layer stack stays scannable.
+
+API (uniform across model families — see models/registry.py):
+  init_params(cfg, rng)                      -> params
+  forward_train(cfg, params, batch, remat)   -> (hidden [B,L,d], aux scalar)
+  init_decode_cache(cfg, B, S)               -> cache pytree
+  forward_decode(cfg, params, cache, batch)  -> (hidden [B,1,d], new cache)
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common as C
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def _init_layer(cfg: ModelConfig, rng, with_moe: bool):
+    ks = jax.random.split(rng, 4)
+    p = {
+        "ln1": C.init_norm(cfg, ks[0], cfg.d_model),
+        "attn": C.init_attention(cfg, ks[1]),
+        "ln2": C.init_norm(cfg, ks[2], cfg.d_model),
+    }
+    if with_moe:
+        p["moe"] = C.init_moe(cfg, ks[3])
+    else:
+        p["mlp"] = C.init_mlp(cfg, ks[3])
+    return p
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_params(cfg: ModelConfig, rng) -> Dict[str, Any]:
+    k_embed, k_layers, k_final = jax.random.split(rng, 3)
+    layer_keys = jax.random.split(k_layers, cfg.num_layers)
+    if cfg.num_experts and cfg.moe_every > 1:
+        # llama4 pattern: scanned unit is a group of `moe_every` layers whose
+        # last layer is MoE; "pre" holds the stacked dense sub-layers.
+        k = cfg.moe_every
+        assert cfg.num_layers % k == 0, (cfg.name, cfg.num_layers, k)
+        groups = []
+        for g in range(cfg.num_layers // k):
+            pre = [_init_layer(cfg, layer_keys[g * k + j], False) for j in range(k - 1)]
+            last = _init_layer(cfg, layer_keys[g * k + k - 1], True)
+            groups.append({"pre": _stack(pre), "last": last})
+        layers = _stack(groups)
+    else:
+        with_moe = bool(cfg.num_experts)
+        layers = _stack([_init_layer(cfg, layer_keys[i], with_moe)
+                         for i in range(cfg.num_layers)])
+    return {
+        "embed": C.init_embed(cfg, k_embed),
+        "layers": layers,
+        "final_norm": C.init_norm(cfg, k_final, cfg.d_model),
+    }
+
+
+# ---------------------------------------------------------------------------
+# per-layer flags (gemma3 local/global pattern)
+# ---------------------------------------------------------------------------
+
+def layer_flags(cfg: ModelConfig) -> jnp.ndarray:
+    """[L] f32 — 1.0 where the layer uses global attention."""
+    return jnp.asarray(
+        [1.0 if cfg.is_global_layer(i) else 0.0 for i in range(cfg.num_layers)],
+        jnp.float32)
+
+
+def _layer_window(cfg: ModelConfig, is_global):
+    """Traced per-layer window: 0 (= unbounded) on global layers,
+    cfg.sliding_window on local layers."""
+    if cfg.sliding_window <= 0:
+        return 0
+    return jnp.where(is_global > 0.5, 0, cfg.sliding_window).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# single layer application
+# ---------------------------------------------------------------------------
+
+def _apply_layer(cfg: ModelConfig, lp, x, sin, cos, mask) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    x = C.constrain_residual(x)
+    h = C.apply_norm(cfg, lp["ln1"], x)
+    attn_out, _ = C.attention_block(cfg, lp["attn"], h, sin, cos, mask)
+    x = x + attn_out
+    h = C.apply_norm(cfg, lp["ln2"], x)
+    if "moe" in lp:
+        y, aux = C.moe_block(cfg, lp["moe"], h)
+    else:
+        y, aux = C.mlp_block(cfg, lp["mlp"], h), jnp.float32(0.0)
+    return x + y, aux
+
+
+def _maybe_remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)  # "full": save only layer boundaries
+
+
+# ---------------------------------------------------------------------------
+# embedding + input merge (vlm)
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(cfg: ModelConfig, params, batch):
+    x = C.embed_tokens(cfg, params["embed"], batch["tokens"])
+    if cfg.family == "vlm" and "vision_embeds" in batch:
+        nv = batch["vision_embeds"].shape[1]
+        x = jnp.concatenate([batch["vision_embeds"].astype(x.dtype), x[:, nv:]], axis=1)
+    return x
+
+
+def _positions(cfg: ModelConfig, batch):
+    pos = batch["positions"]
+    if cfg.rope_style == "mrope" and pos.ndim == 2:
+        pos = jnp.broadcast_to(pos[..., None], (*pos.shape, 3))
+    return pos
+
+
+def _rope_tables(cfg: ModelConfig, pos):
+    """(sin, cos) for both thetas; local table is None when unused."""
+    if cfg.rope_style == "none":
+        return None, None, None, None
+    rotary = cfg.head_dim // 2 if cfg.rope_style == "half" else cfg.head_dim
+    sections = cfg.mrope_sections if cfg.rope_style == "mrope" else ()
+    sin_g, cos_g = C.rope_sin_cos(pos, cfg.head_dim, cfg.rope_theta, rotary, sections)
+    if cfg.rope_local_theta == cfg.rope_theta:
+        return sin_g, cos_g, None, None
+    sin_l, cos_l = C.rope_sin_cos(pos, cfg.head_dim, cfg.rope_local_theta, rotary, sections)
+    return sin_g, cos_g, sin_l, cos_l
+
+
+def _select_rope(tables, is_global):
+    sin_g, cos_g, sin_l, cos_l = tables
+    if sin_g is None:
+        return None, None
+    if sin_l is None:
+        return sin_g, cos_g
+    f = is_global
+    return f * sin_g + (1 - f) * sin_l, f * cos_g + (1 - f) * cos_l
+
+
+# ---------------------------------------------------------------------------
+# training / prefill forward
+# ---------------------------------------------------------------------------
+
+def forward_train(cfg: ModelConfig, params, batch, remat: str = "full"):
+    """batch: tokens [B,L] int32, positions [B,L] (or [B,L,3] mrope),
+    segment_ids [B,L] (optional), vision_embeds (vlm).  Returns
+    (hidden [B,L,d], aux)."""
+    x = _embed_inputs(cfg, params, batch)
+    B, L, _ = x.shape
+    pos = _positions(cfg, batch)
+    seg = batch.get("segment_ids")
+    idx = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32)[None], (B, L))
+
+    flags = layer_flags(cfg)
+    tables = _rope_tables(cfg, pos)
+
+    def layer_body(carry, scanned):
+        x, aux = carry
+        lp, is_global = scanned
+        sin, cos = _select_rope(tables, is_global)
+        mask = C.make_mask(idx, idx, seg, seg, causal=True,
+                           window=_layer_window(cfg, is_global))
+        x, a = _apply_layer(cfg, lp, x, sin, cos, mask)
+        return (x, aux + a), None
+
+    if cfg.num_experts and cfg.moe_every > 1:
+        k = cfg.moe_every
+        G = cfg.num_layers // k
+        gflags = flags.reshape(G, k)
+
+        def group_body(carry, scanned):
+            x, aux = carry
+            gp, gf = scanned
+            for j in range(k - 1):
+                sub = jax.tree.map(lambda a: a[j], gp["pre"])
+                sin, cos = _select_rope(tables, gf[j])
+                mask = C.make_mask(idx, idx, seg, seg, causal=True,
+                                   window=_layer_window(cfg, gf[j]))
+                x, a = _apply_layer(cfg, sub, x, sin, cos, mask)
+                aux = aux + a
+            sin, cos = _select_rope(tables, gf[k - 1])
+            mask = C.make_mask(idx, idx, seg, seg, causal=True,
+                               window=_layer_window(cfg, gf[k - 1]))
+            x, a = _apply_layer(cfg, gp["last"], x, sin, cos, mask)
+            return (x, aux + a), None
+
+        gbody = _maybe_remat(group_body, remat)
+        (x, aux), _ = jax.lax.scan(gbody, (x, jnp.float32(0.0)),
+                                   (params["layers"], gflags))
+    elif cfg.global_every > 0 and cfg.sliding_window > 0:
+        # gemma3 5:1 local:global — the scanned unit is a GROUP of
+        # `global_every` layers so the window is STATIC per position inside
+        # the group.  Static windows let the blocked attention run BANDED
+        # (only kv blocks inside the sliding window are ever computed)
+        # instead of full-rectangle-then-mask: local-layer attention work
+        # drops ~L/window-fold.  §Perf iteration C1.
+        k = cfg.global_every
+        Gn = cfg.num_layers // k
+        rem = cfg.num_layers - Gn * k
+        glayers = jax.tree.map(
+            lambda a: a[:Gn * k].reshape(Gn, k, *a.shape[1:]),
+            params["layers"])
+
+        def static_layer(x, aux, lp, layer_j):
+            is_g = (layer_j % k) == (k - 1)
+            sin_g_, cos_g_, sin_l_, cos_l_ = tables
+            sin, cos = ((sin_g_, cos_g_) if is_g or sin_l_ is None
+                        else (sin_l_, cos_l_))
+            window = 0 if is_g else int(cfg.sliding_window)
+            mask = C.make_mask(idx, idx, seg, seg, causal=True, window=window)
+            x, a = _apply_layer(cfg, lp, x, sin, cos, mask)
+            return x, aux + a
+
+        def group_body(carry, gp):
+            x, aux = carry
+            for j in range(k):
+                sub = jax.tree.map(lambda a: a[j], gp)
+                x, aux = static_layer(x, aux, sub, j)
+            return (x, aux), None
+
+        gbody = _maybe_remat(group_body, remat)
+        (x, aux), _ = jax.lax.scan(gbody, (x, jnp.float32(0.0)), glayers)
+        for j in range(rem):   # trailing partial group, unrolled
+            sub = jax.tree.map(lambda a: a[Gn * k + j], params["layers"])
+            x, aux = static_layer(x, aux, sub, j)
+    else:
+        import os
+        lg = int(os.environ.get("REPRO_LAYER_GROUP", "0"))
+        if lg > 1 and cfg.num_layers % lg == 0 and remat != "none":
+            # nested remat (§Perf A3): outer checkpoint per GROUP of lg
+            # layers (saved boundaries ÷lg), inner per-layer checkpoint
+            # bounds the recompute working set.  Restores HBM fit without
+            # the sequence-shard constraint's resharding traffic.
+            Gn = cfg.num_layers // lg
+            glayers = jax.tree.map(
+                lambda a: a.reshape(Gn, lg, *a.shape[1:]), params["layers"])
+            gflags = flags.reshape(Gn, lg)
+            inner = jax.checkpoint(layer_body)
+
+            def group_body(carry, scanned):
+                gp, gf = scanned
+                (x, aux) = carry
+                (x, aux), _ = jax.lax.scan(
+                    inner, (x, aux),
+                    (gp, gf))
+                return (x, aux), None
+
+            gbody = jax.checkpoint(group_body)
+            (x, aux), _ = jax.lax.scan(gbody, (x, jnp.float32(0.0)),
+                                       (glayers, gflags))
+        else:
+            body = _maybe_remat(layer_body, remat)
+            (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)),
+                                       (params["layers"], flags))
+
+    x = C.apply_norm(cfg, params["final_norm"], x)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# decode (one token against a KV cache)
+# ---------------------------------------------------------------------------
+
+def init_decode_cache(cfg: ModelConfig, batch_size: int, max_len: int, dtype=None):
+    dtype = dtype or C.dt(cfg)
+    shape = (cfg.num_layers, batch_size, max_len, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def prefill(cfg: ModelConfig, params, batch, max_len: int):
+    """Batch prefill: run the parallel forward over the prompt AND return a
+    populated decode cache (the serving path's first phase).
+
+    batch: tokens [B, Lp], positions [B, Lp] (+ vision_embeds for vlm).
+    Returns (hidden [B, Lp, d], cache with k/v[:, :, :Lp] filled)."""
+    x = _embed_inputs(cfg, params, batch)
+    B, Lp, _ = x.shape
+    pos = _positions(cfg, batch)
+    idx = jnp.broadcast_to(jnp.arange(Lp, dtype=jnp.int32)[None], (B, Lp))
+    tables = _rope_tables(cfg, pos)
+    flags = layer_flags(cfg)
+    dtype = C.dt(cfg)
+
+    def layer_kv(x, lp, is_global):
+        sin, cos = _select_rope(tables, is_global)
+        mask = C.make_mask(idx, idx, None, None, causal=True,
+                           window=_layer_window(cfg, is_global))
+        h = C.apply_norm(cfg, lp["ln1"], x)
+        attn_out, (k, v) = C.attention_block(cfg, lp["attn"], h, sin, cos, mask)
+        x = x + attn_out
+        h = C.apply_norm(cfg, lp["ln2"], x)
+        if "moe" in lp:
+            y, _ = C.moe_block(cfg, lp["moe"], h)
+        else:
+            y = C.mlp_block(cfg, lp["mlp"], h)
+        return x + y, (k.astype(dtype), v.astype(dtype))
+
+    if cfg.num_experts and cfg.moe_every > 1:
+        k_grp = cfg.moe_every
+
+        def gbody(x, scanned):
+            gp, gf = scanned
+            ks, vs = [], []
+            for j in range(k_grp):
+                lp = (jax.tree.map(lambda a: a[j], gp["pre"])
+                      if j < k_grp - 1 else gp["last"])
+                x, (k, v) = layer_kv(x, lp, gf[j])
+                ks.append(k)
+                vs.append(v)
+            return x, (jnp.stack(ks), jnp.stack(vs))
+
+        G = cfg.num_layers // k_grp
+        x, (ks, vs) = jax.lax.scan(gbody, x,
+                                   (params["layers"],
+                                    flags.reshape(G, k_grp)))
+        ks = ks.reshape(cfg.num_layers, *ks.shape[2:])
+        vs = vs.reshape(cfg.num_layers, *vs.shape[2:])
+    else:
+        def body(x, scanned):
+            lp, f = scanned
+            x, (k, v) = layer_kv(x, lp, f)
+            return x, (k, v)
+
+        x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], flags))
+
+    x = C.apply_norm(cfg, params["final_norm"], x)
+    cache = init_decode_cache(cfg, B, max_len)
+    cache = {"k": jax.lax.dynamic_update_slice_in_dim(cache["k"], ks, 0, axis=2),
+             "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], vs, 0, axis=2)}
+    return x, cache
+
+
+def forward_decode(cfg: ModelConfig, params, cache, batch):
+    """batch: tokens [B,1], cache_len scalar int32 (current length; the new
+    token is written at this index).  Returns (hidden [B,1,d], new_cache)."""
+    tokens, cache_len = batch["tokens"], batch["cache_len"]
+    x = C.embed_tokens(cfg, params["embed"], tokens)
+    B = x.shape[0]
+
+    pos = jnp.full((B, 1), cache_len, jnp.int32)
+    if cfg.rope_style == "mrope":
+        pos = jnp.broadcast_to(pos[..., None], (B, 1, 3))
+    tables = _rope_tables(cfg, pos)
+    flags = layer_flags(cfg)
+
+    def decode_layer(x, lp, lk, lv, is_global):
+        sin, cos = _select_rope(tables, is_global)
+        h = C.apply_norm(cfg, lp["ln1"], x)
+        k_new, v_new = C.project_kv(cfg, lp["attn"], h, sin, cos)
+        lk = jax.lax.dynamic_update_slice_in_dim(lk, k_new.astype(lk.dtype), cache_len, axis=1)
+        lv = jax.lax.dynamic_update_slice_in_dim(lv, v_new.astype(lv.dtype), cache_len, axis=1)
+        attn = C.decode_attention_block(cfg, lp["attn"], h, sin, cos, lk, lv,
+                                        cache_len,
+                                        window=_layer_window(cfg, is_global))
+        x = x + attn
+        h = C.apply_norm(cfg, lp["ln2"], x)
+        if "moe" in lp:
+            y, _ = C.moe_block(cfg, lp["moe"], h)
+        else:
+            y = C.mlp_block(cfg, lp["mlp"], h)
+        return x + y, lk, lv
+
+    if cfg.num_experts and cfg.moe_every > 1:
+        k = cfg.moe_every
+        G = cfg.num_layers // k
+        S = cache["k"].shape[2]
+        gflags = flags.reshape(G, k)
+        ck = cache["k"].reshape(G, k, B, S, cfg.num_kv_heads, cfg.head_dim)
+        cv = cache["v"].reshape(G, k, B, S, cfg.num_kv_heads, cfg.head_dim)
+
+        def gbody(x, scanned):
+            gp, gk, gv, gf = scanned
+            nk, nv = [], []
+            for j in range(k):
+                lp = (jax.tree.map(lambda a: a[j], gp["pre"]) if j < k - 1 else gp["last"])
+                x, lk2, lv2 = decode_layer(x, lp, gk[j], gv[j], gf[j])
+                nk.append(lk2)
+                nv.append(lv2)
+            return x, (jnp.stack(nk), jnp.stack(nv))
+
+        x, (nk, nv) = jax.lax.scan(gbody, x, (params["layers"], ck, cv, gflags))
+        new_cache = {"k": nk.reshape(cache["k"].shape), "v": nv.reshape(cache["v"].shape)}
+    else:
+        def body(x, scanned):
+            lp, lk, lv, is_global = scanned
+            x, lk, lv = decode_layer(x, lp, lk, lv, is_global)
+            return x, (lk, lv)
+
+        x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"], flags))
+        new_cache = {"k": nk, "v": nv}
+
+    x = C.apply_norm(cfg, params["final_norm"], x)
+    return x, new_cache

@@ -1,0 +1,139 @@
+"""Evaluator registry (paper §3.5).
+
+Evaluators run after trajectory construction; they receive the trajectory,
+session artifacts (workspace snapshot, harness info, terminal status) and —
+when ``refresh_runtime`` is set — a FRESH runtime prepared from the task's
+runtime spec (prewarmed by the gateway during the agent run).  An outcome
+reward is broadcast to every trace by default; per-trace assignment is
+available for process-reward tasks.
+
+Built-ins:
+  session_completion — 1.0 iff the harness finished without timeout/error.
+  test_on_output     — upload the agent's output into the fresh runtime and
+                       run a configured command; reward = (exit code == 0).
+  swebench_sim       — SWE-Bench-style: apply the agent's final patch in a
+                       clean evaluator runtime and score FAIL_TO_PASS +
+                       PASS_TO_PASS analogues against hidden targets, with
+                       optional partial credit (soft byte-match).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional
+
+from repro.core.types import Trajectory
+from repro.rollout.runtime import Runtime
+
+_EVALUATORS: Dict[str, Callable[..., float]] = {}
+
+
+def register(name: str):
+    def deco(fn):
+        _EVALUATORS[name] = fn
+        return fn
+    return deco
+
+
+def get_evaluator(name: str):
+    if name not in _EVALUATORS:
+        raise KeyError(f"unknown evaluator {name!r}; known: {sorted(_EVALUATORS)}")
+    return _EVALUATORS[name]
+
+
+def evaluate(name: str, *, trajectory: Trajectory, artifacts: Dict[str, Any],
+             config: Optional[Dict[str, Any]] = None,
+             fresh_runtime: Optional[Runtime] = None) -> float:
+    return get_evaluator(name)(trajectory=trajectory, artifacts=artifacts,
+                               config=config or {}, fresh_runtime=fresh_runtime)
+
+
+def broadcast_reward(trajectory: Trajectory, reward: float) -> None:
+    """Outcome reward → every trace (paper §3.5)."""
+    for tr in trajectory.traces:
+        tr.reward = reward
+
+
+def assign_per_trace(trajectory: Trajectory, rewards) -> None:
+    assert len(rewards) == len(trajectory.traces)
+    for tr, r in zip(trajectory.traces, rewards):
+        tr.reward = float(r)
+
+
+# ---------------------------------------------------------------------------
+
+@register("session_completion")
+def session_completion(*, trajectory, artifacts, config, fresh_runtime) -> float:
+    return 1.0 if artifacts.get("status") == "completed" else 0.0
+
+
+@register("test_on_output")
+def test_on_output(*, trajectory, artifacts, config, fresh_runtime) -> float:
+    assert fresh_runtime is not None, "test_on_output needs refresh_runtime"
+    out_path = config.get("output_path", "solution.txt")
+    data = artifacts.get("files", {}).get(out_path, "")
+    fresh_runtime.upload(out_path, data)
+    code, _ = fresh_runtime.exec(config.get("command", "true"))
+    return 1.0 if code == 0 else 0.0
+
+
+def _soft_match(produced: str, target: str) -> float:
+    """Byte-level soft credit in [0, 1]: normalized longest common prefix +
+    token-set overlap, averaged.  Dense enough for RL shaping; exact match
+    still scores 1.0."""
+    if produced == target:
+        return 1.0
+    if not produced or not target:
+        return 0.0
+    lcp = 0
+    for a, b in zip(produced, target):
+        if a != b:
+            break
+        lcp += 1
+    prefix_score = lcp / max(len(target), 1)
+    pset, tset = set(produced.split()), set(target.split())
+    overlap = len(pset & tset) / max(len(tset), 1)
+    return 0.5 * (prefix_score + overlap)
+
+
+@register("char_frequency")
+def char_frequency(*, trajectory, artifacts, config, fresh_runtime) -> float:
+    """Dense toy-RL reward: fraction of output characters equal to
+    config["char"].  With config["accept_threshold"] the reward binarizes
+    (offline accept/reject filters).  Dense enough that GRPO groups almost
+    always have variance — the CPU-scale analogue of pass-rate shaping."""
+    out_path = config.get("output_path", "solution.txt")
+    produced = (artifacts.get("files", {}) or {}).get(out_path, "") or ""
+    if not produced:
+        return 0.0
+    c = config.get("char", "a")
+    frac = sum(1 for ch in produced if ch == c) / len(produced)
+    thr = config.get("accept_threshold")
+    if thr is not None:
+        return 1.0 if frac >= thr else 0.0
+    return frac
+
+
+@register("swebench_sim")
+def swebench_sim(*, trajectory, artifacts, config, fresh_runtime) -> float:
+    """Hidden FAIL_TO_PASS target(s) live in the evaluator config — the
+    harness never sees them.  The agent's patch is its output file; we apply
+    it in the clean runtime and compare against the hidden expectation."""
+    out_path = config.get("output_path", "solution.txt")
+    produced = (artifacts.get("files", {}) or {}).get(out_path, "") or ""
+    target = config.get("target", "")
+    # PASS_TO_PASS analogue: protected files must be untouched
+    protected = config.get("protected", {})
+    for path, expect in protected.items():
+        if (artifacts.get("files", {}) or {}).get(path) != expect:
+            return 0.0
+    if fresh_runtime is not None:
+        # apply the patch in the clean evaluator runtime, then run the
+        # configured check command if any (exit!=0 → reward 0)
+        fresh_runtime.upload(out_path, produced)
+        cmd = config.get("command")
+        if cmd:
+            code, _ = fresh_runtime.exec(cmd)
+            if code != 0:
+                return 0.0
+    if config.get("partial_credit", True):
+        return _soft_match(produced.strip(), target.strip())
+    return 1.0 if produced.strip() == target.strip() else 0.0

@@ -1,0 +1,267 @@
+"""Gateway node (paper §3.1, §3.3, Fig. 3): owns the session lifecycle with
+stage-isolated worker pools.
+
+  INIT pool    — start the runtime, run prepare actions (CPU-heavy, off the
+                 critical path).
+  READY buffer — bounded queue of initialized sessions waiting for a run slot
+                 (lets runtime preparation proceed in the background without
+                 blocking GPU-bound agent execution).
+  RUNNING pool — execute the harness against the co-located proxy.
+                 When the evaluator requests a clean runtime, its prewarm is
+                 kicked off HERE, concurrent with the agent run (§3.3.2).
+  POSTRUN pool — build trajectories from captured completions, evaluate,
+                 send callbacks, tear down resources.
+
+Every session carries one shared deadline: if the harness times out after
+model calls were captured, the gateway still enters POSTRUN so partial
+traces are recovered with terminal "timeout" status.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+import uuid
+from concurrent.futures import Future, ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.core.proxy import InferenceBackend, ProxyGateway
+from repro.core.reconstruct import build as build_trajectory
+from repro.core.types import SessionResult, Trajectory
+from repro.rollout import evaluators as E
+from repro.rollout.harness import HarnessTimeout, make_harness
+from repro.rollout.runtime import Runtime, make_runtime
+from repro.rollout.types import Session
+
+
+@dataclass
+class _Live:
+    session: Session
+    runtime: Optional[Runtime] = None
+    eval_runtime_future: Optional[Future] = None
+    stage_t: Dict[str, float] = field(default_factory=dict)
+    harness_info: Dict[str, Any] = field(default_factory=dict)
+    error: Optional[str] = None
+
+
+class GatewayNode:
+    def __init__(self, backend: InferenceBackend, *, gateway_id: Optional[str] = None,
+                 init_workers: int = 2, run_workers: int = 2,
+                 post_workers: int = 2, ready_buffer: int = 4,
+                 result_sink: Optional[Callable[[SessionResult], None]] = None):
+        self.gateway_id = gateway_id or f"gw_{uuid.uuid4().hex[:8]}"
+        self.proxy = ProxyGateway(backend)
+        self.result_sink = result_sink
+        self._init_q: "queue.Queue[_Live]" = queue.Queue()
+        self._ready_q: "queue.Queue[_Live]" = queue.Queue(maxsize=ready_buffer)
+        self._post_q: "queue.Queue[_Live]" = queue.Queue()
+        self._prewarm_pool = ThreadPoolExecutor(max_workers=max(1, init_workers),
+                                                thread_name_prefix="prewarm")
+        self._stop = threading.Event()
+        self._live: Dict[str, _Live] = {}
+        self._cancelled: set = set()
+        self._lock = threading.Lock()
+        self.metrics: Dict[str, Any] = {
+            "sessions": 0, "completed": 0, "timeout": 0, "error": 0,
+            "run_busy_s": 0.0, "init_s": 0.0, "post_s": 0.0,
+            "stage_log": [],   # (session_id, stage, start, end)
+        }
+        self._threads: List[threading.Thread] = []
+        for i in range(init_workers):
+            self._spawn(self._init_worker, f"init-{i}")
+        for i in range(run_workers):
+            self._spawn(self._run_worker, f"run-{i}")
+        for i in range(post_workers):
+            self._spawn(self._post_worker, f"post-{i}")
+
+    def _spawn(self, fn, name):
+        t = threading.Thread(target=fn, name=f"{self.gateway_id}-{name}",
+                             daemon=True)
+        t.start()
+        self._threads.append(t)
+
+    # -- control surface (paper A.5: session create/status/delete) -----------
+    def submit(self, session: Session) -> None:
+        session.gateway_id = self.gateway_id
+        session.status = "init"
+        if session.deadline <= 0:
+            session.deadline = time.monotonic() + session.task.timeout_seconds
+        live = _Live(session=session)
+        with self._lock:
+            self._live[session.session_id] = live
+            self.metrics["sessions"] += 1
+        self._init_q.put(live)
+
+    def cancel(self, session_id: str) -> None:
+        """Best-effort cancellation (straggler mitigation)."""
+        with self._lock:
+            self._cancelled.add(session_id)
+            live = self._live.get(session_id)
+        if live and live.runtime is not None:
+            live.runtime.cancel()
+
+    def status(self) -> Dict[str, Any]:
+        with self._lock:
+            in_flight = {s: l.session.status for s, l in self._live.items()}
+        return {"gateway_id": self.gateway_id, "in_flight": in_flight,
+                "ready_buffered": self._ready_q.qsize(),
+                "metrics": dict(self.metrics)}
+
+    def in_flight_sessions(self) -> List[Session]:
+        with self._lock:
+            return [l.session for l in self._live.values()]
+
+    @property
+    def load(self) -> int:
+        with self._lock:
+            return len(self._live)
+
+    def shutdown(self) -> None:
+        self._stop.set()
+        self._prewarm_pool.shutdown(wait=False)
+
+    # -- INIT ------------------------------------------------------------------
+    def _init_worker(self):
+        while not self._stop.is_set():
+            try:
+                live = self._init_q.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            t0 = time.monotonic()
+            s = live.session
+            try:
+                if s.session_id in self._cancelled:
+                    self._terminal(live, "cancelled")
+                    continue
+                rt = make_runtime(s.task.runtime)
+                rt.start()
+                live.runtime = rt
+                live.stage_t["init"] = time.monotonic() - t0
+                self.metrics["init_s"] += live.stage_t["init"]
+                self._log_stage(s.session_id, "init", t0)
+                s.status = "ready"
+                self._ready_q.put(live)   # blocks when the buffer is full
+            except Exception as e:  # noqa: BLE001 — init failures are terminal
+                live.error = f"init: {e}"
+                self._terminal(live, "error")
+
+    # -- RUNNING ------------------------------------------------------------------
+    def _run_worker(self):
+        while not self._stop.is_set():
+            try:
+                live = self._ready_q.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            s = live.session
+            if s.session_id in self._cancelled:
+                self._terminal(live, "cancelled")
+                continue
+            s.status = "running"
+            t0 = time.monotonic()
+            # evaluator prewarm concurrent with the agent run (§3.3.2)
+            ev = s.task.evaluator or {}
+            if ev.get("refresh_runtime"):
+                live.eval_runtime_future = self._prewarm_pool.submit(
+                    self._prewarm, s)
+            try:
+                harness = make_harness(s.task.agent)
+                live.harness_info = harness.run(
+                    self.proxy, s.session_id, s.task.instruction,
+                    live.runtime, s.deadline)
+                s.status = "postrun"
+                live.harness_info["terminal"] = "completed"
+            except HarnessTimeout:
+                s.status = "postrun"
+                live.harness_info["terminal"] = "timeout"
+            except Exception as e:  # noqa: BLE001
+                live.error = f"run: {e}"
+                live.harness_info["terminal"] = "error"
+                s.status = "postrun"
+            dt = time.monotonic() - t0
+            live.stage_t["run"] = dt
+            self.metrics["run_busy_s"] += dt
+            self._log_stage(s.session_id, "run", t0)
+            self._post_q.put(live)
+
+    def _prewarm(self, s: Session) -> Runtime:
+        rt = make_runtime(s.task.runtime)
+        rt.start()
+        return rt
+
+    # -- POSTRUN -----------------------------------------------------------------
+    def _post_worker(self):
+        while not self._stop.is_set():
+            try:
+                live = self._post_q.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            t0 = time.monotonic()
+            s = live.session
+            terminal = live.harness_info.get("terminal", "completed")
+            result = SessionResult(session_id=s.session_id,
+                                   task_id=s.task.task_id, status=terminal)
+            try:
+                strategy = (s.task.builder or {}).get("strategy", "prefix_merging")
+                completions = self.proxy.session(s.session_id)
+                trajectory: Trajectory = build_trajectory(completions, strategy)
+                trajectory.metadata.update(
+                    {"harness": s.task.agent.harness, "terminal": terminal,
+                     "group_index": s.group_index,
+                     **s.task.metadata})
+                artifacts = {
+                    "status": terminal,
+                    "files": (live.runtime.files_snapshot()
+                              if live.runtime else {}),
+                    "harness": live.harness_info,
+                }
+                ev = s.task.evaluator or {}
+                fresh = None
+                if live.eval_runtime_future is not None:
+                    fresh = live.eval_runtime_future.result(timeout=30)
+                reward = E.evaluate(ev.get("strategy", "session_completion"),
+                                    trajectory=trajectory, artifacts=artifacts,
+                                    config=ev.get("config"),
+                                    fresh_runtime=fresh)
+                E.broadcast_reward(trajectory, reward)
+                result.trajectory = trajectory
+                result.reward = reward
+                result.metadata = {"stage_t": dict(live.stage_t),
+                                   "harness": s.task.agent.harness,
+                                   "num_completions": len(completions.completions)}
+                if fresh is not None:
+                    fresh.stop()
+            except Exception as e:  # noqa: BLE001
+                result.status = "error"
+                result.error = f"postrun: {e} (prior: {live.error})"
+            finally:
+                if live.runtime is not None:
+                    live.runtime.stop()
+                self.proxy.delete_session(s.session_id)
+                live.stage_t["post"] = time.monotonic() - t0
+                self.metrics["post_s"] += live.stage_t["post"]
+                self._log_stage(s.session_id, "post", t0)
+                self._terminal(live, result.status, result)
+
+    # -- terminal ---------------------------------------------------------------
+    def _terminal(self, live: _Live, status: str,
+                  result: Optional[SessionResult] = None):
+        s = live.session
+        s.status = status
+        if result is None:
+            result = SessionResult(session_id=s.session_id,
+                                   task_id=s.task.task_id,
+                                   status=status, error=live.error)
+        with self._lock:
+            self._live.pop(s.session_id, None)
+            self._cancelled.discard(s.session_id)
+            if status in ("completed", "timeout", "error", "cancelled"):
+                key = status if status in self.metrics else "error"
+                self.metrics[key] = self.metrics.get(key, 0) + 1
+        if self.result_sink is not None:
+            self.result_sink(result)
+
+    def _log_stage(self, sid: str, stage: str, t0: float):
+        with self._lock:
+            self.metrics["stage_log"].append(
+                (sid, stage, t0, time.monotonic()))

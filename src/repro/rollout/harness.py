@@ -1,0 +1,381 @@
+"""Harness adapters (paper §3.2.1).
+
+In production Polar a harness adapter installs configuration and returns the
+shell command that launches the NATIVE agent binary, whose model traffic then
+flows through the gateway proxy.  In this CPU reproduction the harnesses are
+*simulated*: each adapter is a scripted driver that speaks its provider's
+real wire shape against the proxy, keeps its own context policy (system
+prompt style, tool schemas, compaction, sub-agents, patch-submission style)
+and executes tool calls against the session runtime.  The proxy cannot tell
+the difference — which is the point: it treats every harness as a black box.
+
+Adapters shipped (paper: claude_code, codex, gemini_cli, qwen_code, opencode,
+pi + a generic shell harness):
+
+  codex       — OpenAI *Responses* API; terse CLI-style prompting; applies
+                the final patch only at the end (submission style).
+  claude_code — Anthropic Messages API; verbose system prompt; context
+                compaction once the message list exceeds a threshold.
+  qwen_code   — OpenAI Chat API; writes every assistant turn into the
+                workspace (eager-edit style).
+  pi          — OpenAI Chat API; spawns one sub-agent round mid-session and
+                merges its answer back (multi-agent orchestration).
+  gemini_cli  — Google generateContent API; single-file edit loop.
+  shell       — generic wrapped execution: instruction in, one completion
+                out, content written to the output path.
+"""
+from __future__ import annotations
+
+import json
+import time
+from abc import ABC, abstractmethod
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core.proxy import ProxyGateway
+from repro.rollout.runtime import Runtime
+from repro.rollout.types import AgentSpec
+
+
+class HarnessTimeout(Exception):
+    pass
+
+
+class HarnessAdapter(ABC):
+    name: str = "base"
+    provider_path: str = "/v1/chat/completions"
+
+    def __init__(self, spec: AgentSpec):
+        self.spec = spec
+
+    @abstractmethod
+    def run(self, proxy: ProxyGateway, session_id: str, instruction: str,
+            runtime: Runtime, deadline: float) -> Dict[str, Any]:
+        """Drive the agent to completion.  Raises HarnessTimeout if the
+        deadline passes mid-session (captured calls survive in the proxy)."""
+
+    # -- shared helpers -------------------------------------------------------
+    def _check_deadline(self, deadline: float):
+        if time.monotonic() > deadline:
+            raise HarnessTimeout(self.name)
+
+    def _run_tools(self, runtime: Runtime,
+                   tool_calls: List[Dict[str, Any]]) -> List[Tuple[str, str]]:
+        """Execute OpenAI-shaped tool calls → [(call_id, output)]."""
+        results = []
+        for tc in tool_calls:
+            fn = tc.get("function", {})
+            name = fn.get("name", "")
+            try:
+                args = json.loads(fn.get("arguments") or "{}")
+            except json.JSONDecodeError:
+                args = {"_raw": fn.get("arguments")}
+            if name == "bash":
+                code, out = runtime.exec(str(args.get("cmd", "")))
+                out = f"exit={code}\n{out}"
+            elif name == "write_file":
+                runtime.upload(str(args.get("path", "out.txt")),
+                               str(args.get("content", "")))
+                out = "ok"
+            elif name == "read_file":
+                out = runtime.download(str(args.get("path", ""))) or "<missing>"
+            else:
+                out = f"unknown tool {name}"
+            results.append((tc.get("id", ""), out))
+        return results
+
+
+# ---------------------------------------------------------------------------
+# OpenAI-chat-family harnesses
+# ---------------------------------------------------------------------------
+
+_CHAT_TOOLS = [
+    {"type": "function", "function": {
+        "name": "bash", "description": "run a shell command",
+        "parameters": {"type": "object",
+                       "properties": {"cmd": {"type": "string"}}}}},
+    {"type": "function", "function": {
+        "name": "write_file", "description": "write a file",
+        "parameters": {"type": "object",
+                       "properties": {"path": {"type": "string"},
+                                      "content": {"type": "string"}}}}},
+]
+
+
+class QwenCodeHarness(HarnessAdapter):
+    """Plain OpenAI Chat loop; eager-edit: every assistant turn's content is
+    written to the submission file immediately."""
+    name = "qwen_code"
+    provider_path = "/v1/chat/completions"
+    system = "You are Qwen Code, an expert coding agent. Edit files to solve the task. Reply DONE when finished."
+
+    def run(self, proxy, session_id, instruction, runtime, deadline):
+        out_path = self.spec.config.get("output_path", "solution.txt")
+        messages: List[Dict[str, Any]] = [
+            {"role": "system", "content": self.system},
+            {"role": "user", "content": instruction},
+        ]
+        turns = 0
+        for _ in range(self.spec.max_turns):
+            self._check_deadline(deadline)
+            resp = proxy.handle(self.provider_path,
+                                {"model": self.spec.model_name,
+                                 "messages": list(messages),
+                                 "tools": _CHAT_TOOLS,
+                                 "max_tokens": self.spec.config.get("max_tokens", 32)},
+                                session_id=session_id)
+            msg = resp["choices"][0]["message"]
+            messages.append(msg)
+            turns += 1
+            if msg.get("content"):
+                runtime.upload(out_path, msg["content"])  # eager edit
+            if msg.get("tool_calls"):
+                for call_id, out in self._run_tools(runtime, msg["tool_calls"]):
+                    messages.append({"role": "tool", "tool_call_id": call_id,
+                                     "content": out})
+                continue
+            if "DONE" in (msg.get("content") or "") or turns >= self.spec.max_turns:
+                break
+            messages.append({"role": "user",
+                             "content": "continue; reply DONE when finished"})
+        return {"turns": turns, "harness": self.name}
+
+
+class PiHarness(HarnessAdapter):
+    """pi-coding-agent style: same chat API but spawns one SUB-AGENT round
+    mid-session (fresh conversation, own system prompt) and merges the
+    answer back — exercises the multi-chain reconstruction path."""
+    name = "pi"
+    provider_path = "/v1/chat/completions"
+    system = "You are pi, a precise software engineering agent."
+
+    def run(self, proxy, session_id, instruction, runtime, deadline):
+        out_path = self.spec.config.get("output_path", "solution.txt")
+        messages = [{"role": "system", "content": self.system},
+                    {"role": "user", "content": instruction}]
+        turns = 0
+        spawn_at = max(1, self.spec.max_turns // 2)
+        for i in range(self.spec.max_turns):
+            self._check_deadline(deadline)
+            if i == spawn_at:
+                # sub-agent: independent conversation through the same proxy
+                sub = [{"role": "system", "content": "You are a focused sub-agent."},
+                       {"role": "user",
+                        "content": f"Investigate: {instruction[:80]}"}]
+                sub_resp = proxy.handle(self.provider_path,
+                                        {"model": self.spec.model_name,
+                                         "messages": sub,
+                                         "max_tokens": 16},
+                                        session_id=session_id)
+                sub_answer = sub_resp["choices"][0]["message"].get("content", "")
+                messages.append({"role": "user",
+                                 "content": f"[subagent] {sub_answer}"})
+            resp = proxy.handle(self.provider_path,
+                                {"model": self.spec.model_name,
+                                 "messages": list(messages),
+                                 "tools": _CHAT_TOOLS,
+                                 "max_tokens": self.spec.config.get("max_tokens", 32)},
+                                session_id=session_id)
+            msg = resp["choices"][0]["message"]
+            messages.append(msg)
+            turns += 1
+            if msg.get("tool_calls"):
+                for call_id, out in self._run_tools(runtime, msg["tool_calls"]):
+                    messages.append({"role": "tool", "tool_call_id": call_id,
+                                     "content": out})
+                continue
+            if msg.get("content"):
+                runtime.upload(out_path, msg["content"])
+            messages.append({"role": "user", "content": "refine or reply DONE"})
+        return {"turns": turns, "harness": self.name}
+
+
+# ---------------------------------------------------------------------------
+# codex — OpenAI Responses API, submit-at-end patch style
+# ---------------------------------------------------------------------------
+
+class CodexHarness(HarnessAdapter):
+    name = "codex"
+    provider_path = "/v1/responses"
+    instructions = "You are Codex CLI. Work step by step; output the final patch body as your last message."
+
+    def run(self, proxy, session_id, instruction, runtime, deadline):
+        out_path = self.spec.config.get("output_path", "solution.txt")
+        input_items: List[Dict[str, Any]] = [
+            {"type": "message", "role": "user", "content": instruction}]
+        last_text = ""
+        turns = 0
+        for _ in range(self.spec.max_turns):
+            self._check_deadline(deadline)
+            resp = proxy.handle(self.provider_path,
+                                {"model": self.spec.model_name,
+                                 "instructions": self.instructions,
+                                 "input": list(input_items),
+                                 "max_output_tokens": self.spec.config.get("max_tokens", 32)},
+                                session_id=session_id)
+            turns += 1
+            texts, calls = [], []
+            for item in resp.get("output", []):
+                if item["type"] == "message":
+                    texts.append("".join(p.get("text", "")
+                                         for p in item.get("content", [])))
+                elif item["type"] == "function_call":
+                    calls.append({"id": item["call_id"], "type": "function",
+                                  "function": {"name": item["name"],
+                                               "arguments": item["arguments"]}})
+            if texts:
+                last_text = texts[-1]
+                input_items.append({"type": "message", "role": "assistant",
+                                    "content": last_text})
+            if calls:
+                for item, (call_id, out) in zip(calls,
+                                                self._run_tools(runtime, calls)):
+                    input_items.append({"type": "function_call",
+                                        "call_id": call_id,
+                                        "name": item["function"]["name"],
+                                        "arguments": item["function"]["arguments"]})
+                    input_items.append({"type": "function_call_output",
+                                        "call_id": call_id, "output": out})
+                continue
+            input_items.append({"type": "message", "role": "user",
+                                "content": "continue"})
+        # submission style: the final text IS the patch
+        runtime.upload(out_path, last_text)
+        return {"turns": turns, "harness": self.name}
+
+
+# ---------------------------------------------------------------------------
+# claude_code — Anthropic Messages API with context compaction
+# ---------------------------------------------------------------------------
+
+class ClaudeCodeHarness(HarnessAdapter):
+    name = "claude_code"
+    provider_path = "/v1/messages"
+    system = ("You are Claude Code, Anthropic's CLI for Claude. "
+              "Use tools to inspect and edit the workspace; be concise.")
+
+    def run(self, proxy, session_id, instruction, runtime, deadline):
+        out_path = self.spec.config.get("output_path", "solution.txt")
+        compaction_after = self.spec.config.get("compaction_after", 6)
+        messages: List[Dict[str, Any]] = [
+            {"role": "user", "content": [{"type": "text", "text": instruction}]}]
+        turns = 0
+        transcript: List[str] = []
+        for _ in range(self.spec.max_turns):
+            self._check_deadline(deadline)
+            # harness-level compaction: replace history with a summary
+            if len(messages) > compaction_after:
+                summary = " | ".join(transcript[-3:])[:200]
+                messages = [{"role": "user", "content": [{
+                    "type": "text",
+                    "text": f"[compacted context] {summary}\ncontinue: {instruction}"}]}]
+            resp = proxy.handle(self.provider_path,
+                                {"model": self.spec.model_name,
+                                 "system": self.system,
+                                 "max_tokens": self.spec.config.get("max_tokens", 32),
+                                 "messages": list(messages),
+                                 "stream": self.spec.config.get("stream", False)},
+                                session_id=session_id)
+            if isinstance(resp, list):  # synthetic SSE — reassemble
+                text = "".join(e["delta"]["text"] for e in resp
+                               if e.get("type") == "content_block_delta"
+                               and e["delta"].get("type") == "text_delta")
+                content: List[Dict[str, Any]] = [{"type": "text", "text": text}]
+                tool_uses: List[Dict[str, Any]] = []
+            else:
+                content = resp.get("content", [])
+                tool_uses = [b for b in content if b.get("type") == "tool_use"]
+                text = "".join(b.get("text", "") for b in content
+                               if b.get("type") == "text")
+            turns += 1
+            transcript.append(text)
+            messages.append({"role": "assistant", "content": content or
+                             [{"type": "text", "text": text}]})
+            if tool_uses:
+                oai_calls = [{"id": b["id"], "type": "function",
+                              "function": {"name": b["name"],
+                                           "arguments": json.dumps(b["input"])}}
+                             for b in tool_uses]
+                results = self._run_tools(runtime, oai_calls)
+                messages.append({"role": "user", "content": [
+                    {"type": "tool_result", "tool_use_id": cid,
+                     "content": out} for cid, out in results]})
+                continue
+            if text:
+                runtime.upload(out_path, text)
+            messages.append({"role": "user", "content": [
+                {"type": "text", "text": "keep going or say DONE"}]})
+        return {"turns": turns, "harness": self.name}
+
+
+# ---------------------------------------------------------------------------
+# gemini_cli — Google generateContent
+# ---------------------------------------------------------------------------
+
+class GeminiCliHarness(HarnessAdapter):
+    name = "gemini_cli"
+    provider_path = "/v1beta/models/policy:generateContent"
+
+    def run(self, proxy, session_id, instruction, runtime, deadline):
+        out_path = self.spec.config.get("output_path", "solution.txt")
+        contents = [{"role": "user", "parts": [{"text": instruction}]}]
+        turns = 0
+        for _ in range(self.spec.max_turns):
+            self._check_deadline(deadline)
+            resp = proxy.handle(self.provider_path,
+                                {"systemInstruction": {"parts": [
+                                    {"text": "You are Gemini CLI."}]},
+                                 "contents": list(contents),
+                                 "generationConfig": {
+                                     "maxOutputTokens": self.spec.config.get("max_tokens", 32)}},
+                                session_id=session_id)
+            parts = resp["candidates"][0]["content"]["parts"]
+            text = "".join(p.get("text", "") for p in parts if "text" in p)
+            turns += 1
+            contents.append({"role": "model", "parts": parts})
+            if text:
+                runtime.upload(out_path, text)
+            contents.append({"role": "user", "parts": [{"text": "continue"}]})
+        return {"turns": turns, "harness": self.name}
+
+
+# ---------------------------------------------------------------------------
+# generic shell harness (paper: "generic shell command harness")
+# ---------------------------------------------------------------------------
+
+class ShellHarness(HarnessAdapter):
+    name = "shell"
+    provider_path = "/v1/chat/completions"
+
+    def run(self, proxy, session_id, instruction, runtime, deadline):
+        self._check_deadline(deadline)
+        out_path = self.spec.config.get("output_path", "solution.txt")
+        resp = proxy.handle(self.provider_path,
+                            {"model": self.spec.model_name,
+                             "messages": [{"role": "user", "content": instruction}],
+                             "max_tokens": self.spec.config.get("max_tokens", 32)},
+                            session_id=session_id)
+        text = resp["choices"][0]["message"].get("content", "")
+        runtime.upload(out_path, text)
+        return {"turns": 1, "harness": self.name}
+
+
+_HARNESSES = {
+    "qwen_code": QwenCodeHarness,
+    "pi": PiHarness,
+    "codex": CodexHarness,
+    "claude_code": ClaudeCodeHarness,
+    "gemini_cli": GeminiCliHarness,
+    "opencode": QwenCodeHarness,   # same wire family; alias shortcut
+    "shell": ShellHarness,
+}
+
+
+def make_harness(spec: AgentSpec) -> HarnessAdapter:
+    if spec.harness not in _HARNESSES:
+        raise KeyError(f"unknown harness {spec.harness!r}; "
+                       f"known: {sorted(_HARNESSES)}")
+    return _HARNESSES[spec.harness](spec)
+
+
+def register_harness(name: str, cls) -> None:
+    _HARNESSES[name] = cls

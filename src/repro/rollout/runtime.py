@@ -1,0 +1,236 @@
+"""Runtime interface (paper §3.2.2): start / stop / exec / upload / download /
+cancel.  Gateway code only depends on this interface, so a task can change
+isolation backend without friction.
+
+Backends:
+  * ``local``  — hermetic in-process sandbox: a private in-memory filesystem
+    plus a small command interpreter.  Deterministic, used by all tests and
+    CPU simulations.
+  * ``subprocess`` — a real tempdir + subprocess backend with wall-clock
+    limits (the shape a Docker/Apptainer backend takes on a cluster; shares
+    the exec contract).
+"""
+from __future__ import annotations
+
+import os
+import shlex
+import subprocess
+import tempfile
+import threading
+import time
+from abc import ABC, abstractmethod
+from typing import Dict, Optional, Tuple
+
+from repro.rollout.types import RuntimeSpec
+
+
+class Runtime(ABC):
+    spec: RuntimeSpec
+
+    @abstractmethod
+    def start(self) -> None: ...
+
+    @abstractmethod
+    def stop(self) -> None: ...
+
+    @abstractmethod
+    def exec(self, command: str, timeout: Optional[float] = None) -> Tuple[int, str]:
+        """Returns (exit_code, output)."""
+
+    @abstractmethod
+    def upload(self, path: str, data: str) -> None: ...
+
+    @abstractmethod
+    def download(self, path: str) -> Optional[str]: ...
+
+    @abstractmethod
+    def cancel(self) -> None: ...
+
+    # convenience
+    def files_snapshot(self) -> Dict[str, str]:
+        raise NotImplementedError
+
+
+class LocalRuntime(Runtime):
+    """In-memory FS + command interpreter.
+
+    Supported commands (enough surface for the simulated coding harnesses):
+      ls | cat <p> | write <p> <text...> | append <p> <text...> |
+      rm <p> | grep <needle> <p> | patch <p> <old> <new> | echo <text> |
+      sleep <s> | fail
+    """
+
+    def __init__(self, spec: RuntimeSpec):
+        self.spec = spec
+        self.fs: Dict[str, str] = {}
+        self.started = False
+        self.cancelled = False
+        self._lock = threading.Lock()
+
+    def start(self) -> None:
+        with self._lock:
+            self.fs = dict(self.spec.files)
+            self.started = True
+        for cmd in self.spec.prepare:
+            code, out = self.exec(cmd)
+            if code != 0:
+                raise RuntimeError(f"prepare failed: {cmd!r}: {out}")
+
+    def stop(self) -> None:
+        with self._lock:
+            self.started = False
+            self.fs = {}
+
+    def cancel(self) -> None:
+        self.cancelled = True
+
+    def upload(self, path: str, data: str) -> None:
+        with self._lock:
+            self.fs[path] = data
+
+    def download(self, path: str) -> Optional[str]:
+        with self._lock:
+            return self.fs.get(path)
+
+    def files_snapshot(self) -> Dict[str, str]:
+        with self._lock:
+            return dict(self.fs)
+
+    def exec(self, command: str, timeout: Optional[float] = None) -> Tuple[int, str]:
+        if self.cancelled:
+            return 130, "cancelled"
+        if not self.started:
+            return 1, "runtime not started"
+        try:
+            parts = shlex.split(command)
+        except ValueError as e:
+            return 2, f"parse error: {e}"
+        if not parts:
+            return 0, ""
+        op, args = parts[0], parts[1:]
+        with self._lock:
+            if op == "ls":
+                return 0, "\n".join(sorted(self.fs))
+            if op == "cat":
+                if args and args[0] in self.fs:
+                    return 0, self.fs[args[0]]
+                return 1, f"no such file: {args[:1]}"
+            if op == "write" and args:
+                self.fs[args[0]] = " ".join(args[1:])
+                return 0, ""
+            if op == "append" and args:
+                self.fs[args[0]] = self.fs.get(args[0], "") + " ".join(args[1:])
+                return 0, ""
+            if op == "rm" and args:
+                self.fs.pop(args[0], None)
+                return 0, ""
+            if op == "grep" and len(args) >= 2:
+                if args[1] not in self.fs:
+                    return 1, "no such file"
+                hits = [l for l in self.fs[args[1]].splitlines() if args[0] in l]
+                return (0 if hits else 1), "\n".join(hits)
+            if op == "patch" and len(args) >= 3:
+                p, old, new = args[0], args[1], args[2]
+                if p not in self.fs or old not in self.fs[p]:
+                    return 1, "patch target not found"
+                self.fs[p] = self.fs[p].replace(old, new, 1)
+                return 0, ""
+            if op == "echo":
+                return 0, " ".join(args)
+            if op == "sleep" and args:
+                pass  # fallthrough to sleep outside the lock
+            elif op == "fail":
+                return 1, "failed"
+            elif op == "true":
+                return 0, ""
+            else:
+                return 127, f"unknown command: {op}"
+        # sleep outside the lock
+        time.sleep(min(float(args[0]), 5.0))
+        return 0, ""
+
+
+class SubprocessRuntime(Runtime):
+    """Tempdir + real subprocess backend (cluster-shaped; used by examples
+    that want genuine shell semantics)."""
+
+    def __init__(self, spec: RuntimeSpec):
+        self.spec = spec
+        self._dir: Optional[tempfile.TemporaryDirectory] = None
+        self.cancelled = False
+
+    def start(self) -> None:
+        self._dir = tempfile.TemporaryDirectory(prefix="polar-rt-")
+        for path, data in self.spec.files.items():
+            self.upload(path, data)
+        for cmd in self.spec.prepare:
+            code, out = self.exec(cmd)
+            if code != 0:
+                raise RuntimeError(f"prepare failed: {cmd!r}: {out}")
+
+    def stop(self) -> None:
+        if self._dir is not None:
+            self._dir.cleanup()
+            self._dir = None
+
+    def cancel(self) -> None:
+        self.cancelled = True
+
+    def _abs(self, path: str) -> str:
+        assert self._dir is not None
+        p = os.path.normpath(os.path.join(self._dir.name, path.lstrip("/")))
+        assert p.startswith(self._dir.name), "path escape"
+        return p
+
+    def upload(self, path: str, data: str) -> None:
+        p = self._abs(path)
+        os.makedirs(os.path.dirname(p), exist_ok=True)
+        with open(p, "w") as f:
+            f.write(data)
+
+    def download(self, path: str) -> Optional[str]:
+        p = self._abs(path)
+        if not os.path.exists(p):
+            return None
+        with open(p) as f:
+            return f.read()
+
+    def files_snapshot(self) -> Dict[str, str]:
+        assert self._dir is not None
+        out = {}
+        for root, _, files in os.walk(self._dir.name):
+            for fn in files:
+                full = os.path.join(root, fn)
+                rel = os.path.relpath(full, self._dir.name)
+                try:
+                    with open(full) as f:
+                        out[rel] = f.read()
+                except (UnicodeDecodeError, OSError):
+                    pass
+        return out
+
+    def exec(self, command: str, timeout: Optional[float] = None) -> Tuple[int, str]:
+        if self.cancelled:
+            return 130, "cancelled"
+        assert self._dir is not None
+        try:
+            r = subprocess.run(command, shell=True, cwd=self._dir.name,
+                               capture_output=True, text=True,
+                               timeout=timeout or 30.0)
+            return r.returncode, r.stdout + r.stderr
+        except subprocess.TimeoutExpired:
+            return 124, "timeout"
+
+
+_BACKENDS = {"local": LocalRuntime, "subprocess": SubprocessRuntime}
+
+
+def make_runtime(spec: RuntimeSpec) -> Runtime:
+    if spec.backend not in _BACKENDS:
+        raise KeyError(f"unknown runtime backend {spec.backend!r}; "
+                       f"known: {sorted(_BACKENDS)}")
+    return _BACKENDS[spec.backend](spec)
+
+
+def register_backend(name: str, cls) -> None:
+    _BACKENDS[name] = cls

@@ -1,0 +1,242 @@
+"""Rollout server (paper §3.1 + A.5): durable task management, session
+expansion, gateway dispatch, polling, callbacks, node membership +
+heartbeats, and at-least-once rescheduling from dead gateways.
+
+The API mirrors the paper's service surface as methods (an HTTP façade over
+these lives in launch/serve.py):
+  submit_task            ~ POST /rollout/task/submit
+  poll                   ~ GET  /rollout/task/{task_id}
+  status                 ~ GET  /rollout/status
+  _on_session_result     ~ POST /callbacks/session_result
+  register_node          ~ POST /nodes/register
+  heartbeat              ~ POST /nodes/{node_id}/heartbeat
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+from repro.core.types import SessionResult
+from repro.rollout.gateway import GatewayNode
+from repro.rollout.types import Session, TaskRequest, TaskStatus
+
+
+@dataclass
+class _TaskState:
+    task: TaskRequest
+    sessions: Dict[str, Session] = field(default_factory=dict)
+    results: List[SessionResult] = field(default_factory=list)
+    finished_ids: set = field(default_factory=set)
+
+
+@dataclass
+class _NodeState:
+    gateway: GatewayNode
+    last_heartbeat: float
+    alive: bool = True
+
+
+class RolloutServer:
+    def __init__(self, *, heartbeat_timeout: float = 5.0,
+                 max_session_attempts: int = 3,
+                 monitor_interval: float = 0.5):
+        self._tasks: Dict[str, _TaskState] = {}
+        self._nodes: Dict[str, _NodeState] = {}
+        self._session_index: Dict[str, str] = {}   # session_id -> task_id
+        self._hb_stops: Dict[str, threading.Event] = {}
+        self._lock = threading.RLock()
+        self._heartbeat_timeout = heartbeat_timeout
+        self._max_attempts = max_session_attempts
+        self._stop = threading.Event()
+        self._monitor = threading.Thread(target=self._monitor_loop,
+                                         args=(monitor_interval,), daemon=True)
+        self._monitor.start()
+
+    # -- node membership -------------------------------------------------------
+    def register_node(self, gateway: GatewayNode,
+                      auto_heartbeat: bool = True,
+                      heartbeat_interval: float = 0.5) -> str:
+        gateway.result_sink = self._on_session_result
+        with self._lock:
+            self._nodes[gateway.gateway_id] = _NodeState(
+                gateway=gateway, last_heartbeat=time.monotonic())
+        if auto_heartbeat:
+            stop = threading.Event()
+            self._hb_stops[gateway.gateway_id] = stop
+
+            def _beat():
+                while not stop.is_set() and not self._stop.is_set():
+                    self.heartbeat(gateway.gateway_id,
+                                   gateway.status()["metrics"])
+                    stop.wait(heartbeat_interval)
+
+            threading.Thread(target=_beat, daemon=True,
+                             name=f"hb-{gateway.gateway_id}").start()
+        return gateway.gateway_id
+
+    def kill_node(self, node_id: str) -> None:
+        """Simulate a node failure: stop heartbeats and freeze the gateway.
+        The monitor loop detects the missing heartbeat and reschedules."""
+        stop = self._hb_stops.pop(node_id, None)
+        if stop is not None:
+            stop.set()
+        with self._lock:
+            st = self._nodes.get(node_id)
+        if st is not None:
+            st.gateway.shutdown()
+
+    def deregister_node(self, node_id: str) -> None:
+        """Elastic scale-down: sessions on the node are rescheduled."""
+        with self._lock:
+            st = self._nodes.pop(node_id, None)
+        if st is not None:
+            self._reschedule_from(st.gateway)
+
+    def heartbeat(self, node_id: str,
+                  metrics: Optional[Dict[str, Any]] = None) -> None:
+        with self._lock:
+            if node_id in self._nodes:
+                self._nodes[node_id].last_heartbeat = time.monotonic()
+                self._nodes[node_id].alive = True
+
+    def _alive_nodes(self) -> List[_NodeState]:
+        with self._lock:
+            return [n for n in self._nodes.values() if n.alive]
+
+    # -- tasks -------------------------------------------------------------------
+    def submit_task(self, task: TaskRequest) -> str:
+        """Non-blocking: expands to num_samples sessions and dispatches."""
+        state = _TaskState(task=task)
+        sessions = [Session.from_task(task, g) for g in range(task.num_samples)]
+        with self._lock:
+            self._tasks[task.task_id] = state
+            for s in sessions:
+                state.sessions[s.session_id] = s
+                self._session_index[s.session_id] = task.task_id
+        for s in sessions:
+            self._dispatch(s)
+        return task.task_id
+
+    def _dispatch(self, session: Session) -> None:
+        nodes = self._alive_nodes()
+        if not nodes:
+            session.status = "pending"   # picked up by the monitor loop
+            return
+        target = min(nodes, key=lambda n: n.gateway.load)
+        session.attempts += 1
+        target.gateway.submit(session)
+
+    def cancel_session(self, session_id: str) -> None:
+        """Best-effort straggler cancellation across all nodes."""
+        for n in self._alive_nodes():
+            n.gateway.cancel(session_id)
+
+    # -- results ------------------------------------------------------------------
+    def _on_session_result(self, result: SessionResult) -> None:
+        with self._lock:
+            task_id = self._session_index.get(result.session_id)
+            if task_id is None:
+                return
+            state = self._tasks[task_id]
+            if result.session_id in state.finished_ids:
+                return  # at-least-once delivery → dedupe
+            # retry transient errors within the attempt budget
+            sess = state.sessions.get(result.session_id)
+            if (result.status == "error" and sess is not None
+                    and sess.attempts < self._max_attempts):
+                retry = sess
+            else:
+                retry = None
+                state.finished_ids.add(result.session_id)
+                state.results.append(result)
+                cb = state.task.callback
+        if retry is not None:
+            self._dispatch(retry)
+            return
+        if cb is not None:
+            try:
+                cb(result)
+            except Exception:  # noqa: BLE001 — trainer callback must not kill us
+                pass
+
+    # -- polling --------------------------------------------------------------------
+    def poll(self, task_id: str) -> TaskStatus:
+        with self._lock:
+            state = self._tasks[task_id]
+            by_status: Dict[str, int] = {}
+            for s in state.sessions.values():
+                by_status[s.status] = by_status.get(s.status, 0) + 1
+            return TaskStatus(task_id=task_id,
+                              total=state.task.num_samples,
+                              finished=len(state.finished_ids),
+                              by_status=by_status,
+                              results=list(state.results))
+
+    def wait(self, task_id: str, timeout: float = 60.0) -> TaskStatus:
+        t0 = time.monotonic()
+        while time.monotonic() - t0 < timeout:
+            st = self.poll(task_id)
+            if st.done:
+                return st
+            time.sleep(0.02)
+        return self.poll(task_id)
+
+    def status(self) -> Dict[str, Any]:
+        with self._lock:
+            return {
+                "tasks": {tid: len(st.finished_ids) for tid, st in self._tasks.items()},
+                "nodes": {nid: {"alive": n.alive, "load": n.gateway.load}
+                          for nid, n in self._nodes.items()},
+            }
+
+    # -- failure handling --------------------------------------------------------
+    def _monitor_loop(self, interval: float):
+        while not self._stop.is_set():
+            time.sleep(interval)
+            now = time.monotonic()
+            dead: List[_NodeState] = []
+            with self._lock:
+                for n in self._nodes.values():
+                    if n.alive and now - n.last_heartbeat > self._heartbeat_timeout:
+                        n.alive = False
+                        dead.append(n)
+            for n in dead:
+                self._reschedule_from(n.gateway)
+            # dispatch any sessions parked while no node was alive
+            with self._lock:
+                parked = [s for st in self._tasks.values()
+                          for s in st.sessions.values()
+                          if s.status == "pending"
+                          and s.session_id not in st.finished_ids]
+            for s in parked:
+                self._dispatch(s)
+
+    def _reschedule_from(self, gateway: GatewayNode) -> None:
+        """At-least-once: re-enqueue sessions in flight on a dead gateway."""
+        for sess in gateway.in_flight_sessions():
+            with self._lock:
+                task_id = self._session_index.get(sess.session_id)
+                if task_id is None:
+                    continue
+                state = self._tasks[task_id]
+                if sess.session_id in state.finished_ids:
+                    continue
+            if sess.attempts >= self._max_attempts:
+                self._on_session_result(SessionResult(
+                    session_id=sess.session_id, task_id=sess.task.task_id,
+                    status="error", error="attempt budget exhausted"))
+            else:
+                fresh = Session.from_task(sess.task, sess.group_index)
+                # keep the same id so results map back to the task
+                fresh.session_id = sess.session_id
+                fresh.attempts = sess.attempts
+                with self._lock:
+                    state.sessions[fresh.session_id] = fresh
+                self._dispatch(fresh)
+
+    def shutdown(self) -> None:
+        self._stop.set()
+        for n in self._alive_nodes():
+            n.gateway.shutdown()

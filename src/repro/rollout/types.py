@@ -1,0 +1,71 @@
+"""Rollout-service data contracts (paper §3.1 + Appendix A.3)."""
+from __future__ import annotations
+
+import time
+import uuid
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+
+@dataclass
+class RuntimeSpec:
+    backend: str = "local"            # local | (docker / apptainer on HPC)
+    image: str = ""
+    workdir: str = "/polar/session/workspace"
+    files: Dict[str, str] = field(default_factory=dict)   # initial FS contents
+    prepare: List[str] = field(default_factory=list)      # exec'd during INIT
+    network: str = "none"
+
+
+@dataclass
+class AgentSpec:
+    harness: str = "shell"            # claude_code | codex | qwen_code | pi | ...
+    model_name: str = "policy"
+    max_turns: int = 8
+    config: Dict[str, Any] = field(default_factory=dict)
+
+
+@dataclass
+class TaskRequest:
+    task_id: str
+    instruction: str
+    num_samples: int = 1
+    timeout_seconds: float = 120.0
+    runtime: RuntimeSpec = field(default_factory=RuntimeSpec)
+    agent: AgentSpec = field(default_factory=AgentSpec)
+    builder: Dict[str, Any] = field(default_factory=lambda: {"strategy": "prefix_merging"})
+    evaluator: Dict[str, Any] = field(default_factory=lambda: {"strategy": "session_completion"})
+    callback: Optional[Callable[["object"], None]] = None   # SessionResult sink
+    metadata: Dict[str, Any] = field(default_factory=dict)
+
+
+@dataclass
+class Session:
+    """The scheduling unit: one independent sample of a task."""
+    session_id: str
+    task: TaskRequest
+    group_index: int
+    deadline: float = 0.0
+    status: str = "pending"     # pending|init|ready|running|postrun|completed|timeout|error|cancelled
+    gateway_id: Optional[str] = None
+    attempts: int = 0
+    created_at: float = field(default_factory=time.monotonic)
+
+    @staticmethod
+    def from_task(task: TaskRequest, group_index: int) -> "Session":
+        return Session(
+            session_id=f"{task.task_id}-{group_index}-{uuid.uuid4().hex[:6]}",
+            task=task, group_index=group_index)
+
+
+@dataclass
+class TaskStatus:
+    task_id: str
+    total: int
+    finished: int
+    by_status: Dict[str, int]
+    results: List[Any]          # SessionResult list (terminal only)
+
+    @property
+    def done(self) -> bool:
+        return self.finished >= self.total

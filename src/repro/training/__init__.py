@@ -1,0 +1,12 @@
+from repro.training.grpo import GRPOConfig, grpo_loss, make_train_step
+from repro.training.optimizer import AdamWConfig, adamw_update, init_opt_state
+from repro.training.schedule import constant, warmup_cosine
+from repro.training import checkpoint
+from repro.training.trainer import AsyncGRPOTrainer, TrainerConfig
+
+__all__ = [
+    "GRPOConfig", "grpo_loss", "make_train_step",
+    "AdamWConfig", "adamw_update", "init_opt_state",
+    "constant", "warmup_cosine", "checkpoint",
+    "AsyncGRPOTrainer", "TrainerConfig",
+]

@@ -1,0 +1,109 @@
+"""GRPO loss over packed, loss-masked Polar traces (paper §4.1 setup:
+"standard GRPO" + TIS for async staleness).
+
+Inputs are the packed-batch arrays from repro.data.packing:
+  tokens/positions/segment_ids → model forward (packed attention),
+  target_ids   — next-token targets within each segment,
+  target_mask  — 1 only where the target is a behavior-policy token,
+  behavior_lp  — behavior log-prob recorded by the proxy at rollout time,
+  advantage    — GRPO group-normalized advantage, broadcast per trace.
+
+Per trainable token:
+  r_t   = exp(logp_θ(t) − logp_behavior(t))          importance ratio
+  clip  = min(r_t·A_t, clip(r_t, 1−ε, 1+ε)·A_t)       PPO-clip surrogate
+  w_t   = stop_grad(min(1, c_TIS / r_t))             truncated IS weight
+  loss  = −Σ w_t·clip / Σ mask
+
+The per-token log-probs come from the fused vocab-chunked kernel
+(repro.kernels.ops.token_logprob) — the [T, V] logits tensor never exists.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops as OPS
+from repro.models import common as C
+from repro.models import registry as M
+
+
+@dataclass(frozen=True)
+class GRPOConfig:
+    clip_eps: float = 0.2
+    tis_cap: float = 2.0          # truncated-importance-sampling ceiling
+    aux_coef: float = 0.01        # MoE load-balance coefficient
+    remat: str = "full"
+    logprob_chunk: int = 8192     # vocab streaming chunk
+
+
+def policy_logprobs(cfg: ModelConfig, params, batch, gcfg: GRPOConfig):
+    """Run the model over the packed batch → per-position target log-probs."""
+    fwd_batch = {"tokens": batch["tokens"], "positions": batch["positions"],
+                 "segment_ids": batch["segment_ids"]}
+    for k in ("vision_embeds", "encoder_embeds"):
+        if k in batch:
+            fwd_batch[k] = batch[k]
+    hidden, aux = M.forward_train(cfg, params, fwd_batch, remat=gcfg.remat)
+    Bsz, L, d = hidden.shape
+    table = C.head_table(cfg, params["embed"])
+    rows = C.constrain_token_rows(hidden.reshape(Bsz * L, d).astype(table.dtype))
+    logp, lse = OPS.token_logprob(rows,
+                                  table,
+                                  batch["target_ids"].reshape(Bsz * L),
+                                  chunk=gcfg.logprob_chunk)
+    return logp.reshape(Bsz, L), aux
+
+
+def grpo_loss(cfg: ModelConfig, params, batch,
+              gcfg: GRPOConfig = GRPOConfig()) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    logp, aux = policy_logprobs(cfg, params, batch, gcfg)
+    mask = batch["target_mask"].astype(jnp.float32)
+    adv = batch["advantage"].astype(jnp.float32)
+    behavior = batch["behavior_lp"].astype(jnp.float32)
+
+    log_ratio = jnp.where(mask > 0, logp - behavior, 0.0)
+    ratio = jnp.exp(jnp.clip(log_ratio, -20.0, 20.0))
+    surr1 = ratio * adv
+    surr2 = jnp.clip(ratio, 1.0 - gcfg.clip_eps, 1.0 + gcfg.clip_eps) * adv
+    surrogate = jnp.minimum(surr1, surr2)
+    # TIS: truncate the effective importance weight for stale rollouts
+    w = jax.lax.stop_gradient(jnp.minimum(1.0, gcfg.tis_cap / jnp.maximum(ratio, 1e-9)))
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    pg_loss = -jnp.sum(w * surrogate * mask) / denom
+    loss = pg_loss + gcfg.aux_coef * aux
+
+    clipped_frac = jnp.sum((jnp.abs(ratio - 1.0) > gcfg.clip_eps) * mask) / denom
+    metrics = {
+        "loss": loss, "pg_loss": pg_loss, "aux": aux,
+        "mean_ratio": jnp.sum(ratio * mask) / denom,
+        "clipped_frac": clipped_frac,
+        "mean_logp": jnp.sum(logp * mask) / denom,
+        "trainable_tokens": jnp.sum(mask),
+    }
+    return loss, metrics
+
+
+def make_train_step(cfg: ModelConfig, gcfg: GRPOConfig, opt_cfg, lr_fn=None):
+    """Returns train_step(state, batch) -> (state, metrics) — pure, jittable,
+    pjit-shardable (the launch layer supplies in/out shardings)."""
+    from repro.training.optimizer import adamw_update
+
+    def train_step(state, batch):
+        def loss_fn(p):
+            return grpo_loss(cfg, p, batch, gcfg)
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state["params"])
+        lr = lr_fn(state["step"]) if lr_fn is not None else None
+        params, opt_state, om = adamw_update(state["params"], grads,
+                                             state["opt_state"], opt_cfg, lr=lr)
+        metrics.update(om)
+        new_state = {"params": params, "opt_state": opt_state,
+                     "step": state["step"] + 1}
+        return new_state, metrics
+
+    return train_step

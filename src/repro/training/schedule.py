@@ -1,0 +1,20 @@
+"""LR schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def warmup_cosine(lr: float, warmup_steps: int, total_steps: int,
+                  final_fraction: float = 0.1):
+    def f(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = lr * jnp.minimum(1.0, (step + 1) / max(warmup_steps, 1))
+        prog = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1),
+                        0.0, 1.0)
+        cos = final_fraction + (1 - final_fraction) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup_steps, warm, lr * cos)
+    return f

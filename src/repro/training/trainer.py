@@ -1,0 +1,151 @@
+"""Async GRPO trainer — the consumer side of the rollout service (Fig. 5a).
+
+A background submitter keeps `inflight` task groups in the rollout server;
+gateway callbacks stream SessionResults into the GroupBatcher; the trainer
+steps whenever a batch of evaluated groups is available, then pushes fresh
+weights to the inference engine (tagged with a new policy version).  The
+rollout plane never blocks on the trainer and vice versa — staleness is
+handled by the TIS term in the loss + the batcher's staleness filter.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.data.batcher import GroupBatcher
+from repro.inference.engine import Engine
+from repro.rollout.server import RolloutServer
+from repro.rollout.types import TaskRequest
+from repro.training import checkpoint as CKPT
+from repro.training.grpo import GRPOConfig, make_train_step
+from repro.training.optimizer import AdamWConfig, init_opt_state
+
+
+@dataclass
+class TrainerConfig:
+    batch_rows: int = 4
+    seqlen: int = 512
+    groups_per_step: int = 1
+    inflight_tasks: int = 2
+    total_steps: int = 20
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 10
+    grpo: GRPOConfig = field(default_factory=GRPOConfig)
+    adamw: AdamWConfig = field(default_factory=AdamWConfig)
+
+
+class AsyncGRPOTrainer:
+    def __init__(self, cfg: ModelConfig, engine: Engine, server: RolloutServer,
+                 task_factory: Callable[[int], TaskRequest],
+                 tcfg: TrainerConfig = TrainerConfig()):
+        self.cfg = cfg
+        self.engine = engine
+        self.server = server
+        self.task_factory = task_factory
+        self.tcfg = tcfg
+        self.batcher = GroupBatcher(min_groups_per_batch=tcfg.groups_per_step)
+        self.state = {"params": engine.params,
+                      "opt_state": init_opt_state(engine.params, tcfg.adamw),
+                      "step": jnp.int32(0)}
+        self._train_step = jax.jit(make_train_step(cfg, tcfg.grpo, tcfg.adamw))
+        self._task_counter = 0
+        self._inflight = 0
+        self._inflight_lock = threading.Lock()
+        self.history: List[Dict[str, Any]] = []
+        self.ckpt = (CKPT.AsyncCheckpointer(tcfg.ckpt_dir)
+                     if tcfg.ckpt_dir else None)
+
+    # -- rollout side -----------------------------------------------------------
+    def _on_result(self, result):
+        self.batcher.on_result(result)
+        with self._inflight_lock:
+            # a task is done when all its samples are in (tracked coarsely)
+            pass
+
+    def _submit_one(self):
+        task = self.task_factory(self._task_counter)
+        self._task_counter += 1
+        task.metadata = {**task.metadata,
+                         "policy_version": self.engine.policy_version}
+        orig_cb = task.callback
+
+        def cb(result):
+            if result.trajectory is not None:
+                for tr in result.trajectory.traces:
+                    tr.metadata.setdefault("policy_version",
+                                           task.metadata["policy_version"])
+            self.batcher.on_result(result)
+            st = self.server.poll(task.task_id)
+            if st.done:
+                with self._inflight_lock:
+                    self._inflight -= 1
+            if orig_cb:
+                orig_cb(result)
+
+        task.callback = cb
+        self.batcher.expect_group(task.task_id, task.num_samples)
+        with self._inflight_lock:
+            self._inflight += 1
+        self.server.submit_task(task)
+
+    def _keep_submitting(self, stop: threading.Event):
+        while not stop.is_set():
+            with self._inflight_lock:
+                need = self.tcfg.inflight_tasks - self._inflight
+            for _ in range(max(0, need)):
+                self._submit_one()
+            stop.wait(0.02)
+
+    # -- training loop -------------------------------------------------------------
+    def resume(self) -> int:
+        if self.ckpt is None:
+            return 0
+        restored, step = CKPT.restore(self.state, self.ckpt.ckpt_dir)
+        if restored is not None:
+            self.state = restored
+            self.engine.update_params(self.state["params"])
+            return int(step)
+        return 0
+
+    def train(self, steps: Optional[int] = None,
+              reward_log: Optional[List[float]] = None) -> List[Dict[str, Any]]:
+        steps = steps or self.tcfg.total_steps
+        stop = threading.Event()
+        submitter = threading.Thread(target=self._keep_submitting,
+                                     args=(stop,), daemon=True)
+        submitter.start()
+        try:
+            done_steps = 0
+            while done_steps < steps:
+                if not self.batcher.wait_for_groups(self.tcfg.groups_per_step,
+                                                    timeout=120.0):
+                    raise TimeoutError("rollout service produced no groups")
+                batch = self.batcher.next_batch(
+                    self.tcfg.batch_rows, self.tcfg.seqlen,
+                    current_version=self.engine.policy_version)
+                if batch is None:
+                    continue
+                jbatch = {k: jnp.asarray(v) for k, v in batch.as_dict().items()}
+                self.state, metrics = self._train_step(self.state, jbatch)
+                metrics = {k: float(v) for k, v in metrics.items()}
+                metrics["step"] = int(self.state["step"])
+                metrics["batch_meta"] = batch.meta
+                self.history.append(metrics)
+                done_steps += 1
+                # push fresh weights to the engine (async RL weight sync)
+                self.engine.update_params(self.state["params"])
+                if (self.ckpt is not None
+                        and done_steps % self.tcfg.ckpt_every == 0):
+                    self.ckpt.save_async(self.state, int(self.state["step"]))
+        finally:
+            stop.set()
+            if self.ckpt is not None:
+                self.ckpt.save_async(self.state, int(self.state["step"]))
+                self.ckpt.wait()
+        return self.history

@@ -1,0 +1,139 @@
+"""Per-architecture smoke tests: instantiate the REDUCED config of each
+assigned arch, run one forward/train step and one decode step on CPU,
+assert output shapes + finite values.  (Full configs are exercised only via
+the dry-run — no allocation here.)"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.models import common as C
+from repro.models import registry as M
+
+B, L = 2, 32
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_train(arch):
+    cfg = get_smoke_config(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = M.make_train_batch(cfg, B, L)
+    hidden, aux = jax.jit(lambda p, b: M.forward_train(cfg, p, b))(params, batch)
+    assert hidden.shape == (B, L, cfg.d_model)
+    assert jnp.all(jnp.isfinite(hidden.astype(jnp.float32)))
+    assert jnp.isfinite(aux)
+    logits = C.logits_from_hidden(cfg, params["embed"], hidden)
+    assert logits.shape == (B, L, cfg.vocab_size)
+    assert jnp.all(jnp.isfinite(logits))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_grad_finite(arch):
+    cfg = get_smoke_config(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = M.make_train_batch(cfg, B, L)
+
+    def loss_fn(p):
+        hidden, aux = M.forward_train(cfg, p, batch)
+        logits = C.logits_from_hidden(cfg, p["embed"], hidden)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        tgt = jnp.take_along_axis(logp[:, :-1], batch["tokens"][:, 1:, None], -1)
+        return -jnp.mean(tgt) + 0.01 * aux
+
+    loss, grads = jax.jit(jax.value_and_grad(loss_fn))(params)
+    assert jnp.isfinite(loss)
+    leaves = jax.tree.leaves(grads)
+    assert all(jnp.all(jnp.isfinite(g.astype(jnp.float32))) for g in leaves)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_step(arch):
+    cfg = get_smoke_config(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    cache = M.init_decode_cache(cfg, B, max_len=64)
+    if cfg.family == "encdec":
+        from repro.models import whisper as W
+        enc_embeds = 0.02 * jax.random.normal(
+            jax.random.PRNGKey(3), (B, cfg.encoder_seq, cfg.d_model))
+        cache = W.encode_for_decode(cfg, params, cache, enc_embeds)
+    batch = M.make_decode_batch(cfg, B, cache_len=0)
+    step = jax.jit(lambda p, c, b: M.forward_decode(cfg, p, c, b))
+    hidden, cache = step(params, cache, batch)
+    assert hidden.shape == (B, 1, cfg.d_model)
+    assert jnp.all(jnp.isfinite(hidden.astype(jnp.float32)))
+    # second step at cache_len=1 reuses the updated cache
+    batch2 = {"tokens": batch["tokens"], "cache_len": jnp.int32(1)}
+    hidden2, _ = step(params, cache, batch2)
+    assert jnp.all(jnp.isfinite(hidden2.astype(jnp.float32)))
+
+
+def test_decode_matches_prefill_dense():
+    """Token-by-token decode must match the parallel (train) forward —
+    validates cache indexing + rope offsets (qwen3 config: GQA + qk-norm).
+    f32 so the comparison is exact up to accumulation order."""
+    cfg = get_smoke_config("qwen3-32b").replace(dtype="float32",
+                                                param_dtype="float32")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    T = 8
+    batch = M.make_train_batch(cfg, 1, T)
+    hidden_par, _ = M.forward_train(cfg, params, batch, remat="none")
+
+    cache = M.init_decode_cache(cfg, 1, max_len=T)
+    outs = []
+    for t in range(T):
+        dbatch = {"tokens": batch["tokens"][:, t:t + 1], "cache_len": jnp.int32(t)}
+        h, cache = M.forward_decode(cfg, params, cache, dbatch)
+        outs.append(h[:, 0])
+    hidden_seq = jnp.stack(outs, axis=1)
+    assert jnp.allclose(hidden_par, hidden_seq, atol=1e-4, rtol=1e-4), (
+        jnp.max(jnp.abs(hidden_par - hidden_seq)))
+
+
+def test_decode_matches_prefill_ssm():
+    """Same for mamba2: SSD chunked scan vs token-by-token recurrence."""
+    cfg = get_smoke_config("mamba2-780m").replace(dtype="float32",
+                                                  param_dtype="float32")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    T = cfg.ssm_chunk  # one full chunk
+    batch = M.make_train_batch(cfg, 1, T)
+    hidden_par, _ = M.forward_train(cfg, params, batch, remat="none")
+
+    cache = M.init_decode_cache(cfg, 1, max_len=T)
+    outs = []
+    for t in range(T):
+        dbatch = {"tokens": batch["tokens"][:, t:t + 1], "cache_len": jnp.int32(t)}
+        h, cache = M.forward_decode(cfg, params, cache, dbatch)
+        outs.append(h[:, 0])
+    hidden_seq = jnp.stack(outs, axis=1)
+    assert jnp.allclose(hidden_par, hidden_seq, atol=1e-3, rtol=1e-3), (
+        jnp.max(jnp.abs(hidden_par - hidden_seq)))
+
+
+def test_prefill_matches_train_and_decode_continues():
+    """transformer.prefill must equal forward_train on the prompt AND its
+    cache must continue identically to token-by-token feeding (f32)."""
+    from repro.models import transformer as TF
+    cfg = get_smoke_config("qwen3-32b").replace(dtype="float32",
+                                                param_dtype="float32")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    T, MAXLEN = 8, 16
+    batch = M.make_train_batch(cfg, 1, T)
+    h_train, _ = M.forward_train(cfg, params, batch, remat="none")
+    h_pref, cache = TF.prefill(cfg, params, batch, MAXLEN)
+    assert jnp.allclose(h_train, h_pref, atol=1e-4, rtol=1e-4)
+
+    # token-by-token reference cache
+    cache_ref = M.init_decode_cache(cfg, 1, MAXLEN)
+    for t in range(T):
+        dbatch = {"tokens": batch["tokens"][:, t:t + 1],
+                  "cache_len": jnp.int32(t)}
+        _, cache_ref = M.forward_decode(cfg, params, cache_ref, dbatch)
+    assert jnp.allclose(cache["k"][:, :, :T], cache_ref["k"][:, :, :T],
+                        atol=1e-4, rtol=1e-4)
+    # one decode step from each cache agrees
+    nxt = {"tokens": jnp.full((1, 1), 7, jnp.int32), "cache_len": jnp.int32(T)}
+    h1, _ = M.forward_decode(cfg, params, cache, nxt)
+    h2, _ = M.forward_decode(cfg, params, cache_ref, nxt)
+    assert jnp.allclose(h1, h2, atol=1e-4, rtol=1e-4)

@@ -1,0 +1,89 @@
+"""Inference engine tests: generation determinism-by-seed, token capture
+alignment, end-of-turn stop, proxy integration end-to-end."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.core import tokenizer as tok
+from repro.core.proxy import ProxyGateway
+from repro.core.reconstruct import build, check_invariant
+from repro.inference import Engine
+
+
+def _engine(**kw):
+    cfg = get_smoke_config("qwen3-32b").replace(vocab_size=512)
+    return Engine(cfg, rng=jax.random.PRNGKey(7), max_len=256, max_new=16, **kw)
+
+
+def test_generate_shapes_and_stop():
+    eng = _engine()
+    prompt = tok.apply_chat_template([{"role": "user", "content": "hi"}])
+    ids, lps, finish = eng.generate_ids(prompt)
+    assert len(ids) == len(lps)
+    assert 0 < len(ids) <= 16
+    assert finish in ("stop", "length")
+    if finish == "stop":
+        assert ids[-1] == tok.END_OF_TURN
+    assert all(0 <= t < tok.VOCAB_SIZE for t in ids)
+    assert all(lp <= 0.0 for lp in lps)
+
+
+def test_greedy_is_deterministic():
+    eng = _engine(temperature=0.0)
+    prompt = tok.apply_chat_template([{"role": "user", "content": "abc"}])
+    a = eng.generate_ids(prompt)
+    b = eng.generate_ids(prompt)
+    assert a[0] == b[0]
+
+
+def test_param_update_changes_policy_version():
+    eng = _engine()
+    v0 = eng.policy_version
+    v1 = eng.update_params(eng.params)
+    assert v1 == v0 + 1
+
+
+def test_proxy_engine_end_to_end():
+    """Black-box loop: harness-style provider request → proxy → engine →
+    captured session → trajectory, invariant checked."""
+    eng = _engine()
+    gw = ProxyGateway(eng)
+    messages = [{"role": "user", "content": "do the thing"}]
+    for turn in range(3):
+        resp = gw.handle("/v1/messages",
+                         {"model": "m", "max_tokens": 8,
+                          "messages": [{"role": m["role"],
+                                        "content": [{"type": "text",
+                                                     "text": m["content"]}]}
+                                       for m in messages]},
+                         session_id="e2e")
+        text = "".join(b.get("text", "") for b in resp["content"])
+        messages.append({"role": "assistant", "content": text})
+        messages.append({"role": "user", "content": f"again {turn}"})
+    sess = gw.session("e2e")
+    assert len(sess.completions) == 3
+    for rec in sess.completions:
+        assert len(rec.response_ids) == len(rec.response_logprobs)
+        assert len(rec.prompt_ids) > 0
+    traj = build(sess, "prefix_merging")
+    check_invariant(sess, traj)
+    # captured behavior logprobs are real model logprobs (< 0, finite)
+    for tr in traj.traces:
+        for m, e in zip(tr.loss_mask, tr.response_logprobs):
+            if m:
+                assert e["logprob"] <= 0.0
+
+
+def test_engine_capture_matches_prompt_template():
+    """The proxy's prompt_ids must equal the canonical template of the
+    normalized messages (token-faithful capture)."""
+    eng = _engine()
+    gw = ProxyGateway(eng)
+    body = {"model": "m", "messages": [
+        {"role": "system", "content": "s"},
+        {"role": "user", "content": "u"}]}
+    gw.handle("/v1/chat/completions", body, session_id="cap")
+    rec = gw.session("cap").completions[0]
+    assert rec.prompt_ids == tok.apply_chat_template(body["messages"])

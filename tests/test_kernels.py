@@ -1,0 +1,264 @@
+"""Per-kernel allclose validation against the pure-jnp oracles in ref.py.
+
+Each Pallas kernel runs in interpret mode on CPU (kernel body executed in
+Python) and is swept over shapes / dtypes / mask configurations.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref as REF
+from repro.kernels import xla_flash as XF
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.fused_ce import token_logprob_pallas
+from repro.kernels.ssd import ssd_pallas
+
+
+def _attn_naive(q, k, v, idx_q=None, idx_kv=None, seg_q=None, seg_kv=None,
+                causal=True, window=0):
+    B, Lq = q.shape[0], q.shape[1]
+    Lkv = k.shape[1]
+    if idx_q is None:
+        idx_q = jnp.broadcast_to(jnp.arange(Lq, dtype=jnp.int32)[None], (B, Lq))
+    if idx_kv is None:
+        idx_kv = jnp.broadcast_to(jnp.arange(Lkv, dtype=jnp.int32)[None], (B, Lkv))
+    ok = jnp.ones((B, Lq, Lkv), jnp.bool_)
+    if causal:
+        ok &= idx_kv[:, None, :] <= idx_q[:, :, None]
+    if window > 0:
+        ok &= idx_kv[:, None, :] > (idx_q[:, :, None] - window)
+    if seg_q is not None and seg_kv is not None:
+        ok &= seg_kv[:, None, :] == seg_q[:, :, None]
+    bias = jnp.where(ok, 0.0, -1e30).astype(jnp.float32)[:, None]
+    return REF.attention_reference(q, k, v, bias)
+
+
+def _rand_qkv(rng, B, L, H, Hkv, D, dtype):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    q = jax.random.normal(k1, (B, L, H, D), jnp.float32).astype(dtype)
+    k = jax.random.normal(k2, (B, L, Hkv, D), jnp.float32).astype(dtype)
+    v = jax.random.normal(k3, (B, L, Hkv, D), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+_TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+# ---------------------------------------------------------------------------
+# flash attention (pallas, interpret) vs naive oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,L,H,Hkv,D", [
+    (1, 64, 4, 4, 32),     # MHA
+    (2, 128, 8, 2, 64),    # GQA 4:1
+    (1, 96, 4, 1, 32),     # MQA, non-divisible L/q_block
+])
+def test_flash_attention_causal(B, L, H, Hkv, D, dtype):
+    q, k, v = _rand_qkv(jax.random.PRNGKey(0), B, L, H, Hkv, D, dtype)
+    out = flash_attention(q, k, v, causal=True, q_block=32, kv_block=32,
+                          interpret=True)
+    ref = _attn_naive(q, k, v, causal=True)
+    np.testing.assert_allclose(out.astype(jnp.float32), ref.astype(jnp.float32),
+                               atol=_TOL[dtype], rtol=_TOL[dtype])
+
+
+@pytest.mark.parametrize("window", [8, 32])
+def test_flash_attention_sliding_window(window):
+    q, k, v = _rand_qkv(jax.random.PRNGKey(1), 2, 64, 4, 2, 32, jnp.float32)
+    out = flash_attention(q, k, v, causal=True, window=window,
+                          q_block=16, kv_block=16, interpret=True)
+    ref = _attn_naive(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_segments():
+    """Packed traces: tokens only attend within their segment."""
+    B, L = 1, 64
+    q, k, v = _rand_qkv(jax.random.PRNGKey(2), B, L, 4, 4, 32, jnp.float32)
+    seg = jnp.concatenate([jnp.zeros(20, jnp.int32), jnp.ones(24, jnp.int32),
+                           jnp.full(20, 2, jnp.int32)])[None]
+    out = flash_attention(q, k, v, seg_q=seg, seg_kv=seg, causal=True,
+                          q_block=16, kv_block=16, interpret=True)
+    ref = _attn_naive(q, k, v, seg_q=seg, seg_kv=seg, causal=True)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_noncausal():
+    q, k, v = _rand_qkv(jax.random.PRNGKey(3), 2, 48, 4, 4, 32, jnp.float32)
+    out = flash_attention(q, k, v, causal=False, q_block=16, kv_block=16,
+                          interpret=True)
+    ref = _attn_naive(q, k, v, causal=False)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_grad_matches_naive():
+    q, k, v = _rand_qkv(jax.random.PRNGKey(4), 1, 32, 4, 2, 16, jnp.float32)
+
+    def f_pallas(q, k, v):
+        return jnp.sum(flash_attention(q, k, v, causal=True, q_block=16,
+                                       kv_block=16, interpret=True) ** 2)
+
+    def f_ref(q, k, v):
+        return jnp.sum(_attn_naive(q, k, v, causal=True) ** 2)
+
+    gp = jax.grad(f_pallas, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gp, gr):
+        np.testing.assert_allclose(a, b, atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# xla_flash vs naive (the scale path used by models)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("L,window,segs", [(128, 0, False), (96, 16, False),
+                                           (64, 0, True)])
+def test_xla_flash_matches_naive(L, window, segs):
+    B, H, Hkv, D = 2, 4, 2, 32
+    q, k, v = _rand_qkv(jax.random.PRNGKey(5), B, L, H, Hkv, D, jnp.float32)
+    seg = None
+    if segs:
+        seg = jnp.tile(jnp.repeat(jnp.arange(4, dtype=jnp.int32), L // 4)[None],
+                       (B, 1))
+    out = XF.flash_attention_xla(q, k, v, seg_q=seg, seg_kv=seg, causal=True,
+                                 window=window, q_block=32, kv_block=32)
+    ref = _attn_naive(q, k, v, seg_q=seg, seg_kv=seg, causal=True,
+                      window=window)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+def test_xla_decode_matches_naive():
+    B, S, H, Hkv, D = 2, 64, 8, 2, 32
+    q, k, v = _rand_qkv(jax.random.PRNGKey(6), B, S, H, Hkv, D, jnp.float32)
+    idx = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    for t in [0, 17, 63]:
+        out = XF.decode_attention_xla(q[:, t:t + 1], k, v, idx,
+                                      jnp.full((B,), t, jnp.int32))
+        ref = _attn_naive(q, k, v, causal=True)[:, t:t + 1]
+        np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# SSD
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,L,H,P,G,N,Q", [
+    (1, 64, 2, 16, 1, 16, 16),
+    (2, 128, 4, 32, 2, 32, 32),
+    (1, 256, 8, 64, 1, 64, 64),   # mamba2-real-ish ratios
+])
+def test_ssd_pallas_vs_sequential(b, L, H, P, G, N, Q, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(7), 5)
+    x = (0.5 * jax.random.normal(ks[0], (b, L, H, P), jnp.float32)).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, L, H), jnp.float32))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,), jnp.float32) * 0.3)
+    B = (0.5 * jax.random.normal(ks[3], (b, L, G, N), jnp.float32)).astype(dtype)
+    C = (0.5 * jax.random.normal(ks[4], (b, L, G, N), jnp.float32)).astype(dtype)
+
+    y_ref, s_ref = REF.ssd_sequential(x, dt, A, B, C)
+    y_pal, s_pal = ssd_pallas(x, dt, A, B, C, chunk=Q, interpret=True)
+    tol = 5e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(y_pal.astype(jnp.float32),
+                               y_ref.astype(jnp.float32), atol=tol, rtol=tol)
+    np.testing.assert_allclose(s_pal, s_ref, atol=tol, rtol=tol)
+
+
+def test_ssd_chunked_vs_sequential():
+    ks = jax.random.split(jax.random.PRNGKey(8), 5)
+    b, L, H, P, G, N = 2, 96, 4, 16, 2, 16
+    x = 0.5 * jax.random.normal(ks[0], (b, L, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, L, H), jnp.float32))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,), jnp.float32) * 0.3)
+    B = 0.5 * jax.random.normal(ks[3], (b, L, G, N), jnp.float32)
+    C = 0.5 * jax.random.normal(ks[4], (b, L, G, N), jnp.float32)
+    y_ref, s_ref = REF.ssd_sequential(x, dt, A, B, C)
+    y_chk, s_chk = REF.ssd_chunked(x, dt, A, B, C, chunk=32)
+    np.testing.assert_allclose(y_chk, y_ref, atol=5e-4, rtol=5e-4)
+    np.testing.assert_allclose(s_chk, s_ref, atol=5e-4, rtol=5e-4)
+
+
+def test_ssd_initial_state_carry():
+    """Splitting a sequence in half and carrying the state must equal one
+    full pass (the decode/prefill contract)."""
+    ks = jax.random.split(jax.random.PRNGKey(9), 5)
+    b, L, H, P, G, N = 1, 64, 2, 16, 1, 16
+    x = 0.5 * jax.random.normal(ks[0], (b, L, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, L, H), jnp.float32))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,), jnp.float32) * 0.3)
+    B = 0.5 * jax.random.normal(ks[3], (b, L, G, N), jnp.float32)
+    C = 0.5 * jax.random.normal(ks[4], (b, L, G, N), jnp.float32)
+    y_full, s_full = REF.ssd_chunked(x, dt, A, B, C, chunk=16)
+    h = L // 2
+    y1, s1 = ssd_pallas(x[:, :h], dt[:, :h], A, B[:, :h], C[:, :h], chunk=16,
+                        interpret=True)
+    y2, s2 = ssd_pallas(x[:, h:], dt[:, h:], A, B[:, h:], C[:, h:], chunk=16,
+                        initial_state=s1, interpret=True)
+    np.testing.assert_allclose(jnp.concatenate([y1, y2], 1), y_full,
+                               atol=5e-4, rtol=5e-4)
+    np.testing.assert_allclose(s2, s_full, atol=5e-4, rtol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# fused CE / token logprob
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("T,V,d,chunk", [
+    (32, 1000, 64, 256),     # padded tail chunk
+    (64, 4096, 128, 1024),
+    (17, 513, 32, 128),      # awkward sizes everywhere
+])
+def test_token_logprob_pallas(T, V, d, chunk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(10), 3)
+    hidden = (0.5 * jax.random.normal(ks[0], (T, d), jnp.float32)).astype(dtype)
+    table = (0.5 * jax.random.normal(ks[1], (V, d), jnp.float32)).astype(dtype)
+    targets = jax.random.randint(ks[2], (T,), 0, V, jnp.int32)
+    logp, lse = token_logprob_pallas(hidden, table, targets, chunk=chunk,
+                                     t_block=16, interpret=True)
+    logp_r, lse_r = REF.fused_logprob_reference(hidden, table, targets)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(logp, logp_r, atol=tol, rtol=tol)
+    np.testing.assert_allclose(lse, lse_r, atol=tol, rtol=tol)
+
+
+def test_token_logprob_chunked_xla():
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    T, V, d = 40, 2050, 64
+    hidden = 0.5 * jax.random.normal(ks[0], (T, d), jnp.float32)
+    table = 0.5 * jax.random.normal(ks[1], (V, d), jnp.float32)
+    targets = jax.random.randint(ks[2], (T,), 0, V, jnp.int32)
+    lp_c, lse_c = REF.fused_logprob_chunked(hidden, table, targets, chunk=512)
+    lp_r, lse_r = REF.fused_logprob_reference(hidden, table, targets)
+    np.testing.assert_allclose(lp_c, lp_r, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(lse_c, lse_r, atol=1e-4, rtol=1e-4)
+
+
+def test_token_logprob_grad():
+    """custom_vjp backward vs autodiff through the naive reference."""
+    ks = jax.random.split(jax.random.PRNGKey(12), 3)
+    T, V, d = 24, 700, 48
+    hidden = 0.5 * jax.random.normal(ks[0], (T, d), jnp.float32)
+    table = 0.5 * jax.random.normal(ks[1], (V, d), jnp.float32)
+    targets = jax.random.randint(ks[2], (T,), 0, V, jnp.int32)
+    w = jax.random.normal(jax.random.PRNGKey(13), (T,), jnp.float32)
+
+    def f_pallas(h, t):
+        logp, lse = token_logprob_pallas(h, t, targets, chunk=256, t_block=8,
+                                         interpret=True)
+        return jnp.sum(w * logp) + 0.1 * jnp.sum(lse)
+
+    def f_ref(h, t):
+        logp, lse = REF.fused_logprob_reference(h, t, targets)
+        return jnp.sum(w * logp) + 0.1 * jnp.sum(lse)
+
+    gp = jax.grad(f_pallas, argnums=(0, 1))(hidden, table)
+    gr = jax.grad(f_ref, argnums=(0, 1))(hidden, table)
+    for a, b in zip(gp, gr):
+        np.testing.assert_allclose(a, b, atol=2e-4, rtol=2e-4)

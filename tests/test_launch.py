@@ -1,0 +1,194 @@
+"""Launch-layer tests: sharding rules on a tiny mesh, HLO analyzer units,
+serve HTTP surface, and a micro end-to-end of the train driver."""
+from __future__ import annotations
+
+import json
+import threading
+import time
+import urllib.request
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_smoke_config
+from repro.launch.hlo_analysis import analyze, parse_hlo
+from repro.launch.sharding import ShardingPlan
+
+
+# ---------------------------------------------------------------------------
+# sharding rules (tiny 1x1 mesh — rule resolution, not placement)
+# ---------------------------------------------------------------------------
+
+def _plan():
+    mesh = jax.make_mesh((1, 1), ("data", "model"), devices=jax.devices()[:1])
+    return ShardingPlan(mesh)
+
+
+def test_param_specs_transformer():
+    cfg = get_smoke_config("qwen3-32b")
+    from repro.launch import specs as SP
+    params = SP.params_specs_tree(cfg)
+    plan = _plan()
+    specs = plan.params_specs(params)
+    # embed table [V, d] → (model, data)
+    assert specs["embed"]["table"] == P("model", "data")
+    # stacked wq [L, d, H, hd] → (None, data, model, None)
+    assert specs["layers"]["attn"]["wq"] == P(None, "data", "model", None)
+    assert specs["layers"]["mlp"]["w_down"] == P(None, "model", "data")
+    assert specs["layers"]["ln1"]["w"] == P(None, None)
+
+
+def test_param_specs_moe_and_grouped():
+    cfg = get_smoke_config("llama4-maverick-400b-a17b")
+    from repro.launch import specs as SP
+    params = SP.params_specs_tree(cfg)
+    specs = _plan().params_specs(params)
+    # grouped stack: pre [G, k-1, ...] gets two leading Nones
+    assert specs["layers"]["pre"]["attn"]["wq"] == P(None, None, "data", "model", None)
+    assert specs["layers"]["last"]["moe"]["w_gate"] == P(None, "model", "data", None)
+    assert specs["layers"]["last"]["moe"]["shared"]["w_gate"] == P(None, "data", "model")
+
+
+def test_param_specs_mamba():
+    cfg = get_smoke_config("mamba2-780m")
+    from repro.launch import specs as SP
+    specs = _plan().params_specs(SP.params_specs_tree(cfg))
+    assert specs["layers"]["w_x"] == P(None, "data", "model")
+    assert specs["layers"]["w_bc"] == P(None, "data", None)
+    assert specs["layers"]["A_log"] == P(None, "model")
+    assert specs["layers"]["out_proj"] == P(None, "model", "data")
+
+
+def test_divisibility_fallback_records():
+    """whisper has 12 heads — not divisible by a 16-way model axis."""
+    mesh = jax.make_mesh((1, 1), ("data", "model"), devices=jax.devices()[:1])
+    # fake a 16-wide model axis by checking the rule math directly
+    plan = ShardingPlan(mesh)
+    axes = plan._fit("x", 12, "model")   # model axis size 1 → divides
+    assert axes == "model"
+    # simulate non-divisible via a direct call with a pretend mesh size
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+    plan2 = ShardingPlan.__new__(ShardingPlan)
+    plan2.mesh = FakeMesh()
+    plan2.data = ("data",)
+    plan2.fallbacks = []
+    assert plan2._fit("whisper.wq", 12, "model") is None
+    assert plan2.fallbacks
+
+
+def test_cache_specs_seq_shard():
+    cfg = get_smoke_config("gemma3-27b")
+    from repro.launch import specs as SP
+    from repro.configs.base import ShapeConfig
+    shape = ShapeConfig("long", seq_len=64, global_batch=1, kind="decode")
+    cache = SP.cache_shape_specs(cfg, shape)
+    plan = _plan()
+    specs = plan.cache_specs(cache, seq_shard=True)
+    assert specs["k"] == P(None, None, "data", "model", None)
+    specs2 = plan.cache_specs(cache, seq_shard=False)
+    assert specs2["k"][1] == "data"
+
+
+# ---------------------------------------------------------------------------
+# HLO analyzer
+# ---------------------------------------------------------------------------
+
+_TOY_HLO = """
+HloModule toy
+
+%body (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,16]{1,0} get-tuple-element(%p), index=1
+  %w = f32[16,16]{1,0} constant({...})
+  %dot.1 = f32[8,16]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,16]{1,0} all-reduce(%dot.1), replica_groups=[16,16]<=[256], to_apply=%add
+  %one = s32[] constant(1)
+  %i2 = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,16]{1,0}) tuple(%i2, %ar)
+}
+
+%cond (p2: (s32[], f32[8,16])) -> pred[] {
+  %p2 = (s32[], f32[8,16]{1,0}) parameter(0)
+  %i3 = s32[] get-tuple-element(%p2), index=0
+  %n = s32[] constant(12)
+  ROOT %lt = pred[] compare(%i3, %n), direction=LT
+}
+
+ENTRY %main (a: f32[8,16]) -> f32[8,16] {
+  %a = f32[8,16]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[8,16]{1,0}) tuple(%zero, %a)
+  %while.1 = (s32[], f32[8,16]{1,0}) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"12"}}
+  ROOT %out = f32[8,16]{1,0} get-tuple-element(%while.1), index=1
+}
+"""
+
+
+def test_hlo_analyzer_trip_counts_and_flops():
+    s = analyze(_TOY_HLO)
+    # dot flops = 2*8*16*16 = 4096, ×12 trips
+    assert s.flops == pytest.approx(12 * 2 * 8 * 16 * 16)
+    assert s.collective_bytes == pytest.approx(12 * 8 * 16 * 4)
+    assert ("all-reduce@16" in s.collectives)
+    assert s.loops == [("%while.1", 12)]
+
+
+def test_hlo_analyzer_trip_count_from_condition():
+    txt = _TOY_HLO.replace(', backend_config={"known_trip_count":{"n":"12"}}', "")
+    s = analyze(txt)
+    assert s.loops == [("%while.1", 12)]
+
+
+# ---------------------------------------------------------------------------
+# serve HTTP surface
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_serve_http_roundtrip():
+    from http.server import ThreadingHTTPServer
+    from repro.launch.serve import build_stack, make_handler
+    engine, server, nodes = build_stack("qwen3-32b")
+    httpd = ThreadingHTTPServer(("127.0.0.1", 0), make_handler(server, nodes))
+    port = httpd.server_address[1]
+    t = threading.Thread(target=httpd.serve_forever, daemon=True)
+    t.start()
+    try:
+        # provider proxy surface
+        req = urllib.request.Request(
+            f"http://127.0.0.1:{port}/v1/chat/completions",
+            data=json.dumps({"model": "m", "max_tokens": 4, "messages": [
+                {"role": "user", "content": "hi"}]}).encode(),
+            headers={"Content-Type": "application/json"})
+        resp = json.loads(urllib.request.urlopen(req, timeout=30).read())
+        assert resp["choices"][0]["message"]["role"] == "assistant"
+
+        # rollout service surface
+        req = urllib.request.Request(
+            f"http://127.0.0.1:{port}/rollout/task/submit",
+            data=json.dumps({
+                "task_id": "http-1", "instruction": "say hi",
+                "num_samples": 1,
+                "agent": {"harness": "shell", "config": {"max_tokens": 4}},
+                "evaluator": {"strategy": "session_completion"},
+            }).encode(), headers={"Content-Type": "application/json"})
+        out = json.loads(urllib.request.urlopen(req, timeout=30).read())
+        assert out["task_id"] == "http-1"
+        deadline = time.time() + 60
+        while time.time() < deadline:
+            st = json.loads(urllib.request.urlopen(
+                f"http://127.0.0.1:{port}/rollout/task/http-1",
+                timeout=30).read())
+            if st["finished"] >= 1:
+                break
+            time.sleep(0.2)
+        assert st["finished"] == 1
+        assert st["statuses"] == ["completed"]
+    finally:
+        httpd.shutdown()
+        server.shutdown()

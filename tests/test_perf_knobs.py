@@ -1,0 +1,79 @@
+"""The §Perf knobs must never change numerics — only schedules/layouts.
+Each knob variant is checked for exact-loss / allclose-gradient equality
+against the default path on a smoke config."""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import registry as M
+from repro.training.grpo import grpo_loss, GRPOConfig
+
+
+def _loss_and_grad(cfg, params, batch, gcfg):
+    return jax.value_and_grad(lambda p: grpo_loss(cfg, p, batch, gcfg)[0])(params)
+
+
+def _batch(cfg, B=2, L=32, seed=0):
+    rng = np.random.RandomState(seed)
+    tokens = rng.randint(0, cfg.vocab_size, (B, L)).astype(np.int32)
+    return {
+        "tokens": jnp.asarray(tokens),
+        "positions": jnp.tile(jnp.arange(L, dtype=jnp.int32)[None], (B, 1)),
+        "segment_ids": jnp.ones((B, L), jnp.int32),
+        "target_ids": jnp.asarray(np.roll(tokens, -1, axis=1)),
+        "target_mask": jnp.asarray((rng.rand(B, L) < 0.5).astype(np.float32)),
+        "behavior_lp": jnp.full((B, L), -0.5, jnp.float32),
+        "advantage": jnp.asarray(rng.randn(B, L).astype(np.float32)),
+    }
+
+
+@pytest.mark.parametrize("env", [
+    {"REPRO_LAYER_GROUP": "2"},
+    {"REPRO_FLASH_QB": "16", "REPRO_FLASH_KB": "16"},
+    {"REPRO_CE_CHUNK": "128"},
+])
+def test_knob_preserves_loss_and_grads(env):
+    cfg = get_smoke_config("qwen3-32b").replace(dtype="float32",
+                                                param_dtype="float32",
+                                                num_layers=4)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    gcfg = GRPOConfig(remat="full", logprob_chunk=256)
+    base_loss, base_grads = _loss_and_grad(cfg, params, batch, gcfg)
+    old = {k: os.environ.get(k) for k in env}
+    os.environ.update(env)
+    try:
+        loss, grads = _loss_and_grad(cfg, params, batch, gcfg)
+    finally:
+        for k, v in old.items():
+            if v is None:
+                os.environ.pop(k, None)
+            else:
+                os.environ[k] = v
+    assert jnp.allclose(loss, base_loss, atol=1e-5, rtol=1e-5), (loss, base_loss)
+    for a, b in zip(jax.tree.leaves(grads), jax.tree.leaves(base_grads)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-4, rtol=2e-4)
+
+
+def test_moe_capacity_knob_changes_only_capacity():
+    """REPRO_MOE_CF changes routing capacity (numerics may differ via drops)
+    but must stay finite and shape-stable."""
+    cfg = get_smoke_config("phi3.5-moe-42b-a6.6b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    os.environ["REPRO_MOE_CF"] = "1.0"
+    try:
+        loss, grads = _loss_and_grad(cfg, params, batch,
+                                     GRPOConfig(remat="none", logprob_chunk=256))
+    finally:
+        os.environ.pop("REPRO_MOE_CF", None)
+    assert jnp.isfinite(loss)
+    assert all(jnp.all(jnp.isfinite(g.astype(jnp.float32)))
+               for g in jax.tree.leaves(grads))

@@ -1,0 +1,187 @@
+"""Provider transformer tests: all four wire shapes normalize to the same
+OpenAI Chat request and the backend response round-trips into each provider
+shape (incl. synthetic streaming)."""
+from __future__ import annotations
+
+import json
+
+import pytest
+
+from repro.core import providers as P
+from repro.core.proxy import ProxyGateway
+from repro.core.testing import Scripted, ScriptedBackend
+
+
+def test_detect_provider():
+    assert P.detect_provider("/v1/messages") == "anthropic"
+    assert P.detect_provider("/v1/chat/completions") == "openai_chat"
+    assert P.detect_provider("/v1/responses") == "openai_responses"
+    assert P.detect_provider("/v1beta/models/g:generateContent") == "google"
+    with pytest.raises(ValueError):
+        P.detect_provider("/totally/unknown")
+
+
+ANTHROPIC_REQ = {
+    "model": "claude", "max_tokens": 100,
+    "system": "be helpful",
+    "messages": [
+        {"role": "user", "content": [{"type": "text", "text": "hi"}]},
+        {"role": "assistant", "content": [
+            {"type": "text", "text": "calling tool"},
+            {"type": "tool_use", "id": "t1", "name": "bash",
+             "input": {"cmd": "ls"}}]},
+        {"role": "user", "content": [
+            {"type": "tool_result", "tool_use_id": "t1", "content": "file.txt"}]},
+    ],
+    "tools": [{"name": "bash", "description": "run",
+               "input_schema": {"type": "object"}}],
+}
+
+OPENAI_REQ = {
+    "model": "gpt", "messages": [
+        {"role": "system", "content": "be helpful"},
+        {"role": "user", "content": "hi"},
+    ],
+}
+
+RESPONSES_REQ = {
+    "model": "gpt", "instructions": "be helpful",
+    "input": [
+        {"type": "message", "role": "user", "content": "hi"},
+        {"type": "function_call", "call_id": "c1", "name": "bash",
+         "arguments": "{\"cmd\": \"ls\"}"},
+        {"type": "function_call_output", "call_id": "c1", "output": "file.txt"},
+    ],
+}
+
+GOOGLE_REQ = {
+    "systemInstruction": {"parts": [{"text": "be helpful"}]},
+    "contents": [
+        {"role": "user", "parts": [{"text": "hi"}]},
+        {"role": "model", "parts": [{"functionCall": {"name": "bash",
+                                                      "args": {"cmd": "ls"}}}]},
+        {"role": "function", "parts": [{"functionResponse": {
+            "name": "bash", "response": {"out": "file.txt"}}}]},
+    ],
+    "generationConfig": {"maxOutputTokens": 64, "temperature": 0.2},
+}
+
+
+def test_anthropic_normalization():
+    req = P.to_openai_chat("anthropic", ANTHROPIC_REQ)
+    assert req["logprobs"] is True
+    assert req["messages"][0] == {"role": "system", "content": "be helpful"}
+    assert req["messages"][1]["content"] == "hi"
+    assert req["messages"][2]["tool_calls"][0]["function"]["name"] == "bash"
+    assert req["messages"][3]["role"] == "tool"
+    assert req["tools"][0]["function"]["name"] == "bash"
+
+
+def test_responses_normalization():
+    req = P.to_openai_chat("openai_responses", RESPONSES_REQ)
+    assert req["messages"][0]["role"] == "system"
+    assert req["messages"][2]["tool_calls"][0]["function"]["name"] == "bash"
+    assert req["messages"][3] == {"role": "tool", "tool_call_id": "c1",
+                                  "content": "file.txt"}
+
+
+def test_google_normalization():
+    req = P.to_openai_chat("google", GOOGLE_REQ)
+    assert req["messages"][0]["role"] == "system"
+    assert req["messages"][2]["tool_calls"][0]["function"]["name"] == "bash"
+    assert req["messages"][3]["role"] == "tool"
+    assert req["max_tokens"] == 64
+
+
+_BACKEND_RESP = {
+    "id": "x", "object": "chat.completion", "model": "m",
+    "choices": [{"index": 0,
+                 "message": {"role": "assistant", "content": "hello",
+                             "tool_calls": [{"id": "c9", "type": "function",
+                                             "function": {"name": "bash",
+                                                          "arguments": "{\"cmd\": \"pwd\"}"}}]},
+                 "finish_reason": "tool_calls"}],
+    "usage": {"prompt_tokens": 3, "completion_tokens": 2, "total_tokens": 5},
+}
+
+
+def test_anthropic_response_shape():
+    resp = P.from_openai_chat("anthropic", _BACKEND_RESP)
+    assert resp["type"] == "message"
+    types = [b["type"] for b in resp["content"]]
+    assert types == ["text", "tool_use"]
+    assert resp["content"][1]["input"] == {"cmd": "pwd"}
+    assert resp["stop_reason"] == "tool_use"
+
+
+def test_responses_response_shape():
+    resp = P.from_openai_chat("openai_responses", _BACKEND_RESP)
+    kinds = [o["type"] for o in resp["output"]]
+    assert kinds == ["message", "function_call"]
+
+
+def test_google_response_shape():
+    resp = P.from_openai_chat("google", _BACKEND_RESP)
+    parts = resp["candidates"][0]["content"]["parts"]
+    assert parts[0]["text"] == "hello"
+    assert parts[1]["functionCall"]["name"] == "bash"
+
+
+def test_streaming_synthesis_anthropic():
+    events = P.to_stream_events("anthropic", _BACKEND_RESP)
+    types = [e["type"] for e in events]
+    assert types[0] == "message_start"
+    assert types[-1] == "message_stop"
+    assert "content_block_delta" in types
+    # reassemble the text from deltas
+    text = "".join(e["delta"]["text"] for e in events
+                   if e["type"] == "content_block_delta"
+                   and e["delta"].get("type") == "text_delta")
+    assert text == "hello"
+
+
+def test_streaming_synthesis_openai():
+    events = P.to_stream_events("openai_chat", _BACKEND_RESP)
+    text = "".join(e["choices"][0]["delta"].get("content", "")
+                   for e in events)
+    assert text == "hello"
+    assert events[-1]["choices"][0]["finish_reason"] == "tool_calls"
+
+
+def test_proxy_same_capture_across_providers():
+    """The SAME conversation via all four providers must produce identical
+    normalized prompt messages and identical prompt token ids."""
+    captured = []
+    for provider_path, body in [
+        ("/v1/chat/completions", OPENAI_REQ),
+        ("/v1/messages", {"model": "m", "max_tokens": 10,
+                          "system": "be helpful",
+                          "messages": [{"role": "user",
+                                        "content": [{"type": "text",
+                                                     "text": "hi"}]}]}),
+        ("/v1/responses", {"model": "m", "instructions": "be helpful",
+                           "input": [{"type": "message", "role": "user",
+                                      "content": "hi"}]}),
+        ("/v1beta/models/m:generateContent",
+         {"systemInstruction": {"parts": [{"text": "be helpful"}]},
+          "contents": [{"role": "user", "parts": [{"text": "hi"}]}]}),
+    ]:
+        gw = ProxyGateway(ScriptedBackend([Scripted("ok")]))
+        gw.handle(provider_path, body, session_id="x")
+        captured.append(gw.session("x").completions[0])
+    ids0 = captured[0].prompt_ids
+    for rec in captured[1:]:
+        assert rec.prompt_ids == ids0
+        assert rec.response_ids == captured[0].response_ids
+
+
+def test_proxy_streaming_records_tokens():
+    gw = ProxyGateway(ScriptedBackend([Scripted("streamed")]))
+    events = gw.handle("/v1/messages",
+                       {"model": "m", "max_tokens": 10, "stream": True,
+                        "messages": [{"role": "user", "content": "hi"}]},
+                       session_id="st")
+    assert isinstance(events, list)
+    rec = gw.session("st").completions[0]
+    assert len(rec.response_ids) > 0
+    assert len(rec.response_logprobs) == len(rec.response_ids)

@@ -1,0 +1,240 @@
+"""Trajectory reconstruction tests — including the paper's Fig. 4 session
+(3-turn main agent + harness-level compaction + one subagent) and the boxed
+correctness invariant."""
+from __future__ import annotations
+
+import jax  # noqa: F401  (keeps device bootstrap uniform across test files)
+import pytest
+
+from repro.core import reconstruct as R
+from repro.core import tokenizer as tok
+from repro.core.proxy import ProxyGateway
+from repro.core.testing import Scripted, ScriptedBackend
+from repro.core.types import CompletionRecord, CompletionSession
+
+
+def _mk_record(seq, prompt_msgs, resp_msg, prompt_ids, resp_ids, logprobs=None,
+               finish="stop"):
+    return CompletionRecord(
+        request_id=f"r{seq}", session_id="s", provider="openai_chat",
+        model="m", prompt_messages=prompt_msgs, response_messages=[resp_msg],
+        prompt_ids=prompt_ids, response_ids=resp_ids,
+        response_logprobs=logprobs or [-0.5] * len(resp_ids),
+        finish_reason=finish, seq=seq)
+
+
+def _drive(messages_script):
+    """Drive a proxy with an append-only conversation; returns the session.
+
+    messages_script: list of (user_text, Scripted) — each round appends the
+    user msg, calls the model, appends the scripted assistant reply."""
+    backend = ScriptedBackend([s for _, s in messages_script])
+    gw = ProxyGateway(backend)
+    messages = [{"role": "system", "content": "you are an agent"}]
+    for user_text, scripted in messages_script:
+        messages.append({"role": "user", "content": user_text})
+        resp = gw.handle("/v1/chat/completions",
+                         {"model": "m", "messages": list(messages)},
+                         session_id="sess")
+        messages.append(resp["choices"][0]["message"])
+    return gw.session("sess")
+
+
+# ---------------------------------------------------------------------------
+# per_request
+# ---------------------------------------------------------------------------
+
+def test_per_request_one_trace_per_completion():
+    sess = _drive([("do a", Scripted("done a")),
+                   ("do b", Scripted("done b")),
+                   ("do c", Scripted("done c"))])
+    traj = R.build(sess, "per_request")
+    assert len(traj.traces) == 3
+    for tr, rec in zip(traj.traces, sess.completions):
+        assert tr.response_ids == rec.response_ids
+        assert all(m == 1 for m in tr.loss_mask)
+    R.check_invariant(sess, traj)
+
+
+# ---------------------------------------------------------------------------
+# prefix merging — append-only conversation merges into ONE trace
+# ---------------------------------------------------------------------------
+
+def test_prefix_merging_single_chain():
+    sess = _drive([("do a", Scripted("done a")),
+                   ("do b", Scripted("done b")),
+                   ("do c", Scripted("done c"))])
+    traj = R.build(sess, "prefix_merging")
+    assert len(traj.traces) == 1
+    tr = traj.traces[0]
+    # trainable tokens == concatenated sampled ids, in order
+    sampled = [t for rec in sess.completions for t in rec.response_ids]
+    assert tr.trainable_ids() == sampled
+    # masked slots carry synthetic logprob entries, trainable ones real
+    R.check_invariant(sess, traj)
+    # no-drift well-formed session: p1 + z == p_K + a_K exactly
+    full = tr.prompt_ids + tr.response_ids
+    last = sess.completions[-1]
+    assert full == list(last.prompt_ids) + list(last.response_ids)
+
+
+def test_prefix_merging_truncated_turn_interstitial_contains_e():
+    """If a_m is truncated (no end-of-turn), u_m must start AT the canonical
+    e so the turn is still closed; if a_m ends with e, u_m starts after it."""
+    sess = _drive([("go", Scripted("partial answer", truncate=3)),
+                   ("continue", Scripted("done"))])
+    traj = R.build(sess, "prefix_merging")
+    assert len(traj.traces) == 1
+    tr = traj.traces[0]
+    a1 = sess.completions[0].response_ids
+    assert a1[-1] != tok.END_OF_TURN
+    # find the first masked slot after a1 — it must be the end-of-turn token
+    first_u_tok = tr.response_ids[len(a1)]
+    assert tr.loss_mask[len(a1)] == 0
+    assert first_u_tok == tok.END_OF_TURN
+    R.check_invariant(sess, traj)
+
+
+def test_prefix_merging_closed_turn_interstitial_excludes_e():
+    sess = _drive([("go", Scripted("full answer")),
+                   ("continue", Scripted("done"))])
+    traj = R.build(sess, "prefix_merging")
+    tr = traj.traces[0]
+    a1 = sess.completions[0].response_ids
+    assert a1[-1] == tok.END_OF_TURN
+    first_u_tok = tr.response_ids[len(a1)]
+    # canonical tail after the closing e starts the NEXT message rendering
+    assert first_u_tok == tok.TOK_START
+
+
+def test_prefix_merging_drift_preserves_sampled_tokens():
+    """Sampled ids differ from the canonical re-rendering (drift): the trace
+    must carry the SAMPLED ids on trainable slots, not the canonical ones."""
+    sess = _drive([("go", Scripted("answer", drift_prefix="​")),
+                   ("next", Scripted("done"))])
+    traj = R.build(sess, "prefix_merging")
+    tr = traj.traces[0]
+    a1 = sess.completions[0].response_ids
+    assert tr.trainable_ids()[:len(a1)] == list(a1)
+    # and the canonical prompt of completion 2 does NOT contain the drift
+    drift_ids = tok.encode_text("​")
+    canon_tail = sess.completions[1].prompt_ids[len(sess.completions[0].prompt_ids):]
+    assert drift_ids[0] not in canon_tail[:len(drift_ids)]
+
+
+# ---------------------------------------------------------------------------
+# Fig. 4: compaction + subagent form separate chains
+# ---------------------------------------------------------------------------
+
+def _fig4_session():
+    """3-turn main agent; harness compacts after turn 2; one subagent call
+    between turns 2 and 3."""
+    backend = ScriptedBackend([
+        Scripted("turn one"), Scripted("turn two"),
+        Scripted("sub result"),           # subagent
+        Scripted("turn three"),           # post-compaction
+    ])
+    gw = ProxyGateway(backend)
+    sid = "fig4"
+    messages = [{"role": "system", "content": "main agent"}]
+
+    def call(msgs):
+        return gw.handle("/v1/chat/completions",
+                         {"model": "m", "messages": list(msgs)},
+                         session_id=sid)["choices"][0]["message"]
+
+    messages.append({"role": "user", "content": "task"})
+    messages.append(call(messages))                       # C1
+    messages.append({"role": "user", "content": "feedback 1"})
+    messages.append(call(messages))                       # C2
+
+    # subagent: fresh conversation, different system prompt
+    sub = [{"role": "system", "content": "subagent"},
+           {"role": "user", "content": "subtask"}]
+    call(sub)                                             # C3
+
+    # harness-level compaction: replace history with a summary
+    messages = [{"role": "system", "content": "main agent"},
+                {"role": "user", "content": "summary: turns 1-2 condensed"}]
+    messages.append(call(messages))                       # C4
+    return gw.session(sid)
+
+
+def test_paper_figure4_session():
+    sess = _fig4_session()
+    traj_pr = R.build(sess, "per_request")
+    traj_pm = R.build(sess, "prefix_merging")
+    assert len(traj_pr.traces) == 4
+    # chains: [C1, C2] main pre-compaction, [C3] subagent, [C4] post-compaction
+    assert len(traj_pm.traces) == 3
+    assert traj_pm.metadata["num_chains"] == 3
+    chain_lens = sorted(tr.metadata["chain_len"] for tr in traj_pm.traces)
+    assert chain_lens == [1, 1, 2]
+    R.check_invariant(sess, traj_pm)
+    # prefix merging reduces trainer-facing samples (paper Fig. 5b mechanism)
+    assert len(traj_pm.traces) < len(traj_pr.traces)
+
+
+def test_parallel_branches_form_separate_chains():
+    """Two interleaved conversations (parallel agent branches) must not be
+    merged into one chain even though both are append-only."""
+    backend = ScriptedBackend([Scripted(f"r{i}") for i in range(4)])
+    gw = ProxyGateway(backend)
+
+    def call(msgs):
+        return gw.handle("/v1/chat/completions",
+                         {"model": "m", "messages": list(msgs)},
+                         session_id="par")["choices"][0]["message"]
+
+    a = [{"role": "system", "content": "branch A"},
+         {"role": "user", "content": "a1"}]
+    b = [{"role": "system", "content": "branch B"},
+         {"role": "user", "content": "b1"}]
+    a.append(call(a))
+    b.append(call(b))                       # interleaved
+    a.append({"role": "user", "content": "a2"})
+    a.append(call(a))
+    b.append({"role": "user", "content": "b2"})
+    b.append(call(b))
+
+    traj = R.build(gw.session("par"), "prefix_merging")
+    assert len(traj.traces) == 2
+    assert sorted(tr.metadata["chain_len"] for tr in traj.traces) == [2, 2]
+    R.check_invariant(gw.session("par"), traj)
+
+
+# ---------------------------------------------------------------------------
+# grouping key: token-prefix alone is not enough
+# ---------------------------------------------------------------------------
+
+def test_message_key_rejects_rewritten_history_with_same_tokens():
+    """A completion whose prompt happens to token-extend the previous one but
+    whose message view was rewritten must NOT join the chain."""
+    p1 = tok.apply_chat_template([{"role": "user", "content": "abc"}])
+    a1 = tok.render_assistant_body({"role": "assistant", "content": "xy"})
+    r1 = _mk_record(0, [{"role": "user", "content": "abc"}],
+                    {"role": "assistant", "content": "xy"}, p1, a1)
+    # prompt 2 token-extends p1, but its message list claims different history
+    p2 = p1 + tok.render_message({"role": "assistant", "content": "xy"})
+    r2 = _mk_record(1, [{"role": "user", "content": "REWRITTEN"}],
+                    {"role": "assistant", "content": "z"},
+                    p2, tok.render_assistant_body(
+                        {"role": "assistant", "content": "z"}))
+    sess = CompletionSession("k", [])
+    sess.append(r1)
+    sess.append(r2)
+    traj = R.build(sess, "prefix_merging")
+    assert len(traj.traces) == 2
+
+
+def test_custom_builder_registry():
+    @R.register("last_only_test")
+    def last_only(session):
+        from repro.core.reconstruct import build_per_request
+        traj = build_per_request(session)
+        traj.traces = traj.traces[-1:]
+        return traj
+
+    sess = _drive([("a", Scripted("1")), ("b", Scripted("2"))])
+    traj = R.build(sess, "last_only_test")
+    assert len(traj.traces) == 1

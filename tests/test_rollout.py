@@ -1,0 +1,195 @@
+"""Rollout-service integration tests: task → sessions → gateway staging →
+trajectories + rewards; timeouts with partial-trace recovery; dead-gateway
+rescheduling; straggler cancellation; evaluator prewarm."""
+from __future__ import annotations
+
+import threading
+import time
+
+import pytest
+
+from repro.core.reconstruct import check_invariant
+from repro.core.testing import EchoBackend
+from repro.rollout import (AgentSpec, GatewayNode, RolloutServer, RuntimeSpec,
+                           TaskRequest)
+
+
+def _task(task_id="t0", harness="qwen_code", n=2, timeout=30.0, target="magic word",
+          builder="prefix_merging", evaluator=None, callback=None, max_turns=3):
+    return TaskRequest(
+        task_id=task_id,
+        instruction=f"Produce the text: {target}",
+        num_samples=n,
+        timeout_seconds=timeout,
+        runtime=RuntimeSpec(files={"README": "repo"}, prepare=["true"]),
+        agent=AgentSpec(harness=harness, max_turns=max_turns,
+                        config={"max_tokens": 16}),
+        builder={"strategy": builder},
+        evaluator=evaluator or {"strategy": "swebench_sim",
+                                "refresh_runtime": True,
+                                "config": {"target": target}},
+        callback=callback,
+    )
+
+
+def _stack(n_gateways=1, backend=None, **gw_kw):
+    server = RolloutServer(heartbeat_timeout=1.5, monitor_interval=0.1)
+    gws = []
+    for _ in range(n_gateways):
+        gw = GatewayNode(backend or EchoBackend(), **gw_kw)
+        server.register_node(gw, heartbeat_interval=0.2)
+        gws.append(gw)
+    return server, gws
+
+
+def test_end_to_end_task():
+    server, _ = _stack()
+    tid = server.submit_task(_task(n=3))
+    st = server.wait(tid, timeout=30)
+    assert st.done
+    assert st.finished == 3
+    for r in st.results:
+        assert r.status == "completed"
+        assert r.trajectory is not None and len(r.trajectory.traces) >= 1
+        assert r.reward is not None
+        for tr in r.trajectory.traces:
+            assert tr.reward == r.reward          # outcome broadcast
+            assert len(tr.response_ids) == len(tr.loss_mask)
+    server.shutdown()
+
+
+@pytest.mark.parametrize("harness", ["qwen_code", "pi", "codex",
+                                     "claude_code", "gemini_cli", "shell"])
+def test_every_harness_produces_traces(harness):
+    server, gws = _stack()
+    tid = server.submit_task(_task(task_id=f"h-{harness}", harness=harness, n=1))
+    st = server.wait(tid, timeout=30)
+    assert st.done and st.results[0].status == "completed", st.results[0].error
+    traj = st.results[0].trajectory
+    assert sum(len(t.response_ids) for t in traj.traces) > 0
+    # every trace upholds the token-fidelity invariant structurally
+    for tr in traj.traces:
+        for m, e in zip(tr.loss_mask, tr.response_logprobs):
+            assert bool(m) != bool(e.get("synthetic", False))
+    server.shutdown()
+
+
+def test_pi_subagent_creates_extra_chain():
+    server, _ = _stack()
+    tid = server.submit_task(_task(task_id="pi-sub", harness="pi", n=1,
+                                   max_turns=4))
+    st = server.wait(tid, timeout=30)
+    traj = st.results[0].trajectory
+    assert traj.metadata["builder"] == "prefix_merging"
+    assert len(traj.traces) >= 2     # main chain + subagent chain
+    server.shutdown()
+
+
+def test_claude_code_compaction_creates_extra_chain():
+    server, _ = _stack()
+    t = _task(task_id="cc", harness="claude_code", n=1, max_turns=6)
+    t.agent.config["compaction_after"] = 3
+    tid = server.submit_task(t)
+    st = server.wait(tid, timeout=60)
+    traj = st.results[0].trajectory
+    assert len(traj.traces) >= 2     # pre- and post-compaction chains
+    server.shutdown()
+
+
+def test_timeout_recovers_partial_traces():
+    class SlowBackend(EchoBackend):
+        def complete(self, request):
+            time.sleep(0.3)
+            return super().complete(request)
+
+    server, _ = _stack(backend=SlowBackend())
+    tid = server.submit_task(_task(task_id="slow", n=1, timeout=0.45,
+                                   max_turns=10))
+    st = server.wait(tid, timeout=30)
+    assert st.done
+    r = st.results[0]
+    assert r.status == "timeout"
+    # the calls captured before the deadline are still reconstructed
+    assert r.trajectory is not None
+    assert sum(len(t.response_ids) for t in r.trajectory.traces) > 0
+    server.shutdown()
+
+
+def test_dead_gateway_rescheduling():
+    class StallBackend(EchoBackend):
+        def __init__(self):
+            super().__init__()
+            self.stall = threading.Event()
+
+        def complete(self, request):
+            if not self.stall.is_set():
+                self.stall.set()
+                time.sleep(60)       # first call hangs forever
+            return super().complete(request)
+
+    server = RolloutServer(heartbeat_timeout=1.0, monitor_interval=0.1)
+    bad = GatewayNode(StallBackend(), gateway_id="gw_bad")
+    good = GatewayNode(EchoBackend(), gateway_id="gw_good")
+    server.register_node(bad, heartbeat_interval=0.2)
+    server.register_node(good, heartbeat_interval=0.2)
+    # steer the first session to the bad node by loading the good one later
+    tid = server.submit_task(_task(task_id="ft", n=2, timeout=30))
+    time.sleep(0.2)
+    server.kill_node("gw_bad")       # heartbeats stop; monitor reschedules
+    st = server.wait(tid, timeout=30)
+    assert st.done, st.by_status
+    assert st.finished == 2
+    server.shutdown()
+
+
+def test_straggler_cancellation():
+    server, gws = _stack()
+    done = []
+    t = _task(task_id="quorum", n=4, callback=lambda r: done.append(r))
+    tid = server.submit_task(t)
+    # quorum-style: once 2 results arrive, cancel the rest (best effort)
+    t0 = time.monotonic()
+    while len(done) < 2 and time.monotonic() - t0 < 30:
+        time.sleep(0.02)
+    st = server.poll(tid)
+    for sid in list(st.by_status):
+        pass
+    for s in server._tasks[tid].sessions.values():
+        if s.session_id not in server._tasks[tid].finished_ids:
+            server.cancel_session(s.session_id)
+    st = server.wait(tid, timeout=30)
+    assert st.done
+    statuses = {r.status for r in st.results}
+    assert statuses <= {"completed", "cancelled"}
+    server.shutdown()
+
+
+def test_prewarm_runs_during_agent_execution():
+    server, gws = _stack()
+    ev = {"strategy": "test_on_output", "refresh_runtime": True,
+          "config": {"command": "cat solution.txt", "output_path": "solution.txt"}}
+    tid = server.submit_task(_task(task_id="pw", n=1, evaluator=ev))
+    st = server.wait(tid, timeout=30)
+    assert st.done and st.results[0].status == "completed"
+    assert st.results[0].reward in (0.0, 1.0)
+    server.shutdown()
+
+
+def test_ready_buffer_backpressure_many_sessions():
+    server, gws = _stack(ready_buffer=2, run_workers=1)
+    tid = server.submit_task(_task(task_id="many", n=8, max_turns=1))
+    st = server.wait(tid, timeout=60)
+    assert st.done and st.finished == 8
+    server.shutdown()
+
+
+def test_stage_isolation_metrics():
+    """INIT and POSTRUN work must be attributed outside RUN busy time."""
+    server, gws = _stack()
+    tid = server.submit_task(_task(task_id="metrics", n=2))
+    server.wait(tid, timeout=30)
+    m = gws[0].metrics
+    assert m["sessions"] == 2
+    stages = {s for (_, s, _, _) in m["stage_log"]}
+    assert stages == {"init", "run", "post"}
+    server.shutdown()
