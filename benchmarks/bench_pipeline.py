@@ -1,0 +1,152 @@
+"""Serial vs. pipelined rollout-node throughput (paper §3.2).
+
+Drives one GatewayNode in two modes over the same workload and reports
+sessions/sec:
+
+  serial    — PipelineConfig(serial=True): one worker runs init → run →
+              recon → eval inline per session, cold-starting every runtime
+              (the naive node the paper argues against).
+  pipelined — stage worker pools with bounded queues + the
+              RuntimePrewarmPool (warm checkout, background rewarm).
+
+The workload models the costs that matter on a real node: runtime prepare
+actions cost wall-clock (environment setup), every model call has latency,
+and the evaluator demands a fresh runtime (so prewarming is exercised on
+both the session and the evaluator path).  Pure CPU + sleeps — deterministic
+enough for a CI smoke lane.
+
+    PYTHONPATH=src python -m benchmarks.bench_pipeline [--dry-run] \
+        [--out results/bench_pipeline.json]
+
+Emits a BENCH json line and writes the same record to --out; CI uploads it
+as an artifact so the serial/pipelined trajectory is recorded per commit.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+from repro.core.testing import EchoBackend
+from repro.rollout import (AgentSpec, GatewayNode, PipelineConfig,
+                           RuntimeSpec, TaskRequest)
+from repro.rollout.types import Session
+
+
+class LatentEchoBackend(EchoBackend):
+    """EchoBackend with per-call model latency (the GPU-side cost)."""
+
+    def __init__(self, latency: float):
+        super().__init__()
+        self.latency = latency
+
+    def complete(self, request):
+        time.sleep(self.latency)
+        return super().complete(request)
+
+
+def _workload(n_sessions: int, prepare_sleep: float, turns: int):
+    task = TaskRequest(
+        task_id="bench-pipeline",
+        instruction="Produce the text: bench",
+        num_samples=n_sessions,
+        timeout_seconds=60.0,
+        runtime=RuntimeSpec(files={"README": "bench repo"},
+                            prepare=[f"sleep {prepare_sleep}"],
+                            pool_size=4),
+        agent=AgentSpec(harness="qwen_code", max_turns=turns,
+                        config={"max_tokens": 16}),
+        evaluator={"strategy": "swebench_sim", "refresh_runtime": True,
+                   "config": {"target": "bench"}},
+    )
+    return [Session.from_task(task, g) for g in range(n_sessions)]
+
+
+def run_mode(mode: str, *, n_sessions: int, prepare_sleep: float,
+             latency: float, turns: int) -> dict:
+    cfg = (PipelineConfig(serial=True) if mode == "serial"
+           else PipelineConfig())
+    gw = GatewayNode(LatentEchoBackend(latency), pipeline=cfg)
+    results = []
+    gw.result_sink = results.append
+    sessions = _workload(n_sessions, prepare_sleep, turns)
+    t0 = time.perf_counter()
+    for s in sessions:
+        gw.submit(s)
+    deadline = time.monotonic() + 120
+    while len(results) < n_sessions and time.monotonic() < deadline:
+        time.sleep(0.005)
+    wall = time.perf_counter() - t0
+    status = gw.status()
+    gw.shutdown()
+    ok = sum(1 for r in results if r.status == "completed")
+    return {
+        "mode": mode,
+        "wall_s": round(wall, 4),
+        "sessions": len(results),
+        "completed": ok,
+        "sessions_per_s": round(len(results) / wall, 3) if wall else 0.0,
+        "pool": status["pool"],
+        "stage_seconds": {k: round(status["metrics"][k], 4)
+                          for k in ("init_s", "run_busy_s",
+                                    "recon_s", "eval_s")},
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry-run", action="store_true",
+                    help="CI smoke: tiny workload, same record shape")
+    ap.add_argument("--sessions", type=int, default=None)
+    ap.add_argument("--prepare-sleep", type=float, default=None)
+    ap.add_argument("--latency", type=float, default=None)
+    ap.add_argument("--turns", type=int, default=None)
+    ap.add_argument("--out", default="results/bench_pipeline.json")
+    args = ap.parse_args(argv)
+
+    if args.dry_run:
+        defaults = dict(n_sessions=6, prepare_sleep=0.02, latency=0.01,
+                        turns=2)
+    else:
+        defaults = dict(n_sessions=16, prepare_sleep=0.05, latency=0.02,
+                        turns=3)
+    params = dict(
+        n_sessions=args.sessions or defaults["n_sessions"],
+        prepare_sleep=(args.prepare_sleep if args.prepare_sleep is not None
+                       else defaults["prepare_sleep"]),
+        latency=(args.latency if args.latency is not None
+                 else defaults["latency"]),
+        turns=args.turns or defaults["turns"],
+    )
+
+    serial = run_mode("serial", **params)
+    pipelined = run_mode("pipelined", **params)
+    speedup = (pipelined["sessions_per_s"] / serial["sessions_per_s"]
+               if serial["sessions_per_s"] else 0.0)
+    record = {
+        "bench": "pipeline",
+        "dry_run": args.dry_run,
+        "params": params,
+        "serial": serial,
+        "pipelined": pipelined,
+        "speedup": round(speedup, 3),
+    }
+    print(f"  serial:    {serial['sessions_per_s']:8.2f} sessions/s "
+          f"({serial['completed']}/{serial['sessions']} completed)")
+    print(f"  pipelined: {pipelined['sessions_per_s']:8.2f} sessions/s "
+          f"({pipelined['completed']}/{pipelined['sessions']} completed, "
+          f"pool hits={pipelined['pool']['hits']} "
+          f"misses={pipelined['pool']['misses']})")
+    print(f"  speedup:   {speedup:8.2f}x")
+    print("BENCH " + json.dumps(record))
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(record, f, indent=2)
+        print(f"  wrote {args.out}")
+    return record
+
+
+if __name__ == "__main__":
+    main()

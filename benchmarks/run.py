@@ -4,6 +4,8 @@
 
 Sections:
   bench_core         — rollout-plane + kernel micro-benchmarks (CSV)
+  bench_pipeline     — serial vs pipelined rollout-node sessions/sec (§3.2);
+                       BENCH json to results/bench_pipeline.json
   fig5_utilization   — per_request vs prefix_merging trainer load (Fig. 5b)
   table1_rl          — GRPO reward climb across 4 harnesses (Table 1/Fig. 6)
   table2_offline     — offline SFT accept/reject generation (Table 2)
@@ -33,6 +35,11 @@ def main(argv=None):
     print("== bench_core (name,us_per_call,derived)")
     from benchmarks import bench_core
     bench_core.main()
+
+    print("=" * 72)
+    print("== bench_pipeline (serial vs pipelined rollout node)")
+    from benchmarks import bench_pipeline
+    bench_pipeline.main(["--dry-run"] if args.fast else [])
 
     print("=" * 72)
     print("== fig5_utilization")

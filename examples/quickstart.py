@@ -7,6 +7,30 @@
 4. an evaluator scores the outcome and the trace is ready for GRPO.
 
     PYTHONPATH=src python examples/quickstart.py
+
+Pipelined rollout node
+----------------------
+This quickstart drives one harness by hand; the production path is a
+``GatewayNode`` that overlaps runtime prewarming, agent execution,
+trajectory reconstruction, and evaluation (paper §3.2).  The knobs live on
+``PipelineConfig`` and ``RuntimeSpec``::
+
+    from repro.rollout import GatewayNode, PipelineConfig, RuntimeSpec
+
+    gw = GatewayNode(engine, pipeline=PipelineConfig(
+        run_workers=4,          # concurrent agent executions
+        recon_workers=2,        # trajectory reconstruction stage
+        eval_workers=2,         # evaluation + teardown stage
+        ready_buffer=8,         # bounded init->run handoff (backpressure)
+        prewarm_capacity=32,    # warm runtimes across all spec keys
+    ))
+    spec = RuntimeSpec(files={...}, prepare=[...],
+                       pool=True, pool_size=4)   # keep 4 warm per key
+    # PipelineConfig(serial=True) gives the single-worker baseline that
+    # benchmarks/bench_pipeline.py measures against; per-task opt-out:
+    # TaskRequest(..., pipeline={"prewarm": False}).
+    # Telemetry: gw.status()["queue_depths" | "utilization" | "pool"],
+    # or GET /rollout/nodes on repro.launch.serve.
 """
 import jax
 

@@ -7,6 +7,9 @@ base URL here) and (2) the rollout service API:
     POST /rollout/task/submit
     GET  /rollout/task/{task_id}
     GET  /rollout/status
+    GET  /rollout/nodes             (per-node pipeline/pool telemetry:
+                                     stage utilization, queue depths,
+                                     prewarm hit/miss, stage seconds)
     POST /nodes/register            (membership is in-process; returns ids)
     POST /v1/chat/completions | /v1/messages | /v1/responses |
          /v1beta/models/<m>:generateContent   (proxy surface)
@@ -24,17 +27,18 @@ import jax
 
 from repro.configs import get_smoke_config
 from repro.inference import Engine
-from repro.rollout import (AgentSpec, GatewayNode, RolloutServer, RuntimeSpec,
-                           TaskRequest)
+from repro.rollout import (AgentSpec, GatewayNode, PipelineConfig,
+                           RolloutServer, RuntimeSpec, TaskRequest)
 
 
-def build_stack(arch: str, gateways: int = 1):
+def build_stack(arch: str, gateways: int = 1,
+                pipeline: PipelineConfig | None = None):
     cfg = get_smoke_config(arch).replace(vocab_size=512)
     engine = Engine(cfg, rng=jax.random.PRNGKey(0), max_len=512, max_new=32)
     server = RolloutServer()
     nodes = []
     for _ in range(gateways):
-        gw = GatewayNode(engine, run_workers=2)
+        gw = GatewayNode(engine, pipeline=pipeline or PipelineConfig())
         server.register_node(gw)
         nodes.append(gw)
     return engine, server, nodes
@@ -58,6 +62,8 @@ def make_handler(server: RolloutServer, nodes):
         def do_GET(self):
             if self.path == "/rollout/status":
                 return self._json(200, server.status())
+            if self.path == "/rollout/nodes":
+                return self._json(200, server.node_stats())
             if self.path.startswith("/rollout/task/"):
                 task_id = self.path.rsplit("/", 1)[-1]
                 try:
@@ -74,7 +80,10 @@ def make_handler(server: RolloutServer, nodes):
 
         def do_POST(self):
             n = int(self.headers.get("Content-Length", "0"))
-            body = json.loads(self.rfile.read(n) or b"{}")
+            try:
+                body = json.loads(self.rfile.read(n) or b"{}")
+            except json.JSONDecodeError as e:
+                return self._json(400, {"error": f"malformed json: {e}"})
             if self.path == "/rollout/task/submit":
                 task = TaskRequest(
                     task_id=body["task_id"],
@@ -87,6 +96,7 @@ def make_handler(server: RolloutServer, nodes):
                     evaluator=body.get("evaluator",
                                        {"strategy": "session_completion"}),
                     metadata=body.get("metadata", {}),
+                    pipeline=body.get("pipeline", {}),
                 )
                 return self._json(200, {"task_id": server.submit_task(task)})
             # everything else → provider proxy surface
@@ -114,8 +124,15 @@ def main(argv=None):
     ap.add_argument("--port", type=int, default=8089)
     ap.add_argument("--arch", default="qwen3-32b")
     ap.add_argument("--gateways", type=int, default=1)
+    ap.add_argument("--serial", action="store_true",
+                    help="disable the session pipeline + prewarm pool "
+                         "(baseline mode, for A/B against /rollout/nodes)")
+    ap.add_argument("--run-workers", type=int, default=2)
+    ap.add_argument("--prewarm-capacity", type=int, default=16)
     args = ap.parse_args(argv)
-    engine, server, nodes = build_stack(args.arch, args.gateways)
+    pipe = PipelineConfig(serial=args.serial, run_workers=args.run_workers,
+                          prewarm_capacity=args.prewarm_capacity)
+    engine, server, nodes = build_stack(args.arch, args.gateways, pipe)
     httpd = ThreadingHTTPServer(("127.0.0.1", args.port),
                                 make_handler(server, nodes))
     print(f"[serve] rollout service + provider proxy on :{args.port}",

@@ -106,7 +106,8 @@ class ShardingPlan:
 
     def _role_axes(self, role: Optional[str]):
         if role == "data":
-            return self.data
+            # canonical single-axis form: P(..., "data") not P(..., ("data",))
+            return self.data[0] if len(self.data) == 1 else self.data
         if role == "model":
             return "model"
         return None

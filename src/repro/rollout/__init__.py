@@ -1,13 +1,17 @@
-from repro.rollout.types import AgentSpec, RuntimeSpec, Session, TaskRequest, TaskStatus
+from repro.rollout.types import (AgentSpec, PipelineConfig, RuntimeSpec,
+                                 Session, TaskRequest, TaskStatus)
 from repro.rollout.runtime import LocalRuntime, Runtime, SubprocessRuntime, make_runtime
+from repro.rollout.prewarm import RuntimePrewarmPool
 from repro.rollout.harness import HarnessAdapter, make_harness, register_harness
 from repro.rollout.evaluators import evaluate, get_evaluator
 from repro.rollout.gateway import GatewayNode
 from repro.rollout.server import RolloutServer
 
 __all__ = [
-    "AgentSpec", "RuntimeSpec", "Session", "TaskRequest", "TaskStatus",
+    "AgentSpec", "PipelineConfig", "RuntimeSpec", "Session", "TaskRequest",
+    "TaskStatus",
     "LocalRuntime", "Runtime", "SubprocessRuntime", "make_runtime",
+    "RuntimePrewarmPool",
     "HarnessAdapter", "make_harness", "register_harness",
     "evaluate", "get_evaluator", "GatewayNode", "RolloutServer",
 ]

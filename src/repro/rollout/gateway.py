@@ -1,20 +1,28 @@
-"""Gateway node (paper §3.1, §3.3, Fig. 3): owns the session lifecycle with
-stage-isolated worker pools.
+"""Gateway node (paper §3.1–§3.3, Fig. 3): owns the session lifecycle as an
+asynchronous pipeline of stage-isolated worker pools with bounded queues, so
+no phase of a finished session ever blocks a new agent turn.
 
-  INIT pool    — start the runtime, run prepare actions (CPU-heavy, off the
-                 critical path).
-  READY buffer — bounded queue of initialized sessions waiting for a run slot
-                 (lets runtime preparation proceed in the background without
-                 blocking GPU-bound agent execution).
-  RUNNING pool — execute the harness against the co-located proxy.
-                 When the evaluator requests a clean runtime, its prewarm is
-                 kicked off HERE, concurrent with the agent run (§3.3.2).
-  POSTRUN pool — build trajectories from captured completions, evaluate,
-                 send callbacks, tear down resources.
+  INIT pool   — check a started runtime out of the RuntimePrewarmPool (hit)
+                or cold-start one (miss); prewarming runs in the pool's
+                background filler, concurrent with everything else.
+  READY buf   — bounded queue of initialized sessions waiting for a run slot
+                (backpressure: init never races ahead unboundedly).
+  RUN pool    — execute the harness against the co-located proxy.  When the
+                evaluator requests a clean runtime, its checkout is kicked
+                off HERE, concurrent with the agent run (§3.3.2).
+  RECON pool  — build token-faithful trajectories from captured completions,
+                snapshot workspace artifacts, release the session runtime
+                back to the pool.
+  EVAL pool   — score the trajectory, broadcast the reward, send callbacks,
+                tear down remaining resources.
+
+``PipelineConfig(serial=True)`` collapses the node to one worker that runs
+every stage inline per session and bypasses the prewarm pool — the measured
+baseline for ``benchmarks/bench_pipeline.py``.
 
 Every session carries one shared deadline: if the harness times out after
-model calls were captured, the gateway still enters POSTRUN so partial
-traces are recovered with terminal "timeout" status.
+model calls were captured, the gateway still reconstructs so partial traces
+are recovered with terminal "timeout" status.
 """
 from __future__ import annotations
 
@@ -23,7 +31,7 @@ import threading
 import time
 import uuid
 from concurrent.futures import Future, ThreadPoolExecutor
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Any, Callable, Dict, List, Optional
 
 from repro.core.proxy import InferenceBackend, ProxyGateway
@@ -31,8 +39,11 @@ from repro.core.reconstruct import build as build_trajectory
 from repro.core.types import SessionResult, Trajectory
 from repro.rollout import evaluators as E
 from repro.rollout.harness import HarnessTimeout, make_harness
+from repro.rollout.prewarm import RuntimePrewarmPool
 from repro.rollout.runtime import Runtime, make_runtime
-from repro.rollout.types import Session
+from repro.rollout.types import PipelineConfig, Session
+
+_STAGES = ("init", "run", "recon", "eval")
 
 
 @dataclass
@@ -42,38 +53,75 @@ class _Live:
     eval_runtime_future: Optional[Future] = None
     stage_t: Dict[str, float] = field(default_factory=dict)
     harness_info: Dict[str, Any] = field(default_factory=dict)
+    trajectory: Optional[Trajectory] = None
+    artifacts: Dict[str, Any] = field(default_factory=dict)
+    num_completions: int = 0
     error: Optional[str] = None
 
 
 class GatewayNode:
     def __init__(self, backend: InferenceBackend, *, gateway_id: Optional[str] = None,
-                 init_workers: int = 2, run_workers: int = 2,
-                 post_workers: int = 2, ready_buffer: int = 4,
-                 result_sink: Optional[Callable[[SessionResult], None]] = None):
+                 pipeline: Optional[PipelineConfig] = None,
+                 pool: Optional[RuntimePrewarmPool] = None,
+                 result_sink: Optional[Callable[[SessionResult], None]] = None,
+                 # legacy kwargs, kept so older call sites keep working
+                 init_workers: Optional[int] = None,
+                 run_workers: Optional[int] = None,
+                 post_workers: Optional[int] = None,
+                 ready_buffer: Optional[int] = None):
+        # copy: legacy-kwarg overrides must not write through to a config
+        # object shared across gateways
+        cfg = replace(pipeline) if pipeline is not None else PipelineConfig()
+        if init_workers is not None:
+            cfg.init_workers = init_workers
+        if run_workers is not None:
+            cfg.run_workers = run_workers
+        if post_workers is not None:
+            cfg.recon_workers = cfg.eval_workers = post_workers
+        if ready_buffer is not None:
+            cfg.ready_buffer = ready_buffer
+        self.pipeline = cfg
         self.gateway_id = gateway_id or f"gw_{uuid.uuid4().hex[:8]}"
         self.proxy = ProxyGateway(backend)
         self.result_sink = result_sink
+        self._owns_pool = pool is None and cfg.prewarm and not cfg.serial
+        self.pool: Optional[RuntimePrewarmPool] = pool
+        if self._owns_pool:
+            self.pool = RuntimePrewarmPool(capacity=cfg.prewarm_capacity)
+        if cfg.serial:
+            self.pool = None
         self._init_q: "queue.Queue[_Live]" = queue.Queue()
-        self._ready_q: "queue.Queue[_Live]" = queue.Queue(maxsize=ready_buffer)
-        self._post_q: "queue.Queue[_Live]" = queue.Queue()
-        self._prewarm_pool = ThreadPoolExecutor(max_workers=max(1, init_workers),
-                                                thread_name_prefix="prewarm")
+        self._ready_q: "queue.Queue[_Live]" = queue.Queue(maxsize=cfg.ready_buffer)
+        self._recon_q: "queue.Queue[_Live]" = queue.Queue(maxsize=cfg.recon_buffer)
+        self._eval_q: "queue.Queue[_Live]" = queue.Queue(maxsize=cfg.eval_buffer)
+        self._prewarm_exec = ThreadPoolExecutor(
+            max_workers=max(1, cfg.init_workers), thread_name_prefix="prewarm")
         self._stop = threading.Event()
         self._live: Dict[str, _Live] = {}
         self._cancelled: set = set()
         self._lock = threading.Lock()
+        self._workers = {s: 0 for s in _STAGES}     # configured per stage
+        self._busy = {s: 0 for s in _STAGES}        # currently in stage body
         self.metrics: Dict[str, Any] = {
             "sessions": 0, "completed": 0, "timeout": 0, "error": 0,
-            "run_busy_s": 0.0, "init_s": 0.0, "post_s": 0.0,
+            "run_busy_s": 0.0, "init_s": 0.0, "recon_s": 0.0, "eval_s": 0.0,
             "stage_log": [],   # (session_id, stage, start, end)
         }
         self._threads: List[threading.Thread] = []
-        for i in range(init_workers):
-            self._spawn(self._init_worker, f"init-{i}")
-        for i in range(run_workers):
-            self._spawn(self._run_worker, f"run-{i}")
-        for i in range(post_workers):
-            self._spawn(self._post_worker, f"post-{i}")
+        if cfg.serial:
+            self._workers = {s: 1 for s in _STAGES}
+            self._spawn(self._serial_worker, "serial-0")
+        else:
+            self._workers = {"init": cfg.init_workers, "run": cfg.run_workers,
+                             "recon": cfg.recon_workers, "eval": cfg.eval_workers}
+            for i in range(cfg.init_workers):
+                self._spawn(self._init_worker, f"init-{i}")
+            for i in range(cfg.run_workers):
+                self._spawn(self._run_worker, f"run-{i}")
+            for i in range(cfg.recon_workers):
+                self._spawn(self._recon_worker, f"recon-{i}")
+            for i in range(cfg.eval_workers):
+                self._spawn(self._eval_worker, f"eval-{i}")
 
     def _spawn(self, fn, name):
         t = threading.Thread(target=fn, name=f"{self.gateway_id}-{name}",
@@ -94,19 +142,36 @@ class GatewayNode:
         self._init_q.put(live)
 
     def cancel(self, session_id: str) -> None:
-        """Best-effort cancellation (straggler mitigation)."""
+        """Best-effort cancellation (straggler mitigation).  The runtime is
+        flagged under the lock so it cannot race _detach_runtime: a runtime
+        already released back to the pool is never cancelled."""
         with self._lock:
             self._cancelled.add(session_id)
             live = self._live.get(session_id)
-        if live and live.runtime is not None:
-            live.runtime.cancel()
+            if live and live.runtime is not None:
+                live.runtime.cancel()
 
     def status(self) -> Dict[str, Any]:
         with self._lock:
             in_flight = {s: l.session.status for s, l in self._live.items()}
-        return {"gateway_id": self.gateway_id, "in_flight": in_flight,
-                "ready_buffered": self._ready_q.qsize(),
-                "metrics": dict(self.metrics)}
+            busy = dict(self._busy)
+            workers = dict(self._workers)
+        total_workers = sum(workers.values()) or 1
+        return {
+            "gateway_id": self.gateway_id,
+            "mode": "serial" if self.pipeline.serial else "pipelined",
+            "in_flight": in_flight,
+            "ready_buffered": self._ready_q.qsize(),
+            "queue_depths": {"init": self._init_q.qsize(),
+                             "ready": self._ready_q.qsize(),
+                             "recon": self._recon_q.qsize(),
+                             "eval": self._eval_q.qsize()},
+            "stage_busy": busy,
+            "stage_workers": workers,
+            "utilization": sum(busy.values()) / total_workers,
+            "pool": self.pool.stats() if self.pool is not None else None,
+            "metrics": dict(self.metrics),
+        }
 
     def in_flight_sessions(self) -> List[Session]:
         with self._lock:
@@ -119,135 +184,231 @@ class GatewayNode:
 
     def shutdown(self) -> None:
         self._stop.set()
-        self._prewarm_pool.shutdown(wait=False)
+        self._prewarm_exec.shutdown(wait=False)
+        if self.pool is not None and self._owns_pool:
+            self.pool.close()
 
-    # -- INIT ------------------------------------------------------------------
+    # -- runtime acquisition / release ---------------------------------------
+    def _use_pool(self, session: Session) -> bool:
+        return (self.pool is not None and session.task.runtime.pool
+                and session.task.pipeline.get("prewarm", True))
+
+    def _acquire_runtime(self, session: Session) -> Runtime:
+        if self._use_pool(session):
+            return self.pool.checkout(session.task.runtime)
+        rt = make_runtime(session.task.runtime)
+        rt.start()
+        return rt
+
+    def _release_runtime(self, session: Session, rt: Optional[Runtime]) -> None:
+        if rt is None:
+            return
+        if self._use_pool(session):
+            self.pool.give_back(rt)
+        else:
+            rt.stop()
+
+    def _detach_runtime(self, live: _Live) -> Optional[Runtime]:
+        """Atomically take ownership of the session runtime away from
+        cancel() before it is released/recycled."""
+        with self._lock:
+            rt, live.runtime = live.runtime, None
+        return rt
+
+    # -- stage bodies (shared by pipelined workers and the serial worker) ----
+    def _stage_init(self, live: _Live) -> bool:
+        """Returns True when the session should proceed to RUN."""
+        t0 = time.monotonic()
+        s = live.session
+        try:
+            if s.session_id in self._cancelled:
+                self._terminal(live, "cancelled")
+                return False
+            live.runtime = self._acquire_runtime(s)
+            live.stage_t["init"] = time.monotonic() - t0
+            self.metrics["init_s"] += live.stage_t["init"]
+            self._log_stage(s.session_id, "init", t0)
+            s.status = "ready"
+            return True
+        except Exception as e:  # noqa: BLE001 — init failures are terminal
+            live.error = f"init: {e}"
+            self._terminal(live, "error")
+            return False
+
+    def _stage_run(self, live: _Live) -> None:
+        s = live.session
+        s.status = "running"
+        t0 = time.monotonic()
+        # evaluator prewarm concurrent with the agent run (§3.3.2); the
+        # serial baseline pays for it inline in _stage_eval instead
+        ev = s.task.evaluator or {}
+        if ev.get("refresh_runtime") and not self.pipeline.serial:
+            live.eval_runtime_future = self._prewarm_exec.submit(
+                self._prewarm, s)
+        try:
+            harness = make_harness(s.task.agent)
+            live.harness_info = harness.run(
+                self.proxy, s.session_id, s.task.instruction,
+                live.runtime, s.deadline)
+            live.harness_info["terminal"] = "completed"
+        except HarnessTimeout:
+            live.harness_info["terminal"] = "timeout"
+        except Exception as e:  # noqa: BLE001
+            live.error = f"run: {e}"
+            live.harness_info["terminal"] = "error"
+        s.status = "postrun"
+        dt = time.monotonic() - t0
+        live.stage_t["run"] = dt
+        self.metrics["run_busy_s"] += dt
+        self._log_stage(s.session_id, "run", t0)
+
+    def _prewarm(self, s: Session) -> Runtime:
+        return self._acquire_runtime(s)
+
+    def _stage_recon(self, live: _Live) -> None:
+        """Trajectory reconstruction + workspace snapshot; releases the
+        session runtime so the pool can rewarm it while EVAL proceeds."""
+        t0 = time.monotonic()
+        s = live.session
+        terminal = live.harness_info.get("terminal", "completed")
+        try:
+            strategy = (s.task.builder or {}).get("strategy", "prefix_merging")
+            completions = self.proxy.session(s.session_id)
+            live.num_completions = len(completions.completions)
+            trajectory: Trajectory = build_trajectory(completions, strategy)
+            trajectory.metadata.update(
+                {"harness": s.task.agent.harness, "terminal": terminal,
+                 "group_index": s.group_index,
+                 **s.task.metadata})
+            live.trajectory = trajectory
+            live.artifacts = {
+                "status": terminal,
+                "files": (live.runtime.files_snapshot()
+                          if live.runtime else {}),
+                "harness": live.harness_info,
+            }
+        except Exception as e:  # noqa: BLE001 — surfaced by _stage_eval
+            live.error = f"recon: {e} (prior: {live.error})"
+        finally:
+            self._release_runtime(s, self._detach_runtime(live))
+            live.stage_t["recon"] = time.monotonic() - t0
+            self.metrics["recon_s"] += live.stage_t["recon"]
+            self._log_stage(s.session_id, "recon", t0)
+
+    def _stage_eval(self, live: _Live) -> None:
+        t0 = time.monotonic()
+        s = live.session
+        terminal = live.harness_info.get("terminal", "completed")
+        result = SessionResult(session_id=s.session_id,
+                               task_id=s.task.task_id, status=terminal)
+        fresh = None
+        try:
+            if live.trajectory is None:
+                raise RuntimeError(live.error or "reconstruction failed")
+            ev = s.task.evaluator or {}
+            if live.eval_runtime_future is not None:
+                fresh = live.eval_runtime_future.result(timeout=30)
+            elif ev.get("refresh_runtime"):
+                fresh = self._acquire_runtime(s)   # serial: inline cold path
+            reward = E.evaluate(ev.get("strategy", "session_completion"),
+                                trajectory=live.trajectory,
+                                artifacts=live.artifacts,
+                                config=ev.get("config"),
+                                fresh_runtime=fresh)
+            E.broadcast_reward(live.trajectory, reward)
+            result.trajectory = live.trajectory
+            result.reward = reward
+            result.metadata = {"stage_t": dict(live.stage_t),
+                               "harness": s.task.agent.harness,
+                               "num_completions": live.num_completions}
+        except Exception as e:  # noqa: BLE001
+            result.status = "error"
+            result.error = f"eval: {e} (prior: {live.error})"
+        finally:
+            self._release_runtime(s, fresh)
+            fut = live.eval_runtime_future
+            if fut is not None and fresh is None:
+                # prewarm never consumed (recon failed / result timed out):
+                # release it whenever the background start finishes
+                fut.add_done_callback(
+                    lambda f: (self._release_runtime(s, f.result())
+                               if f.exception() is None else None))
+            self.proxy.delete_session(s.session_id)
+            live.stage_t["eval"] = time.monotonic() - t0
+            self.metrics["eval_s"] += live.stage_t["eval"]
+            self._log_stage(s.session_id, "eval", t0)
+            self._terminal(live, result.status, result)
+
+    # -- workers ----------------------------------------------------------------
+    def _tracked(self, stage: str, body, live: _Live):
+        """Run a stage body with busy accounting (utilization telemetry)."""
+        with self._lock:
+            self._busy[stage] += 1
+        try:
+            return body(live)
+        finally:
+            with self._lock:
+                self._busy[stage] -= 1
+
+    def _pump(self, src: "queue.Queue[_Live]", stage: str, body,
+              dst: Optional["queue.Queue[_Live]"] = None):
+        """Generic stage worker loop: bounded-queue handoff + busy tracking."""
+        while not self._stop.is_set():
+            try:
+                live = src.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            proceed = self._tracked(stage, body, live)
+            if proceed is not False and dst is not None:
+                dst.put(live)    # blocks when the downstream buffer is full
+
     def _init_worker(self):
+        self._pump(self._init_q, "init", self._stage_init, self._ready_q)
+
+    def _run_worker(self):
+        def body(live):
+            s = live.session
+            if s.session_id in self._cancelled:
+                self._terminal(live, "cancelled")
+                return False
+            self._stage_run(live)
+            return True
+        self._pump(self._ready_q, "run", body, self._recon_q)
+
+    def _recon_worker(self):
+        self._pump(self._recon_q, "recon", self._stage_recon, self._eval_q)
+
+    def _eval_worker(self):
+        self._pump(self._eval_q, "eval", self._stage_eval)
+
+    def _serial_worker(self):
+        """Baseline mode: one worker, every stage inline, no prewarm pool."""
         while not self._stop.is_set():
             try:
                 live = self._init_q.get(timeout=0.05)
             except queue.Empty:
                 continue
-            t0 = time.monotonic()
-            s = live.session
-            try:
-                if s.session_id in self._cancelled:
-                    self._terminal(live, "cancelled")
-                    continue
-                rt = make_runtime(s.task.runtime)
-                rt.start()
-                live.runtime = rt
-                live.stage_t["init"] = time.monotonic() - t0
-                self.metrics["init_s"] += live.stage_t["init"]
-                self._log_stage(s.session_id, "init", t0)
-                s.status = "ready"
-                self._ready_q.put(live)   # blocks when the buffer is full
-            except Exception as e:  # noqa: BLE001 — init failures are terminal
-                live.error = f"init: {e}"
-                self._terminal(live, "error")
-
-    # -- RUNNING ------------------------------------------------------------------
-    def _run_worker(self):
-        while not self._stop.is_set():
-            try:
-                live = self._ready_q.get(timeout=0.05)
-            except queue.Empty:
+            if not self._tracked("init", self._stage_init, live):
                 continue
             s = live.session
             if s.session_id in self._cancelled:
                 self._terminal(live, "cancelled")
                 continue
-            s.status = "running"
-            t0 = time.monotonic()
-            # evaluator prewarm concurrent with the agent run (§3.3.2)
-            ev = s.task.evaluator or {}
-            if ev.get("refresh_runtime"):
-                live.eval_runtime_future = self._prewarm_pool.submit(
-                    self._prewarm, s)
-            try:
-                harness = make_harness(s.task.agent)
-                live.harness_info = harness.run(
-                    self.proxy, s.session_id, s.task.instruction,
-                    live.runtime, s.deadline)
-                s.status = "postrun"
-                live.harness_info["terminal"] = "completed"
-            except HarnessTimeout:
-                s.status = "postrun"
-                live.harness_info["terminal"] = "timeout"
-            except Exception as e:  # noqa: BLE001
-                live.error = f"run: {e}"
-                live.harness_info["terminal"] = "error"
-                s.status = "postrun"
-            dt = time.monotonic() - t0
-            live.stage_t["run"] = dt
-            self.metrics["run_busy_s"] += dt
-            self._log_stage(s.session_id, "run", t0)
-            self._post_q.put(live)
-
-    def _prewarm(self, s: Session) -> Runtime:
-        rt = make_runtime(s.task.runtime)
-        rt.start()
-        return rt
-
-    # -- POSTRUN -----------------------------------------------------------------
-    def _post_worker(self):
-        while not self._stop.is_set():
-            try:
-                live = self._post_q.get(timeout=0.05)
-            except queue.Empty:
-                continue
-            t0 = time.monotonic()
-            s = live.session
-            terminal = live.harness_info.get("terminal", "completed")
-            result = SessionResult(session_id=s.session_id,
-                                   task_id=s.task.task_id, status=terminal)
-            try:
-                strategy = (s.task.builder or {}).get("strategy", "prefix_merging")
-                completions = self.proxy.session(s.session_id)
-                trajectory: Trajectory = build_trajectory(completions, strategy)
-                trajectory.metadata.update(
-                    {"harness": s.task.agent.harness, "terminal": terminal,
-                     "group_index": s.group_index,
-                     **s.task.metadata})
-                artifacts = {
-                    "status": terminal,
-                    "files": (live.runtime.files_snapshot()
-                              if live.runtime else {}),
-                    "harness": live.harness_info,
-                }
-                ev = s.task.evaluator or {}
-                fresh = None
-                if live.eval_runtime_future is not None:
-                    fresh = live.eval_runtime_future.result(timeout=30)
-                reward = E.evaluate(ev.get("strategy", "session_completion"),
-                                    trajectory=trajectory, artifacts=artifacts,
-                                    config=ev.get("config"),
-                                    fresh_runtime=fresh)
-                E.broadcast_reward(trajectory, reward)
-                result.trajectory = trajectory
-                result.reward = reward
-                result.metadata = {"stage_t": dict(live.stage_t),
-                                   "harness": s.task.agent.harness,
-                                   "num_completions": len(completions.completions)}
-                if fresh is not None:
-                    fresh.stop()
-            except Exception as e:  # noqa: BLE001
-                result.status = "error"
-                result.error = f"postrun: {e} (prior: {live.error})"
-            finally:
-                if live.runtime is not None:
-                    live.runtime.stop()
-                self.proxy.delete_session(s.session_id)
-                live.stage_t["post"] = time.monotonic() - t0
-                self.metrics["post_s"] += live.stage_t["post"]
-                self._log_stage(s.session_id, "post", t0)
-                self._terminal(live, result.status, result)
+            self._tracked("run", self._stage_run, live)
+            self._tracked("recon", self._stage_recon, live)
+            self._tracked("eval", self._stage_eval, live)
 
     # -- terminal ---------------------------------------------------------------
     def _terminal(self, live: _Live, status: str,
                   result: Optional[SessionResult] = None):
         s = live.session
         s.status = status
+        rt = self._detach_runtime(live)    # early exits (cancel/init error)
+        if rt is not None:
+            try:
+                rt.stop()
+            except Exception:  # noqa: BLE001
+                pass
         if result is None:
             result = SessionResult(session_id=s.session_id,
                                    task_id=s.task.task_id,

@@ -1,0 +1,188 @@
+"""Runtime prewarming pool (paper §3.2: "each rollout node efficiently
+manages runtime prewarming ... in parallel").
+
+A ``RuntimePrewarmPool`` keeps N *started* runtimes per ``RuntimeSpec`` pool
+key so sessions pay cold-start cost (tempdir/image setup + prepare actions)
+at most once per key instead of once per session.  A background filler
+thread tops keys back up after checkouts, concurrent with agent execution.
+
+Semantics:
+  checkout(spec)   — pop a warm runtime for the spec's key (hit) or cold
+                     start one inline (miss).  Either way the caller owns
+                     the runtime exclusively until ``give_back``/``stop``.
+  give_back(rt)    — ``renew()`` the runtime back to its post-start state
+                     and re-shelve it; runtimes that are not prewarmable,
+                     fail renewal, or exceed capacity are stopped instead.
+  invalidate(spec) — drop warm runtimes (one key or all) and stop
+                     prewarming them; epoch-guarded so in-flight background
+                     starts cannot resurrect an invalidated key.
+
+All counters live in ``stats()`` — hits/misses feed the gateway's
+utilization report and the pipeline benchmark.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.rollout.runtime import Runtime, make_runtime
+from repro.rollout.types import RuntimeSpec
+
+
+class RuntimePrewarmPool:
+    def __init__(self, *, capacity: int = 16, refill_interval: float = 0.01,
+                 factory: Callable[[RuntimeSpec], Runtime] = make_runtime):
+        self._capacity = capacity
+        self._factory = factory
+        self._lock = threading.Lock()
+        self._wake = threading.Event()
+        self._closed = False
+        self._warm: Dict[str, List[Runtime]] = {}
+        # key -> (spec to build from, warm target); registered on first checkout
+        self._targets: Dict[str, Tuple[RuntimeSpec, int]] = {}
+        self._epoch: Dict[str, int] = {}
+        self._building = 0            # cold starts in flight on the filler
+        self.stats_counters = {"hits": 0, "misses": 0, "prewarmed": 0,
+                               "returned": 0, "discarded": 0, "invalidated": 0}
+        self._filler = threading.Thread(target=self._fill_loop,
+                                        args=(refill_interval,),
+                                        name="prewarm-filler", daemon=True)
+        self._filler.start()
+
+    # -- caller surface ------------------------------------------------------
+    def checkout(self, spec: RuntimeSpec) -> Runtime:
+        key = spec.pool_key()
+        with self._lock:
+            if not self._closed and spec.pool:
+                # register (or refresh) the warm target for this key
+                self._targets[key] = (spec, max(1, spec.pool_size))
+                self._epoch.setdefault(key, 0)
+                shelf = self._warm.get(key)
+                if shelf:
+                    rt = shelf.pop()
+                    self.stats_counters["hits"] += 1
+                    self._wake.set()          # filler: top the key back up
+                    return rt
+            self.stats_counters["misses"] += 1
+        rt = self._factory(spec)
+        rt.start()
+        return rt
+
+    def give_back(self, rt: Runtime) -> None:
+        """Return a checked-out runtime.  Re-shelved only if its key is still
+        wanted and under target; otherwise stopped."""
+        key = rt.spec.pool_key()
+        if rt.prewarmable:
+            with self._lock:
+                wanted = (not self._closed and key in self._targets
+                          and len(self._warm.get(key, []))
+                          < self._targets[key][1]
+                          and self._total_warm() < self._capacity)
+            if wanted:
+                try:
+                    rt.renew()
+                except Exception:  # noqa: BLE001 — renewal failure → discard
+                    pass
+                else:
+                    with self._lock:
+                        still = (not self._closed and key in self._targets
+                                 and len(self._warm.get(key, []))
+                                 < self._targets[key][1]
+                                 and self._total_warm() < self._capacity)
+                        if still:
+                            self._warm.setdefault(key, []).append(rt)
+                            self.stats_counters["returned"] += 1
+                            return
+        with self._lock:
+            self.stats_counters["discarded"] += 1
+        rt.stop()
+
+    def invalidate(self, spec: Optional[RuntimeSpec] = None) -> int:
+        """Drop warm runtimes for one spec key (or every key) and stop
+        prewarming them.  Returns the number of runtimes dropped."""
+        with self._lock:
+            keys = [spec.pool_key()] if spec is not None else list(self._warm)
+            if spec is not None:
+                self._targets.pop(keys[0], None)
+                self._epoch[keys[0]] = self._epoch.get(keys[0], 0) + 1
+            else:
+                self._targets.clear()
+                for k in self._epoch:
+                    self._epoch[k] += 1
+            dropped: List[Runtime] = []
+            for k in keys:
+                dropped.extend(self._warm.pop(k, []))
+            self.stats_counters["invalidated"] += len(dropped)
+        for rt in dropped:
+            rt.stop()
+        return len(dropped)
+
+    def warm_count(self, spec: Optional[RuntimeSpec] = None) -> int:
+        with self._lock:
+            if spec is not None:
+                return len(self._warm.get(spec.pool_key(), []))
+            return self._total_warm()
+
+    def stats(self) -> Dict[str, object]:
+        with self._lock:
+            return {**self.stats_counters,
+                    "warm": self._total_warm(),
+                    "warm_by_key": {k: len(v) for k, v in self._warm.items()},
+                    "capacity": self._capacity}
+
+    def close(self) -> None:
+        with self._lock:
+            self._closed = True
+            dropped = [rt for shelf in self._warm.values() for rt in shelf]
+            self._warm.clear()
+            self._targets.clear()
+        self._wake.set()
+        for rt in dropped:
+            rt.stop()
+
+    # -- background filler ---------------------------------------------------
+    def _total_warm(self) -> int:
+        return sum(len(v) for v in self._warm.values()) + self._building
+
+    def _next_deficit(self) -> Optional[Tuple[str, RuntimeSpec, int]]:
+        """Pick the key furthest below target (must hold the lock)."""
+        best = None
+        for key, (spec, target) in self._targets.items():
+            deficit = target - len(self._warm.get(key, []))
+            if deficit > 0 and (best is None or deficit > best[2]):
+                best = (key, spec, deficit)
+        return best
+
+    def _fill_loop(self, interval: float) -> None:
+        while True:
+            self._wake.wait(timeout=interval)
+            self._wake.clear()
+            if self._closed:
+                return
+            while True:
+                with self._lock:
+                    if self._closed or self._total_warm() >= self._capacity:
+                        break
+                    pick = self._next_deficit()
+                    if pick is None:
+                        break
+                    key, spec, _ = pick
+                    epoch = self._epoch.get(key, 0)
+                    self._building += 1
+                try:
+                    rt = self._factory(spec)
+                    rt.start()
+                except Exception:  # noqa: BLE001 — bad spec: stop trying
+                    with self._lock:
+                        self._building -= 1
+                        self._targets.pop(key, None)
+                    continue
+                with self._lock:
+                    self._building -= 1
+                    stale = (self._closed or key not in self._targets
+                             or self._epoch.get(key, 0) != epoch)
+                    if not stale:
+                        self._warm.setdefault(key, []).append(rt)
+                        self.stats_counters["prewarmed"] += 1
+                if stale:
+                    rt.stop()

@@ -26,12 +26,22 @@ from repro.rollout.types import RuntimeSpec
 
 class Runtime(ABC):
     spec: RuntimeSpec
+    #: a prewarmable runtime can be started once and handed out repeatedly:
+    #: after a session used it, ``renew()`` restores the post-``start()``
+    #: state (initial files + prepare effects) without paying start cost.
+    prewarmable: bool = False
 
     @abstractmethod
     def start(self) -> None: ...
 
     @abstractmethod
     def stop(self) -> None: ...
+
+    def renew(self) -> None:
+        """Restore the post-``start()`` state for reuse by another session.
+        Only valid on a started runtime; non-prewarmable backends raise and
+        the pool falls back to stop + cold start."""
+        raise NotImplementedError(f"{type(self).__name__} is not prewarmable")
 
     @abstractmethod
     def exec(self, command: str, timeout: Optional[float] = None) -> Tuple[int, str]:
@@ -60,12 +70,15 @@ class LocalRuntime(Runtime):
       sleep <s> | fail
     """
 
+    prewarmable = True
+
     def __init__(self, spec: RuntimeSpec):
         self.spec = spec
         self.fs: Dict[str, str] = {}
         self.started = False
         self.cancelled = False
         self._lock = threading.Lock()
+        self._warm_fs: Optional[Dict[str, str]] = None
 
     def start(self) -> None:
         with self._lock:
@@ -75,11 +88,21 @@ class LocalRuntime(Runtime):
             code, out = self.exec(cmd)
             if code != 0:
                 raise RuntimeError(f"prepare failed: {cmd!r}: {out}")
+        with self._lock:
+            self._warm_fs = dict(self.fs)   # post-start state for renew()
+
+    def renew(self) -> None:
+        with self._lock:
+            if not self.started or self._warm_fs is None:
+                raise RuntimeError("renew on a runtime that never started")
+            self.fs = dict(self._warm_fs)
+            self.cancelled = False
 
     def stop(self) -> None:
         with self._lock:
             self.started = False
             self.fs = {}
+            self._warm_fs = None
 
     def cancel(self) -> None:
         self.cancelled = True
@@ -154,10 +177,13 @@ class SubprocessRuntime(Runtime):
     """Tempdir + real subprocess backend (cluster-shaped; used by examples
     that want genuine shell semantics)."""
 
+    prewarmable = True
+
     def __init__(self, spec: RuntimeSpec):
         self.spec = spec
         self._dir: Optional[tempfile.TemporaryDirectory] = None
         self.cancelled = False
+        self._warm_fs: Optional[Dict[str, str]] = None
 
     def start(self) -> None:
         self._dir = tempfile.TemporaryDirectory(prefix="polar-rt-")
@@ -167,11 +193,25 @@ class SubprocessRuntime(Runtime):
             code, out = self.exec(cmd)
             if code != 0:
                 raise RuntimeError(f"prepare failed: {cmd!r}: {out}")
+        self._warm_fs = self.files_snapshot()   # post-start state for renew()
+
+    def renew(self) -> None:
+        if self._dir is None or self._warm_fs is None:
+            raise RuntimeError("renew on a runtime that never started")
+        for root, dirs, files in os.walk(self._dir.name, topdown=False):
+            for fn in files:
+                os.unlink(os.path.join(root, fn))
+            for d in dirs:
+                os.rmdir(os.path.join(root, d))
+        for path, data in self._warm_fs.items():
+            self.upload(path, data)
+        self.cancelled = False
 
     def stop(self) -> None:
         if self._dir is not None:
             self._dir.cleanup()
             self._dir = None
+            self._warm_fs = None
 
     def cancel(self) -> None:
         self.cancelled = True

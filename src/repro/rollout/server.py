@@ -185,11 +185,34 @@ class RolloutServer:
 
     def status(self) -> Dict[str, Any]:
         with self._lock:
-            return {
-                "tasks": {tid: len(st.finished_ids) for tid, st in self._tasks.items()},
-                "nodes": {nid: {"alive": n.alive, "load": n.gateway.load}
-                          for nid, n in self._nodes.items()},
+            nodes = dict(self._nodes)
+            tasks = {tid: len(st.finished_ids) for tid, st in self._tasks.items()}
+        node_view: Dict[str, Any] = {}
+        for nid, n in nodes.items():
+            gs = n.gateway.status()
+            node_view[nid] = {
+                "alive": n.alive,
+                "load": n.gateway.load,
+                "mode": gs["mode"],
+                "utilization": gs["utilization"],
+                "queue_depths": gs["queue_depths"],
+                "pool": gs["pool"],
             }
+        return {"tasks": tasks, "nodes": node_view}
+
+    def node_stats(self) -> Dict[str, Any]:
+        """Full per-node pipeline telemetry (the §A.5 observability surface):
+        stage busy/worker counts, queue depths, prewarm-pool hit/miss, and
+        cumulative stage-time metrics."""
+        with self._lock:
+            nodes = dict(self._nodes)
+        out: Dict[str, Any] = {}
+        for nid, n in nodes.items():
+            gs = n.gateway.status()
+            gs["metrics"].pop("stage_log", None)   # unbounded; not for the wire
+            gs["alive"] = n.alive
+            out[nid] = gs
+        return out
 
     # -- failure handling --------------------------------------------------------
     def _monitor_loop(self, interval: float):

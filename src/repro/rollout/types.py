@@ -1,6 +1,7 @@
 """Rollout-service data contracts (paper §3.1 + Appendix A.3)."""
 from __future__ import annotations
 
+import hashlib
 import time
 import uuid
 from dataclasses import dataclass, field
@@ -15,6 +16,47 @@ class RuntimeSpec:
     files: Dict[str, str] = field(default_factory=dict)   # initial FS contents
     prepare: List[str] = field(default_factory=list)      # exec'd during INIT
     network: str = "none"
+    # -- prewarm-pool knobs (paper §3.2: runtime prewarming) ----------------
+    pool: bool = True                 # eligible for the gateway prewarm pool
+    pool_size: int = 2                # warm runtimes to keep per pool key
+
+    def pool_key(self) -> str:
+        """Stable identity of the *started* state: two specs with the same
+        key yield interchangeable warm runtimes.  Cached — specs are treated
+        as immutable once submitted (mutating files/prepare after the first
+        checkout is unsupported)."""
+        cached = getattr(self, "_pool_key", None)
+        if cached is not None:
+            return cached
+        h = hashlib.sha256()
+        h.update(f"{self.backend}|{self.image}|{self.workdir}|{self.network}"
+                 .encode())
+        for cmd in self.prepare:
+            h.update(b"\x00p" + cmd.encode())
+        for path in sorted(self.files):
+            h.update(b"\x00f" + path.encode() + b"\x00"
+                     + self.files[path].encode())
+        self._pool_key = h.hexdigest()[:16]
+        return self._pool_key
+
+
+@dataclass
+class PipelineConfig:
+    """Per-node session-pipeline shape (paper §3.2: each rollout node
+    overlaps runtime prewarming, agent execution, trajectory reconstruction,
+    and evaluation).  ``serial=True`` collapses the node to one worker that
+    runs every stage inline per session — the baseline the pipelined mode is
+    benchmarked against."""
+    serial: bool = False
+    init_workers: int = 2
+    run_workers: int = 2
+    recon_workers: int = 2            # trajectory reconstruction stage
+    eval_workers: int = 2             # evaluation + teardown stage
+    ready_buffer: int = 4             # bounded: init backpressure
+    recon_buffer: int = 8             # bounded: finished runs awaiting recon
+    eval_buffer: int = 8              # bounded: trajectories awaiting eval
+    prewarm: bool = True              # use the RuntimePrewarmPool
+    prewarm_capacity: int = 16        # max warm runtimes across all keys
 
 
 @dataclass
@@ -37,6 +79,9 @@ class TaskRequest:
     evaluator: Dict[str, Any] = field(default_factory=lambda: {"strategy": "session_completion"})
     callback: Optional[Callable[["object"], None]] = None   # SessionResult sink
     metadata: Dict[str, Any] = field(default_factory=dict)
+    # per-task pipeline hints; {"prewarm": False} opts this task's sessions
+    # out of the node's runtime pool (e.g. side-effectful prepare actions)
+    pipeline: Dict[str, Any] = field(default_factory=dict)
 
 
 @dataclass

@@ -189,6 +189,15 @@ def test_serve_http_roundtrip():
             time.sleep(0.2)
         assert st["finished"] == 1
         assert st["statuses"] == ["completed"]
+
+        # per-node pipeline telemetry surface
+        nodes_st = json.loads(urllib.request.urlopen(
+            f"http://127.0.0.1:{port}/rollout/nodes", timeout=30).read())
+        (node,) = nodes_st.values()
+        assert node["mode"] == "pipelined"
+        assert set(node["queue_depths"]) == {"init", "ready", "recon", "eval"}
+        assert node["pool"]["hits"] + node["pool"]["misses"] >= 1
+        assert "stage_log" not in node["metrics"]
     finally:
         httpd.shutdown()
         server.shutdown()

@@ -1,0 +1,235 @@
+"""Prewarm pool + pipelined gateway tests (paper §3.2): checkout/return/
+invalidate semantics under concurrency, per-session stage ordering through
+the overlapping pipeline, serial baseline mode, and the queue-depth /
+utilization observability surface."""
+from __future__ import annotations
+
+import threading
+import time
+
+from repro.rollout import (AgentSpec, GatewayNode, PipelineConfig,
+                           RolloutServer, RuntimePrewarmPool, RuntimeSpec,
+                           TaskRequest)
+from repro.core.testing import EchoBackend
+from repro.rollout.types import Session
+
+
+def _spec(**kw):
+    kw.setdefault("files", {"README": "repo", "main.py": "print(1)"})
+    kw.setdefault("prepare", ["write prepared.txt yes"])
+    return RuntimeSpec(**kw)
+
+
+def _task(task_id="t", n=2, evaluator=None, pipeline=None):
+    return TaskRequest(
+        task_id=task_id,
+        instruction="Produce the text: magic word",
+        num_samples=n,
+        timeout_seconds=30.0,
+        runtime=_spec(),
+        agent=AgentSpec(harness="qwen_code", max_turns=2,
+                        config={"max_tokens": 16}),
+        evaluator=evaluator or {"strategy": "session_completion"},
+        pipeline=pipeline or {},
+    )
+
+
+# ---------------------------------------------------------------------- pool
+
+def test_pool_miss_then_hit_and_renew():
+    # long refill interval: the background filler stays out of the picture,
+    # so hit/return counters and runtime identity are deterministic
+    pool = RuntimePrewarmPool(capacity=4, refill_interval=30.0)
+    spec = _spec()
+    rt = pool.checkout(spec)             # cold miss
+    assert pool.stats()["misses"] == 1
+    assert rt.download("prepared.txt") == "yes"   # prepare ran
+    rt.upload("scratch.txt", "dirty")
+    pool.give_back(rt)
+    assert pool.stats()["returned"] == 1
+    rt2 = pool.checkout(spec)            # warm hit: the renewed runtime
+    assert pool.stats()["hits"] == 1
+    assert rt2 is rt
+    # renew() restored the post-start state: prepare effects kept, session
+    # mutations gone
+    assert rt2.download("prepared.txt") == "yes"
+    assert rt2.download("scratch.txt") is None
+    pool.close()
+
+
+def test_pool_background_prewarm_tops_up():
+    pool = RuntimePrewarmPool(capacity=8)
+    spec = _spec(pool_size=3)
+    pool.checkout(spec).stop()           # registers the key
+    deadline = time.monotonic() + 5
+    while pool.warm_count(spec) < 3 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert pool.warm_count(spec) == 3
+    assert pool.stats()["prewarmed"] >= 3
+    pool.close()
+    assert pool.warm_count() == 0
+
+
+def test_pool_invalidate_drops_warm_runtimes():
+    pool = RuntimePrewarmPool(capacity=8)
+    spec = _spec(pool_size=2)
+    pool.checkout(spec).stop()
+    deadline = time.monotonic() + 5
+    while pool.warm_count(spec) < 2 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    dropped = pool.invalidate(spec)
+    assert dropped == 2
+    assert pool.warm_count(spec) == 0
+    # key is forgotten: the filler must not resurrect it
+    time.sleep(0.1)
+    assert pool.warm_count(spec) == 0
+    assert pool.stats()["invalidated"] == 2
+    pool.close()
+
+
+def test_pool_opt_out_spec_always_cold():
+    pool = RuntimePrewarmPool(capacity=4)
+    spec = _spec(pool=False)
+    a = pool.checkout(spec)
+    pool.give_back(a)                    # not shelved: key never registered
+    b = pool.checkout(spec)
+    assert b is not a
+    s = pool.stats()
+    assert s["hits"] == 0 and s["misses"] == 2
+    pool.close()
+
+
+def test_pool_concurrent_checkout_return():
+    """N threads churn checkout/mutate/give_back on one key: every thread
+    always observes a clean post-start state and the pool never leaks."""
+    pool = RuntimePrewarmPool(capacity=6)
+    spec = _spec(pool_size=2)
+    errors = []
+
+    def churn(i):
+        try:
+            for _ in range(10):
+                rt = pool.checkout(spec)
+                assert rt.download("scratch.txt") is None, "dirty checkout"
+                rt.upload("scratch.txt", f"worker {i}")
+                pool.give_back(rt)
+        except Exception as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=churn, args=(i,)) for i in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    s = pool.stats()
+    assert s["hits"] + s["misses"] == 60
+    assert s["hits"] > 0
+    assert s["warm"] <= s["capacity"]
+    pool.close()
+
+
+# ------------------------------------------------------------------ pipeline
+
+def _drain(gw: GatewayNode, task: TaskRequest, timeout=30.0):
+    results = []
+    gw.result_sink = results.append
+    for g in range(task.num_samples):
+        gw.submit(Session.from_task(task, g))
+    deadline = time.monotonic() + timeout
+    while len(results) < task.num_samples and time.monotonic() < deadline:
+        time.sleep(0.005)
+    return results
+
+
+def test_pipeline_per_session_stage_ordering():
+    """Stages of one session must retain init < run < recon < eval order
+    even while many sessions overlap arbitrarily across the stage pools."""
+    gw = GatewayNode(EchoBackend())
+    results = _drain(gw, _task(task_id="order", n=6))
+    assert len(results) == 6
+    assert {r.status for r in results} == {"completed"}
+    by_session = {}
+    for sid, stage, t0, t1 in gw.metrics["stage_log"]:
+        by_session.setdefault(sid, {})[stage] = (t0, t1)
+    assert len(by_session) == 6
+    for sid, stages in by_session.items():
+        assert set(stages) == {"init", "run", "recon", "eval"}
+        assert (stages["init"][1] <= stages["run"][0]
+                <= stages["run"][1] <= stages["recon"][0]
+                <= stages["recon"][1] <= stages["eval"][0]), sid
+    gw.shutdown()
+
+
+def test_pipeline_exactly_one_result_per_session():
+    gw = GatewayNode(EchoBackend())
+    results = _drain(gw, _task(task_id="once", n=8))
+    assert len(results) == 8
+    assert len({r.session_id for r in results}) == 8
+    gw.shutdown()
+
+
+def test_pipeline_uses_prewarm_pool():
+    gw = GatewayNode(EchoBackend())
+    task = _task(task_id="pooluse", n=3)
+    results = _drain(gw, task)
+    assert {r.status for r in results} == {"completed"}
+    # after the first wave, returned + background-prewarmed runtimes are warm
+    deadline = time.monotonic() + 5
+    while gw.pool.warm_count(task.runtime) < 2 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert gw.pool.warm_count(task.runtime) >= 2
+    results = _drain(gw, _task(task_id="pooluse2", n=2))
+    assert {r.status for r in results} == {"completed"}
+    stats = gw.pool.stats()
+    assert stats["hits"] + stats["misses"] == 5
+    assert stats["hits"] >= 2            # second wave ran on warm runtimes
+    gw.shutdown()
+
+
+def test_task_can_opt_out_of_prewarm():
+    gw = GatewayNode(EchoBackend())
+    results = _drain(gw, _task(task_id="optout", n=3,
+                               pipeline={"prewarm": False}))
+    assert {r.status for r in results} == {"completed"}
+    stats = gw.pool.stats()
+    assert stats["hits"] == 0 and stats["misses"] == 0
+    gw.shutdown()
+
+
+def test_serial_mode_end_to_end():
+    gw = GatewayNode(EchoBackend(), pipeline=PipelineConfig(serial=True))
+    assert gw.pool is None
+    results = _drain(gw, _task(task_id="serial", n=3))
+    assert {r.status for r in results} == {"completed"}
+    assert gw.status()["mode"] == "serial"
+    gw.shutdown()
+
+
+def test_status_reports_queue_depths_and_utilization():
+    gw = GatewayNode(EchoBackend())
+    st = gw.status()
+    assert set(st["queue_depths"]) == {"init", "ready", "recon", "eval"}
+    assert set(st["stage_busy"]) == {"init", "run", "recon", "eval"}
+    assert st["stage_workers"]["run"] == gw.pipeline.run_workers
+    assert 0.0 <= st["utilization"] <= 1.0
+    assert st["pool"] is not None and "hits" in st["pool"]
+    assert st["mode"] == "pipelined"
+    gw.shutdown()
+
+
+def test_server_status_includes_node_telemetry():
+    server = RolloutServer(heartbeat_timeout=1.5, monitor_interval=0.1)
+    gw = GatewayNode(EchoBackend())
+    server.register_node(gw, heartbeat_interval=0.2)
+    tid = server.submit_task(_task(task_id="tele", n=2))
+    server.wait(tid, timeout=30)
+    st = server.status()
+    node = st["nodes"][gw.gateway_id]
+    assert set(node["queue_depths"]) == {"init", "ready", "recon", "eval"}
+    assert node["mode"] == "pipelined"
+    assert node["pool"]["hits"] + node["pool"]["misses"] >= 2
+    full = server.node_stats()[gw.gateway_id]
+    assert "stage_log" not in full["metrics"]
+    assert full["metrics"]["sessions"] == 2
+    server.shutdown()

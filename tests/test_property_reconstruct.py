@@ -11,7 +11,11 @@ and the paper's boxed invariant is checked on every emitted trajectory:
 """
 from __future__ import annotations
 
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import reconstruct as R
 from repro.core import tokenizer as tok

@@ -184,12 +184,12 @@ def test_ready_buffer_backpressure_many_sessions():
 
 
 def test_stage_isolation_metrics():
-    """INIT and POSTRUN work must be attributed outside RUN busy time."""
+    """INIT, RECON and EVAL work must be attributed outside RUN busy time."""
     server, gws = _stack()
     tid = server.submit_task(_task(task_id="metrics", n=2))
     server.wait(tid, timeout=30)
     m = gws[0].metrics
     assert m["sessions"] == 2
     stages = {s for (_, s, _, _) in m["stage_log"]}
-    assert stages == {"init", "run", "post"}
+    assert stages == {"init", "run", "recon", "eval"}
     server.shutdown()

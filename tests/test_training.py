@@ -9,7 +9,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    def given(*a, **k):          # placeholder decorators so the module
+        return lambda fn: fn     # still collects without the test extra
+
+    settings = given
+
+    class st:  # noqa: N801
+        pass
 
 from repro.configs import get_smoke_config
 from repro.core.types import Trace, logprob_entry
@@ -48,10 +61,12 @@ def test_pack_basic_alignment():
     assert list(pb.segment_ids[0][:5]) == [1, 1, 1, 1, 1]
 
 
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="needs the [test] extra")
 @settings(max_examples=30, deadline=None)
 @given(st.lists(st.tuples(st.integers(1, 6), st.integers(1, 8)),
-                min_size=1, max_size=10))
-def test_pack_invariants(sizes):
+                min_size=1, max_size=10)
+       if HAVE_HYPOTHESIS else [])
+def test_pack_invariants(sizes=()):
     traces = []
     tid = 10
     for plen, rlen in sizes:
