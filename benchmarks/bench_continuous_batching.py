@@ -1,0 +1,153 @@
+"""Continuous-batching engine vs. the one-shot generation path (paper §2.3).
+
+Drives the SAME Engine workload in two modes and reports sampled tokens/sec
+at 1 / 8 / 32 concurrent sessions:
+
+  oneshot    — Engine(serial=True): every `complete` call runs its own
+               whole-generation jitted program (prefill + B=1 decode loop);
+               concurrency only comes from threads contending for the
+               device (the naive serving path the paper argues against).
+  continuous — the default engine: requests join the shared
+               ContinuousBatchingScheduler, which advances all in-flight
+               sequences one token per jitted step over the paged KV cache
+               (in-flight join/leave, freed pages reused immediately).
+
+Each session thread issues chat completions through ``Engine.complete`` —
+exactly the proxy's call path — so the measured speedup is what overlapped
+harness sessions actually see.  The workload is warmed up once per mode so
+compile time is excluded.
+
+    PYTHONPATH=src python -m benchmarks.bench_continuous_batching \
+        [--dry-run] [--out results/bench_continuous_batching.json]
+
+Emits a BENCH json line and writes the same record to --out; CI uploads it
+as an artifact (the 32-session dry-run is the bench-smoke lane).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import threading
+import time
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.inference import Engine
+
+
+def _workload(engine: Engine, concurrency: int, completions: int,
+              max_new: int) -> int:
+    """`concurrency` session threads × `completions` chat calls each.
+    Returns total sampled tokens."""
+    counts = []
+    lock = threading.Lock()
+    errs = []
+
+    def session(i: int) -> None:
+        n = 0
+        try:
+            for c in range(completions):
+                resp = engine.complete({
+                    "messages": [{"role": "user",
+                                  "content": f"session {i} turn {c}: work"}],
+                    "max_tokens": max_new,
+                })
+                n += len(resp["response_ids"])
+        except Exception as e:  # noqa: BLE001
+            errs.append(e)
+        with lock:
+            counts.append(n)
+
+    threads = [threading.Thread(target=session, args=(i,))
+               for i in range(concurrency)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    if errs:
+        raise errs[0]
+    return sum(counts)
+
+
+def run_mode(mode: str, concurrency: int, *, completions: int, max_new: int,
+             max_len: int, max_batch: int) -> dict:
+    cfg = get_smoke_config("qwen3-32b").replace(vocab_size=512)
+    engine = Engine(cfg, rng=jax.random.PRNGKey(0), max_len=max_len,
+                    max_new=max_new, serial=(mode == "oneshot"),
+                    max_batch=max_batch, block_size=16)
+    try:
+        _workload(engine, concurrency, 1, max_new)   # warmup: compile paths
+        t0 = time.perf_counter()
+        tokens = _workload(engine, concurrency, completions, max_new)
+        wall = time.perf_counter() - t0
+        sched = engine.scheduler_stats()
+        return {
+            "mode": mode,
+            "concurrency": concurrency,
+            "tokens": tokens,
+            "wall_s": round(wall, 4),
+            "tokens_per_s": round(tokens / wall, 1) if wall else 0.0,
+            "scheduler": ({k: sched[k] for k in
+                           ("steps", "mean_batch", "batch_occupancy",
+                            "peak_batch", "joins", "leaves")}
+                          if sched else None),
+        }
+    finally:
+        engine.close()
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry-run", action="store_true",
+                    help="CI smoke: short generations, same record shape "
+                         "(still exercises 32 concurrent sessions)")
+    ap.add_argument("--completions", type=int, default=None,
+                    help="chat calls per session")
+    ap.add_argument("--max-new", type=int, default=None)
+    ap.add_argument("--max-batch", type=int, default=32)
+    ap.add_argument("--out", default="results/bench_continuous_batching.json")
+    args = ap.parse_args(argv)
+
+    completions = args.completions or (1 if args.dry_run else 3)
+    max_new = args.max_new or (12 if args.dry_run else 24)
+    max_len = 256
+
+    rows = []
+    for concurrency in (1, 8, 32):
+        one = run_mode("oneshot", concurrency, completions=completions,
+                       max_new=max_new, max_len=max_len,
+                       max_batch=args.max_batch)
+        cont = run_mode("continuous", concurrency, completions=completions,
+                        max_new=max_new, max_len=max_len,
+                        max_batch=args.max_batch)
+        speedup = (cont["tokens_per_s"] / one["tokens_per_s"]
+                   if one["tokens_per_s"] else 0.0)
+        rows.append({"concurrency": concurrency, "oneshot": one,
+                     "continuous": cont, "speedup": round(speedup, 3)})
+        print(f"  {concurrency:3d} sessions: oneshot "
+              f"{one['tokens_per_s']:8.1f} tok/s | continuous "
+              f"{cont['tokens_per_s']:8.1f} tok/s | speedup {speedup:5.2f}x"
+              f"  (mean batch "
+              f"{(cont['scheduler'] or {}).get('mean_batch', '-')})")
+
+    record = {
+        "bench": "continuous_batching",
+        "dry_run": args.dry_run,
+        "params": {"completions": completions, "max_new": max_new,
+                   "max_len": max_len, "max_batch": args.max_batch},
+        "rows": rows,
+        "speedup_at_32": rows[-1]["speedup"],
+    }
+    print("BENCH " + json.dumps(record))
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(record, f, indent=2)
+        print(f"  wrote {args.out}")
+    return record
+
+
+if __name__ == "__main__":
+    main()

@@ -6,6 +6,9 @@ Sections:
   bench_core         — rollout-plane + kernel micro-benchmarks (CSV)
   bench_pipeline     — serial vs pipelined rollout-node sessions/sec (§3.2);
                        BENCH json to results/bench_pipeline.json
+  bench_continuous_batching — one-shot vs continuous-batching engine
+                       tokens/sec at 1/8/32 sessions (§2.3); BENCH json to
+                       results/bench_continuous_batching.json
   fig5_utilization   — per_request vs prefix_merging trainer load (Fig. 5b)
   table1_rl          — GRPO reward climb across 4 harnesses (Table 1/Fig. 6)
   table2_offline     — offline SFT accept/reject generation (Table 2)
@@ -40,6 +43,11 @@ def main(argv=None):
     print("== bench_pipeline (serial vs pipelined rollout node)")
     from benchmarks import bench_pipeline
     bench_pipeline.main(["--dry-run"] if args.fast else [])
+
+    print("=" * 72)
+    print("== bench_continuous_batching (one-shot vs continuous engine)")
+    from benchmarks import bench_continuous_batching
+    bench_continuous_batching.main(["--dry-run"] if args.fast else [])
 
     print("=" * 72)
     print("== fig5_utilization")

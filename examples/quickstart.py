@@ -31,6 +31,17 @@ trajectory reconstruction, and evaluation (paper §3.2).  The knobs live on
     # TaskRequest(..., pipeline={"prewarm": False}).
     # Telemetry: gw.status()["queue_depths" | "utilization" | "pool"],
     # or GET /rollout/nodes on repro.launch.serve.
+
+Continuous-batching engine
+--------------------------
+``Engine.complete`` queues every request to a continuous-batching
+scheduler by default: overlapped sessions share one jitted decode step
+over a paged KV cache (in-flight join/leave, bit-identical to the
+one-shot path — see README "Continuous-batching inference engine").
+``Engine(serial=True)`` is the one-shot escape hatch mirroring
+``PipelineConfig(serial=True)``; ``engine.scheduler_stats()`` exposes
+batch occupancy, and ``benchmarks/bench_continuous_batching.py`` measures
+the speedup at 1/8/32 concurrent sessions.
 """
 import jax
 

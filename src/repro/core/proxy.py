@@ -28,7 +28,14 @@ from repro.core.types import CompletionRecord, CompletionSession
 class InferenceBackend(Protocol):
     """What the proxy needs from an inference server: an OpenAI-chat-shaped
     completion that ALSO exposes token ids + logprobs (no retokenization
-    drift — ids come from the backend, paper §2.4)."""
+    drift — ids come from the backend, paper §2.4).
+
+    Backends may additionally expose ``submit(request) -> Future`` (the
+    continuous-batching engine does): the proxy then enqueues instead of
+    calling ``complete`` synchronously, so overlapped harness sessions join
+    the backend's shared decode batch while this thread merely blocks on
+    its own future.  Policy-version tagging and token-level capture are
+    preserved — the version is pinned at submission inside the backend."""
 
     def complete(self, request: Dict[str, Any]) -> Dict[str, Any]:
         """request: normalized OpenAI Chat request.
@@ -71,7 +78,14 @@ class ProxyGateway:
         normalized = P.to_openai_chat(provider, body)
         stream = bool(body.get("stream", False))
 
-        result = self.backend.complete(normalized)
+        # async submission when the backend supports it (continuous
+        # batching): the request joins the shared decode batch at the next
+        # step boundary instead of monopolizing a one-shot generation.
+        submit = getattr(self.backend, "submit", None)
+        if submit is not None:
+            result = submit(normalized).result()
+        else:
+            result = self.backend.complete(normalized)
 
         message = result["message"]
         finish = result.get("finish_reason", "stop")
@@ -88,6 +102,10 @@ class ProxyGateway:
             finish_reason=finish,
             tools=normalized.get("tools"),
         )
+        if "policy_version" in result:
+            # the version pinned at submission inside the backend — TIS in
+            # the trainer consumes this to correct for mid-flight swaps
+            rec.metadata["policy_version"] = result["policy_version"]
         self.session(session_id).append(rec)
 
         usage = result.get("usage", {

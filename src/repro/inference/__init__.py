@@ -1,3 +1,6 @@
 from repro.inference.engine import Engine
+from repro.inference.paged_kv import BlockAllocator, PagedKVCache
+from repro.inference.scheduler import ContinuousBatchingScheduler
 
-__all__ = ["Engine"]
+__all__ = ["Engine", "BlockAllocator", "PagedKVCache",
+           "ContinuousBatchingScheduler"]

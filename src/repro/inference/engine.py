@@ -1,22 +1,35 @@
 """JAX inference engine — the "local inference server" behind the proxy.
 
 Implements the InferenceBackend protocol: normalized OpenAI-chat request in,
-assistant message + token-level capture out.  The whole generation loop
-(prompt feed + sampling) is ONE jitted function per (prompt-bucket,
-max-new) pair: prompt tokens are fed through the decode path with a
-``fori_loop``, then a ``while_loop`` samples until the end-of-turn token or
-the budget — everything stays on device, and the engine returns the exact
-sampled ids + their behavior log-probs (no retokenization anywhere,
-paper §2.4).
+assistant message + token-level capture out.
 
-Weight updates are atomic swaps tagged with a policy version — the async
-RL loop pushes new params mid-flight and in-progress requests keep their
-old version (stale-policy semantics handled by the trainer's TIS).
+Two generation paths share one sampling kernel:
+
+  * one-shot (``generate_ids``) — the whole generation (prompt feed +
+    sampling) is ONE jitted function per (prompt-bucket, max-new) pair:
+    prompt tokens are fed through the decode path, then a ``while_loop``
+    samples until the end-of-turn token or the budget.  This is the
+    measured baseline and the fallback for model families without a paged
+    decode path.
+  * continuous batching (``submit`` / ``complete``, default) — requests are
+    queued to a ``ContinuousBatchingScheduler`` that advances every
+    in-flight sequence one token per jitted step over a paged KV cache, so
+    concurrently-open harness sessions share forward passes.  Sampled ids
+    and log-probs are bit-identical to the one-shot path (same per-request
+    key chain, same arithmetic; see tests/test_continuous_batching.py).
+    ``Engine(serial=True)`` is the escape hatch, mirroring
+    ``PipelineConfig(serial=True)`` on the rollout side.
+
+The engine returns the exact sampled ids + their behavior log-probs (no
+retokenization anywhere, paper §2.4).  Weight updates are atomic swaps
+tagged with a policy version — the async RL loop pushes new params
+mid-flight and in-progress requests keep the version captured at their
+submission (stale-policy semantics handled by the trainer's TIS).
 """
 from __future__ import annotations
 
 import threading
-from functools import partial
+from concurrent.futures import Future
 from typing import Any, Dict, Optional
 
 import jax
@@ -34,11 +47,49 @@ def _bucket(n: int, sizes=(64, 128, 256, 512, 1024, 2048)) -> int:
     return -(-n // 2048) * 2048
 
 
+def sample_logits_rows(cfg, params, hidden_rows):
+    """Sampling-head logits: hidden rows [B, d] → f32 logits [B, V].
+
+    Both generation paths (the one-shot while_loop and the batched
+    scheduler step/prefill) MUST compute their logits through this exact
+    function: the optimization_barrier materializes the operands so the
+    bf16→f32 head dot lowers identically regardless of the surrounding
+    program (fusion/layout context differences here are what would break
+    the scheduler's bit-exactness vs. the one-shot path)."""
+    from repro.models import common as C
+    tab = C.head_table(cfg, params["embed"]).astype(hidden_rows.dtype)
+    hidden_rows, tab = jax.lax.optimization_barrier((hidden_rows, tab))
+    return jnp.einsum("bd,vd->bv", hidden_rows, tab,
+                      preferred_element_type=jnp.float32)
+
+
+def sample_token(logits, rng, *, temperature: float, top_k: int):
+    """One sampling step: raw logits [V] → (token i32, behavior logprob f32).
+
+    Shared verbatim by the one-shot generation loop and the batched
+    scheduler (vmapped per row) — keeping it a single function is what
+    makes the two paths bit-identical."""
+    valid = jnp.arange(logits.shape[-1]) < tok.VOCAB_SIZE
+    logits = jnp.where(valid, logits, -jnp.inf)
+    logp_full = jax.nn.log_softmax(logits.astype(jnp.float32))
+    if temperature <= 0.0:
+        nxt = jnp.argmax(logits).astype(jnp.int32)
+    else:
+        scaled = logits / temperature
+        if top_k > 0:
+            kth = jax.lax.top_k(scaled, top_k)[0][-1]
+            scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+        nxt = jax.random.categorical(rng, scaled).astype(jnp.int32)
+    return nxt, logp_full[nxt]
+
+
 class Engine:
     def __init__(self, cfg: ModelConfig, params=None, rng=None,
                  max_len: int = 1024, max_new: int = 64,
                  temperature: float = 1.0, top_k: int = 0,
-                 model_name: str = "policy"):
+                 model_name: str = "policy", serial: bool = False,
+                 block_size: int = 16, max_batch: int = 32,
+                 num_blocks: Optional[int] = None):
         assert cfg.vocab_size >= tok.VOCAB_SIZE, (
             "engine models must cover the tokenizer vocab")
         self.cfg = cfg
@@ -50,9 +101,16 @@ class Engine:
         self.temperature = temperature
         self.top_k = top_k
         self.model_name = model_name
+        self.serial = serial
         self.policy_version = 0
-        self._lock = threading.Lock()
+        self._lock = threading.Lock()          # params / version / rng / stats
+        self._compile_lock = threading.Lock()  # _gen_cache population
         self._gen_cache: Dict[Any, Any] = {}
+        self._sched_lock = threading.Lock()
+        self._scheduler = None
+        self._closed = False
+        self._sched_opts = dict(block_size=block_size, max_batch=max_batch,
+                                num_blocks=num_blocks)
         self.stats = {"requests": 0, "prompt_tokens": 0, "sampled_tokens": 0}
 
     # -- async weight updates -------------------------------------------------
@@ -63,6 +121,38 @@ class Engine:
                                    else self.policy_version + 1)
             return self.policy_version
 
+    # -- continuous-batching scheduler ---------------------------------------
+    @property
+    def scheduler(self):
+        """The continuous-batching scheduler (lazily started), or None when
+        serial mode is forced, the engine is closed, or the model family has
+        no paged decode."""
+        if self.serial or not M.supports_paged_decode(self.cfg):
+            return None
+        with self._sched_lock:
+            if self._closed:
+                return None        # closed engines must not resurrect one
+            if self._scheduler is None:
+                from repro.inference.scheduler import (
+                    ContinuousBatchingScheduler)
+                self._scheduler = ContinuousBatchingScheduler(
+                    self, **self._sched_opts)
+            return self._scheduler
+
+    def scheduler_stats(self) -> Optional[Dict[str, Any]]:
+        with self._sched_lock:
+            sched = self._scheduler
+        return sched.stats() if sched is not None else None
+
+    def close(self) -> None:
+        """Shut down the batching scheduler (requests after close are served
+        serially).  Idempotent."""
+        with self._sched_lock:
+            self._closed = True
+            sched, self._scheduler = self._scheduler, None
+        if sched is not None:
+            sched.close()
+
     # -- generation ------------------------------------------------------------
     def _make_generate(self, plen_bucket: int, max_new: int):
         cfg = self.cfg
@@ -70,21 +160,14 @@ class Engine:
         top_k = self.top_k
 
         def sample_logits(hidden, params, rng):
-            from repro.models import common as C
-            logits = C.logits_from_hidden(cfg, params["embed"], hidden[:, -1])[0]
-            # restrict to the tokenizer's live vocab
-            valid = jnp.arange(logits.shape[-1]) < tok.VOCAB_SIZE
-            logits = jnp.where(valid, logits, -jnp.inf)
-            logp_full = jax.nn.log_softmax(logits.astype(jnp.float32))
-            if temp <= 0.0:
-                nxt = jnp.argmax(logits).astype(jnp.int32)
-            else:
-                scaled = logits / temp
-                if top_k > 0:
-                    kth = jax.lax.top_k(scaled, top_k)[0][-1]
-                    scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
-                nxt = jax.random.categorical(rng, scaled).astype(jnp.int32)
-            return nxt, logp_full[nxt]
+            from functools import partial
+            # shared barriered head + vmapped row form: the sampling chain
+            # must lower identically here and in the batched scheduler step
+            # (see sample_logits_rows) or the two paths drift by 1 ulp
+            logits = sample_logits_rows(cfg, params, hidden[:, -1])
+            nxt, lp = jax.vmap(partial(sample_token, temperature=temp,
+                                       top_k=top_k))(logits, rng[None])
+            return nxt[0], lp[0]
 
         def generate(params, prompt, plen, rng):
             B = 1
@@ -140,23 +223,38 @@ class Engine:
 
         return jax.jit(generate)
 
-    def generate_ids(self, prompt_ids, max_new: Optional[int] = None):
-        """prompt_ids list[int] → (ids list[int], logps list[float], finish)."""
-        max_new = max_new or self.max_new
-        plen = len(prompt_ids)
+    def _prompt_bucket(self, plen: int, max_new: int) -> int:
         bucket = _bucket(plen, sizes=(64, 256, self.max_len))
         bucket = min(bucket, self.max_len - max_new)
         assert plen <= bucket, (plen, bucket, "prompt too long for engine")
+        return bucket
+
+    def _generate_fn(self, bucket: int, max_new: int):
+        """Thread-safe compile-cache lookup (double-checked under
+        _compile_lock so concurrent first calls trace exactly once)."""
         key = (bucket, max_new)
-        if key not in self._gen_cache:
-            self._gen_cache[key] = self._make_generate(bucket, max_new)
+        fn = self._gen_cache.get(key)
+        if fn is None:
+            with self._compile_lock:
+                fn = self._gen_cache.get(key)
+                if fn is None:
+                    fn = self._make_generate(bucket, max_new)
+                    self._gen_cache[key] = fn
+        return fn
+
+    def generate_ids(self, prompt_ids, max_new: Optional[int] = None):
+        """One-shot generation path (the serial baseline).
+        prompt_ids list[int] → (ids list[int], logps list[float], finish)."""
+        max_new = max_new or self.max_new
+        plen = len(prompt_ids)
+        bucket = self._prompt_bucket(plen, max_new)
+        fn = self._generate_fn(bucket, max_new)
         prompt = jnp.zeros((bucket,), jnp.int32).at[:plen].set(
             jnp.asarray(prompt_ids, jnp.int32))
         with self._lock:
             params = self.params
             self.rng, k = jax.random.split(self.rng)
-        out_ids, out_lps, n, done = self._gen_cache[key](
-            params, prompt, jnp.int32(plen), k)
+        out_ids, out_lps, n, done = fn(params, prompt, jnp.int32(plen), k)
         n = int(n)
         ids = [int(t) for t in out_ids[:n]]
         lps = [float(l) for l in out_lps[:n]]
@@ -164,28 +262,72 @@ class Engine:
         return ids, lps, finish
 
     # -- InferenceBackend protocol ----------------------------------------------
+    def submit_ids(self, prompt_ids, max_new: Optional[int] = None) -> Future:
+        """Queue a generation; the returned Future resolves to the full
+        completion result dict.  On the continuous-batching path the request
+        joins the shared decode batch at the next step boundary; in serial
+        mode it runs inline (one-shot) before returning."""
+        max_new = min(max_new or self.max_new, self.max_new)
+        plen = len(prompt_ids)
+        bucket = self._prompt_bucket(plen, max_new)
+        sched = self.scheduler
+        if sched is None:
+            with self._lock:
+                version = self.policy_version
+            fut: Future = Future()
+            try:
+                ids, lps, finish = self.generate_ids(prompt_ids, max_new)
+            except Exception as e:  # noqa: BLE001
+                fut.set_exception(e)
+                return fut
+            fut.set_result(self._build_result(
+                list(prompt_ids), ids, lps, finish, version))
+            return fut
+        from repro.inference.scheduler import SchedRequest
+        with self._lock:
+            self.rng, key = jax.random.split(self.rng)
+            version = self.policy_version
+        req = SchedRequest(prompt_ids=list(prompt_ids), max_new=max_new,
+                           key=key, version=version, bucket=bucket)
+        return sched.submit(req)
+
+    def submit(self, request: Dict[str, Any]) -> Future:
+        """Normalized OpenAI-chat request → Future of the completion result
+        (async InferenceBackend surface used by the proxy)."""
+        prompt_ids = tok.apply_chat_template(request["messages"])
+        return self.submit_ids(prompt_ids, request.get("max_tokens"))
+
     def complete(self, request: Dict[str, Any]) -> Dict[str, Any]:
-        messages = request["messages"]
-        prompt_ids = tok.apply_chat_template(messages)
-        max_new = min(request.get("max_tokens") or self.max_new, self.max_new)
-        ids, lps, finish = self.generate_ids(prompt_ids, max_new)
+        """Thin synchronous wrapper over the scheduler path."""
+        return self.submit(request).result()
+
+    def _resolve(self, req, finish: str) -> None:
+        """Scheduler callback: build the result dict and resolve the future."""
+        result = self._build_result(
+            req.prompt_ids, req.out_ids, req.out_lps, finish, req.version)
+        if not req.future.done():      # caller may have cancelled
+            req.future.set_result(result)
+
+    def _build_result(self, prompt_ids, ids, lps, finish: str,
+                      version: int) -> Dict[str, Any]:
         content, tool_calls, _closed = tok.parse_sampled(ids)
         message: Dict[str, Any] = {"role": "assistant", "content": content}
         if tool_calls:
             message["tool_calls"] = tool_calls
             if finish == "stop":
                 finish = "tool_calls"
-        self.stats["requests"] += 1
-        self.stats["prompt_tokens"] += len(prompt_ids)
-        self.stats["sampled_tokens"] += len(ids)
+        with self._lock:
+            self.stats["requests"] += 1
+            self.stats["prompt_tokens"] += len(prompt_ids)
+            self.stats["sampled_tokens"] += len(ids)
         return {
             "message": message,
-            "prompt_ids": prompt_ids,
-            "response_ids": ids,
-            "logprobs": lps,
+            "prompt_ids": list(prompt_ids),
+            "response_ids": list(ids),
+            "logprobs": list(lps),
             "finish_reason": finish,
             "usage": {"prompt_tokens": len(prompt_ids),
                       "completion_tokens": len(ids),
                       "total_tokens": len(prompt_ids) + len(ids)},
-            "policy_version": self.policy_version,
+            "policy_version": version,
         }

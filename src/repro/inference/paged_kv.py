@@ -1,0 +1,226 @@
+"""Paged KV cache for the continuous-batching scheduler (paper §2.3).
+
+The cache is a pool of fixed-size blocks shared by every in-flight sequence:
+
+  * ``BlockAllocator`` — a pure-Python free-list with worst-case admission
+    reservations: a sequence is admitted only when its *entire* generation
+    budget fits, so ``extend`` (one block per crossed block boundary during
+    decode) can never fail mid-flight and no preemption path is needed.
+  * ``PagedKVCache``  — the device pools ``[L, num_blocks, block_size, Hkv,
+    D]`` plus the host-side block tables.  Writes and gathers go through the
+    block table, so a sequence's KV lives in whatever blocks the free list
+    handed out; block 0 is a reserved trash block that absorbs the writes of
+    padded/inactive batch slots.
+
+Everything host-side is deliberately simple Python — it is the subject of
+the hypothesis property tests (no double allocation, exact frees, token
+order preserved under arbitrary join/leave interleavings).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+TRASH_BLOCK = 0
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+class BlockAllocator:
+    """Free-list block allocator with admission-time reservations.
+
+    ``admit(seq, prompt_blocks, total_blocks)`` allocates the prompt blocks
+    now and reserves headroom for the remaining ``total - prompt`` decode
+    blocks; ``extend`` consumes that headroom one block at a time.  Because
+    ``available()`` subtracts every live reservation, the sum of worst cases
+    across admitted sequences never exceeds the pool — extend cannot fail.
+    """
+
+    def __init__(self, num_blocks: int, reserved: Tuple[int, ...] = (TRASH_BLOCK,)):
+        assert num_blocks > len(reserved), "pool smaller than reserved blocks"
+        self.num_blocks = num_blocks
+        self.reserved = tuple(reserved)
+        # LIFO free list (recently freed blocks are cache-warm)
+        self._free: List[int] = [b for b in range(num_blocks)
+                                 if b not in self.reserved]
+        self._owned: Dict[object, List[int]] = {}
+        self._headroom: Dict[object, int] = {}
+
+    # -- accounting -----------------------------------------------------------
+    def available(self) -> int:
+        """Blocks that can still be promised to a NEW sequence."""
+        return len(self._free) - sum(self._headroom.values())
+
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def owned(self, seq_id) -> List[int]:
+        return list(self._owned.get(seq_id, ()))
+
+    def headroom(self, seq_id) -> int:
+        return self._headroom.get(seq_id, 0)
+
+    @property
+    def live_sequences(self) -> int:
+        return len(self._owned)
+
+    # -- lifecycle ------------------------------------------------------------
+    def admit(self, seq_id, prompt_blocks: int, total_blocks: int) -> Optional[List[int]]:
+        """Admit a sequence whose whole lifetime needs ``total_blocks``.
+        Returns the prompt blocks, or None when the pool cannot cover the
+        worst case right now (caller retries after a leave)."""
+        assert seq_id not in self._owned, f"seq {seq_id!r} already admitted"
+        assert 0 < prompt_blocks <= total_blocks, (prompt_blocks, total_blocks)
+        if self.available() < total_blocks:
+            return None
+        blocks = [self._take() for _ in range(prompt_blocks)]
+        self._owned[seq_id] = blocks
+        self._headroom[seq_id] = total_blocks - prompt_blocks
+        return list(blocks)
+
+    def extend(self, seq_id) -> int:
+        """Allocate one more block for an admitted sequence (decode crossed a
+        block boundary).  Guaranteed to succeed by the admission reservation."""
+        assert seq_id in self._owned, f"seq {seq_id!r} not admitted"
+        assert self._headroom[seq_id] > 0, (
+            f"seq {seq_id!r} exceeded its admission reservation")
+        self._headroom[seq_id] -= 1
+        blk = self._take()
+        self._owned[seq_id].append(blk)
+        return blk
+
+    def free(self, seq_id) -> List[int]:
+        """Release every block the sequence holds (and its reservation).
+        Returns the freed blocks."""
+        blocks = self._owned.pop(seq_id)
+        self._headroom.pop(seq_id)
+        for b in blocks:
+            assert b not in self._free, f"double free of block {b}"
+            self._free.append(b)
+        return blocks
+
+    def _take(self) -> int:
+        blk = self._free.pop()
+        for owner, blocks in self._owned.items():
+            assert blk not in blocks, (
+                f"block {blk} double-allocated (already owned by {owner!r})")
+        return blk
+
+    def check(self) -> None:
+        """Invariant sweep (used by the property tests)."""
+        seen: Dict[int, object] = {}
+        for owner, blocks in self._owned.items():
+            for b in blocks:
+                assert b not in seen, (b, owner, seen[b])
+                assert b not in self.reserved
+                seen[b] = owner
+        for b in self._free:
+            assert b not in seen, (b, "free but owned by", seen[b])
+        assert len(set(self._free)) == len(self._free), "free-list duplicate"
+        assert len(self._free) + len(seen) + len(self.reserved) == self.num_blocks
+
+
+class PagedKVCache:
+    """Device block pools + host block tables for paged decode.
+
+    Pools are ``[num_layers, num_blocks, block_size, Hkv, head_dim]`` in the
+    model compute dtype.  The pools are *functional*: every jitted write
+    donates and replaces them, so the cache object always holds the current
+    arrays between steps.
+    """
+
+    def __init__(self, cfg: ModelConfig, *, block_size: int, num_blocks: int,
+                 max_len: int, dtype=None):
+        assert block_size > 0 and num_blocks > 1
+        self.cfg = cfg
+        self.block_size = block_size
+        self.num_blocks = num_blocks
+        self.max_len = max_len
+        self.max_blocks_per_seq = cdiv(max_len, block_size)
+        self.dtype = dtype or jnp.dtype(cfg.dtype)
+        shape = (cfg.num_layers, num_blocks, block_size,
+                 cfg.num_kv_heads, cfg.head_dim)
+        self.kp = jnp.zeros(shape, self.dtype)
+        self.vp = jnp.zeros(shape, self.dtype)
+        self.allocator = BlockAllocator(num_blocks)
+        self._scatter_cache: Dict[int, object] = {}
+
+    # -- host-side mapping ----------------------------------------------------
+    def admit(self, seq_id, prompt_len: int, total_len: int) -> bool:
+        """Reserve the worst case for a sequence of ``total_len`` tokens and
+        allocate its prompt blocks.  False = pool full right now."""
+        total_len = min(total_len, self.max_len)
+        pb = cdiv(max(1, prompt_len), self.block_size)
+        tb = max(pb, cdiv(total_len, self.block_size))
+        return self.allocator.admit(seq_id, pb, tb) is not None
+
+    def ensure(self, seq_id, pos: int) -> None:
+        """Make sure the block holding token position ``pos`` exists."""
+        need = pos // self.block_size + 1
+        while len(self.allocator.owned(seq_id)) < need:
+            self.allocator.extend(seq_id)
+
+    def slot_of(self, seq_id, pos: int) -> Tuple[int, int]:
+        """Token position → (block, in-block slot).  The single source of
+        truth for the page mapping — the device block table is built from the
+        same ``owned`` list, so the property tests exercise the real layout."""
+        blocks = self.allocator.owned(seq_id)
+        return blocks[pos // self.block_size], pos % self.block_size
+
+    def block_table_row(self, seq_id) -> np.ndarray:
+        """[max_blocks_per_seq] i32 — owned blocks in order, trash-padded."""
+        row = np.full((self.max_blocks_per_seq,), TRASH_BLOCK, np.int32)
+        owned = self.allocator.owned(seq_id)
+        row[:len(owned)] = owned
+        return row
+
+    def free(self, seq_id) -> None:
+        self.allocator.free(seq_id)
+
+    # -- device writes --------------------------------------------------------
+    def write_prefill(self, seq_id, ks, vs) -> None:
+        """Scatter prefill KV (``[L, Lp, Hkv, D]``, Lp = the prompt bucket)
+        into the sequence's pages.  Chunks past the allocated prompt blocks
+        (prompt padding) land in the trash block."""
+        L, Lp = ks.shape[0], ks.shape[1]
+        nbb = cdiv(Lp, self.block_size)
+        ids = np.full((nbb,), TRASH_BLOCK, np.int32)
+        owned = self.allocator.owned(seq_id)
+        n = min(len(owned), nbb)
+        ids[:n] = owned[:n]
+        fn = self._scatter_cache.get(nbb)
+        if fn is None:
+            fn = jax.jit(partial(_scatter_prefill, block_size=self.block_size),
+                         donate_argnums=(0, 1))
+            self._scatter_cache[nbb] = fn
+        self.kp, self.vp = fn(self.kp, self.vp, ks, vs, jnp.asarray(ids))
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            "num_blocks": self.num_blocks,
+            "block_size": self.block_size,
+            "free_blocks": self.allocator.num_free(),
+            "available_blocks": self.allocator.available(),
+            "live_sequences": self.allocator.live_sequences,
+        }
+
+
+def _scatter_prefill(kp, vp, ks, vs, block_ids, *, block_size: int):
+    """kp/vp [L, NB, bs, Hkv, D]; ks/vs [L, Lp, Hkv, D]; block_ids [nbb]."""
+    L, Lp, Hkv, D = ks.shape
+    nbb = block_ids.shape[0]
+    pad = nbb * block_size - Lp
+    if pad:
+        ks = jnp.pad(ks, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vs = jnp.pad(vs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    ks = ks.reshape(L, nbb, block_size, Hkv, D).astype(kp.dtype)
+    vs = vs.reshape(L, nbb, block_size, Hkv, D).astype(vp.dtype)
+    return kp.at[:, block_ids].set(ks), vp.at[:, block_ids].set(vs)

@@ -1,0 +1,339 @@
+"""Continuous-batching scheduler: one shared decode loop for every
+in-flight proxy request (paper §2.3, ROADMAP "Continuous batching engine").
+
+Instead of each harness session paying a full one-shot generation
+(``Engine.generate_ids``: its own prefill + its own B=1 decode loop), a
+single background thread advances ALL in-flight sequences one token per
+step through a jitted batched decode over a paged KV cache:
+
+  admit  — at each step boundary, queued requests are prefetched into the
+           batch: a per-prompt-bucket jitted prefill samples the first
+           token and its KV is scattered into freshly allocated pages.
+           Admission reserves the sequence's worst-case block count, so
+           decode can never run out of pages mid-flight.
+  step   — one jitted ``forward_decode_paged`` + vmapped sampling advances
+           every active sequence; the batch is padded to a power-of-two
+           slot count so only O(log max_batch) step programs ever compile.
+           Padded slots write into the trash block and are ignored.
+  leave  — a sequence that samples end-of-turn (or exhausts its budget)
+           resolves its future and frees its pages immediately, making
+           room for the next admission at the same boundary.
+
+Determinism contract: per-request RNG keys are split off the engine RNG at
+*submission* (same order ⇒ same keys as serial ``generate_ids`` calls),
+and every per-sequence op in the batched path — sampling included — is
+arithmetic-identical to the one-shot path, so sampled ids and log-probs
+are bit-identical to ``Engine.generate_ids`` (tests/test_continuous_
+batching.py).  Policy-version tags are captured at submission; weight
+swaps mid-flight take effect at the next step boundary (stale-policy
+semantics are the trainer's TIS problem, paper §2.2).
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+from collections import deque
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import tokenizer as tok
+from repro.inference.paged_kv import PagedKVCache, cdiv
+from repro.models import registry as M
+
+
+@dataclass
+class SchedRequest:
+    """One generation request travelling through the scheduler."""
+    prompt_ids: List[int]
+    max_new: int
+    key: Any                 # [2] u32 PRNG key, split at submission
+    version: int             # policy version at submission
+    bucket: int              # prompt bucket (same as the one-shot path)
+    future: Future = field(default_factory=Future)
+    # -- runtime state (owned by the scheduler thread) -----------------------
+    seq_id: int = -1
+    rng: Any = None          # carried per-sequence key chain
+    last_token: int = -1
+    out_ids: List[int] = field(default_factory=list)
+    out_lps: List[float] = field(default_factory=list)
+
+
+class ContinuousBatchingScheduler:
+    def __init__(self, engine, *, block_size: int = 16, max_batch: int = 32,
+                 num_blocks: Optional[int] = None):
+        assert M.supports_paged_decode(engine.cfg), (
+            engine.cfg.family, "has no paged decode path")
+        self.engine = engine
+        self.block_size = block_size
+        self.max_batch = max_batch
+        mbs = cdiv(engine.max_len, block_size)
+        self.cache = PagedKVCache(
+            engine.cfg, block_size=block_size, max_len=engine.max_len,
+            num_blocks=num_blocks or 1 + max_batch * mbs)
+        self._queue: Deque[SchedRequest] = deque()
+        self._active: List[SchedRequest] = []
+        self._qlock = threading.Lock()
+        self._wake = threading.Event()
+        self._stop = threading.Event()
+        self._seq_ids = itertools.count()
+        self._prefill_cache: Dict[int, Any] = {}
+        self._step_cache: Dict[int, Any] = {}
+        self._zero_key = jax.random.PRNGKey(0)
+        self.metrics: Dict[str, int] = {
+            "submitted": 0, "completed": 0, "joins": 0, "leaves": 0,
+            "steps": 0, "step_slots": 0, "step_active": 0, "peak_batch": 0,
+            "errors": 0,
+        }
+        self._thread = threading.Thread(
+            target=self._loop, name="cbatch-scheduler", daemon=True)
+        self._thread.start()
+
+    # -- public surface -------------------------------------------------------
+    def submit(self, req: SchedRequest) -> Future:
+        with self._qlock:
+            enqueued = not self._stop.is_set()
+            if enqueued:
+                self.metrics["submitted"] += 1
+                self._queue.append(req)
+        if not enqueued:
+            req.future.set_exception(RuntimeError("scheduler closed"))
+            return req.future
+        self._wake.set()
+        if self._stop.is_set():
+            # raced with close(): the scheduler thread's exit drain may have
+            # run before our append — drain again ourselves once it is gone,
+            # so no future is ever left unresolved
+            self._thread.join(timeout=60)
+            self._fail_all(RuntimeError("scheduler closed"))
+        return req.future
+
+    def stats(self) -> Dict[str, Any]:
+        out = dict(self.metrics)
+        steps = max(1, out["steps"])
+        out["mean_batch"] = round(out["step_active"] / steps, 3)
+        out["batch_occupancy"] = round(
+            out["step_active"] / max(1, out["step_slots"]), 3)
+        out.update(self.cache.stats())
+        with self._qlock:
+            out["queued"] = len(self._queue)
+        out["in_flight"] = len(self._active)
+        return out
+
+    def close(self) -> None:
+        """Stop the scheduler thread.  Draining (failing any still-pending
+        futures) happens ON the scheduler thread as it exits, so close never
+        mutates batch state that an in-flight step is using."""
+        self._stop.set()
+        self._wake.set()
+        self._thread.join(timeout=60)
+
+    # -- scheduler thread -----------------------------------------------------
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                self._admit_pending()
+                if not self._active:
+                    self._wake.wait(timeout=0.05)
+                    self._wake.clear()
+                    continue
+                self._step_once()
+            except Exception as e:  # noqa: BLE001 — fail loudly, stay alive
+                self.metrics["errors"] += 1
+                self._fail_all(e)
+        self._fail_all(RuntimeError("scheduler closed"))
+
+    def _fail_all(self, exc: Exception) -> None:
+        with self._qlock:
+            pending = list(self._queue) + list(self._active)
+            self._queue.clear()
+        self._active.clear()
+        for r in pending:
+            if not r.future.done():
+                r.future.set_exception(exc)
+        if pending:
+            # the pools are donated into every step/prefill call, so after a
+            # mid-call failure they may be invalidated — rebuild fresh so the
+            # scheduler stays usable for new submissions
+            self.cache = PagedKVCache(
+                self.engine.cfg, block_size=self.block_size,
+                max_len=self.cache.max_len, num_blocks=self.cache.num_blocks)
+
+    # -- join: prefill + first token -----------------------------------------
+    def _admit_pending(self) -> None:
+        while len(self._active) < self.max_batch:
+            with self._qlock:
+                req = self._queue[0] if self._queue else None
+            if req is None:
+                return
+            plen = len(req.prompt_ids)
+            seq_id = next(self._seq_ids)
+            total = min(plen + req.max_new, self.engine.max_len)
+            if not self.cache.admit(seq_id, plen, total):
+                if (not self._active and self.cache.allocator.available()
+                        == self.cache.num_blocks - 1):
+                    # pool is idle and the request STILL does not fit: it
+                    # can never be admitted — fail it instead of wedging
+                    with self._qlock:
+                        self._queue.popleft()
+                    req.future.set_exception(ValueError(
+                        f"request needs more KV blocks than the pool has "
+                        f"(prompt {plen} + max_new {req.max_new}, "
+                        f"{self.cache.num_blocks} blocks of "
+                        f"{self.block_size})"))
+                    continue
+                return          # pool full — retry after the next leave
+            with self._qlock:
+                self._queue.popleft()
+            req.seq_id = seq_id
+            try:
+                self._prefill(req)
+            except Exception as e:  # noqa: BLE001 — fail THIS request only:
+                # it is in neither _queue nor _active here, so _fail_all
+                # would never resolve its future and the submitter would hang
+                self.metrics["errors"] += 1
+                try:
+                    self.cache.free(seq_id)
+                except Exception:  # noqa: BLE001
+                    pass
+                if not req.future.done():
+                    req.future.set_exception(e)
+
+    def _prefill(self, req: SchedRequest) -> None:
+        eng = self.engine
+        plen, bucket = len(req.prompt_ids), req.bucket
+        fn = self._prefill_cache.get(bucket)
+        if fn is None:
+            fn = self._make_prefill(bucket)
+            self._prefill_cache[bucket] = fn
+        prompt = jnp.zeros((bucket,), jnp.int32).at[:plen].set(
+            jnp.asarray(req.prompt_ids, jnp.int32))
+        with eng._lock:
+            params = eng.params
+        tok0, lp0, rng, ks, vs = fn(params, prompt, jnp.int32(plen), req.key)
+        self.cache.write_prefill(req.seq_id, ks, vs)
+        req.rng = rng
+        t = int(tok0)
+        req.out_ids.append(t)
+        req.out_lps.append(float(lp0))
+        req.last_token = t
+        self.metrics["joins"] += 1
+        if t == tok.END_OF_TURN or req.max_new <= 1:
+            self._retire(req)
+        else:
+            self._active.append(req)
+            self.metrics["peak_batch"] = max(self.metrics["peak_batch"],
+                                             len(self._active))
+
+    def _make_prefill(self, bucket: int):
+        from repro.inference.engine import sample_logits_rows, sample_token
+        from repro.models import transformer as TF
+        eng = self.engine
+        cfg = eng.cfg
+        sample = partial(sample_token, temperature=eng.temperature,
+                         top_k=eng.top_k)
+
+        def prefill(params, prompt, plen, key):
+            pos = jnp.arange(bucket, dtype=jnp.int32)[None]
+            hidden_all, cache = TF.prefill(
+                cfg, params, {"tokens": prompt[None], "positions": pos},
+                bucket)
+            hidden = jax.lax.dynamic_slice_in_dim(
+                hidden_all, plen - 1, 1, axis=1)
+            rng, k1 = jax.random.split(key)
+            # shared barriered head + vmapped row form: identical sampling-
+            # chain lowering across the one-shot loop, this prefill, and the
+            # batched step keeps sampled ids/log-probs bit-identical
+            logits = sample_logits_rows(cfg, params, hidden[:, -1])
+            nxt, lp = jax.vmap(sample)(logits, k1[None])
+            return nxt[0], lp[0], rng, cache["k"][:, 0], cache["v"][:, 0]
+
+        return jax.jit(prefill)
+
+    # -- step: advance every in-flight sequence one token --------------------
+    def _step_once(self) -> None:
+        acts = self._active
+        n = len(acts)
+        Bb = 1
+        while Bb < n:
+            Bb *= 2
+        maxnb = self.cache.max_blocks_per_seq
+        tokens = np.zeros((Bb,), np.int32)
+        positions = np.zeros((Bb,), np.int32)
+        bts = np.zeros((Bb, maxnb), np.int32)
+        rngs = []
+        for i, r in enumerate(acts):
+            p_feed = len(r.prompt_ids) + len(r.out_ids) - 1
+            self.cache.ensure(r.seq_id, p_feed)
+            tokens[i] = r.last_token
+            positions[i] = p_feed
+            bts[i] = self.cache.block_table_row(r.seq_id)
+            rngs.append(r.rng)
+        rngs.extend([self._zero_key] * (Bb - n))
+
+        fn = self._step_cache.get(Bb)
+        if fn is None:
+            fn = self._make_step(Bb)
+            self._step_cache[Bb] = fn
+        with self.engine._lock:
+            params = self.engine.params
+        self.cache.kp, self.cache.vp, nxt, lps, rngs2 = fn(
+            params, self.cache.kp, self.cache.vp,
+            jnp.asarray(tokens), jnp.asarray(positions), jnp.asarray(bts),
+            jnp.stack(rngs))
+        nxt = np.asarray(nxt)
+        lps = np.asarray(lps)
+
+        self.metrics["steps"] += 1
+        self.metrics["step_slots"] += Bb
+        self.metrics["step_active"] += n
+        finished = []
+        for i, r in enumerate(acts):
+            t = int(nxt[i])
+            r.out_ids.append(t)
+            r.out_lps.append(float(lps[i]))
+            r.last_token = t
+            r.rng = rngs2[i]
+            if t == tok.END_OF_TURN or len(r.out_ids) >= r.max_new:
+                finished.append(r)
+        for r in finished:
+            self._active.remove(r)
+            self._retire(r)
+
+    def _make_step(self, Bb: int):
+        from repro.inference.engine import sample_logits_rows, sample_token
+        eng = self.engine
+        cfg = eng.cfg
+        sample = partial(sample_token, temperature=eng.temperature,
+                         top_k=eng.top_k)
+
+        def step(params, kp, vp, tokens, positions, bts, rngs):
+            hidden, pools = M.forward_decode_paged(
+                cfg, params, {"k": kp, "v": vp},
+                {"tokens": tokens[:, None], "positions": positions,
+                 "block_tables": bts})
+            logits = sample_logits_rows(cfg, params, hidden[:, -1])
+
+            def samp(lg, r):
+                r2, k1 = jax.random.split(r)
+                nxt, lp = sample(lg, k1)
+                return nxt, lp, r2
+
+            nxt, lp, r2 = jax.vmap(samp)(logits, rngs)
+            return pools["k"], pools["v"], nxt, lp, r2
+
+        return jax.jit(step, donate_argnums=(1, 2))
+
+    # -- leave ----------------------------------------------------------------
+    def _retire(self, req: SchedRequest) -> None:
+        self.cache.free(req.seq_id)
+        self.metrics["leaves"] += 1
+        self.metrics["completed"] += 1
+        finish = ("stop" if req.out_ids and req.out_ids[-1] == tok.END_OF_TURN
+                  else "length")
+        self.engine._resolve(req, finish)

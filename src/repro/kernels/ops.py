@@ -77,6 +77,33 @@ def decode_attention(q, k, v, idx_kv, q_pos, *, window=0, seg_kv=None,
                                    seg_kv=seg_kv, seg_q=seg_q)
 
 
+def paged_decode_attention(q, k_pool, v_pool, block_tables, q_pos, *,
+                           window=0, impl: Optional[str] = None):
+    """Single-token attention against a PAGED KV cache (continuous-batching
+    decode).  q [B,1,H,D]; k_pool/v_pool [NB, bs, Hkv, D]; block_tables
+    [B, maxnb] i32 (token-order pages, trash-padded); q_pos [B].
+
+    The xla fallback (``ref.paged_attention_reference``) gathers pages and
+    runs the same masked softmax as the contiguous decode path — it is
+    arithmetic-identical to ``decode_attention``, which is what makes the
+    scheduler bit-exact vs. the one-shot engine path.  Because the one-shot
+    path's decode_attention ALWAYS uses the xla implementation, "auto" here
+    resolves to the reference on every backend (TPU included) — the Pallas
+    kernel must be opted into explicitly (impl= or REPRO_KERNEL_IMPL=
+    pallas), accepting that the online-softmax kernel breaks bit-exactness
+    with the one-shot path.  It also needs a static window; traced windows
+    fall back to the reference.
+    """
+    impl = impl or os.environ.get("REPRO_KERNEL_IMPL", "auto")
+    if impl == "pallas" and isinstance(window, int):
+        from repro.kernels import paged_attention as PA
+        return PA.paged_attention_pallas(q, k_pool, v_pool, block_tables,
+                                         q_pos, window=window,
+                                         interpret=_interpret())
+    return REF.paged_attention_reference(q, k_pool, v_pool, block_tables,
+                                         q_pos, window=window)
+
+
 # ---------------------------------------------------------------------------
 # Mamba-2 SSD
 # ---------------------------------------------------------------------------

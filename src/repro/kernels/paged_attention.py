@@ -1,0 +1,124 @@
+"""Pallas TPU paged-attention decode kernel (single query token per sequence).
+
+The KV cache is a pool of fixed-size blocks shared by all sequences
+(``paged_kv.PagedKVCache``); each sequence's pages are named by a block
+table.  The kernel uses the canonical TPU paged-attention schedule: the
+block table is a *scalar-prefetch* operand, so the page id is known before
+the kernel body runs and the Pallas pipeline DMAs the right page
+HBM→VMEM via the BlockSpec ``index_map`` — the kernel body never issues a
+manual copy and no gathered [B, S, Hkv, D] tensor ever exists.
+
+Grid: (batch, kv_head, page).  The page dimension is innermost and carries
+the online-softmax state (m, s, acc) in VMEM scratch, exactly like the
+flash kernel next door.  Pages whose positions all exceed the query
+position (unwritten tail / trash pages for padded batch slots) contribute
+exact zeros.
+
+The pure-jnp oracle is ``ref.paged_attention_reference`` (gather + one
+dense masked softmax); ``ops.paged_decode_attention`` picks between them.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(bt_ref, qpos_ref, win_ref,        # scalar prefetch (SMEM)
+            q_ref, k_ref, v_ref,              # VMEM blocks
+            o_ref,                            # [1, 1, G, D] output block
+            m_scr, s_scr, acc_scr,            # online-softmax carries
+            *, bs: int, nb: int, scale: float):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        s_scr[...] = jnp.zeros_like(s_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    qg = q_ref[0, 0]                          # [G, D]
+    k = k_ref[0, :, 0, :]                     # [bs, D]
+    v = v_ref[0, :, 0, :]
+    q_pos = qpos_ref[b]
+    win = win_ref[0]
+
+    scores = jax.lax.dot_general(
+        qg.astype(jnp.float32), k.astype(jnp.float32),
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale        # [G, bs]
+
+    # token position of each slot in this page
+    pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    ok = pos <= q_pos
+    ok &= jnp.where(win > 0, pos > (q_pos - win), True)
+    scores = jnp.where(ok, scores, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new[:, None])
+    s_scr[...] = s_scr[...] * alpha + jnp.sum(p, axis=-1)
+    pv = jax.lax.dot_general(
+        p, v.astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                # [G, D]
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + pv
+    m_scr[...] = m_new
+
+    @pl.when(j == nb - 1)
+    def _finalize():
+        s = s_scr[...]
+        s = jnp.where(s == 0.0, 1.0, s)
+        o_ref[0, 0] = (acc_scr[...] / s[:, None]).astype(o_ref.dtype)
+
+
+def paged_attention_pallas(q, k_pool, v_pool, block_tables, q_pos, *,
+                           window=0, interpret: bool = False):
+    """q [B,1,H,D]; k_pool/v_pool [NB, bs, Hkv, D]; block_tables [B, maxnb]
+    i32; q_pos [B] i32.  ``window`` must be a Python int here (traced
+    windows take the xla path; ops handles the choice)."""
+    B, _, H, D = q.shape
+    NB, bs, Hkv, _ = k_pool.shape
+    nb = block_tables.shape[1]
+    G = H // Hkv
+    scale = 1.0 / math.sqrt(D)
+
+    qg = q.reshape(B, Hkv, G, D)
+    bt = block_tables.astype(jnp.int32)
+    qp = q_pos.astype(jnp.int32)
+    win = jnp.asarray([int(window)], jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,                 # block table, q_pos, window
+        grid=(B, Hkv, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, j, bt, qp, w: (b, h, 0, 0)),
+            # the paged fetch: page id comes from the prefetched block table
+            pl.BlockSpec((1, bs, 1, D),
+                         lambda b, h, j, bt, qp, w: (bt[b, j], 0, h, 0)),
+            pl.BlockSpec((1, bs, 1, D),
+                         lambda b, h, j, bt, qp, w: (bt[b, j], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda b, h, j, bt, qp, w: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    kern = functools.partial(_kernel, bs=bs, nb=nb, scale=scale)
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        interpret=interpret,
+    )(bt, qp, win, qg, k_pool, v_pool)
+    return out.reshape(B, 1, H, D)

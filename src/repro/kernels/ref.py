@@ -45,6 +45,48 @@ def causal_bias(Lq: int, Lkv: int, window: int = 0, offset: int = 0):
     return jnp.where(ok, 0.0, -1e30).astype(jnp.float32)[None, None]
 
 
+def paged_attention_reference(q, k_pool, v_pool, block_tables, q_pos, *,
+                              window=0, scale: Optional[float] = None):
+    """Paged single-token decode attention — the XLA fallback/oracle for the
+    Pallas paged-attention kernel and the continuous-batching scheduler.
+
+    q [B,1,H,D]; k_pool/v_pool [NB, bs, Hkv, D] (shared block pools);
+    block_tables [B, maxnb] i32 (a sequence's blocks in token order, unused
+    entries pointing at the trash block); q_pos [B] = position of the new
+    token.  Gathered slot j corresponds to token position j; slots with
+    j > q_pos (unwritten tail / trash pages) are masked.
+
+    NOTE: the masked-softmax arithmetic below must stay op-for-op identical
+    to ``xla_flash.decode_attention_xla`` — the scheduler's bit-exact
+    equivalence with the one-shot ``Engine.generate_ids`` path (see
+    tests/test_continuous_batching.py) relies on masked slots contributing
+    exact zeros to the same reduction, so gathering through pages changes
+    nothing downstream.
+    """
+    B, _, H, D = q.shape
+    NB, bs, Hkv, _ = k_pool.shape
+    maxnb = block_tables.shape[1]
+    S = maxnb * bs
+    G = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    k = k_pool[block_tables].reshape(B, S, Hkv, D)
+    v = v_pool[block_tables].reshape(B, S, Hkv, D)
+    idx_kv = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    qg = q.reshape(B, Hkv, G, D)
+    scores = jnp.einsum("bhgd,bkhd->bhgk", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    ok = idx_kv <= q_pos[:, None]
+    win = jnp.asarray(window, jnp.int32)
+    ok &= jnp.where(win > 0, idx_kv > (q_pos[:, None] - win), True)
+    scores = scores + jnp.where(ok, 0.0, -1e30)[:, None, None, :]
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    s = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhgk,bkhd->bhgd", (p / s).astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
 # ---------------------------------------------------------------------------
 # SSD (Mamba-2 state-space duality)
 # ---------------------------------------------------------------------------

@@ -291,6 +291,27 @@ def decode_attention_block(cfg: ModelConfig, p: Params, x, sin, cos, lk, lv,
     return jnp.einsum("blhk,hkd->bld", out, p["wo"].astype(x.dtype))
 
 
+def paged_decode_attention_block(cfg: ModelConfig, p: Params, x, sin, cos,
+                                 k_pool, v_pool, block_tables, positions, *,
+                                 window=0):
+    """One-new-token attention against a PAGED KV cache; the new kv is
+    already written at each sequence's position.  x [B,1,d]; k_pool/v_pool
+    [NB, bs, Hkv, D]; block_tables [B, maxnb]; positions [B].  Returns
+    [B,1,d].  Mirrors decode_attention_block op-for-op so the continuous-
+    batching path stays bit-identical to the contiguous one."""
+    from repro.kernels import ops as OPS
+    q = jnp.einsum("bld,dhk->blhk", x, p["wq"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+    rotary_dim = cfg.head_dim // 2 if cfg.rope_style == "half" else cfg.head_dim
+    if sin is not None:
+        q = apply_rotary(q, sin, cos, rotary_dim)
+    out = OPS.paged_decode_attention(
+        q, k_pool.astype(x.dtype), v_pool.astype(x.dtype),
+        block_tables, positions.astype(jnp.int32), window=window)
+    return jnp.einsum("blhk,hkd->bld", out, p["wo"].astype(x.dtype))
+
+
 def project_kv(cfg: ModelConfig, p: Params, x, sin, cos):
     """k/v projection + rope only (decode: project the new token's kv)."""
     k = jnp.einsum("bld,dhk->blhk", x, p["wk"].astype(x.dtype))

@@ -50,6 +50,21 @@ def forward_decode(cfg: ModelConfig, params, cache, batch):
     return get_model(cfg).forward_decode(cfg, params, cache, batch)
 
 
+def supports_paged_decode(cfg: ModelConfig) -> bool:
+    return hasattr(get_model(cfg), "forward_decode_paged")
+
+
+def forward_decode_paged(cfg: ModelConfig, params, pools, batch):
+    """Paged-KV decode step (continuous batching); transformer families
+    only — SSM/hybrid/encdec state is not paged (their recurrent state is
+    O(1) per sequence already) and falls back to the serial engine path."""
+    model = get_model(cfg)
+    if not hasattr(model, "forward_decode_paged"):
+        raise NotImplementedError(
+            f"family {cfg.family!r} has no paged decode path")
+    return model.forward_decode_paged(cfg, params, pools, batch)
+
+
 # ---------------------------------------------------------------------------
 # dummy batches (smoke tests / local runs; the dry-run uses launch/specs.py
 # ShapeDtypeStructs of the same trees)

@@ -417,3 +417,87 @@ def forward_decode(cfg: ModelConfig, params, cache, batch):
 
     x = C.apply_norm(cfg, params["final_norm"], x)
     return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# paged decode (continuous batching: one token per sequence, per-sequence
+# positions, block-table-indexed KV pools)
+# ---------------------------------------------------------------------------
+
+def forward_decode_paged(cfg: ModelConfig, params, pools, batch):
+    """One decode step for a batch of independent sequences over paged KV.
+
+    pools: {"k": [L, NB, bs, Hkv, D], "v": ...} shared block pools.
+    batch: tokens [B,1] i32, positions [B] i32 (per-sequence write/query
+    position), block_tables [B, maxnb] i32 (pages in token order, unused
+    entries = trash block 0 — padded batch slots write there harmlessly).
+
+    Returns (hidden [B,1,d], new pools).  Per-sequence arithmetic is
+    identical to forward_decode on a contiguous cache (see
+    tests/test_continuous_batching.py::test_bit_identical_to_one_shot).
+    """
+    tokens, positions = batch["tokens"], batch["positions"].astype(jnp.int32)
+    bt = batch["block_tables"].astype(jnp.int32)
+    bs = pools["k"].shape[2]
+    x = C.embed_tokens(cfg, params["embed"], tokens)
+    B = x.shape[0]
+
+    pos = positions[:, None]                       # [B, 1]
+    if cfg.rope_style == "mrope":
+        pos = jnp.broadcast_to(pos[..., None], (B, 1, 3))
+    tables = _rope_tables(cfg, pos)
+    flags = layer_flags(cfg)
+
+    blk = jnp.take_along_axis(bt, (positions // bs)[:, None], axis=1)[:, 0]
+    slot = positions % bs
+
+    def decode_layer(x, lp, pk, pv, is_global):
+        sin, cos = _select_rope(tables, is_global)
+        h = C.apply_norm(cfg, lp["ln1"], x)
+        k_new, v_new = C.project_kv(cfg, lp["attn"], h, sin, cos)
+        pk = pk.at[blk, slot].set(k_new[:, 0].astype(pk.dtype))
+        pv = pv.at[blk, slot].set(v_new[:, 0].astype(pv.dtype))
+        attn = C.paged_decode_attention_block(
+            cfg, lp["attn"], h, sin, cos, pk, pv, bt, positions,
+            window=_layer_window(cfg, is_global))
+        x = x + attn
+        h = C.apply_norm(cfg, lp["ln2"], x)
+        if "moe" in lp:
+            y, _ = C.moe_block(cfg, lp["moe"], h)
+        else:
+            y = C.mlp_block(cfg, lp["mlp"], h)
+        return x + y, pk, pv
+
+    if cfg.num_experts and cfg.moe_every > 1:
+        k = cfg.moe_every
+        G = cfg.num_layers // k
+        gflags = flags.reshape(G, k)
+        pk = pools["k"].reshape(G, k, *pools["k"].shape[1:])
+        pv = pools["v"].reshape(G, k, *pools["v"].shape[1:])
+
+        def gbody(x, scanned):
+            gp, gk, gv, gf = scanned
+            nk, nv = [], []
+            for j in range(k):
+                lp = (jax.tree.map(lambda a: a[j], gp["pre"])
+                      if j < k - 1 else gp["last"])
+                x, k2, v2 = decode_layer(x, lp, gk[j], gv[j], gf[j])
+                nk.append(k2)
+                nv.append(v2)
+            return x, (jnp.stack(nk), jnp.stack(nv))
+
+        x, (nk, nv) = jax.lax.scan(gbody, x, (params["layers"], pk, pv, gflags))
+        new_pools = {"k": nk.reshape(pools["k"].shape),
+                     "v": nv.reshape(pools["v"].shape)}
+    else:
+        def body(x, scanned):
+            lp, pk, pv, is_global = scanned
+            x, pk, pv = decode_layer(x, lp, pk, pv, is_global)
+            return x, (pk, pv)
+
+        x, (nk, nv) = jax.lax.scan(
+            body, x, (params["layers"], pools["k"], pools["v"], flags))
+        new_pools = {"k": nk, "v": nv}
+
+    x = C.apply_norm(cfg, params["final_norm"], x)
+    return x, new_pools

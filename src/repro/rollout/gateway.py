@@ -170,7 +170,21 @@ class GatewayNode:
             "stage_workers": workers,
             "utilization": sum(busy.values()) / total_workers,
             "pool": self.pool.stats() if self.pool is not None else None,
+            "backend": self._backend_status(),
             "metrics": dict(self.metrics),
+        }
+
+    def _backend_status(self) -> Optional[Dict[str, Any]]:
+        """Inference-backend telemetry (engine token counters + continuous-
+        batching scheduler occupancy) when the backend exposes them."""
+        eng = self.proxy.backend
+        stats = getattr(eng, "stats", None)
+        sched = getattr(eng, "scheduler_stats", None)
+        if stats is None and sched is None:
+            return None
+        return {
+            "stats": dict(stats) if isinstance(stats, dict) else None,
+            "scheduler": sched() if callable(sched) else None,
         }
 
     def in_flight_sessions(self) -> List[Session]:

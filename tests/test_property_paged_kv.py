@@ -1,0 +1,115 @@
+"""Property-based tests (hypothesis) on the paged-KV cache that backs the
+continuous-batching scheduler:
+
+  * the block allocator never double-allocates a block, and ``free``
+    returns exactly the blocks that were allocated,
+  * arbitrary join/append/leave interleavings through the real page
+    mapping preserve every live sequence's token order and never share a
+    page between sequences.
+"""
+from __future__ import annotations
+
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.configs import get_smoke_config  # noqa: E402
+from repro.inference import BlockAllocator, PagedKVCache  # noqa: E402
+
+CFG = get_smoke_config("qwen3-32b").replace(vocab_size=512)
+
+
+# one op: (action selector, prompt blocks, decode headroom)
+op_st = st.tuples(st.integers(0, 5), st.integers(1, 3), st.integers(0, 3))
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(op_st, max_size=40))
+def test_allocator_never_double_allocates_and_frees_exactly(ops):
+    alloc = BlockAllocator(num_blocks=12)
+    live: list = []
+    seq_counter = 0
+    expected_owned: dict = {}
+    for action, pb, extra in ops:
+        kind = action % 3
+        if kind == 0:                                   # admit
+            blocks = alloc.admit(seq_counter, pb, pb + extra)
+            if blocks is not None:
+                assert len(blocks) == pb
+                expected_owned[seq_counter] = list(blocks)
+                live.append(seq_counter)
+            seq_counter += 1
+        elif kind == 1 and live:                        # extend
+            seq = live[action % len(live)]
+            if alloc.headroom(seq) > 0:
+                blk = alloc.extend(seq)
+                expected_owned[seq].append(blk)
+        elif kind == 2 and live:                        # leave
+            seq = live.pop(action % len(live))
+            freed = alloc.free(seq)
+            assert freed == expected_owned.pop(seq), \
+                "free must return exactly what was allocated"
+        alloc.check()                                   # no double allocation
+        for seq in live:
+            assert alloc.owned(seq) == expected_owned[seq]
+    for seq in live:
+        alloc.free(seq)
+    alloc.check()
+    assert alloc.num_free() == alloc.num_blocks - len(alloc.reserved)
+
+
+# one event per sequence-slot: (slot 0-2, prompt len, tokens to append, leave?)
+join_st = st.tuples(st.integers(0, 2), st.integers(1, 9), st.integers(0, 6),
+                    st.booleans())
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(join_st, max_size=12))
+def test_join_leave_interleavings_preserve_token_order(events):
+    """Arbitrary join/append/leave interleavings through the real page
+    mapping: every live sequence's pages, read back in block-table order,
+    yield exactly its tokens in write order, and no page is shared."""
+    cache = PagedKVCache(CFG, block_size=4, num_blocks=16, max_len=24)
+    ledger: dict = {}          # (block, slot) -> (seq, token index)
+    live: dict = {}            # slot -> (seq_id, tokens written)
+    seq_counter = 0
+
+    def write(seq, pos):
+        cache.ensure(seq, pos)
+        ledger[cache.slot_of(seq, pos)] = (seq, pos)
+
+    def verify():
+        for seq, n in live.values():
+            got = [ledger[cache.slot_of(seq, p)] for p in range(n)]
+            assert got == [(seq, p) for p in range(n)], \
+                "pages must replay the sequence's tokens in order"
+        cache.allocator.check()
+
+    for slot, plen, appends, leave in events:
+        if slot not in live:
+            total = min(plen + appends + 1, cache.max_len)
+            if not cache.admit(seq_counter, plen, total):
+                continue
+            for p in range(plen):
+                write(seq_counter, p)
+            live[slot] = (seq_counter, plen)
+            seq_counter += 1
+        seq, n = live[slot]
+        budget = min(n + appends, cache.max_len,
+                     len(cache.allocator.owned(seq)) * cache.block_size
+                     + cache.allocator.headroom(seq) * cache.block_size)
+        for p in range(n, budget):
+            write(seq, p)
+        live[slot] = (seq, budget)
+        verify()
+        if leave:
+            cache.free(seq)
+            del live[slot]
+            verify()
+    for slot in list(live):
+        cache.free(live.pop(slot)[0])
+    cache.allocator.check()
+
+
