@@ -79,6 +79,11 @@ def run_mode(mode: str, concurrency: int, *, completions: int, max_new: int,
                     max_batch=max_batch, block_size=16)
     try:
         _workload(engine, concurrency, 1, max_new)   # warmup: compile paths
+        sched = engine.scheduler
+        if sched is not None:
+            sched.prewarm()     # every pow-2 step program, not just the Bb
+            # sizes the warmup's join dynamics happened to reach — compile
+            # time must not leak into the measured phase
         t0 = time.perf_counter()
         tokens = _workload(engine, concurrency, completions, max_new)
         wall = time.perf_counter() - t0
@@ -93,6 +98,14 @@ def run_mode(mode: str, concurrency: int, *, completions: int, max_new: int,
                            ("steps", "mean_batch", "batch_occupancy",
                             "peak_batch", "joins", "leaves")}
                           if sched else None),
+            # prefix-cache telemetry (chat-template headers overlap even
+            # across unrelated sessions; multi-turn reuse is measured by
+            # benchmarks/bench_prefix_cache.py)
+            "prefix": ({k: sched[k] for k in
+                        ("prefix_hits", "prefix_queries", "prefix_hit_rate",
+                         "prefix_tokens_saved", "prefill_tokens",
+                         "cached_blocks", "evictions")}
+                       if sched else None),
         }
     finally:
         engine.close()

@@ -9,6 +9,9 @@ Sections:
   bench_continuous_batching — one-shot vs continuous-batching engine
                        tokens/sec at 1/8/32 sessions (§2.3); BENCH json to
                        results/bench_continuous_batching.json
+  bench_prefix_cache — prefix-cached vs cold prefill on a 4-turn
+                       conversation workload (§2.3 prefix reuse); BENCH
+                       json to results/bench_prefix_cache.json
   fig5_utilization   — per_request vs prefix_merging trainer load (Fig. 5b)
   table1_rl          — GRPO reward climb across 4 harnesses (Table 1/Fig. 6)
   table2_offline     — offline SFT accept/reject generation (Table 2)
@@ -48,6 +51,11 @@ def main(argv=None):
     print("== bench_continuous_batching (one-shot vs continuous engine)")
     from benchmarks import bench_continuous_batching
     bench_continuous_batching.main(["--dry-run"] if args.fast else [])
+
+    print("=" * 72)
+    print("== bench_prefix_cache (multi-turn conversation prefill reuse)")
+    from benchmarks import bench_prefix_cache
+    bench_prefix_cache.main(["--dry-run"] if args.fast else [])
 
     print("=" * 72)
     print("== fig5_utilization")

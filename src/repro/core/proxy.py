@@ -49,6 +49,9 @@ class ProxyGateway:
         self.backend = backend
         self.model_name = model_name
         self._sessions: Dict[str, CompletionSession] = {}
+        self._prefix: Dict[str, Dict[str, int]] = {}   # per-session hit stats
+        self._prefix_total = {"requests": 0, "prompt_tokens": 0,
+                              "cached_tokens": 0}
         self._lock = threading.Lock()
 
     # -- session registry ---------------------------------------------------
@@ -65,6 +68,32 @@ class ProxyGateway:
     def delete_session(self, session_id: str) -> None:
         """Best-effort cleanup after a terminal result (paper §A.5)."""
         self.pop_session(session_id)
+        with self._lock:
+            self._prefix.pop(session_id, None)   # aggregate totals persist
+
+    # -- prefix-cache telemetry ----------------------------------------------
+    def _record_prefix(self, session_id: str, prompt_tokens: int,
+                       cached_tokens: int) -> None:
+        with self._lock:
+            st = self._prefix.setdefault(session_id, {
+                "requests": 0, "prompt_tokens": 0, "cached_tokens": 0})
+            for d in (st, self._prefix_total):
+                d["requests"] += 1
+                d["prompt_tokens"] += prompt_tokens
+                d["cached_tokens"] += cached_tokens
+
+    def prefix_stats(self, session_id: Optional[str] = None) -> Dict[str, Any]:
+        """Per-session (or aggregate) prefix-cache hit telemetry: multi-turn
+        harness sessions re-send their whole conversation on every call, so
+        ``cached_tokens / prompt_tokens`` is the fraction of prompt prefill
+        the backend never recomputed (paper §2.3)."""
+        with self._lock:
+            st = (dict(self._prefix.get(session_id, {
+                "requests": 0, "prompt_tokens": 0, "cached_tokens": 0}))
+                if session_id is not None else dict(self._prefix_total))
+        st["hit_fraction"] = round(
+            st["cached_tokens"] / max(1, st["prompt_tokens"]), 3)
+        return st
 
     # -- request handling ----------------------------------------------------
     def handle(self, path: str, body: Dict[str, Any],
@@ -106,6 +135,9 @@ class ProxyGateway:
             # the version pinned at submission inside the backend — TIS in
             # the trainer consumes this to correct for mid-flight swaps
             rec.metadata["policy_version"] = result["policy_version"]
+        cached = int(result.get("cached_tokens", 0))
+        rec.metadata["cached_prompt_tokens"] = cached
+        self._record_prefix(session_id, len(rec.prompt_ids), cached)
         self.session(session_id).append(rec)
 
         usage = result.get("usage", {

@@ -89,7 +89,9 @@ class Engine:
                  temperature: float = 1.0, top_k: int = 0,
                  model_name: str = "policy", serial: bool = False,
                  block_size: int = 16, max_batch: int = 32,
-                 num_blocks: Optional[int] = None):
+                 num_blocks: Optional[int] = None, prefix_cache: bool = True,
+                 prefill_chunk: int = 64,
+                 max_cached_blocks: Optional[int] = None):
         assert cfg.vocab_size >= tok.VOCAB_SIZE, (
             "engine models must cover the tokenizer vocab")
         self.cfg = cfg
@@ -110,7 +112,10 @@ class Engine:
         self._scheduler = None
         self._closed = False
         self._sched_opts = dict(block_size=block_size, max_batch=max_batch,
-                                num_blocks=num_blocks)
+                                num_blocks=num_blocks,
+                                prefix_cache=prefix_cache,
+                                prefill_chunk=prefill_chunk,
+                                max_cached_blocks=max_cached_blocks)
         self.stats = {"requests": 0, "prompt_tokens": 0, "sampled_tokens": 0}
 
     # -- async weight updates -------------------------------------------------
@@ -127,7 +132,8 @@ class Engine:
         """The continuous-batching scheduler (lazily started), or None when
         serial mode is forced, the engine is closed, or the model family has
         no paged decode."""
-        if self.serial or not M.supports_paged_decode(self.cfg):
+        if (self.serial or not M.supports_paged_decode(self.cfg)
+                or not M.supports_chunked_prefill(self.cfg)):
             return None
         with self._sched_lock:
             if self._closed:
@@ -304,12 +310,13 @@ class Engine:
     def _resolve(self, req, finish: str) -> None:
         """Scheduler callback: build the result dict and resolve the future."""
         result = self._build_result(
-            req.prompt_ids, req.out_ids, req.out_lps, finish, req.version)
+            req.prompt_ids, req.out_ids, req.out_lps, finish, req.version,
+            cached_tokens=req.cached_tokens)
         if not req.future.done():      # caller may have cancelled
             req.future.set_result(result)
 
     def _build_result(self, prompt_ids, ids, lps, finish: str,
-                      version: int) -> Dict[str, Any]:
+                      version: int, cached_tokens: int = 0) -> Dict[str, Any]:
         content, tool_calls, _closed = tok.parse_sampled(ids)
         message: Dict[str, Any] = {"role": "assistant", "content": content}
         if tool_calls:
@@ -330,4 +337,7 @@ class Engine:
                       "completion_tokens": len(ids),
                       "total_tokens": len(prompt_ids) + len(ids)},
             "policy_version": version,
+            # prompt positions whose KV came from the prefix cache (0 on the
+            # serial path — the cache lives in the batching scheduler only)
+            "cached_tokens": cached_tokens,
         }

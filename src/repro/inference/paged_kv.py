@@ -1,25 +1,37 @@
 """Paged KV cache for the continuous-batching scheduler (paper §2.3).
 
-The cache is a pool of fixed-size blocks shared by every in-flight sequence:
+The cache is a pool of fixed-size blocks shared by every in-flight sequence,
+extended (PR 3) with prefix caching so a request whose prompt shares a
+cached prefix is admitted with only its tail blocks allocated:
 
   * ``BlockAllocator`` — a pure-Python free-list with worst-case admission
-    reservations: a sequence is admitted only when its *entire* generation
-    budget fits, so ``extend`` (one block per crossed block boundary during
-    decode) can never fail mid-flight and no preemption path is needed.
+    reservations AND per-block refcounts: a block may be owned by several
+    sequences at once (shared prompt prefix) and/or pinned by the prefix
+    index.  A sequence is admitted only when its *entire* generation budget
+    fits in free + evictable blocks, so ``extend`` (one block per crossed
+    block boundary during decode) can never fail mid-flight and no
+    preemption path is needed.  When the free list runs dry, ``_take``
+    evicts LRU refcount-0 cached blocks through the eviction hook.
+  * ``PrefixIndex`` — a radix trie over token blocks (node key = the block's
+    ``block_size`` tokens, chained through the parent), mapping cached
+    prompt prefixes to pool blocks.  Only *prefill-computed* blocks are
+    published (decode-written KV is not bit-identical to prefill KV — the
+    normalizing division happens on the other side of the p·v dot), which
+    is exactly what keeps warm admissions bit-exact vs. one-shot prefill.
   * ``PagedKVCache``  — the device pools ``[L, num_blocks, block_size, Hkv,
-    D]`` plus the host-side block tables.  Writes and gathers go through the
-    block table, so a sequence's KV lives in whatever blocks the free list
-    handed out; block 0 is a reserved trash block that absorbs the writes of
-    padded/inactive batch slots.
+    D]`` plus the host-side block tables, prefix matching (full-block
+    sharing + copy-on-write on the first partially-matched block), and
+    hit/eviction telemetry.  Block 0 is a reserved trash block that absorbs
+    the writes of padded/inactive batch slots and prompt-padding garbage.
 
 Everything host-side is deliberately simple Python — it is the subject of
-the hypothesis property tests (no double allocation, exact frees, token
-order preserved under arbitrary join/leave interleavings).
+the hypothesis property tests (no double allocation, refcount == owners +
+cache pins, exact frees, token order preserved under arbitrary
+join/share/CoW/evict interleavings).
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -35,13 +47,20 @@ def cdiv(a: int, b: int) -> int:
 
 
 class BlockAllocator:
-    """Free-list block allocator with admission-time reservations.
+    """Free-list block allocator with refcounts and admission reservations.
 
-    ``admit(seq, prompt_blocks, total_blocks)`` allocates the prompt blocks
-    now and reserves headroom for the remaining ``total - prompt`` decode
-    blocks; ``extend`` consumes that headroom one block at a time.  Because
-    ``available()`` subtracts every live reservation, the sum of worst cases
-    across admitted sequences never exceeds the pool — extend cannot fail.
+    ``admit(seq, prompt_blocks, total_blocks, shared)`` takes shared
+    ownership of ``shared`` (already-cached prefix blocks), allocates the
+    remaining prompt blocks now, and reserves headroom for the remaining
+    ``total - prompt`` decode blocks; ``extend`` consumes that headroom one
+    block at a time.  Because ``available()`` counts free + evictable
+    blocks minus every live reservation, the sum of worst cases across
+    admitted sequences never exceeds the pool — extend cannot fail.
+
+    Refcount model (checked by ``check()``):
+      ref[b] == (#sequences owning b) + (1 if b is cache-pinned)
+    A block is *free* iff ref == 0 (and then it is on the free list); it is
+    *evictable* iff ref == 1 and its only reference is the cache pin.
     """
 
     def __init__(self, num_blocks: int, reserved: Tuple[int, ...] = (TRASH_BLOCK,)):
@@ -52,37 +71,81 @@ class BlockAllocator:
         self._free: List[int] = [b for b in range(num_blocks)
                                  if b not in self.reserved]
         self._owned: Dict[object, List[int]] = {}
+        # number of leading blocks in _owned[seq] taken by sharing (read-only
+        # for that sequence: prefix-cache hits; the CoW copy is NOT shared)
+        self._shared_prefix: Dict[object, int] = {}
         self._headroom: Dict[object, int] = {}
+        self._ref: Dict[int, int] = {}
+        self._pinned: set = set()          # cache-pinned blocks (PrefixIndex)
+        self.evict_hook = None             # () -> bool; frees one pinned block
 
     # -- accounting -----------------------------------------------------------
+    def evictable(self) -> int:
+        """Cached blocks no live sequence references (LRU eviction pool).
+        Snapshots the pin set: telemetry readers (gateway status polls)
+        call this concurrently with the scheduler thread mutating pins."""
+        return sum(1 for b in tuple(self._pinned)
+                   if self._ref.get(b, 0) == 1)
+
     def available(self) -> int:
         """Blocks that can still be promised to a NEW sequence."""
-        return len(self._free) - sum(self._headroom.values())
+        return (len(self._free) + self.evictable()
+                - sum(self._headroom.values()))
 
     def num_free(self) -> int:
         return len(self._free)
 
+    def num_pinned(self) -> int:
+        return len(self._pinned)
+
     def owned(self, seq_id) -> List[int]:
         return list(self._owned.get(seq_id, ()))
 
+    def shared_prefix(self, seq_id) -> int:
+        return self._shared_prefix.get(seq_id, 0)
+
     def headroom(self, seq_id) -> int:
         return self._headroom.get(seq_id, 0)
+
+    def refcount(self, blk: int) -> int:
+        return self._ref.get(blk, 0)
+
+    def is_pinned(self, blk: int) -> bool:
+        return blk in self._pinned
 
     @property
     def live_sequences(self) -> int:
         return len(self._owned)
 
     # -- lifecycle ------------------------------------------------------------
-    def admit(self, seq_id, prompt_blocks: int, total_blocks: int) -> Optional[List[int]]:
-        """Admit a sequence whose whole lifetime needs ``total_blocks``.
-        Returns the prompt blocks, or None when the pool cannot cover the
+    def admit(self, seq_id, prompt_blocks: int, total_blocks: int,
+              shared: Sequence[int] = ()) -> Optional[List[int]]:
+        """Admit a sequence whose whole lifetime needs ``total_blocks``
+        (``prompt_blocks`` of which cover the prompt; the leading
+        ``len(shared)`` come from the prefix cache and are shared, not
+        allocated).  Returns the sequence's prompt blocks (shared +
+        private, in token order), or None when the pool cannot cover the
         worst case right now (caller retries after a leave)."""
         assert seq_id not in self._owned, f"seq {seq_id!r} already admitted"
+        shared = list(shared)
         assert 0 < prompt_blocks <= total_blocks, (prompt_blocks, total_blocks)
-        if self.available() < total_blocks:
+        assert len(shared) < prompt_blocks, "a shared prefix never covers " \
+            "the whole prompt (the last token is always recomputed)"
+        for b in shared:
+            assert self._ref.get(b, 0) >= 1, f"shared block {b} has no owner"
+        # exact accounting: the shared blocks that are currently evictable
+        # leave the evictable pool the moment this sequence takes ownership,
+        # so they cannot also back this (or anyone's) reservation.
+        shared_evictable = sum(1 for b in shared
+                               if b in self._pinned and self._ref[b] == 1)
+        need_new = total_blocks - len(shared)
+        if self.available() - shared_evictable < need_new:
             return None
-        blocks = [self._take() for _ in range(prompt_blocks)]
+        for b in shared:
+            self._ref[b] += 1
+        blocks = shared + [self._take() for _ in range(prompt_blocks - len(shared))]
         self._owned[seq_id] = blocks
+        self._shared_prefix[seq_id] = len(shared)
         self._headroom[seq_id] = total_blocks - prompt_blocks
         return list(blocks)
 
@@ -98,47 +161,235 @@ class BlockAllocator:
         return blk
 
     def free(self, seq_id) -> List[int]:
-        """Release every block the sequence holds (and its reservation).
-        Returns the freed blocks."""
+        """Drop the sequence's references (and its reservation).  Blocks
+        whose refcount reaches zero return to the free list; shared or
+        cache-pinned blocks survive.  Returns the blocks that were owned."""
         blocks = self._owned.pop(seq_id)
+        self._shared_prefix.pop(seq_id, None)
         self._headroom.pop(seq_id)
         for b in blocks:
-            assert b not in self._free, f"double free of block {b}"
-            self._free.append(b)
+            self._ref[b] -= 1
+            if self._ref[b] == 0:
+                del self._ref[b]
+                assert b not in self._free, f"double free of block {b}"
+                self._free.append(b)
         return blocks
 
+    # -- prefix-cache pins ----------------------------------------------------
+    def pin(self, blk: int) -> None:
+        """Cache-pin a block (PrefixIndex published it).  +1 refcount."""
+        assert blk not in self._pinned, f"block {blk} already pinned"
+        assert blk not in self._free, f"cannot pin free block {blk}"
+        self._pinned.add(blk)
+        self._ref[blk] = self._ref.get(blk, 0) + 1
+
+    def unpin(self, blk: int) -> None:
+        """Drop the cache pin (eviction).  A block nobody owns goes free."""
+        assert blk in self._pinned, f"block {blk} not pinned"
+        self._pinned.discard(blk)
+        self._ref[blk] -= 1
+        if self._ref[blk] == 0:
+            del self._ref[blk]
+            self._free.append(blk)
+
     def _take(self) -> int:
+        if not self._free:
+            # NOT an assert: the eviction is a load-bearing side effect
+            # (python -O must not strip the reclaim path)
+            evicted = self.evict_hook is not None and self.evict_hook()
+            if not evicted:
+                raise RuntimeError(
+                    "pool exhausted with nothing evictable — admission "
+                    "reservations should make this impossible")
         blk = self._free.pop()
-        for owner, blocks in self._owned.items():
-            assert blk not in blocks, (
-                f"block {blk} double-allocated (already owned by {owner!r})")
+        assert self._ref.get(blk, 0) == 0, f"free block {blk} has references"
+        self._ref[blk] = 1
         return blk
 
     def check(self) -> None:
-        """Invariant sweep (used by the property tests)."""
-        seen: Dict[int, object] = {}
-        for owner, blocks in self._owned.items():
+        """Invariant sweep (used by the property tests): refcount == number
+        of owning sequences + cache pins; no block both free and referenced;
+        shared blocks form a read-only prefix of each owner's list."""
+        owners: Dict[int, int] = {}
+        for seq, blocks in self._owned.items():
+            assert len(set(blocks)) == len(blocks), (seq, "dup block in seq")
+            sp = self._shared_prefix.get(seq, 0)
+            assert 0 <= sp < max(1, len(blocks)) + 1
             for b in blocks:
-                assert b not in seen, (b, owner, seen[b])
                 assert b not in self.reserved
-                seen[b] = owner
-        for b in self._free:
-            assert b not in seen, (b, "free but owned by", seen[b])
+                owners[b] = owners.get(b, 0) + 1
+        for b in self._pinned:
+            assert b not in self.reserved
+        for b, refs in self._ref.items():
+            expect = owners.get(b, 0) + (1 if b in self._pinned else 0)
+            assert refs == expect, (b, refs, "!=", expect)
+            assert refs > 0, (b, "zero-ref block still tracked")
+            assert b not in self._free, (b, "free but referenced")
+        for b in owners:
+            assert b in self._ref, (b, "owned but not refcounted")
+        for b in self._pinned:
+            assert b in self._ref, (b, "pinned but not refcounted")
         assert len(set(self._free)) == len(self._free), "free-list duplicate"
-        assert len(self._free) + len(seen) + len(self.reserved) == self.num_blocks
+        for b in self._free:
+            assert b not in self._ref and b not in self._pinned
+        assert (len(self._free) + len(self._ref) + len(self.reserved)
+                == self.num_blocks)
+
+
+class _TrieNode:
+    __slots__ = ("block", "tokens", "parent", "children", "tick")
+
+    def __init__(self, block: int, tokens: Tuple[int, ...],
+                 parent: Optional["_TrieNode"]):
+        self.block = block
+        self.tokens = tokens
+        self.parent = parent
+        self.children: Dict[Tuple[int, ...], "_TrieNode"] = {}
+        self.tick = 0
+
+
+class PrefixIndex:
+    """Radix trie over token blocks → cached pool blocks.
+
+    A node's key is the tuple of ``block_size`` tokens it holds, chained
+    through its parent — identical prompt prefixes reach identical nodes.
+    Eviction removes the least-recently-used *leaf* whose block no live
+    sequence references (evicting a parent before its children would break
+    the chain), so a hot conversation's whole prefix stays resident while
+    one-off prompts age out.
+    """
+
+    def __init__(self, allocator: BlockAllocator, block_size: int,
+                 max_cached: Optional[int] = None):
+        self.alloc = allocator
+        self.block_size = block_size
+        self.max_cached = max_cached    # eviction budget (None = pool-bounded)
+        self._root = _TrieNode(-1, (), None)
+        self._by_block: Dict[int, _TrieNode] = {}
+        self._tick = 0
+        self.evictions = 0
+        allocator.evict_hook = self.evict_one
+
+    def __len__(self) -> int:
+        return len(self._by_block)
+
+    def _touch(self, node: _TrieNode) -> None:
+        self._tick += 1
+        node.tick = self._tick
+
+    # -- lookup ---------------------------------------------------------------
+    def match(self, tokens: Sequence[int]) -> Tuple[List[int], int,
+                                                    Optional[int], int]:
+        """Longest cached prefix of ``tokens``, capped at ``len(tokens)-1``
+        (the last token is always recomputed so there is a hidden state to
+        sample from).  Returns ``(shared_blocks, matched_tokens, cow_src,
+        cow_len)``: full blocks to share, the token count they cover, and —
+        when the next cached block partially matches — the block to
+        copy-on-write from plus how many of its leading tokens are valid."""
+        bs = self.block_size
+        max_full = (len(tokens) - 1) // bs       # full blocks ending <= len-1
+        node, shared = self._root, []
+        while len(shared) < max_full:
+            key = tuple(tokens[len(shared) * bs:(len(shared) + 1) * bs])
+            child = node.children.get(key)
+            if child is None:
+                break
+            node = child
+            shared.append(node.block)
+            self._touch(node)
+        matched = len(shared) * bs
+        # copy-on-write candidate: a child block sharing the longest strict
+        # prefix of the next (partially matchable) token block
+        cow_src, cow_len = None, 0
+        budget = min(len(tokens) - 1 - matched, bs)
+        if budget > 0:
+            nxt = tokens[matched:matched + bs]
+            for child in node.children.values():
+                j = 0
+                while (j < budget and j < len(nxt)
+                       and child.tokens[j] == nxt[j]):
+                    j += 1
+                if j > cow_len:
+                    cow_src, cow_len = child.block, j
+            if cow_src is not None:
+                self._touch(self._by_block[cow_src])
+        return shared, matched, cow_src, cow_len
+
+    # -- publish --------------------------------------------------------------
+    def publish(self, tokens: Sequence[int], blocks: Sequence[int]) -> int:
+        """Insert every full token block of ``tokens`` into the trie, pinning
+        the corresponding pool block.  ``blocks`` is the owning sequence's
+        block list (token order).  Blocks whose content is already cached
+        under another pool block are skipped (first publisher wins).
+        Returns the number of newly pinned blocks."""
+        bs = self.block_size
+        node, pinned = self._root, 0
+        path: set = set()               # blocks this walk stands on — budget
+        #                                 eviction must never detach them
+        for i in range(len(tokens) // bs):
+            key = tuple(tokens[i * bs:(i + 1) * bs])
+            child = node.children.get(key)
+            if child is None:
+                if (self.max_cached is not None
+                        and len(self._by_block) >= self.max_cached
+                        and not self.evict_one(protect=path)):
+                    break               # budget full of un-evictable blocks
+                blk = blocks[i]
+                if blk in self._by_block:
+                    break               # block already caches other content
+                child = _TrieNode(blk, key, node)
+                node.children[key] = child
+                self._by_block[blk] = child
+                self.alloc.pin(blk)
+                pinned += 1
+            self._touch(child)
+            node = child
+            path.add(node.block)
+        return pinned
+
+    # -- eviction -------------------------------------------------------------
+    def evict_one(self, protect: Optional[set] = None) -> bool:
+        """Unpin the LRU cached leaf no live sequence references.  Returns
+        False when nothing is evictable (every cached block is shared, an
+        interior node of a live chain, or on the caller's ``protect`` path —
+        publish must never evict the chain it is standing on, or the next
+        insert would attach to a detached node unreachable from the root)."""
+        victim: Optional[_TrieNode] = None
+        for node in self._by_block.values():
+            if node.children:                    # keep chains intact
+                continue
+            if self.alloc.refcount(node.block) != 1:
+                continue                         # shared with a live seq
+            if protect is not None and node.block in protect:
+                continue
+            if victim is None or node.tick < victim.tick:
+                victim = node
+        if victim is None:
+            return False
+        del self._by_block[victim.block]
+        del victim.parent.children[victim.tokens]
+        self.alloc.unpin(victim.block)
+        self.evictions += 1
+        return True
 
 
 class PagedKVCache:
-    """Device block pools + host block tables for paged decode.
+    """Device block pools + host block tables for paged decode/prefill.
 
     Pools are ``[num_layers, num_blocks, block_size, Hkv, head_dim]`` in the
     model compute dtype.  The pools are *functional*: every jitted write
     donates and replaces them, so the cache object always holds the current
     arrays between steps.
+
+    ``prefix_cache=True`` layers the PrefixIndex on top: ``match`` finds the
+    shareable prefix before admission, ``admit(..., shared=...)`` takes it
+    by refcount, ``cow_into`` copies the partially-matched block, and
+    ``publish`` pins a prefilled prompt's full blocks for future requests.
     """
 
     def __init__(self, cfg: ModelConfig, *, block_size: int, num_blocks: int,
-                 max_len: int, dtype=None):
+                 max_len: int, dtype=None, prefix_cache: bool = True,
+                 max_cached_blocks: Optional[int] = None):
         assert block_size > 0 and num_blocks > 1
         self.cfg = cfg
         self.block_size = block_size
@@ -151,16 +402,66 @@ class PagedKVCache:
         self.kp = jnp.zeros(shape, self.dtype)
         self.vp = jnp.zeros(shape, self.dtype)
         self.allocator = BlockAllocator(num_blocks)
-        self._scatter_cache: Dict[int, object] = {}
+        self.prefix_cache = prefix_cache
+        self.index = (PrefixIndex(self.allocator, block_size,
+                                  max_cached_blocks)
+                      if prefix_cache else None)
+        self._copy_fn = None
+        self.metrics: Dict[str, int] = {
+            "prefix_queries": 0, "prefix_hits": 0, "prefix_tokens_saved": 0,
+            "cow_copies": 0, "published_blocks": 0,
+        }
+
+    # -- prefix cache ---------------------------------------------------------
+    def match_prefix(self, tokens: Sequence[int]):
+        """(shared_blocks, matched_tokens, cow_src, cow_len) for a prompt —
+        all empty/zero when prefix caching is off."""
+        if self.index is None or len(tokens) <= 1:
+            return [], 0, None, 0
+        return self.index.match(tokens)
+
+    def publish(self, seq_id, prompt_tokens: Sequence[int]) -> None:
+        """Pin the sequence's *prefill-computed* full prompt blocks into the
+        prefix index (decode-written blocks are never cached — their KV is
+        not bit-identical to prefill KV)."""
+        if self.index is None:
+            return
+        n = self.metrics["published_blocks"]
+        self.metrics["published_blocks"] = n + self.index.publish(
+            prompt_tokens, self.allocator.owned(seq_id))
+
+    def cow_into(self, seq_id, src_block: int) -> Optional[int]:
+        """Copy-on-write: device-copy ``src_block`` into the sequence's first
+        private prompt block (its partially-matched block), so prefill only
+        recomputes from the divergence point.  Returns the destination, or
+        None when the source was evicted between match and admission (the
+        admission's own private allocation may evict — and even reuse — the
+        CoW candidate when it is the last evictable block)."""
+        if self.index is None or src_block not in self.index._by_block:
+            return None
+        owned = self.allocator.owned(seq_id)
+        dst = owned[self.allocator.shared_prefix(seq_id)]
+        if self._copy_fn is None:
+            def _copy(kp, vp, src, dst):
+                kb = jax.lax.dynamic_index_in_dim(kp, src, 1, keepdims=False)
+                vb = jax.lax.dynamic_index_in_dim(vp, src, 1, keepdims=False)
+                return kp.at[:, dst].set(kb), vp.at[:, dst].set(vb)
+            self._copy_fn = jax.jit(_copy, donate_argnums=(0, 1))
+        self.kp, self.vp = self._copy_fn(self.kp, self.vp,
+                                         jnp.int32(src_block), jnp.int32(dst))
+        self.metrics["cow_copies"] += 1
+        return dst
 
     # -- host-side mapping ----------------------------------------------------
-    def admit(self, seq_id, prompt_len: int, total_len: int) -> bool:
+    def admit(self, seq_id, prompt_len: int, total_len: int,
+              shared: Sequence[int] = ()) -> bool:
         """Reserve the worst case for a sequence of ``total_len`` tokens and
-        allocate its prompt blocks.  False = pool full right now."""
+        allocate its prompt blocks (minus the shared prefix).  False = pool
+        full right now."""
         total_len = min(total_len, self.max_len)
         pb = cdiv(max(1, prompt_len), self.block_size)
         tb = max(pb, cdiv(total_len, self.block_size))
-        return self.allocator.admit(seq_id, pb, tb) is not None
+        return self.allocator.admit(seq_id, pb, tb, shared) is not None
 
     def ensure(self, seq_id, pos: int) -> None:
         """Make sure the block holding token position ``pos`` exists."""
@@ -185,42 +486,19 @@ class PagedKVCache:
     def free(self, seq_id) -> None:
         self.allocator.free(seq_id)
 
-    # -- device writes --------------------------------------------------------
-    def write_prefill(self, seq_id, ks, vs) -> None:
-        """Scatter prefill KV (``[L, Lp, Hkv, D]``, Lp = the prompt bucket)
-        into the sequence's pages.  Chunks past the allocated prompt blocks
-        (prompt padding) land in the trash block."""
-        L, Lp = ks.shape[0], ks.shape[1]
-        nbb = cdiv(Lp, self.block_size)
-        ids = np.full((nbb,), TRASH_BLOCK, np.int32)
-        owned = self.allocator.owned(seq_id)
-        n = min(len(owned), nbb)
-        ids[:n] = owned[:n]
-        fn = self._scatter_cache.get(nbb)
-        if fn is None:
-            fn = jax.jit(partial(_scatter_prefill, block_size=self.block_size),
-                         donate_argnums=(0, 1))
-            self._scatter_cache[nbb] = fn
-        self.kp, self.vp = fn(self.kp, self.vp, ks, vs, jnp.asarray(ids))
-
     def stats(self) -> Dict[str, int]:
-        return {
+        out = {
             "num_blocks": self.num_blocks,
             "block_size": self.block_size,
             "free_blocks": self.allocator.num_free(),
             "available_blocks": self.allocator.available(),
             "live_sequences": self.allocator.live_sequences,
+            "cached_blocks": self.allocator.num_pinned(),
+            "evictable_blocks": self.allocator.evictable(),
+            "evictions": self.index.evictions if self.index else 0,
+            "prefix_cache": int(self.prefix_cache),
         }
-
-
-def _scatter_prefill(kp, vp, ks, vs, block_ids, *, block_size: int):
-    """kp/vp [L, NB, bs, Hkv, D]; ks/vs [L, Lp, Hkv, D]; block_ids [nbb]."""
-    L, Lp, Hkv, D = ks.shape
-    nbb = block_ids.shape[0]
-    pad = nbb * block_size - Lp
-    if pad:
-        ks = jnp.pad(ks, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        vs = jnp.pad(vs, ((0, 0), (0, pad), (0, 0), (0, 0)))
-    ks = ks.reshape(L, nbb, block_size, Hkv, D).astype(kp.dtype)
-    vs = vs.reshape(L, nbb, block_size, Hkv, D).astype(vp.dtype)
-    return kp.at[:, block_ids].set(ks), vp.at[:, block_ids].set(vs)
+        out.update(self.metrics)
+        q = max(1, out["prefix_queries"])
+        out["prefix_hit_rate"] = round(out["prefix_hits"] / q, 3)
+        return out

@@ -6,27 +6,39 @@ Instead of each harness session paying a full one-shot generation
 single background thread advances ALL in-flight sequences one token per
 step through a jitted batched decode over a paged KV cache:
 
-  admit  — at each step boundary, queued requests are prefetched into the
-           batch: a per-prompt-bucket jitted prefill samples the first
-           token and its KV is scattered into freshly allocated pages.
+  admit  — at each step boundary, queued requests are matched against the
+           prefix cache (radix index over token blocks): fully-matched
+           prompt blocks are SHARED by refcount, a partially-matched block
+           is copy-on-written, and only the uncached tail is allocated.
            Admission reserves the sequence's worst-case block count, so
            decode can never run out of pages mid-flight.
+  prefill— the uncached prompt suffix is computed by a fixed-size jitted
+           prefill-chunk program that writes straight into the paged pools:
+           every prefilling request advances ONE chunk per loop iteration,
+           interleaved with decode steps — a long cold prompt no longer
+           stalls all in-flight decodes, and a warm prompt prefills only
+           its suffix.  The final chunk samples the first token off the
+           last prompt row in the same program.
   step   — one jitted ``forward_decode_paged`` + vmapped sampling advances
            every active sequence; the batch is padded to a power-of-two
            slot count so only O(log max_batch) step programs ever compile.
            Padded slots write into the trash block and are ignored.
   leave  — a sequence that samples end-of-turn (or exhausts its budget)
-           resolves its future and frees its pages immediately, making
-           room for the next admission at the same boundary.
+           publishes its prefill-computed prompt blocks into the prefix
+           index (done at prefill completion), resolves its future and
+           drops its page references; unshared pages are reusable at the
+           same boundary, shared/cached ones live on.
 
 Determinism contract: per-request RNG keys are split off the engine RNG at
 *submission* (same order ⇒ same keys as serial ``generate_ids`` calls),
-and every per-sequence op in the batched path — sampling included — is
+and every per-sequence op — chunked prefill over gathered pages, cached-
+prefix reuse (only prefill-computed KV is ever published), sampling — is
 arithmetic-identical to the one-shot path, so sampled ids and log-probs
-are bit-identical to ``Engine.generate_ids`` (tests/test_continuous_
-batching.py).  Policy-version tags are captured at submission; weight
-swaps mid-flight take effect at the next step boundary (stale-policy
-semantics are the trainer's TIS problem, paper §2.2).
+are bit-identical to ``Engine.generate_ids`` whether the prefix came from
+cache, chunks, or cold prefill (tests/test_continuous_batching.py).
+Policy-version tags are captured at submission; weight swaps mid-flight
+take effect at the next step boundary (stale-policy semantics are the
+trainer's TIS problem, paper §2.2).
 """
 from __future__ import annotations
 
@@ -36,7 +48,7 @@ from collections import deque
 from concurrent.futures import Future
 from dataclasses import dataclass, field
 from functools import partial
-from typing import Any, Deque, Dict, List, Optional
+from typing import Any, Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -58,6 +70,8 @@ class SchedRequest:
     future: Future = field(default_factory=Future)
     # -- runtime state (owned by the scheduler thread) -----------------------
     seq_id: int = -1
+    prefill_pos: int = 0     # next prompt position to compute (chunked)
+    cached_tokens: int = 0   # prefix positions served from the cache
     rng: Any = None          # carried per-sequence key chain
     last_token: int = -1
     out_ids: List[int] = field(default_factory=list)
@@ -66,33 +80,47 @@ class SchedRequest:
 
 class ContinuousBatchingScheduler:
     def __init__(self, engine, *, block_size: int = 16, max_batch: int = 32,
-                 num_blocks: Optional[int] = None):
+                 num_blocks: Optional[int] = None, prefix_cache: bool = True,
+                 prefill_chunk: int = 64,
+                 max_cached_blocks: Optional[int] = None):
         assert M.supports_paged_decode(engine.cfg), (
             engine.cfg.family, "has no paged decode path")
+        assert M.supports_chunked_prefill(engine.cfg), (
+            engine.cfg.family, "has no chunked prefill path")
         self.engine = engine
         self.block_size = block_size
         self.max_batch = max_batch
+        self.prefix_cache = prefix_cache
+        self.prefill_chunk = max(1, prefill_chunk)
+        self.max_cached_blocks = max_cached_blocks
         mbs = cdiv(engine.max_len, block_size)
-        self.cache = PagedKVCache(
-            engine.cfg, block_size=block_size, max_len=engine.max_len,
-            num_blocks=num_blocks or 1 + max_batch * mbs)
+        self.num_blocks = num_blocks or 1 + max_batch * mbs
+        self.cache = self._new_cache()
         self._queue: Deque[SchedRequest] = deque()
+        self._prefilling: Deque[SchedRequest] = deque()
         self._active: List[SchedRequest] = []
         self._qlock = threading.Lock()
         self._wake = threading.Event()
         self._stop = threading.Event()
         self._seq_ids = itertools.count()
-        self._prefill_cache: Dict[int, Any] = {}
+        self._chunk_cache: Dict[Tuple[int, int], Any] = {}
         self._step_cache: Dict[int, Any] = {}
         self._zero_key = jax.random.PRNGKey(0)
         self.metrics: Dict[str, int] = {
             "submitted": 0, "completed": 0, "joins": 0, "leaves": 0,
             "steps": 0, "step_slots": 0, "step_active": 0, "peak_batch": 0,
-            "errors": 0,
+            "prefill_chunks": 0, "prefill_tokens": 0, "errors": 0,
         }
         self._thread = threading.Thread(
             target=self._loop, name="cbatch-scheduler", daemon=True)
         self._thread.start()
+
+    def _new_cache(self) -> PagedKVCache:
+        return PagedKVCache(
+            self.engine.cfg, block_size=self.block_size,
+            max_len=self.engine.max_len, num_blocks=self.num_blocks,
+            prefix_cache=self.prefix_cache,
+            max_cached_blocks=self.max_cached_blocks)
 
     # -- public surface -------------------------------------------------------
     def submit(self, req: SchedRequest) -> Future:
@@ -122,8 +150,37 @@ class ContinuousBatchingScheduler:
         out.update(self.cache.stats())
         with self._qlock:
             out["queued"] = len(self._queue)
-        out["in_flight"] = len(self._active)
+        out["prefilling"] = len(self._prefilling)
+        out["in_flight"] = len(self._active) + len(self._prefilling)
         return out
+
+    def prewarm(self) -> int:
+        """AOT-compile every power-of-two batched step program (there are
+        only O(log max_batch) of them) so no serving-path call ever eats an
+        XLA compile mid-flight.  Benchmarks call this from their warmup
+        phase; long-lived servers can call it at startup.  Returns the
+        number of programs compiled."""
+        with self.engine._lock:
+            params = self.engine.params
+        pshape = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params)
+        kv = jax.ShapeDtypeStruct(self.cache.kp.shape, self.cache.kp.dtype)
+        maxnb = self.cache.max_blocks_per_seq
+        top = 1
+        while top < max(1, self.max_batch):
+            top *= 2        # _step_once rounds n UP to a power of two, so a
+        #                     non-pow2 max_batch still reaches the next one
+        n, Bb = 0, 1
+        while Bb <= top:
+            if Bb not in self._step_cache:
+                fn = self._make_step(Bb)
+                i32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)  # noqa: E731
+                self._step_cache[Bb] = fn.lower(
+                    pshape, kv, kv, i32(Bb), i32(Bb), i32(Bb, maxnb),
+                    jax.ShapeDtypeStruct((Bb, 2), jnp.uint32)).compile()
+                n += 1
+            Bb *= 2
+        return n
 
     def close(self) -> None:
         """Stop the scheduler thread.  Draining (failing any still-pending
@@ -138,11 +195,19 @@ class ContinuousBatchingScheduler:
         while not self._stop.is_set():
             try:
                 self._admit_pending()
-                if not self._active:
+                if not self._active and not self._prefilling:
                     self._wake.wait(timeout=0.05)
                     self._wake.clear()
                     continue
-                self._step_once()
+                # prefill, then one decode step.  Every prefilling request
+                # advances ONE chunk per iteration: a burst of short
+                # prompts joins at the next boundary (full batch occupancy,
+                # same as the old one-shot joins), while a long cold prompt
+                # spreads its chunks across iterations and never stalls
+                # in-flight decodes for more than a chunk's latency.
+                self._prefill_step()
+                if self._active:
+                    self._step_once()
             except Exception as e:  # noqa: BLE001 — fail loudly, stay alive
                 self.metrics["errors"] += 1
                 self._fail_all(e)
@@ -150,23 +215,24 @@ class ContinuousBatchingScheduler:
 
     def _fail_all(self, exc: Exception) -> None:
         with self._qlock:
-            pending = list(self._queue) + list(self._active)
+            pending = (list(self._queue) + list(self._prefilling)
+                       + list(self._active))
             self._queue.clear()
+        self._prefilling.clear()
         self._active.clear()
         for r in pending:
             if not r.future.done():
                 r.future.set_exception(exc)
         if pending:
-            # the pools are donated into every step/prefill call, so after a
-            # mid-call failure they may be invalidated — rebuild fresh so the
-            # scheduler stays usable for new submissions
-            self.cache = PagedKVCache(
-                self.engine.cfg, block_size=self.block_size,
-                max_len=self.cache.max_len, num_blocks=self.cache.num_blocks)
+            # the pools are donated into every step/chunk call, so after a
+            # mid-call failure they may be invalidated — rebuild fresh (the
+            # prefix index goes with them: its pins name dead pool content)
+            # so the scheduler stays usable for new submissions
+            self.cache = self._new_cache()
 
-    # -- join: prefill + first token -----------------------------------------
+    # -- join: prefix match + admission --------------------------------------
     def _admit_pending(self) -> None:
-        while len(self._active) < self.max_batch:
+        while len(self._active) + len(self._prefilling) < self.max_batch:
             with self._qlock:
                 req = self._queue[0] if self._queue else None
             if req is None:
@@ -174,8 +240,11 @@ class ContinuousBatchingScheduler:
             plen = len(req.prompt_ids)
             seq_id = next(self._seq_ids)
             total = min(plen + req.max_new, self.engine.max_len)
-            if not self.cache.admit(seq_id, plen, total):
-                if (not self._active and self.cache.allocator.available()
+            shared, matched, cow_src, cow_len = self.cache.match_prefix(
+                req.prompt_ids)
+            if not self.cache.admit(seq_id, plen, total, shared=shared):
+                if (not self._active and not self._prefilling
+                        and self.cache.allocator.available()
                         == self.cache.num_blocks - 1):
                     # pool is idle and the request STILL does not fit: it
                     # can never be admitted — fail it instead of wedging
@@ -190,39 +259,65 @@ class ContinuousBatchingScheduler:
                 return          # pool full — retry after the next leave
             with self._qlock:
                 self._queue.popleft()
+            # track the request BEFORE any fallible device call: a popped
+            # request in neither _queue nor _prefilling nor _active is
+            # invisible to _fail_all and its submitter would hang forever
             req.seq_id = seq_id
-            try:
-                self._prefill(req)
-            except Exception as e:  # noqa: BLE001 — fail THIS request only:
-                # it is in neither _queue nor _active here, so _fail_all
-                # would never resolve its future and the submitter would hang
-                self.metrics["errors"] += 1
-                try:
-                    self.cache.free(seq_id)
-                except Exception:  # noqa: BLE001
-                    pass
-                if not req.future.done():
-                    req.future.set_exception(e)
+            req.prefill_pos = matched
+            req.cached_tokens = matched
+            self._prefilling.append(req)
+            if cow_src is not None and cow_len > 0:
+                if self.cache.cow_into(seq_id, cow_src) is not None:
+                    matched += cow_len
+                    req.prefill_pos = req.cached_tokens = matched
+            cm = self.cache.metrics
+            cm["prefix_queries"] += 1
+            if matched:
+                cm["prefix_hits"] += 1
+                cm["prefix_tokens_saved"] += matched
 
-    def _prefill(self, req: SchedRequest) -> None:
+    # -- prefill: fixed-size chunks inside the step loop ----------------------
+    def _prefill_step(self) -> None:
+        for req in list(self._prefilling):   # FIFO: one chunk each per pass
+            self._prefill_chunk_once(req)
+
+    def _prefill_chunk_once(self, req: SchedRequest) -> None:
         eng = self.engine
-        plen, bucket = len(req.prompt_ids), req.bucket
-        fn = self._prefill_cache.get(bucket)
+        plen = len(req.prompt_ids)
+        csz = min(self.prefill_chunk, req.bucket)
+        fn = self._chunk_cache.get((req.bucket, csz))
         if fn is None:
-            fn = self._make_prefill(bucket)
-            self._prefill_cache[bucket] = fn
-        prompt = jnp.zeros((bucket,), jnp.int32).at[:plen].set(
-            jnp.asarray(req.prompt_ids, jnp.int32))
+            fn = self._make_chunk(req.bucket, csz)
+            self._chunk_cache[(req.bucket, csz)] = fn
+        start = req.prefill_pos
+        tokens = np.zeros((csz,), np.int32)
+        seg = req.prompt_ids[start:start + csz]
+        tokens[:len(seg)] = seg
+        bt_row = self.cache.block_table_row(req.seq_id)
         with eng._lock:
             params = eng.params
-        tok0, lp0, rng, ks, vs = fn(params, prompt, jnp.int32(plen), req.key)
-        self.cache.write_prefill(req.seq_id, ks, vs)
+        self.cache.kp, self.cache.vp, tok0, lp0, rng = fn(
+            params, self.cache.kp, self.cache.vp, jnp.asarray(tokens),
+            jnp.int32(start), jnp.int32(plen), jnp.asarray(bt_row), req.key)
+        computed = min(csz, plen - start)
+        req.prefill_pos = start + computed
+        self.metrics["prefill_chunks"] += 1
+        self.metrics["prefill_tokens"] += computed
+        if req.prefill_pos < plen:
+            return        # more chunks next iterations (the sampled token
+        #                   is garbage until the last prompt row exists —
+        #                   the host only reads it off the final chunk)
+        # publish BEFORE any retire: only prefill-computed prompt blocks are
+        # cacheable (decode KV is not bit-identical to prefill KV)
+        self.cache.publish(req.seq_id, req.prompt_ids)
         req.rng = rng
-        t = int(tok0)
+        t = int(tok0)     # device sync — may raise; until the request is
+        #                   removed below, _fail_all can still resolve it
         req.out_ids.append(t)
         req.out_lps.append(float(lp0))
         req.last_token = t
         self.metrics["joins"] += 1
+        self._prefilling.remove(req)
         if t == tok.END_OF_TURN or req.max_new <= 1:
             self._retire(req)
         else:
@@ -230,30 +325,32 @@ class ContinuousBatchingScheduler:
             self.metrics["peak_batch"] = max(self.metrics["peak_batch"],
                                              len(self._active))
 
-    def _make_prefill(self, bucket: int):
+    def _make_chunk(self, bucket: int, csz: int):
         from repro.inference.engine import sample_logits_rows, sample_token
-        from repro.models import transformer as TF
         eng = self.engine
         cfg = eng.cfg
         sample = partial(sample_token, temperature=eng.temperature,
                          top_k=eng.top_k)
 
-        def prefill(params, prompt, plen, key):
-            pos = jnp.arange(bucket, dtype=jnp.int32)[None]
-            hidden_all, cache = TF.prefill(
-                cfg, params, {"tokens": prompt[None], "positions": pos},
-                bucket)
-            hidden = jax.lax.dynamic_slice_in_dim(
-                hidden_all, plen - 1, 1, axis=1)
+        def chunk(params, kp, vp, tokens, start, plen, bt_row, key):
+            hidden, pools = M.prefill_chunk_paged(
+                cfg, params, {"k": kp, "v": vp},
+                {"tokens": tokens[None], "start": start, "plen": plen,
+                 "block_table": bt_row}, bucket)
+            # first-token sampling off the last prompt row, fused into the
+            # chunk (one dispatch per join).  Non-final chunks clip to a
+            # garbage row the host ignores; the request key is consumed
+            # only when the host accepts the sample.  The shared barriered
+            # head + vmapped row form keep the sampling-chain lowering
+            # identical to the one-shot loop and the batched step.
+            row = jax.lax.dynamic_slice_in_dim(
+                hidden[0], jnp.clip(plen - 1 - start, 0, csz - 1), 1, axis=0)
             rng, k1 = jax.random.split(key)
-            # shared barriered head + vmapped row form: identical sampling-
-            # chain lowering across the one-shot loop, this prefill, and the
-            # batched step keeps sampled ids/log-probs bit-identical
-            logits = sample_logits_rows(cfg, params, hidden[:, -1])
+            logits = sample_logits_rows(cfg, params, row)
             nxt, lp = jax.vmap(sample)(logits, k1[None])
-            return nxt[0], lp[0], rng, cache["k"][:, 0], cache["v"][:, 0]
+            return pools["k"], pools["v"], nxt[0], lp[0], rng
 
-        return jax.jit(prefill)
+        return jax.jit(chunk, donate_argnums=(1, 2))
 
     # -- step: advance every in-flight sequence one token --------------------
     def _step_once(self) -> None:

@@ -104,6 +104,47 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, q_pos, *,
                                          q_pos, window=window)
 
 
+def paged_prefill_attention(q, k_pool, v_pool, block_table, idx_q, *,
+                            ctx_len: int, window=0, k_new=None, v_new=None,
+                            start=None, impl: Optional[str] = None):
+    """Chunked-prefill attention over a PAGED KV cache (continuous-batching
+    in-loop prefill).  q [1, C, H, D] is one chunk of prompt rows;
+    block_table [maxnb] i32 names the sequence's pages; idx_q [C] i32 holds
+    the rows' absolute positions; ``ctx_len`` (static) is how many leading
+    context positions to attend — the prompt bucket, so the reduction
+    shapes match the one-shot prefill.  ``k_new``/``v_new`` [1, C, Hkv, D]
+    are the chunk's OWN freshly-projected kv, overlaid onto the gathered
+    context at ``start`` — attention never needs the chunk pre-scattered,
+    so the pools take a single all-layers scatter per chunk instead of one
+    per layer.
+
+    The page gather (``ref.gather_kv_pages``) and the overlay change no
+    values, so the result is bit-identical to ``attention`` over the same
+    rows of a contiguous prefill — dispatching THROUGH ``attention``
+    afterwards means whatever impl the one-shot prefill lowers to (blocked
+    xla, pallas flash, naive oracle) is exactly what a chunk lowers to.
+    That identity is what keeps chunked/warm admissions bit-exact vs.
+    ``generate_ids`` (tests/test_continuous_batching.py).
+    ``impl='xla_naive'`` short-circuits to
+    ``ref.paged_prefill_attention_reference``, the gather oracle the
+    kernel tests compare against.
+    """
+    impl = impl or _default_impl()
+    if impl == "xla_naive":
+        return REF.paged_prefill_attention_reference(
+            q, k_pool, v_pool, block_table, idx_q, ctx_len=ctx_len,
+            window=window, k_new=k_new, v_new=v_new, start=start)
+    k = REF.gather_kv_pages(k_pool, block_table, ctx_len)
+    v = REF.gather_kv_pages(v_pool, block_table, ctx_len)
+    if k_new is not None:
+        k = REF.overlay_chunk(k, k_new[0], start)
+        v = REF.overlay_chunk(v, v_new[0], start)
+    idx_kv = jnp.arange(ctx_len, dtype=jnp.int32)[None]
+    return attention(q, k[None].astype(q.dtype), v[None].astype(q.dtype),
+                     idx_q=idx_q[None], idx_kv=idx_kv, causal=True,
+                     window=window, impl=impl)
+
+
 # ---------------------------------------------------------------------------
 # Mamba-2 SSD
 # ---------------------------------------------------------------------------

@@ -87,6 +87,83 @@ def paged_attention_reference(q, k_pool, v_pool, block_tables, q_pos, *,
     return out.reshape(B, 1, H, D).astype(q.dtype)
 
 
+def gather_kv_pages(pool, block_table, ctx_len: int):
+    """Gather a sequence's KV context out of the shared block pool.
+
+    pool [NB, bs, Hkv, D]; block_table [maxnb] i32 (the sequence's pages in
+    token order, unused entries pointing at the trash block).  Returns the
+    first ``ctx_len`` token positions as a contiguous [ctx_len, Hkv, D]
+    view — the oracle for the chunked-prefill attention's paged fetch (the
+    gather itself changes no values, so everything downstream is
+    arithmetic-identical to attention over a contiguous cache)."""
+    bs = pool.shape[1]
+    nbb = cdiv_host(ctx_len, bs)
+    k = pool[block_table[:nbb]]                       # [nbb, bs, Hkv, D]
+    return k.reshape(nbb * bs, *pool.shape[2:])[:ctx_len]
+
+
+def cdiv_host(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def overlay_chunk(ctx, chunk, start):
+    """Overlay a freshly-computed prefill chunk onto gathered context.
+
+    ctx [S, Hkv, D] (token-ordered gather from the pools — the chunk's own
+    rows hold stale pool values); chunk [C, Hkv, D]; start i32 scalar (the
+    chunk's first absolute position).  Padding by C before the update keeps
+    ``dynamic_update_slice`` from clamping the offset (start + C may run
+    past S when the chunk tail is prompt padding), so positions < start are
+    never shifted into."""
+    S, C = ctx.shape[0], chunk.shape[0]
+    padded = jnp.concatenate(
+        [ctx, jnp.zeros((C, *ctx.shape[1:]), ctx.dtype)], axis=0)
+    padded = jax.lax.dynamic_update_slice_in_dim(
+        padded, chunk.astype(ctx.dtype), start, axis=0)
+    return padded[:S]
+
+
+def paged_prefill_attention_reference(q, k_pool, v_pool, block_table, idx_q,
+                                      *, ctx_len: int, window=0,
+                                      k_new=None, v_new=None, start=None,
+                                      scale: Optional[float] = None):
+    """Chunked-prefill attention over paged KV — the pure-jnp oracle.
+
+    q [1, C, H, D] (one chunk of prompt rows); k_pool/v_pool [NB, bs, Hkv,
+    D]; block_table [maxnb] i32; idx_q [C] i32 absolute token positions of
+    the chunk rows.  Gathers the first ``ctx_len`` context positions and —
+    when ``k_new``/``v_new`` [1, C, Hkv, D] are given — overlays the
+    chunk's freshly-computed kv at ``start`` (the pools then only need ONE
+    scatter per chunk, after all layers), then runs one dense masked
+    softmax; rows causally mask context positions beyond their own.
+    Returns [1, C, H, D]."""
+    _, C, H, D = q.shape
+    Hkv = k_pool.shape[2]
+    G = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    k = gather_kv_pages(k_pool, block_table, ctx_len)
+    v = gather_kv_pages(v_pool, block_table, ctx_len)
+    if k_new is not None:
+        k = overlay_chunk(k, k_new[0], start)
+        v = overlay_chunk(v, v_new[0], start)
+    k, v = k[None], v[None]
+    idx_kv = jnp.arange(ctx_len, dtype=jnp.int32)[None]
+    qg = q.reshape(1, C, Hkv, G, D)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    ok = idx_kv[:, None, :] <= idx_q[None, :, None]
+    win = jnp.asarray(window, jnp.int32)
+    ok &= jnp.where(win > 0, idx_kv[:, None, :] > (idx_q[None, :, None] - win),
+                    True)
+    scores = scores + jnp.where(ok, 0.0, -1e30)[:, None, None, :, :]
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    s = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", (p / s).astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(1, C, H, D).astype(q.dtype)
+
+
 # ---------------------------------------------------------------------------
 # SSD (Mamba-2 state-space duality)
 # ---------------------------------------------------------------------------

@@ -312,6 +312,34 @@ def paged_decode_attention_block(cfg: ModelConfig, p: Params, x, sin, cos,
     return jnp.einsum("blhk,hkd->bld", out, p["wo"].astype(x.dtype))
 
 
+def paged_prefill_attention_block(cfg: ModelConfig, p: Params, x, sin, cos,
+                                  k_pool, v_pool, block_table, idx_q,
+                                  k_new, v_new, start, *,
+                                  ctx_len: int, window=0):
+    """Chunk-of-prompt attention against a PAGED KV cache.  x [1,C,d];
+    k_pool/v_pool [NB, bs, Hkv, D] hold the prefix pages; the chunk's own
+    freshly-projected ``k_new``/``v_new`` [1,C,Hkv,D] are overlaid onto the
+    gathered context at ``start`` (so the pools only take one scatter per
+    chunk, after all layers); block_table [maxnb]; idx_q [C] absolute
+    positions; ``ctx_len`` = the prompt bucket (static).  The q path
+    mirrors attention_block op-for-op and the gathered+overlaid kv is
+    value-identical to the in-program kv of a one-shot prefill, so chunked
+    prefill stays bit-identical to the contiguous one."""
+    from repro.kernels import ops as OPS
+    q = jnp.einsum("bld,dhk->blhk", x, p["wq"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+    rotary_dim = cfg.head_dim // 2 if cfg.rope_style == "half" else cfg.head_dim
+    if sin is not None:
+        q = apply_rotary(q, sin, cos, rotary_dim)
+    out = OPS.paged_prefill_attention(
+        q, k_pool.astype(x.dtype), v_pool.astype(x.dtype),
+        block_table, idx_q.astype(jnp.int32), ctx_len=ctx_len, window=window,
+        k_new=k_new.astype(x.dtype), v_new=v_new.astype(x.dtype),
+        start=start)
+    return jnp.einsum("blhk,hkd->bld", out, p["wo"].astype(x.dtype))
+
+
 def project_kv(cfg: ModelConfig, p: Params, x, sin, cos):
     """k/v projection + rope only (decode: project the new token's kv)."""
     k = jnp.einsum("bld,dhk->blhk", x, p["wk"].astype(x.dtype))

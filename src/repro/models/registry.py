@@ -54,6 +54,20 @@ def supports_paged_decode(cfg: ModelConfig) -> bool:
     return hasattr(get_model(cfg), "forward_decode_paged")
 
 
+def supports_chunked_prefill(cfg: ModelConfig) -> bool:
+    return hasattr(get_model(cfg), "prefill_chunk_paged")
+
+
+def prefill_chunk_paged(cfg: ModelConfig, params, pools, batch, ctx_len: int):
+    """One in-loop prefill chunk over paged KV (continuous batching);
+    transformer families only, same coverage as forward_decode_paged."""
+    model = get_model(cfg)
+    if not hasattr(model, "prefill_chunk_paged"):
+        raise NotImplementedError(
+            f"family {cfg.family!r} has no chunked prefill path")
+    return model.prefill_chunk_paged(cfg, params, pools, batch, ctx_len)
+
+
 def forward_decode_paged(cfg: ModelConfig, params, pools, batch):
     """Paged-KV decode step (continuous batching); transformer families
     only — SSM/hybrid/encdec state is not paged (their recurrent state is

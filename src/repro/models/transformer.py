@@ -501,3 +501,109 @@ def forward_decode_paged(cfg: ModelConfig, params, pools, batch):
 
     x = C.apply_norm(cfg, params["final_norm"], x)
     return x, new_pools
+
+
+# ---------------------------------------------------------------------------
+# chunked in-loop prefill (continuous batching: one fixed-size chunk of one
+# sequence's prompt per call, writing straight into the paged pools)
+# ---------------------------------------------------------------------------
+
+def prefill_chunk_paged(cfg: ModelConfig, params, pools, batch, ctx_len: int):
+    """One prefill chunk over paged KV — the scheduler interleaves these
+    with decode steps so a long cold prompt never stalls in-flight decodes,
+    and a warm prompt prefills only its uncached suffix.
+
+    pools: {"k": [L, NB, bs, Hkv, D], "v": ...} shared block pools (the
+    sequence's cached prefix, if any, is already resident in its pages).
+    batch: tokens [1, C] i32 (the chunk, zero-padded past the prompt),
+    start i32 scalar (absolute position of tokens[0, 0]), plen i32 scalar
+    (true prompt length — pad rows' kv is diverted to the trash block so it
+    can never clobber a real page), block_table [maxnb] i32.
+    ctx_len: STATIC gathered-context length = the request's prompt bucket,
+    so every attention reduction has the same shape as the one-shot
+    prefill's.
+
+    Returns (hidden [1, C, d] post-final-norm, new pools).  Per-row
+    arithmetic is identical to ``prefill`` over the full bucket — rows only
+    ever attend positions <= their own, the gather changes no values, and
+    masked tail positions contribute exact zeros — which is what keeps the
+    scheduler's chunked/warm admissions bit-identical to the one-shot path
+    (tests/test_continuous_batching.py).
+    """
+    from repro.inference.paged_kv import TRASH_BLOCK
+    tokens, start, plen = batch["tokens"], batch["start"], batch["plen"]
+    bt = batch["block_table"].astype(jnp.int32)
+    bs = pools["k"].shape[2]
+    maxnb = bt.shape[0]
+    Cn = tokens.shape[1]
+    x = C.embed_tokens(cfg, params["embed"], tokens)
+
+    abs_pos = start + jnp.arange(Cn, dtype=jnp.int32)        # [C]
+    pos = abs_pos[None]
+    if cfg.rope_style == "mrope":
+        pos = jnp.broadcast_to(pos[..., None], (1, Cn, 3))
+    tables = _rope_tables(cfg, pos)
+    flags = layer_flags(cfg)
+
+    # write mapping: real rows land in their page, pad rows in the trash
+    blk = jnp.where(abs_pos < plen,
+                    bt[jnp.clip(abs_pos // bs, 0, maxnb - 1)],
+                    TRASH_BLOCK)
+    slot = abs_pos % bs
+    dtype = C.dt(cfg)
+
+    def chunk_layer(x, lp, pk, pv, is_global):
+        """The pools are READ-ONLY here: attention gathers the prefix
+        context and overlays the chunk's fresh kv in-register; the kv is
+        returned and scattered into the pools ONCE, after all layers."""
+        sin, cos = _select_rope(tables, is_global)
+        h = C.apply_norm(cfg, lp["ln1"], x)
+        k_new, v_new = C.project_kv(cfg, lp["attn"], h, sin, cos)
+        attn = C.paged_prefill_attention_block(
+            cfg, lp["attn"], h, sin, cos, pk, pv, bt, abs_pos,
+            k_new, v_new, start,
+            ctx_len=ctx_len, window=_layer_window(cfg, is_global))
+        x = x + attn
+        h = C.apply_norm(cfg, lp["ln2"], x)
+        if "moe" in lp:
+            y, _ = C.moe_block(cfg, lp["moe"], h)
+        else:
+            y = C.mlp_block(cfg, lp["mlp"], h)
+        return x + y, (k_new[0].astype(dtype), v_new[0].astype(dtype))
+
+    if cfg.num_experts and cfg.moe_every > 1:
+        k = cfg.moe_every
+        G = cfg.num_layers // k
+        gflags = flags.reshape(G, k)
+        pk = pools["k"].reshape(G, k, *pools["k"].shape[1:])
+        pv = pools["v"].reshape(G, k, *pools["v"].shape[1:])
+
+        def gbody(x, scanned):
+            gp, gk, gv, gf = scanned
+            nk, nv = [], []
+            for j in range(k):
+                lp = (jax.tree.map(lambda a: a[j], gp["pre"])
+                      if j < k - 1 else gp["last"])
+                x, (k2, v2) = chunk_layer(x, lp, gk[j], gv[j], gf[j])
+                nk.append(k2)
+                nv.append(v2)
+            return x, (jnp.stack(nk), jnp.stack(nv))
+
+        x, (ks, vs) = jax.lax.scan(gbody, x, (params["layers"], pk, pv, gflags))
+        ks = ks.reshape(cfg.num_layers, *ks.shape[2:])
+        vs = vs.reshape(cfg.num_layers, *vs.shape[2:])
+    else:
+        def body(x, scanned):
+            lp, pk, pv, is_global = scanned
+            x, (k2, v2) = chunk_layer(x, lp, pk, pv, is_global)
+            return x, (k2, v2)
+
+        x, (ks, vs) = jax.lax.scan(
+            body, x, (params["layers"], pools["k"], pools["v"], flags))
+
+    # ONE scatter for the whole chunk: ks/vs [L, C, Hkv, D] land at each
+    # position's (page, slot) across every layer at once
+    new_pools = {"k": pools["k"].at[:, blk, slot].set(ks),
+                 "v": pools["v"].at[:, blk, slot].set(vs)}
+    x = C.apply_norm(cfg, params["final_norm"], x)
+    return x, new_pools

@@ -175,8 +175,10 @@ class GatewayNode:
         }
 
     def _backend_status(self) -> Optional[Dict[str, Any]]:
-        """Inference-backend telemetry (engine token counters + continuous-
-        batching scheduler occupancy) when the backend exposes them."""
+        """Inference-backend telemetry (engine token counters, continuous-
+        batching scheduler occupancy + prefix-cache hit rate, and the
+        proxy's per-session prompt-reuse aggregate) when the backend
+        exposes them."""
         eng = self.proxy.backend
         stats = getattr(eng, "stats", None)
         sched = getattr(eng, "scheduler_stats", None)
@@ -185,7 +187,22 @@ class GatewayNode:
         return {
             "stats": dict(stats) if isinstance(stats, dict) else None,
             "scheduler": sched() if callable(sched) else None,
+            "prefix": self.proxy.prefix_stats(),
         }
+
+    def backpressure(self) -> float:
+        """Dispatch score: sessions in flight plus queued work, normalized
+        by stage capacity, plus the instantaneous stage utilization — the
+        telemetry already exported via ``status()`` / GET /rollout/nodes,
+        collapsed to one number the RolloutServer can rank nodes by.
+        Lower = more headroom."""
+        with self._lock:
+            in_flight = len(self._live)
+            busy = sum(self._busy.values())
+            workers = sum(self._workers.values()) or 1
+        queued = (self._init_q.qsize() + self._ready_q.qsize()
+                  + self._recon_q.qsize() + self._eval_q.qsize())
+        return (in_flight + queued) / workers + busy / workers
 
     def in_flight_sessions(self) -> List[Session]:
         with self._lock:

@@ -120,13 +120,25 @@ class RolloutServer:
         return task.task_id
 
     def _dispatch(self, session: Session) -> None:
+        """Backpressure-aware routing: rank nodes by the queue-depth /
+        utilization telemetry they already export (``backpressure()``,
+        derived from ``status()`` / GET /rollout/nodes) instead of raw
+        session count, so a node with more workers — or with drained stage
+        queues — absorbs proportionally more sessions."""
         nodes = self._alive_nodes()
         if not nodes:
             session.status = "pending"   # picked up by the monitor loop
             return
-        target = min(nodes, key=lambda n: n.gateway.load)
+        target = min(nodes, key=lambda n: self._node_score(n.gateway))
         session.attempts += 1
         target.gateway.submit(session)
+
+    @staticmethod
+    def _node_score(gateway: GatewayNode) -> float:
+        bp = getattr(gateway, "backpressure", None)
+        if callable(bp):
+            return float(bp())
+        return float(gateway.load)       # legacy nodes: raw session count
 
     def cancel_session(self, session_id: str) -> None:
         """Best-effort straggler cancellation across all nodes."""

@@ -59,7 +59,126 @@ def test_bit_identical_to_one_shot():
         st = engB.scheduler_stats()
         assert st["completed"] == i
         assert st["peak_batch"] > 1, "waves must actually batch"
-        assert st["live_sequences"] == 0 and st["free_blocks"] == st["num_blocks"] - 1
+        assert st["live_sequences"] == 0
+        # retired sequences leave only their cached (pinned) prompt blocks
+        # behind; everything else returns to the free list
+        assert st["free_blocks"] + st["cached_blocks"] == st["num_blocks"] - 1
+        assert st["cached_blocks"] == st["evictable_blocks"]
+        assert st["available_blocks"] == st["num_blocks"] - 1
+    finally:
+        engB.close()
+
+
+def test_chunked_cold_prefill_bit_identical():
+    """Tiny prefill chunks (many chunks per prompt, interleaved with decode)
+    must not perturb a single sampled bit."""
+    engA = Engine(CFG, rng=jax.random.PRNGKey(21), max_len=160, max_new=8,
+                  serial=True)
+    engB = Engine(CFG, rng=jax.random.PRNGKey(21), max_len=160, max_new=8,
+                  block_size=16, max_batch=8, prefill_chunk=16)
+    try:
+        prompts = [_prompt(i) for i in range(4)]
+        serial = [engA.generate_ids(p) for p in prompts]
+        futs = [engB.submit_ids(p) for p in prompts]
+        for (ids, lps, fin), f in zip(serial, futs):
+            r = f.result(timeout=300)
+            assert ids == r["response_ids"] and lps == r["logprobs"]
+            assert fin == r["finish_reason"]
+        st = engB.scheduler_stats()
+        assert st["prefill_chunks"] > st["joins"], \
+            "long prompts must take several chunks"
+    finally:
+        engB.close()
+
+
+def _ids(lo: int, n: int) -> list:
+    """Deterministic raw prompt ids (plain tokens, no template)."""
+    return [(5 + (lo * 7 + j) % 240) for j in range(n)]
+
+
+def test_warm_prefix_bit_identical_multi_turn():
+    """Multi-turn conversation: turn t+1's prompt extends turn t's prompt +
+    response.  The scheduler serves the shared prefix from cache; sampled
+    ids AND log-probs must stay bit-identical to one-shot re-prefill."""
+    engA = Engine(CFG, rng=jax.random.PRNGKey(13), max_len=160, max_new=8,
+                  serial=True)
+    engB = Engine(CFG, rng=jax.random.PRNGKey(13), max_len=160, max_new=8,
+                  block_size=16, max_batch=8, prefill_chunk=32)
+    try:
+        prompt = _ids(1, 40)
+        for turn in range(3):
+            ids, lps, fin = engA.generate_ids(list(prompt))
+            r = engB.submit_ids(list(prompt)).result(timeout=300)
+            assert ids == r["response_ids"], f"turn {turn}: ids diverged"
+            assert lps == r["logprobs"], f"turn {turn}: log-probs diverged"
+            assert fin == r["finish_reason"]
+            if turn > 0:
+                assert r["cached_tokens"] > 0, \
+                    f"turn {turn} must hit the prefix cache"
+            # next turn: history + this response + a fresh user message
+            prompt = prompt + ids + _ids(50 + turn, 9)
+        st = engB.scheduler_stats()
+        assert st["prefix_hits"] >= 2
+        assert st["prefix_tokens_saved"] >= 32
+        assert st["prefix_hit_rate"] > 0
+    finally:
+        engB.close()
+
+
+def test_cow_partial_block_bit_identical():
+    """Two prompts diverging mid-block: the second shares full blocks by
+    refcount and copy-on-writes the partially-matched block — still bit-
+    identical to one-shot."""
+    engA = Engine(CFG, rng=jax.random.PRNGKey(17), max_len=160, max_new=6,
+                  serial=True)
+    engB = Engine(CFG, rng=jax.random.PRNGKey(17), max_len=160, max_new=6,
+                  block_size=16, max_batch=8)
+    try:
+        base = _ids(3, 48)                       # 3 full 16-token blocks
+        p_a = base + _ids(60, 8)
+        p_b = base[:40] + _ids(61, 10)           # diverges 8 tokens into blk 2
+        for p in (p_a, p_b):
+            ids, lps, fin = engA.generate_ids(list(p))
+            r = engB.submit_ids(list(p)).result(timeout=300)
+            assert ids == r["response_ids"] and lps == r["logprobs"]
+            assert fin == r["finish_reason"]
+        st = engB.scheduler_stats()
+        assert st["cow_copies"] >= 1, "p_b must copy-on-write block 2"
+        # p_b shares blocks 0-1 outright (32) + 8 CoW'd positions of block 2
+        assert st["prefix_tokens_saved"] >= 40
+    finally:
+        engB.close()
+
+
+def test_mixed_warm_cold_admissions_bit_identical():
+    """A wave mixing warm (cached-prefix) and cold prompts, including
+    duplicates, all in flight together — every request bit-identical."""
+    engA = Engine(CFG, rng=jax.random.PRNGKey(19), max_len=160, max_new=6,
+                  serial=True)
+    engB = Engine(CFG, rng=jax.random.PRNGKey(19), max_len=160, max_new=6,
+                  block_size=16, max_batch=8, prefill_chunk=32)
+    try:
+        warm_base = _ids(5, 40)
+        # seed the cache with one completed request
+        ids0, lps0, fin0 = engA.generate_ids(list(warm_base))
+        r0 = engB.submit_ids(list(warm_base)).result(timeout=300)
+        assert ids0 == r0["response_ids"] and lps0 == r0["logprobs"]
+
+        wave = [warm_base + _ids(70, 5),        # warm
+                _ids(80, 30),                   # cold
+                warm_base + _ids(71, 12),       # warm, different tail
+                _ids(80, 30)]                   # duplicate cold
+        serial = [engA.generate_ids(list(p)) for p in wave]
+        futs = [engB.submit_ids(list(p)) for p in wave]
+        results = [f.result(timeout=300) for f in futs]
+        for (ids, lps, fin), r in zip(serial, results):
+            assert ids == r["response_ids"] and lps == r["logprobs"]
+            assert fin == r["finish_reason"]
+        warm = [r["cached_tokens"] for r in results]
+        assert warm[0] > 0 and warm[2] > 0, "warm admissions must hit"
+        st = engB.scheduler_stats()
+        assert st["completed"] == 5 and st["errors"] == 0
+        assert st["live_sequences"] == 0
     finally:
         engB.close()
 

@@ -1,0 +1,328 @@
+"""Prefix-cache unit tests: radix-index match/publish/evict mechanics,
+copy-on-write device copies, eviction under admission pressure, the
+enable/disable knob, the chunked-prefill attention gather oracle, and the
+per-session hit telemetry surfaced through proxy + gateway ``status()``.
+
+The bit-exactness of warm/chunked admissions vs. the one-shot engine path
+lives in tests/test_continuous_batching.py; this file covers the cache
+machinery itself.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.proxy import ProxyGateway
+from repro.inference import Engine, PagedKVCache
+
+CFG = get_smoke_config("qwen3-32b").replace(vocab_size=512)
+BS = 4
+
+
+def _cache(num_blocks=16, max_len=32, **kw):
+    return PagedKVCache(CFG, block_size=BS, num_blocks=num_blocks,
+                        max_len=max_len, **kw)
+
+
+def _admit_and_publish(cache, seq, tokens, max_new=4):
+    shared, matched, cow_src, cow_len = cache.match_prefix(tokens)
+    assert cache.admit(seq, len(tokens), len(tokens) + max_new, shared=shared)
+    if cow_src is not None and cow_len > 0:
+        if cache.cow_into(seq, cow_src) is not None:
+            matched += cow_len
+    cache.publish(seq, tokens)
+    return matched
+
+
+# ---------------------------------------------------------------------------
+# match / publish
+# ---------------------------------------------------------------------------
+
+def test_match_returns_published_full_blocks_capped_at_last_token():
+    cache = _cache()
+    toks = list(range(10, 10 + 11))                     # 11 tokens: 2 full blocks
+    _admit_and_publish(cache, "a", toks)
+    blocks_a = cache.allocator.owned("a")
+
+    # identical prompt: both full blocks shareable, but never the whole
+    # prompt — the last token is always recomputed
+    shared, matched, cow_src, cow_len = cache.match_prefix(list(toks))
+    assert shared == blocks_a[:2] and matched == 8
+    assert cow_src is None or cow_len <= 2              # cap: 8 + j <= 10
+
+    # a 9-token prompt sharing the stream may only share ONE full block
+    # (block 1 would cover positions up to 8 == plen-1 cap)
+    shared, matched, _, _ = cache.match_prefix(toks[:9])
+    assert shared == blocks_a[:2] and matched == 8
+    shared, matched, _, _ = cache.match_prefix(toks[:8])
+    assert shared == blocks_a[:1] and matched == 4
+
+    # diverging first block: no match at all
+    shared, matched, cow_src, _ = cache.match_prefix([9] * 11)
+    assert shared == [] and matched == 0 and cow_src is None
+    cache.free("a")
+    cache.allocator.check()
+
+
+def test_refcounts_track_sharing_and_pins():
+    cache = _cache()
+    toks = list(range(50, 50 + 12))                     # 3 full blocks
+    _admit_and_publish(cache, "a", toks)
+    b0 = cache.allocator.owned("a")[0]
+    assert cache.allocator.refcount(b0) == 2            # owner + cache pin
+    matched = _admit_and_publish(cache, "b", toks + [7, 8])
+    assert matched >= 8
+    assert cache.allocator.refcount(b0) == 3            # two owners + pin
+    cache.free("a")
+    assert cache.allocator.refcount(b0) == 2
+    cache.free("b")
+    assert cache.allocator.refcount(b0) == 1            # pin only: evictable
+    assert cache.allocator.evictable() == cache.allocator.num_pinned()
+    cache.allocator.check()
+
+
+# ---------------------------------------------------------------------------
+# eviction
+# ---------------------------------------------------------------------------
+
+def test_lru_eviction_takes_cold_leaves_first():
+    cache = _cache()
+    hot = list(range(100, 100 + 9))
+    cold = list(range(200, 200 + 9))
+    _admit_and_publish(cache, "h", hot)
+    cache.free("h")
+    _admit_and_publish(cache, "c", cold)
+    cache.free("c")
+    cache.match_prefix(hot)          # touch: hot chain becomes MRU
+    pinned_before = cache.allocator.num_pinned()
+    assert cache.index.evict_one()
+    # the cold chain's deepest block goes first; the hot chain is intact
+    shared, matched, _, _ = cache.match_prefix(hot)
+    assert matched == 8, "hot chain must survive the eviction"
+    shared, matched, _, _ = cache.match_prefix(cold)
+    assert matched < 8, "cold chain must have lost its leaf"
+    assert cache.allocator.num_pinned() == pinned_before - 1
+    cache.allocator.check()
+
+
+def test_admission_reclaims_evictable_blocks_and_honors_reservations():
+    """A pool whose free list is fully consumed by cached blocks must still
+    admit new sequences (evicting LRU refcount-0 cached blocks) and the
+    admission-time worst-case reservation must survive the pressure."""
+    cache = _cache(num_blocks=9, max_len=32)            # 8 usable blocks
+    for i, seq in enumerate(("a", "b")):
+        toks = list(range(100 * (i + 1), 100 * (i + 1) + 16))  # 4 full blocks
+        _admit_and_publish(cache, seq, toks, max_new=0)
+        cache.free(seq)
+    assert cache.allocator.num_free() == 0
+    assert cache.allocator.evictable() == 8
+    # a cold 17-token + 12-new sequence needs 8 blocks: all must come from
+    # eviction, and extend() must then be able to consume every reservation
+    toks = list(range(900, 900 + 17))
+    assert cache.admit("c", 17, 29)
+    for pos in range(17, 29):
+        cache.ensure("c", pos)
+    cache.allocator.check()
+    assert len(cache.allocator.owned("c")) == 8
+    cache.free("c")
+    cache.allocator.check()
+
+
+def test_max_cached_blocks_budget_limits_pinning():
+    cache = _cache(max_cached_blocks=2)
+    toks = list(range(100, 100 + 17))                   # 4 full blocks
+    _admit_and_publish(cache, "a", toks)
+    assert cache.allocator.num_pinned() <= 2
+    cache.free("a")
+    cache.allocator.check()
+
+
+def test_budget_eviction_never_detaches_the_publish_path():
+    """Regression: publishing under a tight budget must not evict a node
+    the walk is standing on — the next insert would hang off a detached
+    parent, pinned but unreachable from the root."""
+    cache = _cache(max_cached_blocks=2)
+    stream = list(range(100, 100 + 17))
+    _admit_and_publish(cache, "a", stream)              # budget: 2 pinned
+    cache.free("a")
+    # b re-publishes the same path: walks onto a's evictable chain and then
+    # wants a third level — eviction must take an off-path block (none
+    # here) or stop, never the chain itself
+    _admit_and_publish(cache, "b", stream)
+    cache.free("b")
+    # every pinned block must be reachable from the root by matching
+    shared, matched, _, _ = cache.match_prefix(stream)
+    assert len(shared) == cache.allocator.num_pinned(), \
+        "a pinned block became unreachable from the trie root"
+    cache.allocator.check()
+
+
+# ---------------------------------------------------------------------------
+# copy-on-write
+# ---------------------------------------------------------------------------
+
+def test_cow_copies_device_block_content():
+    cache = _cache()
+    toks = list(range(10, 10 + 9))                      # 2 full blocks
+    _admit_and_publish(cache, "a", toks)
+    src = cache.allocator.owned("a")[1]
+    # stamp recognizable values into the donor block
+    stamp = jnp.arange(cache.kp[:, src].size,
+                       dtype=jnp.float32).reshape(cache.kp[:, src].shape)
+    cache.kp = cache.kp.at[:, src].set(stamp.astype(cache.kp.dtype))
+
+    diverging = toks[:6] + [250, 251, 252]              # splits inside blk 1
+    shared, matched, cow_src, cow_len = cache.match_prefix(diverging)
+    assert shared == cache.allocator.owned("a")[:1] and matched == 4
+    assert cow_src == src and cow_len == 2              # positions 4,5 match
+    assert cache.admit("b", len(diverging), len(diverging) + 2, shared=shared)
+    dst = cache.cow_into("b", cow_src)
+    assert dst != src and dst == cache.allocator.owned("b")[1]
+    np.testing.assert_array_equal(
+        np.asarray(cache.kp[:, dst], np.float32),
+        np.asarray(cache.kp[:, src], np.float32))
+    assert cache.metrics["cow_copies"] == 1
+    cache.free("a")
+    cache.free("b")
+    cache.allocator.check()
+
+
+def test_cow_source_evicted_by_own_admission_is_skipped():
+    """Regression: when the admission's private allocation must evict the
+    CoW candidate itself (last evictable block), cow_into returns None —
+    copying would read a block already reassigned to the new sequence."""
+    cache = _cache(num_blocks=5, max_len=32)            # 4 usable blocks
+    stream = list(range(100, 132))
+    _admit_and_publish(cache, "a", stream[:16], max_new=0)   # pins all 4
+    cache.free("a")
+    assert cache.allocator.num_free() == 0
+    shared, matched, cow_src, cow_len = cache.match_prefix(stream[:15])
+    assert len(shared) == 3 and matched == 12
+    assert cow_src is not None and cow_len == 2
+    assert cache.admit("b", 15, 15, shared=shared)      # evicts cow_src
+    assert cache.cow_into("b", cow_src) is None
+    assert cache.allocator.owned("b")[3] == cow_src, \
+        "the evicted candidate was reused as b's own private block"
+    cache.free("b")
+    cache.allocator.check()
+
+
+# ---------------------------------------------------------------------------
+# chunked-prefill attention: dispatch vs gather oracle
+# ---------------------------------------------------------------------------
+
+def test_paged_prefill_attention_matches_gather_oracle():
+    from repro.kernels import ops
+    from repro.kernels.ref import paged_prefill_attention_reference
+    from repro.kernels.xla_flash import flash_attention_xla
+
+    rng = np.random.RandomState(3)
+    C, H, Hkv, D, NB, bs, maxnb = 8, 4, 2, 8, 12, 4, 6
+    ctx = 24
+    q = jnp.asarray(rng.randn(1, C, H, D), jnp.bfloat16)
+    kp = jnp.asarray(rng.randn(NB, bs, Hkv, D), jnp.bfloat16)
+    vp = jnp.asarray(rng.randn(NB, bs, Hkv, D), jnp.bfloat16)
+    bt = jnp.asarray(rng.permutation(np.arange(1, NB))[:maxnb], jnp.int32)
+    idx_q = jnp.arange(10, 10 + C, dtype=jnp.int32)     # rows mid-prompt
+
+    out = ops.paged_prefill_attention(q, kp, vp, bt, idx_q, ctx_len=ctx)
+    ref = paged_prefill_attention_reference(q, kp, vp, bt, idx_q, ctx_len=ctx)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=2e-2, rtol=2e-2)
+
+    # the dispatch path must be BIT-identical to flash attention over the
+    # gathered-contiguous layout — that identity is the scheduler's
+    # bit-exactness contract with the one-shot prefill
+    k_c = kp[bt].reshape(-1, Hkv, D)[:ctx][None]
+    v_c = vp[bt].reshape(-1, Hkv, D)[:ctx][None]
+    flash = flash_attention_xla(
+        q, k_c, v_c, idx_q=idx_q[None],
+        idx_kv=jnp.arange(ctx, dtype=jnp.int32)[None], causal=True)
+    assert bool(jnp.all(out == flash))
+
+
+# ---------------------------------------------------------------------------
+# knobs + telemetry
+# ---------------------------------------------------------------------------
+
+def _turns(session_tag: str, n: int):
+    msgs = [{"role": "user", "content": f"{session_tag}: start task"}]
+    for _ in range(n):
+        yield list(msgs)
+        msgs.append({"role": "assistant", "content": "ok"})
+        msgs.append({"role": "user", "content": "continue the task now"})
+
+
+def test_failed_warm_admission_resolves_future_instead_of_hanging():
+    """Regression: a request popped from the queue must stay visible to
+    _fail_all through every fallible call on the admission path (the CoW
+    device copy in particular) — its future gets the error, never a hang."""
+    import pytest
+
+    eng = Engine(CFG, rng=jax.random.PRNGKey(6), max_len=96, max_new=4,
+                 block_size=8)
+    try:
+        donor = [(30 + i) % 200 for i in range(24)]     # 3 full 8-blocks
+        eng.submit_ids(list(donor)).result(timeout=300)
+        sched = eng.scheduler
+        assert sched.cache.match_prefix(list(donor))[2] is not None, \
+            "repeat prompt must present a CoW candidate"
+
+        def boom(seq_id, src):
+            raise RuntimeError("injected cow failure")
+
+        sched.cache.cow_into = boom
+        fut = eng.submit_ids(list(donor))
+        with pytest.raises(RuntimeError, match="injected cow failure"):
+            fut.result(timeout=60)
+        # the scheduler survives (pools rebuilt) and keeps serving
+        sched.cache.match_prefix       # rebuilt cache object
+        r = eng.submit_ids([5, 6, 7, 8]).result(timeout=300)
+        assert len(r["response_ids"]) > 0
+    finally:
+        eng.close()
+
+
+def test_prefix_cache_disable_knob():
+    eng = Engine(CFG, rng=jax.random.PRNGKey(2), max_len=192, max_new=4,
+                 block_size=8, prefix_cache=False)
+    try:
+        for msgs in _turns("off", 2):
+            eng.complete({"messages": msgs, "max_tokens": 4})
+        st = eng.scheduler_stats()
+        assert st["prefix_cache"] == 0
+        assert st["prefix_hits"] == 0 and st["cached_blocks"] == 0
+    finally:
+        eng.close()
+
+
+def test_proxy_and_gateway_expose_per_session_hit_telemetry():
+    from repro.rollout.gateway import GatewayNode
+    from repro.rollout.types import PipelineConfig
+
+    eng = Engine(CFG, rng=jax.random.PRNGKey(4), max_len=192, max_new=4,
+                 block_size=8)
+    gw = GatewayNode(eng, pipeline=PipelineConfig(serial=True))
+    try:
+        for msgs in _turns("s1", 3):
+            gw.proxy.handle("/v1/chat/completions",
+                            {"model": "m", "max_tokens": 4, "messages": msgs},
+                            session_id="s1")
+        per = gw.proxy.prefix_stats("s1")
+        assert per["requests"] == 3
+        assert per["cached_tokens"] > 0, \
+            "multi-turn template prompts must hit the cache"
+        assert 0 < per["hit_fraction"] < 1
+        rec = gw.proxy.session("s1").completions[-1]
+        assert rec.metadata["cached_prompt_tokens"] > 0
+
+        status = gw.status()["backend"]
+        assert status["prefix"]["cached_tokens"] == per["cached_tokens"]
+        assert status["scheduler"]["prefix_hits"] >= 2
+        assert status["scheduler"]["prefix_hit_rate"] > 0
+    finally:
+        gw.shutdown()
+        eng.close()

@@ -5,7 +5,11 @@ continuous-batching scheduler:
     returns exactly the blocks that were allocated,
   * arbitrary join/append/leave interleavings through the real page
     mapping preserve every live sequence's token order and never share a
-    page between sequences.
+    page between sequences they don't legitimately share a prefix with,
+  * arbitrary share/CoW/evict interleavings through the prefix cache keep
+    the refcount invariants (refcount == owning sequences + cache pins, no
+    block both free and referenced) and every live sequence's pages still
+    replay its exact tokens — shared prefix pages included.
 """
 from __future__ import annotations
 
@@ -111,5 +115,88 @@ def test_join_leave_interleavings_preserve_token_order(events):
     for slot in list(live):
         cache.free(live.pop(slot)[0])
     cache.allocator.check()
+
+
+# one event: (slot 0-2, prompt len, decode appends, leave?, evict?)
+share_st = st.tuples(st.integers(0, 2), st.integers(2, 20), st.integers(0, 5),
+                     st.booleans(), st.booleans())
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(share_st, max_size=14))
+def test_share_cow_evict_interleavings_preserve_tokens_and_refcounts(events):
+    """Share/CoW/evict interleavings through the real prefix cache.
+
+    Every prompt is a prefix of one fixed token stream, so admissions
+    genuinely share cached full blocks and copy-on-write partially-matched
+    ones.  After every event: refcount == owners + cache pins (check()),
+    and each live sequence's pages — shared, CoW'd, and private alike —
+    replay exactly its tokens in write order."""
+    BS = 4
+    cache = PagedKVCache(CFG, block_size=BS, num_blocks=12, max_len=24)
+    stream = [100 + p for p in range(cache.max_len)]     # shared prompt pool
+    ledger: dict = {}          # (block, slot) -> token value written there
+    live: dict = {}            # slot -> (seq_id, plen, written)
+    seq_counter = 0
+
+    def write(seq, pos, val):
+        cache.ensure(seq, pos)
+        blk, slot = cache.slot_of(seq, pos)
+        # a sequence only ever writes its private region, never shared pages
+        assert pos // BS >= cache.allocator.shared_prefix(seq), \
+            "write into a shared prefix page"
+        ledger[(blk, slot)] = val
+
+    def verify():
+        for seq, plen, written in live.values():
+            for p in range(written):
+                want = stream[p] if p < plen else 1000 * seq + p
+                assert ledger[cache.slot_of(seq, p)] == want, \
+                    "pages must replay the sequence's tokens (shared incl.)"
+        cache.allocator.check()
+
+    for slot, plen, appends, leave, evict in events:
+        if slot not in live:
+            prompt = stream[:plen]
+            shared, matched, cow_src, cow_len = cache.match_prefix(prompt)
+            total = min(plen + appends + 1, cache.max_len)
+            if not cache.admit(seq_counter, plen, total, shared=shared):
+                continue
+            seq = seq_counter
+            seq_counter += 1
+            if cow_src is not None and cow_len > 0:
+                dst = cache.cow_into(seq, cow_src)
+                if dst is not None:     # src may be evicted BY the admission
+                    for s in range(BS):             # host mirror of the copy
+                        if (cow_src, s) in ledger:
+                            ledger[(dst, s)] = ledger[(cow_src, s)]
+                    matched += cow_len
+            assert matched <= plen - 1, "last token is always recomputed"
+            for p in range(matched, plen):
+                write(seq, p, stream[p])
+            cache.publish(seq, prompt)
+            live[slot] = (seq, plen, plen)
+        seq, plen, written = live[slot]
+        owned_capacity = (len(cache.allocator.owned(seq)) * BS
+                          + cache.allocator.headroom(seq) * BS)
+        budget = min(written + appends, cache.max_len, owned_capacity)
+        for p in range(written, budget):
+            write(seq, p, 1000 * seq + p)
+        live[slot] = (seq, plen, budget)
+        verify()
+        if evict and cache.index is not None:
+            cache.index.evict_one()
+            verify()
+        if leave:
+            cache.free(seq)
+            del live[slot]
+            verify()
+    for slot in list(live):
+        cache.free(live.pop(slot)[0])
+    cache.allocator.check()
+    # nothing lingers but the cache pins, all evictable once everyone left
+    assert cache.allocator.evictable() == cache.allocator.num_pinned()
+    assert (cache.allocator.num_free() + cache.allocator.num_pinned()
+            == cache.num_blocks - 1)
 
 

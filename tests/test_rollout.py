@@ -183,6 +183,62 @@ def test_ready_buffer_backpressure_many_sessions():
     server.shutdown()
 
 
+def test_backpressure_aware_dispatch_routes_around_skewed_load():
+    """_dispatch must rank nodes by the queue-depth/utilization telemetry
+    (backpressure score), not raw session count: a node whose stage queues
+    are piling up loses new sessions to a drained node of equal size, and
+    a node with more workers absorbs proportionally more."""
+    server = RolloutServer(heartbeat_timeout=30.0, monitor_interval=5.0)
+
+    class FakeGateway:
+        def __init__(self, gid, score):
+            self.gateway_id = gid
+            self.score = score
+            self.submitted = []
+            self.result_sink = None
+            self.load = 0            # equal raw session count on both nodes
+
+        def backpressure(self):
+            return self.score
+
+        def submit(self, session):
+            self.submitted.append(session)
+
+        def status(self):
+            return {"metrics": {}}
+
+        def cancel(self, session_id):
+            pass
+
+        def in_flight_sessions(self):
+            return []
+
+        def shutdown(self):
+            pass
+
+    congested = FakeGateway("gw_congested", score=5.0)
+    drained = FakeGateway("gw_drained", score=0.25)
+    server.register_node(congested, auto_heartbeat=False)
+    server.register_node(drained, auto_heartbeat=False)
+    server.submit_task(_task(task_id="skew", n=6))
+    assert len(drained.submitted) == 6 and not congested.submitted, \
+        "all sessions must route to the drained node despite equal load"
+
+    # real gateways: a bigger node scores lower headroom-pressure than a
+    # smaller one carrying the same queue, so capacity wins ties
+    big = GatewayNode(EchoBackend(), run_workers=4)
+    small = GatewayNode(EchoBackend(), run_workers=1)
+    try:
+        assert big.backpressure() <= small.backpressure()
+        with small._lock:                # pending work raises the score
+            small._live["fake"] = object()
+        assert small.backpressure() > big.backpressure()
+    finally:
+        big.shutdown()
+        small.shutdown()
+        server.shutdown()
+
+
 def test_stage_isolation_metrics():
     """INIT, RECON and EVAL work must be attributed outside RUN busy time."""
     server, gws = _stack()
