@@ -1,0 +1,170 @@
+"""Per-trainer throughput fairness on one shared rollout pool (paper §3.1).
+
+Two registered trainers with 4:1 admission weights submit task streams with
+different harness mixes (the heavy trainer runs longer-horizon sessions)
+against one RolloutServer + gateway pool under a bounded admission limit —
+the contended regime where weighted-fair admission matters.  Reports each
+trainer's admitted-session share vs. its configured weight share, completed
+sessions/sec, and the Jain fairness index over weight-normalized admission
+(1.0 = perfectly proportional).
+
+    PYTHONPATH=src python -m benchmarks.bench_multi_trainer [--dry-run] \
+        [--out results/bench_multi_trainer.json]
+
+Emits a BENCH json line and writes the same record to --out; CI uploads it
+as an artifact so fairness regressions in the admission controller are
+visible per commit.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+from repro.core.testing import EchoBackend
+from repro.rollout import (AgentSpec, GatewayNode, PipelineConfig,
+                           RolloutServer, RuntimeSpec, TaskRequest)
+
+
+class LatentEchoBackend(EchoBackend):
+    def __init__(self, latency: float):
+        super().__init__()
+        self.latency = latency
+
+    def complete(self, request):
+        time.sleep(self.latency)
+        return super().complete(request)
+
+
+def _tasks(trainer_id: str, n_tasks: int, samples: int, turns: int,
+           prepare_sleep: float):
+    return [TaskRequest(
+        task_id=f"{trainer_id}-{i}",
+        instruction="Produce the text: fair",
+        num_samples=samples,
+        timeout_seconds=120.0,
+        runtime=RuntimeSpec(prepare=[f"sleep {prepare_sleep}"], pool_size=4),
+        agent=AgentSpec(harness="qwen_code", max_turns=turns,
+                        config={"max_tokens": 16}),
+        evaluator={"strategy": "session_completion"},
+        trainer_id=trainer_id,
+    ) for i in range(n_tasks)]
+
+
+def run(*, n_tasks: int, samples: int, latency: float, prepare_sleep: float,
+        admission_limit: int, weights=(4.0, 1.0)) -> dict:
+    server = RolloutServer(heartbeat_timeout=30.0, monitor_interval=0.1,
+                           admission_limit=admission_limit)
+    gw = GatewayNode(LatentEchoBackend(latency), pipeline=PipelineConfig())
+    server.register_node(gw, heartbeat_interval=0.2)
+    w_heavy, w_light = weights
+    server.register_trainer("heavy", weight=w_heavy)
+    server.register_trainer("light", weight=w_light)
+    # the gateway's submit order IS the admission order: record it so the
+    # share can be measured over the CONTENDED window (both backlogged) —
+    # over a fully drained run every trainer's total share converges to
+    # demand, not weight
+    order = []
+    orig_submit = gw.submit
+
+    def submit(session):
+        order.append(session.trainer_id)
+        orig_submit(session)
+
+    gw.submit = submit
+    # skewed mix: the heavy trainer's sessions run twice the turns
+    heavy = _tasks("heavy", n_tasks, samples, 2, prepare_sleep)
+    light = _tasks("light", n_tasks, samples, 1, prepare_sleep)
+    t0 = time.perf_counter()
+    for t in heavy + light:
+        server.submit_task(t)
+    for t in heavy + light:
+        server.wait(t.task_id, timeout=300)
+    wall = time.perf_counter() - t0
+    stats = server.status()["trainers"]
+    server.shutdown()
+
+    ideal = w_heavy / (w_heavy + w_light)
+    demand = n_tasks * samples           # per trainer
+    adm_h = adm_l = 0
+    for tid in order:                    # contended prefix: both backlogged
+        if tid == "heavy":
+            adm_h += 1
+        else:
+            adm_l += 1
+        if adm_h >= demand or adm_l >= demand:
+            break
+    share = adm_h / max(1, adm_h + adm_l)
+    # Jain index over weight-normalized contended admission: 1 = proportional
+    xs = [adm_h / w_heavy, adm_l / w_light]
+    jain = (sum(xs) ** 2) / (len(xs) * sum(x * x for x in xs))
+    per_trainer = {
+        tid: {
+            "weight": stats[tid]["weight"],
+            "admitted": stats[tid]["admitted"],
+            "completed": stats[tid]["completed"],
+            "starved": stats[tid]["starved"],
+            "sessions_per_s": round(stats[tid]["completed"] / wall, 3),
+        } for tid in ("heavy", "light")
+    }
+    return {
+        "wall_s": round(wall, 4),
+        "admission_limit": admission_limit,
+        "trainers": per_trainer,
+        "contended_admissions": {"heavy": adm_h, "light": adm_l},
+        "heavy_share_measured": round(share, 4),
+        "heavy_share_ideal": round(ideal, 4),
+        "share_abs_error": round(abs(share - ideal), 4),
+        "jain_fairness": round(jain, 4),
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry-run", action="store_true",
+                    help="CI smoke: tiny workload, same record shape")
+    ap.add_argument("--tasks", type=int, default=None)
+    ap.add_argument("--samples", type=int, default=None)
+    ap.add_argument("--latency", type=float, default=None)
+    ap.add_argument("--admission-limit", type=int, default=None)
+    ap.add_argument("--out", default="results/bench_multi_trainer.json")
+    args = ap.parse_args(argv)
+
+    if args.dry_run:
+        defaults = dict(n_tasks=4, samples=3, latency=0.005,
+                        prepare_sleep=0.01, admission_limit=3)
+    else:
+        defaults = dict(n_tasks=8, samples=4, latency=0.02,
+                        prepare_sleep=0.03, admission_limit=4)
+    params = dict(
+        n_tasks=args.tasks or defaults["n_tasks"],
+        samples=args.samples or defaults["samples"],
+        latency=(args.latency if args.latency is not None
+                 else defaults["latency"]),
+        prepare_sleep=defaults["prepare_sleep"],
+        admission_limit=args.admission_limit or defaults["admission_limit"],
+    )
+    result = run(**params)
+    record = {"bench": "multi_trainer", "dry_run": args.dry_run,
+              "params": params, **result}
+    for tid, st in result["trainers"].items():
+        print(f"  {tid:6s} (w={st['weight']:.0f}): admitted={st['admitted']:4d}"
+              f" completed={st['completed']:4d}"
+              f" {st['sessions_per_s']:7.2f} sessions/s"
+              f" starved={st['starved']}")
+    print(f"  heavy share: {result['heavy_share_measured']:.3f}"
+          f" (ideal {result['heavy_share_ideal']:.3f},"
+          f" |err|={result['share_abs_error']:.3f})")
+    print(f"  jain fairness (weight-normalized): {result['jain_fairness']:.4f}")
+    print("BENCH " + json.dumps(record))
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(record, f, indent=2)
+        print(f"  wrote {args.out}")
+    return record
+
+
+if __name__ == "__main__":
+    main()

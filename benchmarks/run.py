@@ -12,6 +12,9 @@ Sections:
   bench_prefix_cache — prefix-cached vs cold prefill on a 4-turn
                        conversation workload (§2.3 prefix reuse); BENCH
                        json to results/bench_prefix_cache.json
+  bench_multi_trainer — per-trainer admission fairness (4:1 weights, one
+                       shared pool, §3.1 Fig. 5a); BENCH json to
+                       results/bench_multi_trainer.json
   fig5_utilization   — per_request vs prefix_merging trainer load (Fig. 5b)
   table1_rl          — GRPO reward climb across 4 harnesses (Table 1/Fig. 6)
   table2_offline     — offline SFT accept/reject generation (Table 2)
@@ -56,6 +59,11 @@ def main(argv=None):
     print("== bench_prefix_cache (multi-turn conversation prefill reuse)")
     from benchmarks import bench_prefix_cache
     bench_prefix_cache.main(["--dry-run"] if args.fast else [])
+
+    print("=" * 72)
+    print("== bench_multi_trainer (weighted-fair admission, 4:1)")
+    from benchmarks import bench_multi_trainer
+    bench_multi_trainer.main(["--dry-run"] if args.fast else [])
 
     print("=" * 72)
     print("== fig5_utilization")

@@ -95,4 +95,5 @@ class SessionResult:
     trajectory: Optional[Trajectory] = None
     reward: Optional[float] = None
     error: Optional[str] = None
+    trainer_id: Optional[str] = None  # owning consumer (multi-trainer service)
     metadata: Dict[str, Any] = field(default_factory=dict)

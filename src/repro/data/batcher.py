@@ -36,16 +36,20 @@ class _Group:
 
 class GroupBatcher:
     def __init__(self, *, quorum_fraction: float = 1.0, max_staleness: int = 4,
-                 min_groups_per_batch: int = 1, skip_zero_variance: bool = True):
+                 min_groups_per_batch: int = 1, skip_zero_variance: bool = True,
+                 owner: Optional[str] = None):
         self.quorum_fraction = quorum_fraction
         self.max_staleness = max_staleness
         self.min_groups = min_groups_per_batch
         self.skip_zero_variance = skip_zero_variance
+        # multi-trainer guard: when set, results stamped with a different
+        # trainer_id are dropped (zero cross-trainer leakage into batches)
+        self.owner = owner
         self._groups: Dict[str, _Group] = {}
         self._lock = threading.Lock()
         self._ready = threading.Condition(self._lock)
         self.stats = {"results": 0, "groups_emitted": 0, "groups_skipped": 0,
-                      "traces_stale_dropped": 0}
+                      "traces_stale_dropped": 0, "results_foreign_dropped": 0}
 
     # -- ingestion (rollout callback) -----------------------------------------
     def expect_group(self, task_id: str, num_samples: int) -> None:
@@ -53,6 +57,11 @@ class GroupBatcher:
             self._groups.setdefault(task_id, _Group(task_id, num_samples))
 
     def on_result(self, result: SessionResult) -> None:
+        rid = getattr(result, "trainer_id", None)
+        if self.owner is not None and rid is not None and rid != self.owner:
+            with self._lock:
+                self.stats["results_foreign_dropped"] += 1
+            return
         with self._ready:
             g = self._groups.setdefault(result.task_id,
                                         _Group(result.task_id, 1))

@@ -31,6 +31,7 @@ join/share/CoW/evict interleavings).
 """
 from __future__ import annotations
 
+import heapq
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -257,6 +258,13 @@ class PrefixIndex:
     sequence references (evicting a parent before its children would break
     the chain), so a hot conversation's whole prefix stays resident while
     one-off prompts age out.
+
+    Eviction is O(log cached) amortized, not an O(cached) scan: leaves are
+    tracked in a lazy min-heap of ``(tick, block)`` entries.  Touching a
+    leaf pushes a fresh entry; stale entries (tick no longer current, node
+    grew children, block evicted/reused) are discarded as they surface.
+    This matters in the free-list-dry steady state, where ``_take`` pays
+    for a reclaim on every allocation.
     """
 
     def __init__(self, allocator: BlockAllocator, block_size: int,
@@ -267,6 +275,7 @@ class PrefixIndex:
         self._root = _TrieNode(-1, (), None)
         self._by_block: Dict[int, _TrieNode] = {}
         self._tick = 0
+        self._lru_heap: List[Tuple[int, int]] = []   # lazy (tick, block)
         self.evictions = 0
         allocator.evict_hook = self.evict_one
 
@@ -276,6 +285,8 @@ class PrefixIndex:
     def _touch(self, node: _TrieNode) -> None:
         self._tick += 1
         node.tick = self._tick
+        if not node.children and node.parent is not None:
+            heapq.heappush(self._lru_heap, (node.tick, node.block))
 
     # -- lookup ---------------------------------------------------------------
     def match(self, tokens: Sequence[int]) -> Tuple[List[int], int,
@@ -353,23 +364,40 @@ class PrefixIndex:
         False when nothing is evictable (every cached block is shared, an
         interior node of a live chain, or on the caller's ``protect`` path —
         publish must never evict the chain it is standing on, or the next
-        insert would attach to a detached node unreachable from the root)."""
+        insert would attach to a detached node unreachable from the root).
+
+        Pops the lazy LRU heap instead of scanning every cached block.  An
+        entry is *stale* (dropped) when its block left the cache, the block
+        was reused under a different node/tick, or the node since grew
+        children; it is *blocked* (kept for later) when the leaf is real but
+        currently shared with a live sequence or protected — exactly the
+        leaves the old scan skipped."""
         victim: Optional[_TrieNode] = None
-        for node in self._by_block.values():
-            if node.children:                    # keep chains intact
+        blocked: List[Tuple[int, int]] = []
+        while self._lru_heap:
+            tick, blk = heapq.heappop(self._lru_heap)
+            node = self._by_block.get(blk)
+            if node is None or node.tick != tick or node.children:
+                continue                         # stale entry — drop
+            if (self.alloc.refcount(blk) != 1
+                    or (protect is not None and blk in protect)):
+                blocked.append((tick, blk))      # evictable later — keep
                 continue
-            if self.alloc.refcount(node.block) != 1:
-                continue                         # shared with a live seq
-            if protect is not None and node.block in protect:
-                continue
-            if victim is None or node.tick < victim.tick:
-                victim = node
+            victim = node
+            break
+        for entry in blocked:
+            heapq.heappush(self._lru_heap, entry)
         if victim is None:
             return False
         del self._by_block[victim.block]
         del victim.parent.children[victim.tokens]
         self.alloc.unpin(victim.block)
         self.evictions += 1
+        parent = victim.parent
+        if parent.parent is not None and not parent.children:
+            # the parent just became a leaf: enter the eviction pool at its
+            # current recency
+            heapq.heappush(self._lru_heap, (parent.tick, parent.block))
         return True
 
 

@@ -4,12 +4,16 @@ Starts (1) gateway proxy endpoints that speak all four provider protocols
 (any OpenAI/Anthropic/Google-compatible client or harness can point its
 base URL here) and (2) the rollout service API:
 
-    POST /rollout/task/submit
+    POST /rollout/task/submit       (accepts "trainer_id" for ownership)
     GET  /rollout/task/{task_id}
-    GET  /rollout/status
+    GET  /rollout/status            (incl. per-trainer admission telemetry)
     GET  /rollout/nodes             (per-node pipeline/pool telemetry:
                                      stage utilization, queue depths,
                                      prewarm hit/miss, stage seconds)
+    POST /trainer/register          ({"trainer_id", "weight"}: fair-share
+                                     admission across independent trainers)
+    GET  /trainer/{id}/results?max=N&wait=S   (durable queue, at-least-once)
+    POST /trainer/{id}/ack          ({"session_ids": [...]})
     POST /nodes/register            (membership is in-process; returns ids)
     POST /v1/chat/completions | /v1/messages | /v1/responses |
          /v1beta/models/<m>:generateContent   (proxy surface)
@@ -22,6 +26,7 @@ import argparse
 import json
 import threading
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from urllib.parse import parse_qs, urlparse
 
 import jax
 
@@ -60,12 +65,13 @@ def make_handler(server: RolloutServer, nodes):
             self.wfile.write(body)
 
         def do_GET(self):
-            if self.path == "/rollout/status":
+            url = urlparse(self.path)
+            if url.path == "/rollout/status":
                 return self._json(200, server.status())
-            if self.path == "/rollout/nodes":
+            if url.path == "/rollout/nodes":
                 return self._json(200, server.node_stats())
-            if self.path.startswith("/rollout/task/"):
-                task_id = self.path.rsplit("/", 1)[-1]
+            if url.path.startswith("/rollout/task/"):
+                task_id = url.path.rsplit("/", 1)[-1]
                 try:
                     st = server.poll(task_id)
                 except KeyError:
@@ -75,6 +81,31 @@ def make_handler(server: RolloutServer, nodes):
                     "finished": st.finished, "by_status": st.by_status,
                     "rewards": [r.reward for r in st.results],
                     "statuses": [r.status for r in st.results],
+                })
+            if (url.path.startswith("/trainer/")
+                    and url.path.endswith("/results")):
+                trainer_id = url.path.split("/")[2]
+                q = parse_qs(url.query)
+                try:
+                    results = server.fetch_results(
+                        trainer_id,
+                        max_results=int(q.get("max", ["32"])[0]),
+                        wait=float(q.get("wait", ["0"])[0]))
+                    stats = server.trainer_stats(trainer_id)
+                except KeyError:
+                    return self._json(404, {"error": "unknown trainer"})
+                return self._json(200, {
+                    "trainer_id": trainer_id,
+                    "queue_depth": stats["queue_depth"],
+                    # compact wire form: the full Trajectory stays
+                    # in-process (in-process consumers use fetch_results)
+                    "results": [{
+                        "session_id": r.session_id, "task_id": r.task_id,
+                        "status": r.status, "reward": r.reward,
+                        "error": r.error,
+                        "num_traces": (len(r.trajectory.traces)
+                                       if r.trajectory else 0),
+                    } for r in results],
                 })
             return self._json(404, {"error": "not found"})
 
@@ -95,10 +126,25 @@ def make_handler(server: RolloutServer, nodes):
                     builder=body.get("builder", {"strategy": "prefix_merging"}),
                     evaluator=body.get("evaluator",
                                        {"strategy": "session_completion"}),
+                    trainer_id=body.get("trainer_id"),
                     metadata=body.get("metadata", {}),
                     pipeline=body.get("pipeline", {}),
                 )
                 return self._json(200, {"task_id": server.submit_task(task)})
+            if self.path == "/trainer/register":
+                if "trainer_id" not in body:
+                    return self._json(400, {"error": "trainer_id required"})
+                tid = server.register_trainer(body["trainer_id"],
+                                              weight=body.get("weight", 1.0))
+                return self._json(200, {"trainer_id": tid,
+                                        "weight": body.get("weight", 1.0)})
+            if self.path.startswith("/trainer/") and self.path.endswith("/ack"):
+                trainer_id = self.path.split("/")[2]
+                try:
+                    n = server.ack(trainer_id, body.get("session_ids", []))
+                except KeyError:
+                    return self._json(404, {"error": "unknown trainer"})
+                return self._json(200, {"acked": n})
             # everything else → provider proxy surface
             try:
                 resp = proxy.handle(self.path, body, dict(self.headers))

@@ -5,7 +5,9 @@ from repro.rollout.prewarm import RuntimePrewarmPool
 from repro.rollout.harness import HarnessAdapter, make_harness, register_harness
 from repro.rollout.evaluators import evaluate, get_evaluator
 from repro.rollout.gateway import GatewayNode
-from repro.rollout.server import RolloutServer
+from repro.rollout.admission import (DEFAULT_TRAINER, AdmissionController,
+                                     TrainerState)
+from repro.rollout.server import RolloutServer, UnknownTaskError
 
 __all__ = [
     "AgentSpec", "PipelineConfig", "RuntimeSpec", "Session", "TaskRequest",
@@ -14,4 +16,6 @@ __all__ = [
     "RuntimePrewarmPool",
     "HarnessAdapter", "make_harness", "register_harness",
     "evaluate", "get_evaluator", "GatewayNode", "RolloutServer",
+    "AdmissionController", "TrainerState", "DEFAULT_TRAINER",
+    "UnknownTaskError",
 ]

@@ -1,0 +1,223 @@
+"""Weighted-fair admission + per-trainer result queues (paper §3.1, Fig. 5a).
+
+The paper's rollout nodes are "asynchronous service endpoints that can be
+consumed by independent trainers at scale".  This module is the server-side
+state that makes that real:
+
+  * ``TrainerState`` — one registered consumer: its admission weight, the
+    deficit-round-robin accounting, the sessions it has queued for
+    admission, and a durable at-least-once result queue (results stay
+    enqueued until the trainer acks them; unacked results are redelivered
+    after a visibility timeout).
+  * ``AdmissionController`` — deficit-round-robin (DRR) session admission
+    across trainers.  Each trainer holds a deficit counter; on its turn in
+    the rotation it earns ``quantum * weight`` credit and admits one queued
+    session per unit of credit.  The rotation, deficits, and the position
+    within a turn all persist across ``next_batch`` calls, so admission
+    slots handed out one at a time (a node finishing one session) still
+    converge to the configured weight ratio — a burst of long-horizon
+    sessions from one trainer cannot starve another's short tasks.
+
+The controller is deliberately NOT thread-safe: the ``RolloutServer``
+serializes every call under its own lock (same discipline as the
+``BlockAllocator`` / scheduler split on the inference side).
+"""
+from __future__ import annotations
+
+from collections import OrderedDict, deque
+from dataclasses import dataclass, field
+from typing import Any, Deque, Dict, Iterable, List, Optional
+
+from repro.core.types import SessionResult
+from repro.rollout.types import Session
+
+# tasks submitted without a trainer_id are admitted on behalf of this
+# implicit consumer (weight 1.0) so anonymous traffic still round-robins
+# fairly against registered trainers instead of bypassing admission
+DEFAULT_TRAINER = "__default__"
+
+_MIN_WEIGHT = 1e-3        # floor: a zero/negative weight would never earn
+#                           credit and its queue would deadlock the rotation
+
+
+@dataclass
+class Delivery:
+    """One queued result awaiting ack (at-least-once envelope)."""
+    result: SessionResult
+    attempts: int = 0         # times handed to the consumer
+    last_sent: float = 0.0    # monotonic; redelivery eligibility
+
+
+@dataclass
+class TrainerState:
+    trainer_id: str
+    weight: float = 1.0
+    # explicit = registered via register_trainer.  Implicit tenants (an
+    # unknown trainer_id on submit, or the default tenant) get fair
+    # admission but NO durable queue: queueing results nobody will ever
+    # fetch (a typo'd id, a retired consumer) would grow without bound.
+    explicit: bool = False
+    deficit: float = 0.0                  # DRR credit carried across turns
+    credited: bool = False                # earned credit this rotation turn
+    pending: Deque[Session] = field(default_factory=deque)
+    queue: "OrderedDict[str, Delivery]" = field(default_factory=OrderedDict)
+    # telemetry
+    admitted: int = 0
+    completed: int = 0
+    starved: int = 0          # grants missed beyond the fair-share period
+    missed: int = 0           # consecutive grants to others while backlogged
+    delivered: int = 0
+    redelivered: int = 0
+    acked: int = 0
+
+    def stats(self) -> Dict[str, Any]:
+        return {
+            "weight": self.weight,
+            "explicit": self.explicit,
+            "pending_sessions": len(self.pending),
+            "queue_depth": len(self.queue),
+            "admitted": self.admitted,
+            "completed": self.completed,
+            "starved": self.starved,
+            "delivered": self.delivered,
+            "redelivered": self.redelivered,
+            "acked": self.acked,
+            "deficit": round(self.deficit, 3),
+        }
+
+
+class AdmissionController:
+    def __init__(self, quantum: float = 1.0):
+        self.quantum = quantum
+        self.trainers: "OrderedDict[str, TrainerState]" = OrderedDict()
+        self._rotation: Deque[str] = deque()      # trainers with backlog
+        self._in_rotation: set = set()
+
+    # -- registration ---------------------------------------------------------
+    def register(self, trainer_id: str, weight: float = 1.0,
+                 explicit: bool = False) -> TrainerState:
+        weight = max(float(weight), _MIN_WEIGHT)
+        st = self.trainers.get(trainer_id)
+        if st is None:
+            st = TrainerState(trainer_id=trainer_id, weight=weight,
+                              explicit=explicit)
+            self.trainers[trainer_id] = st
+        else:
+            st.weight = weight                    # re-register updates weight
+            st.explicit = st.explicit or explicit
+        return st
+
+    def get(self, trainer_id: str) -> Optional[TrainerState]:
+        return self.trainers.get(trainer_id)
+
+    # -- session admission ----------------------------------------------------
+    def enqueue(self, trainer_id: str, session: Session) -> None:
+        st = self.trainers.get(trainer_id) or self.register(trainer_id)
+        st.pending.append(session)
+        if trainer_id not in self._in_rotation:
+            self._rotation.append(trainer_id)
+            self._in_rotation.add(trainer_id)
+
+    def backlog(self) -> int:
+        return sum(len(t.pending) for t in self.trainers.values())
+
+    def next_batch(self, slots: Optional[int]) -> List[Session]:
+        """Admit up to ``slots`` sessions (None = the whole backlog) in
+        weighted DRR order.  State persists across calls: a trainer mid-turn
+        when the slots run out resumes its turn on the next pump."""
+        budget = self.backlog() if slots is None else min(slots, self.backlog())
+        admitted: List[Session] = []
+        got: Dict[str, int] = {}
+        while budget > 0 and self._rotation:
+            tid = self._rotation[0]
+            st = self.trainers[tid]
+            if not st.pending:
+                # queue drained: leave the rotation, forfeit leftover credit
+                st.deficit = 0.0
+                st.credited = False
+                self._rotation.popleft()
+                self._in_rotation.discard(tid)
+                continue
+            if not st.credited:
+                st.deficit += self.quantum * st.weight
+                st.credited = True
+            if st.deficit >= 1.0:
+                st.deficit -= 1.0
+                st.admitted += 1
+                got[tid] = got.get(tid, 0) + 1
+                admitted.append(st.pending.popleft())
+                budget -= 1
+            else:
+                # turn over: next trainer; credit again next time around
+                st.credited = False
+                self._rotation.rotate(-1)
+        # starvation telemetry.  Waiting out other trainers' turns is just
+        # proportional sharing — starvation is only when a backlogged
+        # trainer goes LONGER than its fair-share period (one grant per
+        # ``total_active_weight / weight`` grants handed out) with nothing.
+        if admitted:
+            active = [t for t in self.trainers.values()
+                      if t.pending or got.get(t.trainer_id)]
+            total_w = sum(t.weight for t in active) or 1.0
+            for st in active:
+                if got.get(st.trainer_id):
+                    st.missed = 0
+                    continue
+                if st.pending:
+                    st.missed += len(admitted)
+                    if st.missed > total_w / st.weight:
+                        st.starved += 1
+        return admitted
+
+    # -- result queues (at-least-once + ack) ----------------------------------
+    def route_result(self, trainer_id: str, result: SessionResult) -> bool:
+        """Append a terminal result to its owner's durable queue.  Returns
+        False for unknown or implicit trainers (caller falls back to
+        callback/poll-only — nothing is queued for a consumer that never
+        explicitly registered)."""
+        st = self.trainers.get(trainer_id)
+        if st is None:
+            return False
+        st.completed += 1
+        if not st.explicit:
+            return False
+        if result.session_id not in st.queue:      # redeliveries never fork
+            st.queue[result.session_id] = Delivery(result=result)
+        return True
+
+    def fetch(self, trainer_id: str, max_results: int, now: float,
+              redeliver_after: float) -> List[SessionResult]:
+        """Hand out queued results, oldest first.  A result already handed
+        out is redelivered once ``redeliver_after`` elapses without an ack
+        (at-least-once: the consumer dedupes by session_id)."""
+        st = self.trainers.get(trainer_id)
+        if st is None:
+            raise KeyError(f"unknown trainer_id: {trainer_id!r}")
+        out: List[SessionResult] = []
+        for d in st.queue.values():
+            if d.attempts and now - d.last_sent < redeliver_after:
+                continue                            # in flight to consumer
+            if d.attempts:
+                st.redelivered += 1
+            else:
+                st.delivered += 1
+            d.attempts += 1
+            d.last_sent = now
+            out.append(d.result)
+            if len(out) >= max_results:
+                break
+        return out
+
+    def ack(self, trainer_id: str, session_ids: Iterable[str]) -> int:
+        st = self.trainers.get(trainer_id)
+        if st is None:
+            raise KeyError(f"unknown trainer_id: {trainer_id!r}")
+        n = 0
+        for sid in session_ids:
+            if st.queue.pop(sid, None) is not None:
+                n += 1
+        st.acked += n
+        return n
+
+    def stats(self) -> Dict[str, Any]:
+        return {tid: st.stats() for tid, st in self.trainers.items()}

@@ -204,6 +204,17 @@ class GatewayNode:
                   + self._recon_q.qsize() + self._eval_q.qsize())
         return (in_flight + queued) / workers + busy / workers
 
+    @property
+    def admission_slots(self) -> int:
+        """How many concurrently admitted sessions keep this node productive
+        (the RolloutServer's ``admission_limit="auto"`` sums this across
+        alive nodes): the stages that make forward progress on new sessions
+        (init + run), plus the ready buffer they hand off through."""
+        cfg = self.pipeline
+        if cfg.serial:
+            return 2                    # one running + one queued behind it
+        return cfg.init_workers + cfg.run_workers + cfg.ready_buffer
+
     def in_flight_sessions(self) -> List[Session]:
         with self._lock:
             return [l.session for l in self._live.values()]
@@ -331,7 +342,8 @@ class GatewayNode:
         s = live.session
         terminal = live.harness_info.get("terminal", "completed")
         result = SessionResult(session_id=s.session_id,
-                               task_id=s.task.task_id, status=terminal)
+                               task_id=s.task.task_id, status=terminal,
+                               trainer_id=s.trainer_id)
         fresh = None
         try:
             if live.trajectory is None:
@@ -443,7 +455,8 @@ class GatewayNode:
         if result is None:
             result = SessionResult(session_id=s.session_id,
                                    task_id=s.task.task_id,
-                                   status=status, error=live.error)
+                                   status=status, error=live.error,
+                                   trainer_id=s.trainer_id)
         with self._lock:
             self._live.pop(s.session_id, None)
             self._cancelled.discard(s.session_id)

@@ -1,26 +1,45 @@
 """Rollout server (paper §3.1 + A.5): durable task management, session
-expansion, gateway dispatch, polling, callbacks, node membership +
-heartbeats, and at-least-once rescheduling from dead gateways.
+expansion, weighted-fair multi-trainer admission, gateway dispatch, polling,
+per-trainer result queues with acks, callbacks, node membership + heartbeats,
+and at-least-once rescheduling from dead gateways.
 
 The API mirrors the paper's service surface as methods (an HTTP façade over
 these lives in launch/serve.py):
   submit_task            ~ POST /rollout/task/submit
   poll                   ~ GET  /rollout/task/{task_id}
   status                 ~ GET  /rollout/status
+  register_trainer       ~ POST /trainer/register
+  fetch_results          ~ GET  /trainer/{id}/results
+  ack                    ~ POST /trainer/{id}/ack
   _on_session_result     ~ POST /callbacks/session_result
   register_node          ~ POST /nodes/register
   heartbeat              ~ POST /nodes/{node_id}/heartbeat
+
+Multi-tenancy (Fig. 5a): independent trainers register with an admission
+weight; every task names its owning trainer; sessions are admitted to the
+shared node pool by deficit-round-robin over the weights (admission.py), so
+one trainer's burst of long-horizon harness tasks cannot starve another's
+short tasks.  Terminal results land in the owner's durable queue and are
+redelivered until acked (at-least-once); per-task callbacks still fire as a
+compatibility shim.
 """
 from __future__ import annotations
 
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Union
 
 from repro.core.types import SessionResult
+from repro.rollout.admission import DEFAULT_TRAINER, AdmissionController
 from repro.rollout.gateway import GatewayNode
 from repro.rollout.types import Session, TaskRequest, TaskStatus
+
+
+class UnknownTaskError(KeyError):
+    """poll()/wait() on a task_id the server has never seen.  Subclasses
+    KeyError so existing `except KeyError` façade handlers keep mapping it
+    to 404."""
 
 
 @dataclass
@@ -41,24 +60,88 @@ class _NodeState:
 class RolloutServer:
     def __init__(self, *, heartbeat_timeout: float = 5.0,
                  max_session_attempts: int = 3,
-                 monitor_interval: float = 0.5):
+                 monitor_interval: float = 0.5,
+                 admission_limit: Union[int, str, None] = None,
+                 admission_quantum: float = 1.0,
+                 redeliver_timeout: float = 5.0):
+        """``admission_limit`` bounds concurrently admitted sessions across
+        the node pool — the contention that makes weighted fairness
+        meaningful.  None = unbounded (admission still orders dispatch by
+        DRR, it just never queues); "auto" = sum of each alive node's
+        ``admission_slots``; an int = that fixed cap."""
         self._tasks: Dict[str, _TaskState] = {}
         self._nodes: Dict[str, _NodeState] = {}
         self._session_index: Dict[str, str] = {}   # session_id -> task_id
         self._hb_stops: Dict[str, threading.Event] = {}
         self._lock = threading.RLock()
+        self._results_cv = threading.Condition(self._lock)
         self._heartbeat_timeout = heartbeat_timeout
         self._max_attempts = max_session_attempts
+        self._admission = AdmissionController(quantum=admission_quantum)
+        self._admission.register(DEFAULT_TRAINER, weight=1.0)
+        self._admission_limit = admission_limit
+        self._redeliver_timeout = redeliver_timeout
+        self._inflight: set = set()     # admitted, not yet terminal
         self._stop = threading.Event()
         self._monitor = threading.Thread(target=self._monitor_loop,
                                          args=(monitor_interval,), daemon=True)
         self._monitor.start()
+
+    # -- trainer membership (paper Fig. 5a consumers) --------------------------
+    def register_trainer(self, trainer_id: str, weight: float = 1.0) -> str:
+        """Register (or re-weight) a consumer of this rollout service.
+        Tasks carrying this trainer_id are admitted by deficit-round-robin
+        over the registered weights and their results land in this
+        trainer's durable queue.  Only explicitly registered trainers get
+        a queue — tasks naming an unregistered trainer_id are admitted
+        fairly but their results flow via callback/poll only (a typo'd id
+        must not accumulate results nobody will ever fetch)."""
+        with self._lock:
+            self._admission.register(trainer_id, weight, explicit=True)
+        return trainer_id
+
+    def fetch_results(self, trainer_id: str, max_results: int = 32,
+                      wait: float = 0.0) -> List[SessionResult]:
+        """At-least-once delivery from the trainer's result queue: results
+        stay queued until acked; anything unacked for longer than the
+        server's ``redeliver_timeout`` is handed out again.  ``wait`` > 0
+        blocks until at least one result is deliverable or the wait
+        elapses."""
+        deadline = time.monotonic() + max(0.0, wait)
+        with self._results_cv:
+            while True:
+                now = time.monotonic()
+                out = self._admission.fetch(trainer_id, max_results, now,
+                                            self._redeliver_timeout)
+                remaining = deadline - time.monotonic()
+                if out or remaining <= 0 or self._stop.is_set():
+                    return out
+                # bounded naps: redelivery eligibility is time-based, so a
+                # cv notify is not the only way work becomes deliverable
+                self._results_cv.wait(timeout=min(remaining, 0.05))
+
+    def ack(self, trainer_id: str, session_ids: List[str]) -> int:
+        """Acknowledge delivered results: they leave the queue for good."""
+        with self._lock:
+            return self._admission.ack(trainer_id, session_ids)
+
+    def trainer_stats(self, trainer_id: str) -> Dict[str, Any]:
+        with self._lock:
+            st = self._admission.get(trainer_id)
+            if st is None:
+                raise KeyError(f"unknown trainer_id: {trainer_id!r}")
+            return st.stats()
 
     # -- node membership -------------------------------------------------------
     def register_node(self, gateway: GatewayNode,
                       auto_heartbeat: bool = True,
                       heartbeat_interval: float = 0.5) -> str:
         gateway.result_sink = self._on_session_result
+        # re-registration (the only way a dead node rejoins): retire the
+        # previous heartbeat thread before installing fresh state
+        old_stop = self._hb_stops.pop(gateway.gateway_id, None)
+        if old_stop is not None:
+            old_stop.set()
         with self._lock:
             self._nodes[gateway.gateway_id] = _NodeState(
                 gateway=gateway, last_heartbeat=time.monotonic())
@@ -68,12 +151,17 @@ class RolloutServer:
 
             def _beat():
                 while not stop.is_set() and not self._stop.is_set():
-                    self.heartbeat(gateway.gateway_id,
-                                   gateway.status()["metrics"])
+                    try:
+                        metrics = gateway.status()["metrics"]
+                    except Exception:  # noqa: BLE001 — broken gateway: stop
+                        return         # beating; the monitor declares it dead
+                    if not self.heartbeat(gateway.gateway_id, metrics):
+                        return   # declared dead: only re-registration rejoins
                     stop.wait(heartbeat_interval)
 
             threading.Thread(target=_beat, daemon=True,
                              name=f"hb-{gateway.gateway_id}").start()
+        self._pump_admission()          # new capacity may admit backlog
         return gateway.gateway_id
 
     def kill_node(self, node_id: str) -> None:
@@ -95,11 +183,18 @@ class RolloutServer:
             self._reschedule_from(st.gateway)
 
     def heartbeat(self, node_id: str,
-                  metrics: Optional[Dict[str, Any]] = None) -> None:
+                  metrics: Optional[Dict[str, Any]] = None) -> bool:
+        """Refresh a node's liveness.  A node the monitor already declared
+        dead is NOT resurrected by a late heartbeat — its sessions were
+        rescheduled, so flipping it alive would run the same session_id on
+        two gateways.  Dead nodes must re-register to rejoin; returns False
+        so the sender can stop beating."""
         with self._lock:
-            if node_id in self._nodes:
-                self._nodes[node_id].last_heartbeat = time.monotonic()
-                self._nodes[node_id].alive = True
+            st = self._nodes.get(node_id)
+            if st is None or not st.alive:
+                return False
+            st.last_heartbeat = time.monotonic()
+            return True
 
     def _alive_nodes(self) -> List[_NodeState]:
         with self._lock:
@@ -107,17 +202,55 @@ class RolloutServer:
 
     # -- tasks -------------------------------------------------------------------
     def submit_task(self, task: TaskRequest) -> str:
-        """Non-blocking: expands to num_samples sessions and dispatches."""
+        """Non-blocking: expands to num_samples sessions and queues them for
+        weighted-fair admission (anonymous tasks ride the default tenant)."""
         state = _TaskState(task=task)
         sessions = [Session.from_task(task, g) for g in range(task.num_samples)]
+        tenant = task.trainer_id or DEFAULT_TRAINER
         with self._lock:
+            if self._admission.get(tenant) is None:
+                self._admission.register(tenant)   # implicit, weight 1.0
             self._tasks[task.task_id] = state
             for s in sessions:
                 state.sessions[s.session_id] = s
                 self._session_index[s.session_id] = task.task_id
-        for s in sessions:
-            self._dispatch(s)
+                self._admission.enqueue(tenant, s)
+        self._pump_admission()
         return task.task_id
+
+    # -- admission -------------------------------------------------------------
+    def _slots_free(self) -> Optional[int]:
+        """Admission slots currently open (None = unbounded).  Caller holds
+        the lock."""
+        limit = self._admission_limit
+        if limit is None:
+            return None
+        if limit == "auto":
+            limit = sum(self._node_slots(n.gateway)
+                        for n in self._nodes.values() if n.alive)
+        return max(0, int(limit) - len(self._inflight))
+
+    @staticmethod
+    def _node_slots(gateway: GatewayNode) -> int:
+        slots = getattr(gateway, "admission_slots", None)
+        return int(slots) if slots else 4
+
+    def _pump_admission(self) -> None:
+        """Move sessions from trainer backlogs onto nodes, DRR-fair, up to
+        the free admission slots.  Called on submit, on every terminal
+        result (a slot freed), on node membership changes, and from the
+        monitor tick."""
+        with self._lock:
+            batch = self._admission.next_batch(self._slots_free())
+            for s in batch:
+                # "scheduled" (not "pending") BEFORE the lock drops: the
+                # monitor's parked scan must never see a session that a
+                # dispatcher thread is about to submit, or it would submit
+                # it a second time
+                s.status = "scheduled"
+                self._inflight.add(s.session_id)
+        for s in batch:                 # dispatch outside the lock
+            self._dispatch(s)
 
     def _dispatch(self, session: Session) -> None:
         """Backpressure-aware routing: rank nodes by the queue-depth /
@@ -125,9 +258,15 @@ class RolloutServer:
         derived from ``status()`` / GET /rollout/nodes) instead of raw
         session count, so a node with more workers — or with drained stage
         queues — absorbs proportionally more sessions."""
+        # reset any stale terminal status from a prior attempt NOW: poll()
+        # must never keep counting a retried session as "error" while it
+        # waits for the gateway to overwrite the status.  "scheduled", not
+        # "pending": only the monitor re-dispatches "pending" (parked)
+        # sessions, so an in-progress dispatch is never doubled.
+        session.status = "scheduled"
         nodes = self._alive_nodes()
         if not nodes:
-            session.status = "pending"   # picked up by the monitor loop
+            session.status = "pending"   # parked; picked up by the monitor
             return
         target = min(nodes, key=lambda n: self._node_score(n.gateway))
         session.attempts += 1
@@ -147,6 +286,7 @@ class RolloutServer:
 
     # -- results ------------------------------------------------------------------
     def _on_session_result(self, result: SessionResult) -> None:
+        cb = None
         with self._lock:
             task_id = self._session_index.get(result.session_id)
             if task_id is None:
@@ -164,19 +304,27 @@ class RolloutServer:
                 state.finished_ids.add(result.session_id)
                 state.results.append(result)
                 cb = state.task.callback
+                self._inflight.discard(result.session_id)
+                if state.task.trainer_id is not None:
+                    result.trainer_id = state.task.trainer_id
+                    self._admission.route_result(state.task.trainer_id, result)
+                    self._results_cv.notify_all()
         if retry is not None:
-            self._dispatch(retry)
+            self._dispatch(retry)        # keeps its admission slot
             return
-        if cb is not None:
+        if cb is not None:               # compatibility shim
             try:
                 cb(result)
             except Exception:  # noqa: BLE001 — trainer callback must not kill us
                 pass
+        self._pump_admission()           # the freed slot admits backlog
 
     # -- polling --------------------------------------------------------------------
     def poll(self, task_id: str) -> TaskStatus:
         with self._lock:
-            state = self._tasks[task_id]
+            state = self._tasks.get(task_id)
+            if state is None:
+                raise UnknownTaskError(f"unknown task_id: {task_id!r}")
             by_status: Dict[str, int] = {}
             for s in state.sessions.values():
                 by_status[s.status] = by_status.get(s.status, 0) + 1
@@ -199,18 +347,31 @@ class RolloutServer:
         with self._lock:
             nodes = dict(self._nodes)
             tasks = {tid: len(st.finished_ids) for tid, st in self._tasks.items()}
+            trainers = self._admission.stats()
+            admission = {
+                "limit": self._admission_limit,
+                "slots_free": self._slots_free(),
+                "inflight": len(self._inflight),
+                "backlog": self._admission.backlog(),
+            }
         node_view: Dict[str, Any] = {}
         for nid, n in nodes.items():
-            gs = n.gateway.status()
-            node_view[nid] = {
-                "alive": n.alive,
-                "load": n.gateway.load,
-                "mode": gs["mode"],
-                "utilization": gs["utilization"],
-                "queue_depths": gs["queue_depths"],
-                "pool": gs["pool"],
-            }
-        return {"tasks": tasks, "nodes": node_view}
+            # a frozen/shut-down gateway must not take the observability
+            # surface down with it: guard per node
+            try:
+                gs = n.gateway.status()
+                node_view[nid] = {
+                    "alive": n.alive,
+                    "load": n.gateway.load,
+                    "mode": gs["mode"],
+                    "utilization": gs["utilization"],
+                    "queue_depths": gs["queue_depths"],
+                    "pool": gs["pool"],
+                }
+            except Exception as e:  # noqa: BLE001
+                node_view[nid] = {"alive": False, "error": str(e)}
+        return {"tasks": tasks, "nodes": node_view,
+                "trainers": trainers, "admission": admission}
 
     def node_stats(self) -> Dict[str, Any]:
         """Full per-node pipeline telemetry (the §A.5 observability surface):
@@ -220,9 +381,12 @@ class RolloutServer:
             nodes = dict(self._nodes)
         out: Dict[str, Any] = {}
         for nid, n in nodes.items():
-            gs = n.gateway.status()
-            gs["metrics"].pop("stage_log", None)   # unbounded; not for the wire
-            gs["alive"] = n.alive
+            try:
+                gs = n.gateway.status()
+                gs["metrics"].pop("stage_log", None)   # unbounded; not for the wire
+                gs["alive"] = n.alive
+            except Exception as e:  # noqa: BLE001 — dead node, keep reporting
+                gs = {"alive": False, "error": str(e)}
             out[nid] = gs
         return out
 
@@ -239,18 +403,38 @@ class RolloutServer:
                         dead.append(n)
             for n in dead:
                 self._reschedule_from(n.gateway)
-            # dispatch any sessions parked while no node was alive
+            # dispatch any admitted sessions parked while no node was alive
             with self._lock:
                 parked = [s for st in self._tasks.values()
                           for s in st.sessions.values()
                           if s.status == "pending"
+                          and s.session_id in self._inflight
                           and s.session_id not in st.finished_ids]
             for s in parked:
                 self._dispatch(s)
+            self._pump_admission()       # capacity/backlog may have changed
 
     def _reschedule_from(self, gateway: GatewayNode) -> None:
-        """At-least-once: re-enqueue sessions in flight on a dead gateway."""
-        for sess in gateway.in_flight_sessions():
+        """At-least-once: re-enqueue sessions in flight on a dead gateway.
+        The dead gateway's copies are cancelled first so the same session_id
+        can never be running on two gateways if the node was merely slow
+        rather than gone."""
+        try:
+            in_flight = gateway.in_flight_sessions()
+        except Exception:  # noqa: BLE001 — a raising gateway must not kill
+            # the monitor thread; recover the in-flight set from the
+            # server's own records (sessions it dispatched to this node
+            # that never reached a terminal status)
+            with self._lock:
+                in_flight = [s for st in self._tasks.values()
+                             for s in st.sessions.values()
+                             if s.gateway_id == gateway.gateway_id
+                             and s.session_id not in st.finished_ids]
+        for sess in in_flight:
+            try:
+                gateway.cancel(sess.session_id)
+            except Exception:  # noqa: BLE001 — it may be truly gone
+                pass
             with self._lock:
                 task_id = self._session_index.get(sess.session_id)
                 if task_id is None:
@@ -261,7 +445,8 @@ class RolloutServer:
             if sess.attempts >= self._max_attempts:
                 self._on_session_result(SessionResult(
                     session_id=sess.session_id, task_id=sess.task.task_id,
-                    status="error", error="attempt budget exhausted"))
+                    status="error", error="attempt budget exhausted",
+                    trainer_id=sess.trainer_id))
             else:
                 fresh = Session.from_task(sess.task, sess.group_index)
                 # keep the same id so results map back to the task
@@ -269,9 +454,11 @@ class RolloutServer:
                 fresh.attempts = sess.attempts
                 with self._lock:
                     state.sessions[fresh.session_id] = fresh
-                self._dispatch(fresh)
+                self._dispatch(fresh)    # keeps its admission slot
 
     def shutdown(self) -> None:
         self._stop.set()
+        with self._results_cv:
+            self._results_cv.notify_all()
         for n in self._alive_nodes():
             n.gateway.shutdown()

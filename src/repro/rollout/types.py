@@ -78,6 +78,10 @@ class TaskRequest:
     builder: Dict[str, Any] = field(default_factory=lambda: {"strategy": "prefix_merging"})
     evaluator: Dict[str, Any] = field(default_factory=lambda: {"strategy": "session_completion"})
     callback: Optional[Callable[["object"], None]] = None   # SessionResult sink
+    # owning consumer (paper Fig. 5a: independent trainers share one rollout
+    # service).  None = anonymous traffic, admitted under the default tenant;
+    # results then flow via callback/poll only, never a trainer queue.
+    trainer_id: Optional[str] = None
     metadata: Dict[str, Any] = field(default_factory=dict)
     # per-task pipeline hints; {"prewarm": False} opts this task's sessions
     # out of the node's runtime pool (e.g. side-effectful prepare actions)
@@ -91,8 +95,12 @@ class Session:
     task: TaskRequest
     group_index: int
     deadline: float = 0.0
-    status: str = "pending"     # pending|init|ready|running|postrun|completed|timeout|error|cancelled
+    status: str = "pending"     # pending|scheduled|init|ready|running|postrun|completed|timeout|error|cancelled
+    #                             ("pending" = queued for admission or parked
+    #                              with no alive node; "scheduled" = claimed
+    #                              by a dispatcher, submit in progress)
     gateway_id: Optional[str] = None
+    trainer_id: Optional[str] = None
     attempts: int = 0
     created_at: float = field(default_factory=time.monotonic)
 
@@ -100,7 +108,7 @@ class Session:
     def from_task(task: TaskRequest, group_index: int) -> "Session":
         return Session(
             session_id=f"{task.task_id}-{group_index}-{uuid.uuid4().hex[:6]}",
-            task=task, group_index=group_index)
+            task=task, group_index=group_index, trainer_id=task.trainer_id)
 
 
 @dataclass

@@ -1,16 +1,22 @@
 """Async GRPO trainer — the consumer side of the rollout service (Fig. 5a).
 
 A background submitter keeps `inflight` task groups in the rollout server;
-gateway callbacks stream SessionResults into the GroupBatcher; the trainer
-steps whenever a batch of evaluated groups is available, then pushes fresh
-weights to the inference engine (tagged with a new policy version).  The
-rollout plane never blocks on the trainer and vice versa — staleness is
+a background consumer drains the trainer's OWN durable result queue
+(at-least-once + ack — the multi-trainer service surface) into the
+GroupBatcher; the trainer steps whenever a batch of evaluated groups is
+available, then pushes fresh weights to the inference engine (tagged with a
+new policy version).  Several trainers with different admission weights can
+share one rollout service this way — each consumes only its own queue.
+The rollout plane never blocks on the trainer and vice versa — staleness is
 handled by the TIS term in the loss + the batcher's staleness filter.
+
+``TrainerConfig(use_result_queue=False)`` falls back to the legacy per-task
+callback path (the pre-multi-tenant wiring, kept as a compatibility shim).
 """
 from __future__ import annotations
 
 import threading
-import time
+import uuid
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
@@ -36,6 +42,10 @@ class TrainerConfig:
     total_steps: int = 20
     ckpt_dir: Optional[str] = None
     ckpt_every: int = 10
+    # -- multi-trainer service surface (paper Fig. 5a) -----------------------
+    trainer_id: Optional[str] = None    # None → a fresh unique id
+    weight: float = 1.0                 # admission share vs. other trainers
+    use_result_queue: bool = True       # False → legacy callback path
     grpo: GRPOConfig = field(default_factory=GRPOConfig)
     adamw: AdamWConfig = field(default_factory=AdamWConfig)
 
@@ -49,7 +59,12 @@ class AsyncGRPOTrainer:
         self.server = server
         self.task_factory = task_factory
         self.tcfg = tcfg
-        self.batcher = GroupBatcher(min_groups_per_batch=tcfg.groups_per_step)
+        self.trainer_id = tcfg.trainer_id or f"trainer-{uuid.uuid4().hex[:6]}"
+        if tcfg.use_result_queue:
+            server.register_trainer(self.trainer_id, weight=tcfg.weight)
+        self.batcher = GroupBatcher(
+            min_groups_per_batch=tcfg.groups_per_step,
+            owner=self.trainer_id if tcfg.use_result_queue else None)
         self.state = {"params": engine.params,
                       "opt_state": init_opt_state(engine.params, tcfg.adamw),
                       "step": jnp.int32(0)}
@@ -57,29 +72,38 @@ class AsyncGRPOTrainer:
         self._task_counter = 0
         self._inflight = 0
         self._inflight_lock = threading.Lock()
+        self._open_tasks: Dict[str, int] = {}      # task_id -> samples left
+        self._task_versions: Dict[str, int] = {}   # task_id -> policy_version
+        # per-open-task redelivery dedupe: dropped with the task, so the
+        # memory footprint is bounded by inflight_tasks, not run length
+        self._task_seen: Dict[str, set] = {}
         self.history: List[Dict[str, Any]] = []
         self.ckpt = (CKPT.AsyncCheckpointer(tcfg.ckpt_dir)
                      if tcfg.ckpt_dir else None)
 
     # -- rollout side -----------------------------------------------------------
-    def _on_result(self, result):
-        self.batcher.on_result(result)
-        with self._inflight_lock:
-            # a task is done when all its samples are in (tracked coarsely)
-            pass
-
     def _submit_one(self):
         task = self.task_factory(self._task_counter)
         self._task_counter += 1
-        task.metadata = {**task.metadata,
-                         "policy_version": self.engine.policy_version}
+        version = self.engine.policy_version
+        task.metadata = {**task.metadata, "policy_version": version}
+        self.batcher.expect_group(task.task_id, task.num_samples)
+        if self.tcfg.use_result_queue:
+            task.trainer_id = self.trainer_id     # factory callback still
+            #                                       fires via the server shim
+            with self._inflight_lock:
+                self._open_tasks[task.task_id] = task.num_samples
+                self._task_versions[task.task_id] = version
+                self._inflight += 1
+            self.server.submit_task(task)
+            return
+        # legacy path: per-task callback is the delivery mechanism
         orig_cb = task.callback
 
         def cb(result):
             if result.trajectory is not None:
                 for tr in result.trajectory.traces:
-                    tr.metadata.setdefault("policy_version",
-                                           task.metadata["policy_version"])
+                    tr.metadata.setdefault("policy_version", version)
             self.batcher.on_result(result)
             st = self.server.poll(task.task_id)
             if st.done:
@@ -89,7 +113,6 @@ class AsyncGRPOTrainer:
                 orig_cb(result)
 
         task.callback = cb
-        self.batcher.expect_group(task.task_id, task.num_samples)
         with self._inflight_lock:
             self._inflight += 1
         self.server.submit_task(task)
@@ -101,6 +124,42 @@ class AsyncGRPOTrainer:
             for _ in range(max(0, need)):
                 self._submit_one()
             stop.wait(0.02)
+
+    def _ingest(self, result) -> None:
+        """One result off this trainer's queue → batcher + inflight
+        accounting.  At-least-once delivery: redeliveries of an open task's
+        session are deduped; results for closed tasks (an ack lost in
+        flight) are dropped outright."""
+        with self._inflight_lock:
+            left = self._open_tasks.get(result.task_id)
+            if left is None:
+                return                   # not one of ours / already closed
+            seen = self._task_seen.setdefault(result.task_id, set())
+            if result.session_id in seen:
+                return                   # redelivery of an unacked result
+            seen.add(result.session_id)
+            version = self._task_versions.get(result.task_id)
+            if left <= 1:
+                del self._open_tasks[result.task_id]
+                self._task_versions.pop(result.task_id, None)
+                self._task_seen.pop(result.task_id, None)
+                self._inflight -= 1
+            else:
+                self._open_tasks[result.task_id] = left - 1
+        if result.trajectory is not None and version is not None:
+            for tr in result.trajectory.traces:
+                tr.metadata.setdefault("policy_version", version)
+        self.batcher.on_result(result)
+
+    def _consume_results(self, stop: threading.Event):
+        while not stop.is_set():
+            results = self.server.fetch_results(self.trainer_id,
+                                                max_results=64, wait=0.2)
+            if not results:
+                continue
+            for r in results:
+                self._ingest(r)
+            self.server.ack(self.trainer_id, [r.session_id for r in results])
 
     # -- training loop -------------------------------------------------------------
     def resume(self) -> int:
@@ -120,6 +179,11 @@ class AsyncGRPOTrainer:
         submitter = threading.Thread(target=self._keep_submitting,
                                      args=(stop,), daemon=True)
         submitter.start()
+        consumer = None
+        if self.tcfg.use_result_queue:
+            consumer = threading.Thread(target=self._consume_results,
+                                        args=(stop,), daemon=True)
+            consumer.start()
         try:
             done_steps = 0
             while done_steps < steps:

@@ -198,6 +198,38 @@ def test_serve_http_roundtrip():
         assert set(node["queue_depths"]) == {"init", "ready", "recon", "eval"}
         assert node["pool"]["hits"] + node["pool"]["misses"] >= 1
         assert "stage_log" not in node["metrics"]
+
+        # multi-trainer surface: register → owned submit → results → ack
+        req = urllib.request.Request(
+            f"http://127.0.0.1:{port}/trainer/register",
+            data=json.dumps({"trainer_id": "tA", "weight": 2.0}).encode(),
+            headers={"Content-Type": "application/json"})
+        assert json.loads(urllib.request.urlopen(
+            req, timeout=30).read())["trainer_id"] == "tA"
+        req = urllib.request.Request(
+            f"http://127.0.0.1:{port}/rollout/task/submit",
+            data=json.dumps({
+                "task_id": "http-2", "instruction": "say hi",
+                "num_samples": 1, "trainer_id": "tA",
+                "agent": {"harness": "shell", "config": {"max_tokens": 4}},
+                "evaluator": {"strategy": "session_completion"},
+            }).encode(), headers={"Content-Type": "application/json"})
+        urllib.request.urlopen(req, timeout=30)
+        out = json.loads(urllib.request.urlopen(
+            f"http://127.0.0.1:{port}/trainer/tA/results?max=8&wait=30",
+            timeout=60).read())
+        assert len(out["results"]) == 1
+        assert out["results"][0]["task_id"] == "http-2"
+        req = urllib.request.Request(
+            f"http://127.0.0.1:{port}/trainer/tA/ack",
+            data=json.dumps({"session_ids": [
+                out["results"][0]["session_id"]]}).encode(),
+            headers={"Content-Type": "application/json"})
+        assert json.loads(urllib.request.urlopen(
+            req, timeout=30).read())["acked"] == 1
+        status = json.loads(urllib.request.urlopen(
+            f"http://127.0.0.1:{port}/rollout/status", timeout=30).read())
+        assert status["trainers"]["tA"]["acked"] == 1
     finally:
         httpd.shutdown()
         server.shutdown()

@@ -1,0 +1,452 @@
+"""Multi-trainer rollout endpoints (paper §3.1, Fig. 5a): trainer
+registration, deficit-round-robin weighted admission over one shared node
+pool, durable per-trainer result queues with at-least-once delivery + acks,
+and zero cross-trainer result leakage.
+
+The admission-share tests drive a stub gateway and complete sessions by
+hand, so the measured shares are deterministic, not timing-dependent; the
+end-to-end concurrency test (two real AsyncGRPOTrainers on one pool) is in
+the slow lane.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import pytest
+
+from repro.core.testing import EchoBackend
+from repro.core.types import SessionResult
+from repro.data.batcher import GroupBatcher
+from repro.rollout import (AdmissionController, AgentSpec, GatewayNode,
+                           RolloutServer, RuntimeSpec, TaskRequest)
+
+
+class StubGateway:
+    """Records submissions; tests complete sessions by hand through the
+    server's result sink, so admission order is fully deterministic."""
+
+    def __init__(self, gid="gw_stub"):
+        self.gateway_id = gid
+        self.submitted = []
+        self.cancelled = []
+        self.result_sink = None
+        self.load = 0
+
+    def backpressure(self):
+        return float(len(self.submitted))
+
+    def submit(self, session):
+        self.submitted.append(session)
+
+    def cancel(self, session_id):
+        self.cancelled.append(session_id)
+
+    def in_flight_sessions(self):
+        done = {r for r in self.cancelled}
+        return [s for s in self.submitted if s.session_id not in done]
+
+    def status(self):
+        return {"metrics": {}, "mode": "stub", "utilization": 0.0,
+                "queue_depths": {}, "pool": None}
+
+    def shutdown(self):
+        pass
+
+
+def _task(task_id, trainer_id=None, n=2, harness="shell", max_turns=1,
+          timeout=30.0):
+    return TaskRequest(
+        task_id=task_id,
+        instruction="Produce the text: fair",
+        num_samples=n,
+        timeout_seconds=timeout,
+        runtime=RuntimeSpec(prepare=[]),
+        agent=AgentSpec(harness=harness, max_turns=max_turns,
+                        config={"max_tokens": 8}),
+        evaluator={"strategy": "session_completion"},
+        trainer_id=trainer_id,
+    )
+
+
+def _quiet_server(**kw):
+    kw.setdefault("heartbeat_timeout", 60.0)
+    kw.setdefault("monitor_interval", 5.0)
+    return RolloutServer(**kw)
+
+
+def _complete(server, session, status="completed"):
+    server._on_session_result(SessionResult(
+        session_id=session.session_id, task_id=session.task.task_id,
+        status=status, trainer_id=session.trainer_id))
+
+
+# ---------------------------------------------------------------------------
+# admission controller unit behavior
+# ---------------------------------------------------------------------------
+
+def test_drr_controller_proportional_shares_and_rotation_persistence():
+    ac = AdmissionController()
+    ac.register("A", weight=4.0)
+    ac.register("B", weight=1.0)
+    from repro.rollout.types import Session
+    for i in range(50):
+        ac.enqueue("A", Session.from_task(_task(f"a{i}", "A", n=1), 0))
+        ac.enqueue("B", Session.from_task(_task(f"b{i}", "B", n=1), 0))
+    # single-slot grants (one node slot freeing at a time) must still
+    # converge to the weight ratio: the DRR turn persists across calls
+    got = [ac.next_batch(1)[0].task.trainer_id for _ in range(50)]
+    assert abs(got.count("A") / 50 - 0.8) <= 0.1, got.count("A")
+    # draining the rest (slots=None) keeps global ratio exact
+    rest = ac.next_batch(None)
+    total_a = got.count("A") + sum(1 for s in rest
+                                   if s.task.trainer_id == "A")
+    assert total_a == 50 and len(rest) + len(got) == 100
+
+
+def test_drr_fractional_weights_accumulate_credit():
+    ac = AdmissionController()
+    ac.register("slow", weight=0.25)
+    ac.register("fast", weight=0.5)
+    from repro.rollout.types import Session
+    for i in range(24):
+        ac.enqueue("slow", Session.from_task(_task(f"s{i}", "slow", n=1), 0))
+        ac.enqueue("fast", Session.from_task(_task(f"f{i}", "fast", n=1), 0))
+    got = [ac.next_batch(1)[0].task.trainer_id for _ in range(24)]
+    # 0.5 : 0.25 = 2 : 1
+    assert abs(got.count("fast") / 24 - 2 / 3) <= 0.15
+
+
+# ---------------------------------------------------------------------------
+# server-level weighted admission
+# ---------------------------------------------------------------------------
+
+def test_weighted_admission_share_tracks_4_to_1_weights():
+    server = _quiet_server(admission_limit=1)
+    gw = StubGateway()
+    server.register_node(gw, auto_heartbeat=False)
+    server.register_trainer("A", weight=4.0)
+    server.register_trainer("B", weight=1.0)
+    for i in range(10):
+        server.submit_task(_task(f"a{i}", "A", n=4))
+    for i in range(10):
+        server.submit_task(_task(f"b{i}", "B", n=4))
+    # step the pool: complete each admitted session; every completion frees
+    # the single slot, pulling the next session through DRR admission
+    admitted = []
+    for i in range(50):
+        assert len(gw.submitted) > i, "admission stalled"
+        s = gw.submitted[i]
+        admitted.append(s.trainer_id)
+        _complete(server, s)
+    share_a = admitted.count("A") / len(admitted)
+    assert abs(share_a - 0.8) <= 0.15 * 0.8 + 0.02, share_a  # ±15% of 4:1
+    st = server.status()
+    assert st["trainers"]["A"]["admitted"] > st["trainers"]["B"]["admitted"]
+    assert st["admission"]["inflight"] <= 1
+    server.shutdown()
+
+
+def test_burst_of_long_tasks_cannot_starve_other_trainer():
+    """Trainer A floods the pool with a burst before B submits anything;
+    equal weights must interleave B's short tasks into the first few slots
+    instead of draining A's backlog first."""
+    server = _quiet_server(admission_limit=1)
+    gw = StubGateway()
+    server.register_node(gw, auto_heartbeat=False)
+    server.register_trainer("A", weight=1.0)
+    server.register_trainer("B", weight=1.0)
+    for i in range(8):
+        server.submit_task(_task(f"a{i}", "A", n=4))    # 32-session burst
+    for i in range(2):
+        server.submit_task(_task(f"b{i}", "B", n=2))    # 4 short sessions
+    admitted = []
+    for i in range(12):
+        s = gw.submitted[i]
+        admitted.append(s.trainer_id)
+        _complete(server, s)
+    # all of B's sessions admitted within the first 12 grants (1:1 DRR),
+    # despite A's 32-session head start
+    assert admitted.count("B") == 4, admitted
+    assert server.status()["trainers"]["B"]["starved"] == 0
+    server.shutdown()
+
+
+def test_skewed_harness_mix_both_make_progress_on_one_pool():
+    """Real gateway, slow model calls: A's long-horizon sessions share the
+    node with B's short ones; B finishes while A's backlog is still
+    draining (no starvation), and both eventually complete."""
+    class SlowBackend(EchoBackend):
+        def complete(self, request):
+            time.sleep(0.03)
+            return super().complete(request)
+
+    server = RolloutServer(heartbeat_timeout=30.0, monitor_interval=0.1,
+                           admission_limit=2)
+    gw = GatewayNode(SlowBackend(), run_workers=1, init_workers=1)
+    server.register_node(gw, heartbeat_interval=0.2)
+    server.register_trainer("long", weight=1.0)
+    server.register_trainer("short", weight=1.0)
+    a = server.submit_task(_task("long-0", "long", n=10, max_turns=3,
+                                 harness="qwen_code"))
+    b = server.submit_task(_task("short-0", "short", n=2, max_turns=1))
+    st_b = server.wait(b, timeout=60)
+    assert st_b.done, st_b.by_status
+    assert not server.poll(a).done, \
+        "short trainer should finish while the long burst is still running"
+    st_a = server.wait(a, timeout=120)
+    assert st_a.done
+    stats = server.status()["trainers"]
+    assert stats["short"]["completed"] == 2
+    assert stats["long"]["completed"] == 10
+    server.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# durable result queues: late consumers, at-least-once, acks
+# ---------------------------------------------------------------------------
+
+def test_results_survive_until_late_consumer_polls():
+    server = RolloutServer(heartbeat_timeout=30.0, monitor_interval=0.1)
+    gw = GatewayNode(EchoBackend())
+    server.register_node(gw, heartbeat_interval=0.2)
+    server.register_trainer("late", weight=1.0)
+    tid = server.submit_task(_task("late-0", "late", n=3))
+    assert server.wait(tid, timeout=30).done
+    time.sleep(0.1)                    # consumer shows up long after
+    got = server.fetch_results("late", max_results=10)
+    assert len(got) == 3
+    assert all(r.trainer_id == "late" for r in got)
+    assert all(r.status == "completed" for r in got)
+    server.ack("late", [r.session_id for r in got])
+    assert server.fetch_results("late") == []
+    st = server.trainer_stats("late")
+    assert st["acked"] == 3 and st["queue_depth"] == 0
+    server.shutdown()
+
+
+def test_unacked_results_redeliver_and_acks_dedupe():
+    server = _quiet_server(redeliver_timeout=0.05, admission_limit=None)
+    gw = StubGateway()
+    server.register_node(gw, auto_heartbeat=False)
+    server.register_trainer("T", weight=1.0)
+    server.submit_task(_task("t0", "T", n=2))
+    for s in list(gw.submitted):
+        _complete(server, s)
+    first = server.fetch_results("T", max_results=10)
+    assert len(first) == 2
+    # in-flight to the consumer: nothing to deliver before the timeout
+    assert server.fetch_results("T", max_results=10) == []
+    time.sleep(0.08)
+    again = server.fetch_results("T", max_results=10)   # redelivery
+    assert {r.session_id for r in again} == {r.session_id for r in first}
+    st = server.trainer_stats("T")
+    assert st["redelivered"] >= 2
+    # ack one: only the other comes back after the next timeout
+    server.ack("T", [first[0].session_id])
+    time.sleep(0.08)
+    left = server.fetch_results("T", max_results=10)
+    assert [r.session_id for r in left] == [first[1].session_id]
+    server.ack("T", [first[1].session_id])
+    assert server.fetch_results("T") == []
+    assert server.trainer_stats("T")["acked"] == 2
+    server.shutdown()
+
+
+def test_fetch_results_blocking_wait():
+    server = RolloutServer(heartbeat_timeout=30.0, monitor_interval=0.1)
+    gw = GatewayNode(EchoBackend())
+    server.register_node(gw, heartbeat_interval=0.2)
+    server.register_trainer("W", weight=1.0)
+    out = []
+    t = threading.Thread(
+        target=lambda: out.extend(server.fetch_results("W", wait=20.0)))
+    t.start()
+    server.submit_task(_task("w0", "W", n=1))
+    t.join(timeout=30)
+    assert not t.is_alive() and len(out) == 1
+    server.shutdown()
+
+
+def test_unknown_trainer_queue_operations_raise():
+    server = _quiet_server()
+    with pytest.raises(KeyError):
+        server.fetch_results("ghost")
+    with pytest.raises(KeyError):
+        server.ack("ghost", ["x"])
+    with pytest.raises(KeyError):
+        server.trainer_stats("ghost")
+    server.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# isolation: results land only in their owner's queue
+# ---------------------------------------------------------------------------
+
+def test_zero_cross_trainer_result_leakage():
+    server = RolloutServer(heartbeat_timeout=30.0, monitor_interval=0.1)
+    gw = GatewayNode(EchoBackend())
+    server.register_node(gw, heartbeat_interval=0.2)
+    server.register_trainer("A", weight=2.0)
+    server.register_trainer("B", weight=1.0)
+    ta = [server.submit_task(_task(f"la{i}", "A", n=2)) for i in range(2)]
+    tb = [server.submit_task(_task(f"lb{i}", "B", n=2)) for i in range(2)]
+    for tid in ta + tb:
+        assert server.wait(tid, timeout=60).done
+    got_a = server.fetch_results("A", max_results=100)
+    got_b = server.fetch_results("B", max_results=100)
+    assert len(got_a) == 4 and len(got_b) == 4
+    assert all(r.trainer_id == "A" and r.task_id.startswith("la")
+               for r in got_a)
+    assert all(r.trainer_id == "B" and r.task_id.startswith("lb")
+               for r in got_b)
+    assert ({r.session_id for r in got_a}
+            & {r.session_id for r in got_b}) == set()
+    server.shutdown()
+
+
+def test_batcher_owner_filter_drops_foreign_results():
+    b = GroupBatcher(owner="A")
+    mine = SessionResult(session_id="s1", task_id="t", status="completed",
+                         trainer_id="A")
+    foreign = SessionResult(session_id="s2", task_id="t", status="completed",
+                            trainer_id="B")
+    legacy = SessionResult(session_id="s3", task_id="t", status="completed")
+    b.on_result(mine)
+    b.on_result(foreign)
+    b.on_result(legacy)                 # unstamped results pass (shim path)
+    assert b.stats["results"] == 2
+    assert b.stats["results_foreign_dropped"] == 1
+
+
+def test_anonymous_tasks_ride_default_tenant_without_queues():
+    """No trainer_id → admission under the default tenant, results flow via
+    poll/callback only (legacy surface unchanged)."""
+    server = RolloutServer(heartbeat_timeout=30.0, monitor_interval=0.1)
+    gw = GatewayNode(EchoBackend())
+    server.register_node(gw, heartbeat_interval=0.2)
+    hits = []
+    t = _task("anon-0", None, n=2)
+    t.callback = hits.append
+    tid = server.submit_task(t)
+    st = server.wait(tid, timeout=30)
+    assert st.done and len(hits) == 2
+    from repro.rollout import DEFAULT_TRAINER
+    stats = server.status()["trainers"]
+    assert stats[DEFAULT_TRAINER]["admitted"] >= 2
+    assert stats[DEFAULT_TRAINER]["queue_depth"] == 0    # nothing queued
+    server.shutdown()
+
+
+def test_callback_shim_fires_alongside_trainer_queue():
+    server = RolloutServer(heartbeat_timeout=30.0, monitor_interval=0.1)
+    gw = GatewayNode(EchoBackend())
+    server.register_node(gw, heartbeat_interval=0.2)
+    server.register_trainer("C", weight=1.0)
+    hits = []
+    t = _task("cb-0", "C", n=2)
+    t.callback = hits.append
+    tid = server.submit_task(t)
+    assert server.wait(tid, timeout=30).done
+    assert len(hits) == 2, "compatibility callback must still fire"
+    assert len(server.fetch_results("C", max_results=10)) == 2
+    server.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: two trainers, one pool (slow lane)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_two_async_grpo_trainers_share_one_node_pool():
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.inference import Engine
+    from repro.training import (AdamWConfig, AsyncGRPOTrainer, GRPOConfig,
+                                TrainerConfig)
+
+    cfg = get_smoke_config("qwen3-32b").replace(vocab_size=512)
+    serving = Engine(cfg, rng=jax.random.PRNGKey(0), max_len=256, max_new=6,
+                     temperature=1.0)
+    other = Engine(cfg, rng=jax.random.PRNGKey(1), max_len=256, max_new=6,
+                   temperature=1.0)
+    server = RolloutServer(heartbeat_timeout=10.0, monitor_interval=0.2,
+                           admission_limit="auto")
+    gw = GatewayNode(serving, run_workers=2)
+    server.register_node(gw)
+
+    def factory(prefix):
+        def make(i):
+            return TaskRequest(
+                task_id=f"{prefix}-{i}",
+                instruction="write the letter a",
+                num_samples=4,
+                timeout_seconds=60.0,
+                runtime=RuntimeSpec(),
+                agent=AgentSpec(harness="shell", config={"max_tokens": 6}),
+                builder={"strategy": "prefix_merging"},
+                evaluator={"strategy": "swebench_sim",
+                           "config": {"target": "a", "partial_credit": True}},
+            )
+        return make
+
+    def tcfg(tid, weight):
+        return TrainerConfig(batch_rows=2, seqlen=256, groups_per_step=1,
+                             inflight_tasks=2, total_steps=2,
+                             trainer_id=tid, weight=weight,
+                             grpo=GRPOConfig(remat="none", logprob_chunk=512),
+                             adamw=AdamWConfig(lr=5e-4))
+
+    ta = AsyncGRPOTrainer(cfg, serving, server, factory("A"),
+                          tcfg("heavy", 4.0))
+    tb = AsyncGRPOTrainer(cfg, other, server, factory("B"),
+                          tcfg("light", 1.0))
+    errs = []
+
+    def run(tr):
+        try:
+            tr.train()
+        except Exception as e:  # noqa: BLE001 — surfaced by the assert
+            errs.append(e)
+
+    threads = [threading.Thread(target=run, args=(t,)) for t in (ta, tb)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=300)
+    server.shutdown()
+    assert not errs, errs
+    # both trainers completed their steps concurrently on one shared pool
+    assert len(ta.history) == 2 and len(tb.history) == 2
+    stats = server.status()["trainers"]
+    assert stats["heavy"]["admitted"] > 0 and stats["light"]["admitted"] > 0
+    # zero cross-trainer leakage into either batcher
+    assert ta.batcher.stats["results_foreign_dropped"] == 0
+    assert tb.batcher.stats["results_foreign_dropped"] == 0
+    for m in ta.history + tb.history:
+        assert m["trainable_tokens"] > 0
+
+
+def test_unregistered_trainer_id_admitted_but_not_queued():
+    """A typo'd / never-registered trainer_id gets fair admission under an
+    implicit tenant but NO durable queue — results nobody will ever fetch
+    must not accumulate."""
+    server = RolloutServer(heartbeat_timeout=30.0, monitor_interval=0.1)
+    gw = GatewayNode(EchoBackend())
+    server.register_node(gw, heartbeat_interval=0.2)
+    tid = server.submit_task(_task("typo-0", "trainr-A", n=2))  # sic
+    st = server.wait(tid, timeout=30)
+    assert st.done and st.finished == 2          # poll surface still works
+    stats = server.status()["trainers"]["trainr-A"]
+    assert stats["explicit"] is False
+    assert stats["admitted"] == 2 and stats["completed"] == 2
+    assert stats["queue_depth"] == 0, "implicit tenants must not queue"
+    assert server.fetch_results("trainr-A") == []
+    # explicit registration AFTER the fact upgrades the tenant: new
+    # results queue from here on
+    server.register_trainer("trainr-A", weight=2.0)
+    tid2 = server.submit_task(_task("typo-1", "trainr-A", n=1))
+    assert server.wait(tid2, timeout=30).done
+    assert len(server.fetch_results("trainr-A", max_results=10)) == 1
+    server.shutdown()

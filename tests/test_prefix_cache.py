@@ -326,3 +326,88 @@ def test_proxy_and_gateway_expose_per_session_hit_telemetry():
     finally:
         gw.shutdown()
         eng.close()
+
+
+# ---------------------------------------------------------------------------
+# LRU eviction order regression: lazy heap vs. the reference full scan
+# ---------------------------------------------------------------------------
+
+def _reference_victim(index, protect=None):
+    """The pre-heap O(cached-blocks) scan: min-tick leaf no live sequence
+    references.  Ticks are globally unique, so the choice is deterministic."""
+    victim = None
+    for node in index._by_block.values():
+        if node.children:
+            continue
+        if index.alloc.refcount(node.block) != 1:
+            continue
+        if protect is not None and node.block in protect:
+            continue
+        if victim is None or node.tick < victim.tick:
+            victim = node
+    return victim
+
+
+def test_heap_eviction_order_matches_reference_scan():
+    """Regression for the evict_one rewrite (lazy LRU heap): draining the
+    cache one eviction at a time must unpin blocks in EXACTLY the order the
+    old exhaustive scan would have chosen, across chains of different
+    lengths, interleaved publishes, re-touches via match, and a parent
+    becoming a leaf after its child is evicted."""
+    rng = np.random.RandomState(7)
+    cache = _cache(num_blocks=64, max_len=64)
+    streams = []
+    for i in range(6):
+        n_tokens = int(rng.randint(5, 24))
+        base = 1000 * (i + 1)
+        streams.append([base + t for t in range(n_tokens)])
+    for i, toks in enumerate(streams):
+        _admit_and_publish(cache, f"s{i}", toks, max_new=0)
+        cache.free(f"s{i}")
+    # interleaved warm hits re-touch random chains (incl. CoW touches)
+    for i in rng.permutation(len(streams)):
+        cache.match_prefix(streams[i])
+    assert cache.allocator.num_pinned() > 6
+
+    evicted = []
+    while True:
+        expect = _reference_victim(cache.index)
+        ok = cache.index.evict_one()
+        assert ok == (expect is not None)
+        if not ok:
+            break
+        assert expect.block not in cache.index._by_block, \
+            "heap evicted a different block than the reference scan"
+        evicted.append(expect.block)
+    assert len(evicted) == len(set(evicted))
+    assert cache.allocator.num_pinned() == 0
+    cache.allocator.check()
+
+
+def test_heap_eviction_respects_protect_and_live_refs_like_scan():
+    """Blocked leaves (protected / shared with a live sequence) are skipped
+    but not lost: they evict later, still in reference order."""
+    cache = _cache(num_blocks=32, max_len=32)
+    a = list(range(100, 100 + 9))
+    b = list(range(200, 200 + 9))
+    _admit_and_publish(cache, "a", a, max_new=0)
+    cache.free("a")
+    _admit_and_publish(cache, "b", b, max_new=0)
+    # b is still live: its published blocks have refcount 2 (owner + pin)
+    protect = {cache.index.match(a)[0][0]}        # protect a's first block
+    order = []
+    while True:
+        expect = _reference_victim(cache.index, protect)
+        ok = cache.index.evict_one(protect=protect)
+        assert ok == (expect is not None)
+        if not ok:
+            break
+        order.append(expect.block)
+    # only a's unprotected leaf chain was evictable; b's chain (live) and
+    # the protected block survive
+    assert cache.allocator.is_pinned(next(iter(protect)))
+    for blk in cache.allocator.owned("b"):
+        if cache.allocator.is_pinned(blk):
+            assert blk not in order
+    cache.free("b")
+    cache.allocator.check()

@@ -249,3 +249,120 @@ def test_stage_isolation_metrics():
     stages = {s for (_, s, _, _) in m["stage_log"]}
     assert stages == {"init", "run", "recon", "eval"}
     server.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# regression: zombie nodes, stale retry status, poll errors, observability
+# ---------------------------------------------------------------------------
+
+class _RecordingGateway:
+    """Minimal gateway: records submits/cancels, never runs anything."""
+
+    def __init__(self, gid="gw_rec"):
+        self.gateway_id = gid
+        self.submitted = []
+        self.cancelled = []
+        self.result_sink = None
+        self.load = 0
+        self.broken = False
+
+    def backpressure(self):
+        return float(len(self.submitted))
+
+    def submit(self, session):
+        self.submitted.append(session)
+
+    def cancel(self, session_id):
+        self.cancelled.append(session_id)
+
+    def in_flight_sessions(self):
+        return [s for s in self.submitted
+                if s.session_id not in self.cancelled]
+
+    def status(self):
+        if self.broken:
+            raise RuntimeError("gateway frozen")
+        return {"metrics": {}, "mode": "stub", "utilization": 0.0,
+                "queue_depths": {}, "pool": None}
+
+    def shutdown(self):
+        pass
+
+
+def test_late_heartbeat_does_not_resurrect_dead_node():
+    """Regression: after the monitor declares a node dead and reschedules
+    its sessions, a straggling heartbeat must NOT flip it back alive — the
+    same session_id would be running on two gateways.  The reschedule must
+    also cancel the dead gateway's in-flight copies, and only a fresh
+    register_node may rejoin the node."""
+    server = RolloutServer(heartbeat_timeout=0.3, monitor_interval=0.1)
+    gw = _RecordingGateway()
+    server.register_node(gw, auto_heartbeat=False)
+    server.submit_task(_task(task_id="zomb", n=2, timeout=60))
+    inflight = {s.session_id for s in gw.submitted}
+    assert len(inflight) == 2
+    deadline = time.monotonic() + 5
+    while server._nodes[gw.gateway_id].alive and time.monotonic() < deadline:
+        time.sleep(0.05)
+    assert not server._nodes[gw.gateway_id].alive
+    # the dead gateway's copies were cancelled during the reschedule
+    assert set(gw.cancelled) == inflight
+    # a late heartbeat is refused and the node stays dead
+    assert server.heartbeat(gw.gateway_id) is False
+    time.sleep(0.2)
+    assert not server._nodes[gw.gateway_id].alive
+    assert server._alive_nodes() == []
+    # re-registration (not a bare heartbeat) rejoins the pool
+    server.register_node(gw, auto_heartbeat=False)
+    assert server._nodes[gw.gateway_id].alive
+    server.shutdown()
+
+
+def test_retry_dispatch_resets_stale_error_status():
+    """Regression: a retried session kept its terminal "error" status until
+    the gateway overwrote it, so poll().by_status over-counted errors."""
+    server = RolloutServer(heartbeat_timeout=60.0, monitor_interval=5.0,
+                           max_session_attempts=3)
+    gw = _RecordingGateway()
+    server.register_node(gw, auto_heartbeat=False)
+    tid = server.submit_task(_task(task_id="retry", n=1, timeout=60))
+    (sess,) = gw.submitted
+    sess.status = "error"                  # what the gateway's _terminal sets
+    from repro.core.types import SessionResult
+    server._on_session_result(SessionResult(
+        session_id=sess.session_id, task_id=tid, status="error",
+        error="transient"))
+    st = server.poll(tid)
+    assert st.by_status.get("error", 0) == 0, st.by_status
+    assert not st.done                     # retried, not finished
+    assert len(gw.submitted) == 2 and gw.submitted[1] is sess
+    server.shutdown()
+
+
+def test_poll_unknown_task_raises_typed_not_found():
+    from repro.rollout import UnknownTaskError
+    server = RolloutServer(heartbeat_timeout=60.0, monitor_interval=5.0)
+    with pytest.raises(UnknownTaskError):
+        server.poll("never-submitted")
+    with pytest.raises(KeyError):          # façade handlers catch KeyError
+        server.wait("never-submitted", timeout=0.05)
+    server.shutdown()
+
+
+def test_status_surfaces_survive_dead_gateway():
+    """Regression: gateway.status() raising on a frozen node crashed the
+    whole observability surface mid-iteration."""
+    server = RolloutServer(heartbeat_timeout=60.0, monitor_interval=5.0)
+    ok = _RecordingGateway("gw_ok")
+    bad = _RecordingGateway("gw_bad")
+    server.register_node(ok, auto_heartbeat=False)
+    server.register_node(bad, auto_heartbeat=False)
+    bad.broken = True
+    st = server.status()
+    assert st["nodes"]["gw_ok"]["alive"] is True
+    assert st["nodes"]["gw_bad"]["alive"] is False
+    assert "error" in st["nodes"]["gw_bad"]
+    ns = server.node_stats()
+    assert ns["gw_ok"]["alive"] is True
+    assert ns["gw_bad"]["alive"] is False
+    server.shutdown()
