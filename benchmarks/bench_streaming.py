@@ -1,0 +1,171 @@
+"""Streaming completion API v2: time-to-first-token + abort reclaim.
+
+Two measurements against the SAME continuous-batching engine:
+
+  ttft   — the same chat completion via blocking ``Engine.complete`` (the
+           pre-v2 proxy path: first byte after the WHOLE generation) vs.
+           ``Engine.stream`` (first delta the moment prefill + one sampling
+           step finishes).  The ratio is the latency win a streaming
+           harness sees; TTFT should sit near prefill time, independent of
+           ``max_new``.
+  abort  — N concurrent streams; half are aborted after a few deltas
+           (client disconnect / straggler cancellation).  Reports the
+           decode steps the scheduler did NOT run for the aborted requests
+           (``decode_steps_reclaimed``) and verifies every KV block went
+           back to the pool (allocator ``check()`` + free-block count) —
+           cancelled capacity is reclaimed capacity, not waste.
+
+    PYTHONPATH=src python -m benchmarks.bench_streaming \
+        [--dry-run] [--out results/bench_streaming.json]
+
+Emits a BENCH json line and writes the same record to --out; CI uploads it
+as an artifact (bench-smoke lane).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.inference import Engine
+
+
+def _engine(max_new: int, max_len: int = 256) -> Engine:
+    cfg = get_smoke_config("qwen3-32b").replace(vocab_size=512)
+    return Engine(cfg, rng=jax.random.PRNGKey(0), max_len=max_len,
+                  max_new=max_new, block_size=16, max_batch=16)
+
+
+def _msgs(i: int):
+    return [{"role": "user",
+             "content": f"request {i}: stream me a long answer " + "x" * 40}]
+
+
+def bench_ttft(engine: Engine, iters: int, max_new: int) -> dict:
+    block_walls, ttfts, stream_walls = [], [], []
+    for i in range(iters):
+        t0 = time.perf_counter()
+        r = engine.complete({"messages": _msgs(2 * i), "max_tokens": max_new})
+        block_walls.append(time.perf_counter() - t0)
+        n_block = len(r["response_ids"])
+
+        t0 = time.perf_counter()
+        st = engine.stream({"messages": _msgs(2 * i + 1),
+                            "max_tokens": max_new})
+        first = next(iter(st))
+        ttfts.append(time.perf_counter() - t0)
+        assert "token_id" in first
+        st.result()     # drain to completion
+        stream_walls.append(time.perf_counter() - t0)
+    med = sorted(block_walls)[len(block_walls) // 2]
+    ttft = sorted(ttfts)[len(ttfts) // 2]
+    return {
+        "iters": iters,
+        "tokens_per_completion": n_block,
+        "blocking_first_byte_ms": round(med * 1e3, 2),
+        "stream_first_byte_ms": round(ttft * 1e3, 2),
+        "stream_total_ms": round(
+            sorted(stream_walls)[len(stream_walls) // 2] * 1e3, 2),
+        # >> 1 when the first delta arrives at prefill time, not EOS time
+        "ttft_speedup": round(med / ttft, 2) if ttft else 0.0,
+    }
+
+
+def bench_abort(engine: Engine, n_streams: int, abort_after: int,
+                max_new: int) -> dict:
+    sched = engine.scheduler
+    base = dict(sched.stats())
+    streams = [engine.stream({"messages": _msgs(100 + i),
+                              "max_tokens": max_new})
+               for i in range(n_streams)]
+    aborted = streams[::2]
+    survivors = streams[1::2]
+    for st in aborted:
+        for k, _d in enumerate(st):
+            if k + 1 >= abort_after:
+                st.abort()
+                break
+    results_a = [st.result() for st in aborted]
+    results_s = [st.result() for st in survivors]
+    deadline = time.monotonic() + 30
+    while time.monotonic() < deadline and sched.stats()["in_flight"]:
+        time.sleep(0.01)
+    now = sched.stats()
+    sched.cache.allocator.check()          # refcount/free-list invariants
+    aborted_n = sum(1 for r in results_a if r["finish_reason"] == "aborted")
+    generated = sum(len(r["response_ids"]) for r in results_a)
+    reclaimed = now["decode_steps_reclaimed"] - base.get(
+        "decode_steps_reclaimed", 0)
+    return {
+        "streams": n_streams,
+        "aborted": aborted_n,
+        "abort_after_tokens": abort_after,
+        "survivor_tokens": sum(len(r["response_ids"]) for r in results_s),
+        "aborted_tokens_generated": generated,
+        "decode_steps_reclaimed": reclaimed,
+        "reclaimed_fraction": round(
+            reclaimed / max(1, reclaimed + generated), 3),
+        "kv_blocks_all_freed": bool(
+            now["available_blocks"] == now["num_blocks"] - 1),
+        "live_sequences": now["live_sequences"],
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry-run", action="store_true",
+                    help="CI smoke: short generations, same record shape")
+    ap.add_argument("--iters", type=int, default=None)
+    ap.add_argument("--max-new", type=int, default=None)
+    ap.add_argument("--streams", type=int, default=8)
+    ap.add_argument("--out", default="results/bench_streaming.json")
+    args = ap.parse_args(argv)
+
+    iters = args.iters or (3 if args.dry_run else 8)
+    max_new = args.max_new or (24 if args.dry_run else 64)
+
+    engine = _engine(max_new)
+    try:
+        # warmup: compile prefill/step programs out of the measured phase
+        engine.complete({"messages": _msgs(0), "max_tokens": max_new})
+        engine.scheduler.prewarm()
+
+        ttft = bench_ttft(engine, iters, max_new)
+        print(f"  ttft: blocking {ttft['blocking_first_byte_ms']:8.1f} ms "
+              f"| stream {ttft['stream_first_byte_ms']:8.1f} ms "
+              f"| speedup {ttft['ttft_speedup']:5.1f}x "
+              f"({ttft['tokens_per_completion']} tokens/completion)")
+
+        abort = bench_abort(engine, args.streams, abort_after=3,
+                            max_new=max_new)
+        print(f"  abort: {abort['aborted']}/{abort['streams']} streams "
+              f"aborted after {abort['abort_after_tokens']} tokens | "
+              f"{abort['decode_steps_reclaimed']} decode steps reclaimed "
+              f"({abort['reclaimed_fraction']:.0%}) | kv freed: "
+              f"{abort['kv_blocks_all_freed']}")
+    finally:
+        engine.close()
+
+    record = {
+        "bench": "streaming",
+        "dry_run": args.dry_run,
+        "params": {"iters": iters, "max_new": max_new,
+                   "streams": args.streams},
+        "ttft": ttft,
+        "abort": abort,
+    }
+    print("BENCH " + json.dumps(record))
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(record, f, indent=2)
+        print(f"  wrote {args.out}")
+    return record
+
+
+if __name__ == "__main__":
+    main()

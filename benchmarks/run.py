@@ -15,6 +15,9 @@ Sections:
   bench_multi_trainer — per-trainer admission fairness (4:1 weights, one
                        shared pool, §3.1 Fig. 5a); BENCH json to
                        results/bench_multi_trainer.json
+  bench_streaming    — streaming API v2: TTFT (stream vs blocking) and
+                       decode steps reclaimed by mid-generation abort;
+                       BENCH json to results/bench_streaming.json
   fig5_utilization   — per_request vs prefix_merging trainer load (Fig. 5b)
   table1_rl          — GRPO reward climb across 4 harnesses (Table 1/Fig. 6)
   table2_offline     — offline SFT accept/reject generation (Table 2)
@@ -64,6 +67,11 @@ def main(argv=None):
     print("== bench_multi_trainer (weighted-fair admission, 4:1)")
     from benchmarks import bench_multi_trainer
     bench_multi_trainer.main(["--dry-run"] if args.fast else [])
+
+    print("=" * 72)
+    print("== bench_streaming (TTFT + mid-generation abort reclaim)")
+    from benchmarks import bench_streaming
+    bench_streaming.main(["--dry-run"] if args.fast else [])
 
     print("=" * 72)
     print("== fig5_utilization")

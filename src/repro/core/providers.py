@@ -17,6 +17,17 @@ from typing import Any, Dict, List, Optional, Tuple
 PROVIDERS = ("anthropic", "openai_chat", "openai_responses", "google")
 
 
+class ProviderError(ValueError):
+    """Typed request-shape error (unknown provider path / dialect).  The
+    HTTP façade maps it to a 400 with a structured JSON error body instead
+    of letting it escape as a 500 traceback."""
+
+    error_type = "invalid_request_error"
+
+    def to_json(self) -> Dict[str, Any]:
+        return {"error": {"type": self.error_type, "message": str(self)}}
+
+
 # ---------------------------------------------------------------------------
 # 1. detection — request path + headers
 # ---------------------------------------------------------------------------
@@ -33,7 +44,7 @@ def detect_provider(path: str, headers: Optional[Dict[str, str]] = None) -> str:
         return "openai_chat"
     if "anthropic-version" in {k.lower() for k in headers}:
         return "anthropic"
-    raise ValueError(f"cannot detect provider API from path {path!r}")
+    raise ProviderError(f"cannot detect provider API from path {path!r}")
 
 
 # ---------------------------------------------------------------------------
@@ -196,7 +207,7 @@ def to_openai_chat(provider: str, body: Dict[str, Any]) -> Dict[str, Any]:
             "temperature": gen.get("temperature"),
         }
     else:
-        raise ValueError(f"unknown provider {provider!r}")
+        raise ProviderError(f"unknown provider {provider!r}")
 
     # fields the trainer needs (paper §3.2 step 2)
     req["logprobs"] = True
@@ -208,6 +219,14 @@ def to_openai_chat(provider: str, body: Dict[str, Any]) -> Dict[str, Any]:
 # ---------------------------------------------------------------------------
 # 4. response transformation — backend response → provider shape
 # ---------------------------------------------------------------------------
+
+# finish_reason → provider dialect ("aborted" is the v2 streaming API's
+# mid-generation cancellation: the partial turn is still well-formed)
+ANTHROPIC_STOP = {"stop": "end_turn", "length": "max_tokens",
+                  "tool_calls": "tool_use", "aborted": "aborted"}
+GOOGLE_FINISH = {"stop": "STOP", "length": "MAX_TOKENS",
+                 "tool_calls": "STOP", "aborted": "ABORTED"}
+
 
 def from_openai_chat(provider: str, resp: Dict[str, Any]) -> Dict[str, Any]:
     """resp is an OpenAI Chat Completions response produced by the backend."""
@@ -228,8 +247,7 @@ def from_openai_chat(provider: str, resp: Dict[str, Any]) -> Dict[str, Any]:
                 args = {"_raw": fn.get("arguments")}
             content.append({"type": "tool_use", "id": tc["id"],
                             "name": fn["name"], "input": args})
-        stop_reason = {"stop": "end_turn", "length": "max_tokens",
-                       "tool_calls": "tool_use"}.get(finish, "end_turn")
+        stop_reason = ANTHROPIC_STOP.get(finish, "end_turn")
         return {"id": resp.get("id", f"msg_{uuid.uuid4().hex[:12]}"),
                 "type": "message", "role": "assistant", "model": resp.get("model"),
                 "content": content, "stop_reason": stop_reason,
@@ -261,10 +279,9 @@ def from_openai_chat(provider: str, resp: Dict[str, Any]) -> Dict[str, Any]:
                                            "args": args}})
         return {"candidates": [{
             "content": {"role": "model", "parts": parts},
-            "finishReason": {"stop": "STOP", "length": "MAX_TOKENS",
-                             "tool_calls": "STOP"}.get(finish, "STOP"),
+            "finishReason": GOOGLE_FINISH.get(finish, "STOP"),
         }], "usageMetadata": resp.get("usage", {})}
-    raise ValueError(f"unknown provider {provider!r}")
+    raise ProviderError(f"unknown provider {provider!r}")
 
 
 # ---------------------------------------------------------------------------
@@ -314,5 +331,255 @@ def to_stream_events(provider: str, resp: Dict[str, Any]) -> List[Dict[str, Any]
                                     "finish_reason": choice.get("finish_reason"),
                                     "index": 0}]})
         return events
-    # responses / google: single-shot completed event stream
+    if provider == "google":
+        # streamGenerateContent dialect: one chunk per part, then a final
+        # chunk carrying finishReason + usage — same shapes the live
+        # encoder emits, so consumers need not care which path served them
+        cand = shaped["candidates"][0]
+        events = [{"candidates": [{"content": {"role": "model",
+                                               "parts": [p]}}]}
+                  for p in cand["content"]["parts"]]
+        events.append({"candidates": [{
+            "content": {"role": "model", "parts": []},
+            "finishReason": cand["finishReason"]}],
+            "usageMetadata": shaped.get("usageMetadata", {})})
+        return events
+    # responses: single-shot completed event (the live encoder's terminal)
     return [{"type": "response.completed", "response": shaped}]
+
+
+# ---------------------------------------------------------------------------
+# true incremental streaming (API v2): per-provider delta encoders.  The
+# proxy feeds semantic deltas as the scheduler samples them — text chars,
+# tool-call opens, argument chars — and each encoder emits the provider's
+# real streaming wire events, so a harness's first SSE byte arrives after
+# prefill instead of after the whole completion.  ``finish`` closes the
+# stream with the provider's terminal events; reassembling every event MUST
+# reproduce the same message as the non-streaming response shape
+# (tests/test_streaming.py round-trips all four dialects, tools included).
+# ---------------------------------------------------------------------------
+
+class StreamEncoder:
+    """Base delta encoder.  One instance per in-flight streamed request;
+    every method returns the (possibly empty) list of provider-shaped SSE
+    event dicts to relay for that semantic delta."""
+
+    provider = "base"
+
+    def __init__(self, model: str):
+        self.model = model
+
+    def start(self) -> List[Dict[str, Any]]:
+        return []
+
+    def text_delta(self, s: str) -> List[Dict[str, Any]]:
+        raise NotImplementedError
+
+    def tool_start(self, index: int, call_id: str,
+                   name: str) -> List[Dict[str, Any]]:
+        raise NotImplementedError
+
+    def tool_args_delta(self, s: str) -> List[Dict[str, Any]]:
+        raise NotImplementedError
+
+    def tool_stop(self) -> List[Dict[str, Any]]:
+        return []
+
+    def finish(self, oai_resp: Dict[str, Any]) -> List[Dict[str, Any]]:
+        """Terminal events.  ``oai_resp`` is the backend's full OpenAI-chat
+        response (the same dict the non-streaming path would shape), so
+        encoders can close with authoritative usage/finish payloads."""
+        raise NotImplementedError
+
+
+class AnthropicStreamEncoder(StreamEncoder):
+    provider = "anthropic"
+
+    def __init__(self, model: str):
+        super().__init__(model)
+        self._index = -1          # current content block index
+        self._open: Optional[str] = None   # "text" | "tool_use"
+
+    def start(self):
+        return [{"type": "message_start", "message": {
+            "id": f"msg_{uuid.uuid4().hex[:12]}", "type": "message",
+            "role": "assistant", "model": self.model, "content": [],
+            "stop_reason": None, "usage": {}}}]
+
+    def _close_block(self) -> List[Dict[str, Any]]:
+        if self._open is None:
+            return []
+        self._open = None
+        return [{"type": "content_block_stop", "index": self._index}]
+
+    def text_delta(self, s):
+        out = []
+        if self._open != "text":
+            out += self._close_block()
+            self._index += 1
+            self._open = "text"
+            out.append({"type": "content_block_start", "index": self._index,
+                        "content_block": {"type": "text", "text": ""}})
+        out.append({"type": "content_block_delta", "index": self._index,
+                    "delta": {"type": "text_delta", "text": s}})
+        return out
+
+    def tool_start(self, index, call_id, name):
+        out = self._close_block()
+        self._index += 1
+        self._open = "tool_use"
+        out.append({"type": "content_block_start", "index": self._index,
+                    "content_block": {"type": "tool_use", "id": call_id,
+                                      "name": name, "input": {}}})
+        return out
+
+    def tool_args_delta(self, s):
+        return [{"type": "content_block_delta", "index": self._index,
+                 "delta": {"type": "input_json_delta", "partial_json": s}}]
+
+    def tool_stop(self):
+        return self._close_block()
+
+    def finish(self, oai_resp):
+        choice = oai_resp["choices"][0]
+        finish = choice.get("finish_reason", "stop")
+        return self._close_block() + [
+            {"type": "message_delta",
+             "delta": {"stop_reason": ANTHROPIC_STOP.get(finish, "end_turn")},
+             "usage": oai_resp.get("usage", {})},
+            {"type": "message_stop"},
+        ]
+
+
+class OpenAIChatStreamEncoder(StreamEncoder):
+    provider = "openai_chat"
+
+    def __init__(self, model: str):
+        super().__init__(model)
+        self._id = f"chatcmpl-{uuid.uuid4().hex[:12]}"
+        self._tool_index = 0      # argument deltas join the latest open call
+
+    def _chunk(self, delta: Dict[str, Any], **choice_extra):
+        return {"id": self._id, "object": "chat.completion.chunk",
+                "model": self.model,
+                "choices": [{"delta": delta, "index": 0, **choice_extra}]}
+
+    def start(self):
+        return [self._chunk({"role": "assistant"})]
+
+    def text_delta(self, s):
+        return [self._chunk({"content": s})]
+
+    def tool_start(self, index, call_id, name):
+        self._tool_index = index
+        return [self._chunk({"tool_calls": [
+            {"index": index, "id": call_id, "type": "function",
+             "function": {"name": name, "arguments": ""}}]})]
+
+    def tool_args_delta(self, s):
+        return [self._chunk({"tool_calls": [
+            {"index": self._tool_index, "function": {"arguments": s}}]})]
+
+    def finish(self, oai_resp):
+        choice = oai_resp["choices"][0]
+        chunk = self._chunk({}, finish_reason=choice.get("finish_reason"))
+        chunk["usage"] = oai_resp.get("usage", {})
+        return [chunk]
+
+
+class ResponsesStreamEncoder(StreamEncoder):
+    provider = "openai_responses"
+
+    def __init__(self, model: str):
+        super().__init__(model)
+        self._id = f"resp_{uuid.uuid4().hex[:12]}"
+
+    def start(self):
+        return [{"type": "response.created",
+                 "response": {"id": self._id, "object": "response",
+                              "model": self.model, "status": "in_progress"}}]
+
+    def text_delta(self, s):
+        return [{"type": "response.output_text.delta", "delta": s}]
+
+    def tool_start(self, index, call_id, name):
+        return [{"type": "response.output_item.added",
+                 "output_index": index,
+                 "item": {"type": "function_call", "call_id": call_id,
+                          "name": name, "arguments": ""}}]
+
+    def tool_args_delta(self, s):
+        return [{"type": "response.function_call_arguments.delta",
+                 "delta": s}]
+
+    def tool_stop(self):
+        return [{"type": "response.output_item.done"}]
+
+    def finish(self, oai_resp):
+        shaped = from_openai_chat("openai_responses", oai_resp)
+        shaped["id"] = self._id
+        return [{"type": "response.completed", "response": shaped}]
+
+
+class GoogleStreamEncoder(StreamEncoder):
+    """Google's streamGenerateContent chunks carry whole parts — text
+    fragments stream as one part per chunk, functionCall parts arrive whole
+    (the real API never streams partial function-call args), so tool
+    arguments buffer until ``tool_stop``/``finish``."""
+
+    provider = "google"
+
+    def __init__(self, model: str):
+        super().__init__(model)
+        self._tool_name: Optional[str] = None
+        self._tool_args: str = ""
+
+    def _chunk(self, parts, **extra):
+        cand = {"content": {"role": "model", "parts": parts}, **extra}
+        return {"candidates": [cand]}
+
+    def text_delta(self, s):
+        return [self._chunk([{"text": s}])]
+
+    def tool_start(self, index, call_id, name):
+        self._tool_name, self._tool_args = name, ""
+        return []
+
+    def tool_args_delta(self, s):
+        self._tool_args += s
+        return []
+
+    def tool_stop(self):
+        if self._tool_name is None:
+            return []
+        try:
+            args = json.loads(self._tool_args or "{}")
+        except json.JSONDecodeError:
+            args = {}
+        part = {"functionCall": {"name": self._tool_name, "args": args}}
+        self._tool_name, self._tool_args = None, ""
+        return [self._chunk([part])]
+
+    def finish(self, oai_resp):
+        choice = oai_resp["choices"][0]
+        finish = choice.get("finish_reason", "stop")
+        out = self.tool_stop()     # flush a call open at end-of-stream
+        out.append(self._chunk(
+            [], finishReason=GOOGLE_FINISH.get(finish, "STOP")))
+        out[-1]["usageMetadata"] = oai_resp.get("usage", {})
+        return out
+
+
+_ENCODERS = {
+    "anthropic": AnthropicStreamEncoder,
+    "openai_chat": OpenAIChatStreamEncoder,
+    "openai_responses": ResponsesStreamEncoder,
+    "google": GoogleStreamEncoder,
+}
+
+
+def make_stream_encoder(provider: str, model: str) -> StreamEncoder:
+    try:
+        return _ENCODERS[provider](model)
+    except KeyError:
+        raise ProviderError(f"unknown provider {provider!r}") from None

@@ -8,8 +8,21 @@ the inference backend.  For each incoming model request it:
   3. forwards to the inference backend and captures a CompletionRecord
      (prompt/response messages, prompt token IDs, sampled token IDs, log
      probabilities, finish reason) into the session registry,
-  4. returns the provider-shaped response — synthesizing a provider-shaped
-     SSE stream from the non-streaming upstream response when asked.
+  4. returns the provider-shaped response — relaying a TRUE incremental SSE
+     stream when the request asks to stream and the backend exposes the v2
+     ``stream()`` surface: each scheduler step's token is encoded into the
+     provider's real streaming wire events the moment it is sampled, so the
+     harness's first byte arrives after prefill, not after the whole
+     completion.  The pre-v2 burst synthesis (``to_stream_events`` over the
+     finished response) remains only as the serial-backend fallback.
+
+Mid-generation abort: every in-flight backend stream is registered per
+session; ``abort_session`` (driven by ``GatewayNode.cancel`` / harness
+deadlines / client disconnects) aborts them so the backend frees decode
+slots and KV blocks at the next step boundary.  The partial generation is
+STILL captured — a ``CompletionRecord`` with ``finish_reason="aborted"``
+carrying exactly the tokens the harness saw — so reconstruction stays
+token-faithful for cancelled/timed-out sessions.
 
 The proxy is deliberately *below* the agent framework: it never inspects how
 the harness plans or uses tools; it only preserves API compatibility and
@@ -19,9 +32,11 @@ from __future__ import annotations
 
 import threading
 import uuid
-from typing import Any, Callable, Dict, List, Optional, Protocol
+from collections import deque
+from typing import Any, Dict, Iterator, List, Optional, Protocol, Tuple
 
 from repro.core import providers as P
+from repro.core import tokenizer as tok
 from repro.core.types import CompletionRecord, CompletionSession
 
 
@@ -30,18 +45,131 @@ class InferenceBackend(Protocol):
     completion that ALSO exposes token ids + logprobs (no retokenization
     drift — ids come from the backend, paper §2.4).
 
-    Backends may additionally expose ``submit(request) -> Future`` (the
-    continuous-batching engine does): the proxy then enqueues instead of
-    calling ``complete`` synchronously, so overlapped harness sessions join
-    the backend's shared decode batch while this thread merely blocks on
-    its own future.  Policy-version tagging and token-level capture are
-    preserved — the version is pinned at submission inside the backend."""
+    Backends may additionally expose the v2 surfaces:
+
+      * ``submit(request) -> Future`` — async submission (continuous
+        batching): the proxy enqueues instead of calling ``complete``
+        synchronously, so overlapped harness sessions join the backend's
+        shared decode batch while this thread merely blocks on its future.
+      * ``stream(request) -> CompletionStream`` — per-token delta iterator
+        with ``abort()``; with ``streaming == True`` the proxy relays true
+        incremental provider SSE and uses the stream (abortable!) even for
+        blocking requests.  Policy-version tagging and token-level capture
+        are preserved — the version is pinned at submission inside the
+        backend."""
 
     def complete(self, request: Dict[str, Any]) -> Dict[str, Any]:
         """request: normalized OpenAI Chat request.
         returns: {message, prompt_ids, response_ids, logprobs,
                   finish_reason, usage}"""
         ...
+
+
+class ProxyStream:
+    """Provider-shaped SSE relay of one live backend CompletionStream.
+
+    Iterating yields the provider's real streaming event dicts as the
+    backend samples tokens (text deltas stream char-by-char; tool-call
+    blocks open as soon as their name is complete and their argument chars
+    stream as they arrive).  When the backend stream ends — end-of-turn,
+    token budget, or abort — the terminal provider events are emitted and
+    the CompletionRecord is captured into the session registry with exactly
+    what was relayed (``finish_reason="aborted"`` for partials).
+
+    ``abort()`` is thread-safe and non-blocking: it flags the backend
+    request, which leaves the decode batch at the next step boundary; the
+    consumer's iteration then drains the remaining deltas and finalizes the
+    record.  ``close()`` is the consumer-side teardown (client disconnect):
+    it aborts AND drains on the calling thread so the partial record is
+    captured even though nobody will read further events."""
+
+    def __init__(self, proxy: "ProxyGateway", provider: str,
+                 normalized: Dict[str, Any], session_id: str, backend_stream):
+        self._proxy = proxy
+        self._provider = provider
+        self._normalized = normalized
+        self._session_id = session_id
+        self._backend = backend_stream
+        self._encoder = P.make_stream_encoder(
+            provider, normalized.get("model") or proxy.model_name)
+        self._parser = tok.StreamParser()
+        self._pending: deque = deque(self._encoder.start())
+        self._tool_count = 0
+        self._final_lock = threading.Lock()
+        self._finalized = False
+        self.record: Optional[CompletionRecord] = None
+        proxy._register_stream(session_id, backend_stream)
+
+    # -- iteration ------------------------------------------------------------
+    def __iter__(self) -> Iterator[Dict[str, Any]]:
+        return self
+
+    def __next__(self) -> Dict[str, Any]:
+        while True:
+            if self._pending:
+                return self._pending.popleft()
+            if self._finalized:
+                raise StopIteration
+            try:
+                delta = next(self._backend)
+            except StopIteration:
+                self._pending.extend(self._finalize())
+                continue
+            for kind, val in self._parser.feed(delta["text_delta"]):
+                self._pending.extend(self._semantic(kind, val))
+
+    def _semantic(self, kind: str, val) -> List[Dict[str, Any]]:
+        if kind == "text":
+            return self._encoder.text_delta(val)
+        if kind == "tool_start":
+            # call ids numbered in emission order — identical to
+            # parse_sampled's ids in the non-streaming response.  Counted
+            # HERE, not read off the parser: feed() may open and close
+            # several calls in one chunk (back-to-back markers), and the
+            # parser's index has already advanced past the earlier ones.
+            idx = self._tool_count
+            self._tool_count += 1
+            return self._encoder.tool_start(idx, f"call_{idx}", val)
+        if kind == "tool_args":
+            return self._encoder.tool_args_delta(val)
+        return self._encoder.tool_stop()
+
+    def _finalize(self) -> List[Dict[str, Any]]:
+        with self._final_lock:
+            if self._finalized:
+                return []
+            self._finalized = True
+        result = self._backend.result()
+        events: List[Dict[str, Any]] = []
+        tail = (self._parser.feed(self._backend.flush_text())
+                + self._parser.finish())
+        for kind, val in tail:
+            events.extend(self._semantic(kind, val))
+        rec, oai = self._proxy._capture(
+            self._session_id, self._provider, self._normalized, result)
+        self.record = rec
+        self._proxy._unregister_stream(self._session_id, self._backend)
+        events.extend(self._encoder.finish(oai))
+        return events
+
+    # -- cancellation ---------------------------------------------------------
+    def abort(self) -> None:
+        """Thread-safe mid-generation abort; the consumer's own iteration
+        finalizes (terminal events + partial record) at the next boundary."""
+        self._backend.abort()
+
+    def close(self) -> None:
+        """Consumer-side teardown: abort and finalize HERE (the caller's
+        thread), for consumers that will not iterate further (disconnected
+        SSE clients).  The partial CompletionRecord is still captured."""
+        self._backend.abort()
+        try:
+            for _ in self._backend:
+                pass
+        except Exception:  # noqa: BLE001 — backend failure: nothing to record
+            self._proxy._unregister_stream(self._session_id, self._backend)
+            return
+        self._pending.extend(self._finalize())
 
 
 class ProxyGateway:
@@ -52,6 +180,7 @@ class ProxyGateway:
         self._prefix: Dict[str, Dict[str, int]] = {}   # per-session hit stats
         self._prefix_total = {"requests": 0, "prompt_tokens": 0,
                               "cached_tokens": 0}
+        self._streams: Dict[str, List[Any]] = {}       # in-flight per session
         self._lock = threading.Lock()
 
     # -- session registry ---------------------------------------------------
@@ -67,9 +196,42 @@ class ProxyGateway:
 
     def delete_session(self, session_id: str) -> None:
         """Best-effort cleanup after a terminal result (paper §A.5)."""
+        self.abort_session(session_id)
         self.pop_session(session_id)
         with self._lock:
             self._prefix.pop(session_id, None)   # aggregate totals persist
+            self._streams.pop(session_id, None)
+
+    # -- in-flight stream registry (mid-generation abort) --------------------
+    def _register_stream(self, session_id: str, stream) -> None:
+        with self._lock:
+            self._streams.setdefault(session_id, []).append(stream)
+
+    def _unregister_stream(self, session_id: str, stream) -> None:
+        with self._lock:
+            live = self._streams.get(session_id)
+            if live and stream in live:
+                live.remove(stream)
+                if not live:
+                    del self._streams[session_id]
+
+    def abort_session(self, session_id: str) -> int:
+        """Abort every in-flight backend stream of a session (straggler
+        mitigation / cancellation / disconnect): each request leaves the
+        decode batch at the next step boundary, freeing its KV blocks and
+        slot; partial generations resolve with ``finish_reason="aborted"``
+        and are captured as usual.  Returns the number of streams flagged."""
+        with self._lock:
+            live = list(self._streams.get(session_id, ()))
+        for s in live:
+            s.abort()
+        return len(live)
+
+    def live_streams(self, session_id: Optional[str] = None) -> int:
+        with self._lock:
+            if session_id is not None:
+                return len(self._streams.get(session_id, ()))
+            return sum(len(v) for v in self._streams.values())
 
     # -- prefix-cache telemetry ----------------------------------------------
     def _record_prefix(self, session_id: str, prompt_tokens: int,
@@ -95,27 +257,14 @@ class ProxyGateway:
             st["cached_tokens"] / max(1, st["prompt_tokens"]), 3)
         return st
 
-    # -- request handling ----------------------------------------------------
-    def handle(self, path: str, body: Dict[str, Any],
-               headers: Optional[Dict[str, str]] = None,
-               session_id: Optional[str] = None):
-        """Returns the provider-shaped response dict, or a list of
-        provider-shaped SSE events when the request asks to stream."""
-        headers = headers or {}
-        session_id = session_id or headers.get("x-polar-session", "default")
-        provider = P.detect_provider(path, headers)
-        normalized = P.to_openai_chat(provider, body)
-        stream = bool(body.get("stream", False))
-
-        # async submission when the backend supports it (continuous
-        # batching): the request joins the shared decode batch at the next
-        # step boundary instead of monopolizing a one-shot generation.
-        submit = getattr(self.backend, "submit", None)
-        if submit is not None:
-            result = submit(normalized).result()
-        else:
-            result = self.backend.complete(normalized)
-
+    # -- capture ---------------------------------------------------------------
+    def _capture(self, session_id: str, provider: str,
+                 normalized: Dict[str, Any],
+                 result: Dict[str, Any]) -> Tuple[CompletionRecord,
+                                                  Dict[str, Any]]:
+        """Backend completion result → (CompletionRecord appended to the
+        session, OpenAI-chat response dict).  Shared by the blocking path
+        and the streaming relay — aborted partials record the same way."""
         message = result["message"]
         finish = result.get("finish_reason", "stop")
         rec = CompletionRecord(
@@ -160,7 +309,56 @@ class ProxyGateway:
             }],
             "usage": usage,
         }
-        if stream:
-            # non-streaming upstream → synthetic provider-shaped SSE events
+        return rec, oai_resp
+
+    # -- request handling ----------------------------------------------------
+    def handle(self, path: str, body: Dict[str, Any],
+               headers: Optional[Dict[str, str]] = None,
+               session_id: Optional[str] = None):
+        """Returns the provider-shaped response dict; for streaming requests
+        a live ``ProxyStream`` of provider-shaped SSE events (or, when the
+        backend has no live streams — serial mode — the synthesized burst
+        list of the same event shapes)."""
+        headers = headers or {}
+        if session_id is None:      # HTTP header names are case-insensitive
+            session_id = next((v for k, v in headers.items()
+                               if k.lower() == "x-polar-session"), "default")
+        provider = P.detect_provider(path, headers)
+        normalized = P.to_openai_chat(provider, body)
+        wants_stream = (bool(body.get("stream", False))
+                        or ":streamGenerateContent" in path)
+        live = (callable(getattr(self.backend, "stream", None))
+                and getattr(self.backend, "streaming", True))
+
+        if wants_stream and live:
+            # true incremental SSE: deltas relay as the scheduler samples
+            return ProxyStream(self, provider, normalized, session_id,
+                               self.backend.stream(normalized))
+
+        if live:
+            # blocking request over the v2 stream surface: identical result,
+            # but abort_session can reclaim the decode slot mid-generation
+            bstream = self.backend.stream(normalized)
+            self._register_stream(session_id, bstream)
+            try:
+                result = bstream.result()
+            finally:
+                self._unregister_stream(session_id, bstream)
+        else:
+            # async submission when the backend supports it (continuous
+            # batching): the request joins the shared decode batch at the
+            # next step boundary instead of monopolizing a one-shot
+            # generation.
+            submit = getattr(self.backend, "submit", None)
+            if submit is not None:
+                result = submit(normalized).result()
+            else:
+                result = self.backend.complete(normalized)
+
+        _rec, oai_resp = self._capture(session_id, provider, normalized,
+                                       result)
+        if wants_stream:
+            # serial fallback: non-streaming upstream → synthetic burst of
+            # provider-shaped SSE events (the pre-v2 §3.2 step 4 behavior)
             return P.to_stream_events(provider, oai_resp)
         return P.from_openai_chat(provider, oai_resp)

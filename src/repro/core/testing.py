@@ -61,6 +61,83 @@ class ScriptedBackend:
         }
 
 
+class _ScriptedStream:
+    """Duck-typed CompletionStream over a finished scripted result: yields
+    one delta per response id (so downstream parsers/encoders see realistic
+    token-granular chunk boundaries) and supports mid-stream ``abort`` —
+    the remaining ids are dropped and the final record carries the partial
+    message with ``finish_reason="aborted"``, exactly like the engine."""
+
+    def __init__(self, result: Dict[str, Any]):
+        self._full = result
+        self._i = 0
+        self._dec = tok.StreamDecoder()
+        self._aborted = False
+
+    def __iter__(self):
+        return self
+
+    def __next__(self) -> Dict[str, Any]:
+        ids = self._full["response_ids"]
+        if self._aborted or self._i >= len(ids):
+            raise StopIteration
+        t = ids[self._i]
+        lp = self._full["logprobs"][self._i]
+        self._i += 1
+        return {"token_id": int(t), "logprob": float(lp),
+                "text_delta": self._dec.feed(t)}
+
+    def abort(self) -> None:
+        self._aborted = True
+
+    def flush_text(self) -> str:
+        return self._dec.flush()
+
+    def result(self, timeout=None) -> Dict[str, Any]:
+        aborted = (self._aborted
+                   and self._i < len(self._full["response_ids"]))
+        if not aborted:
+            for _ in self:        # drain: blocking-result contract
+                pass
+        ids = self._full["response_ids"][:self._i]
+        lps = self._full["logprobs"][:self._i]
+        # like the engine, the final message is PARSED from the sampled ids
+        # (tool-call ids regenerate as call_N — the wire encoding does not
+        # carry the scripted ids), so streamed events and blocking response
+        # reassemble identically
+        content, tool_calls, _closed = tok.parse_sampled(ids)
+        message: Dict[str, Any] = {"role": "assistant", "content": content}
+        finish = "aborted" if aborted else self._full["finish_reason"]
+        if tool_calls:
+            message["tool_calls"] = tool_calls
+            if finish == "stop":
+                finish = "tool_calls"
+        return {**self._full, "message": message, "response_ids": ids,
+                "logprobs": lps, "finish_reason": finish,
+                "usage": {"prompt_tokens": len(self._full["prompt_ids"]),
+                          "completion_tokens": len(ids),
+                          "total_tokens": len(self._full["prompt_ids"])
+                          + len(ids)}}
+
+
+class ScriptedStreamBackend(ScriptedBackend):
+    """Scripted backend exposing the v2 streaming surface: the proxy relays
+    its deltas through the real incremental SSE path (per-provider delta
+    encoders), while the scripted content keeps the wire bytes
+    deterministic."""
+
+    streaming = True
+
+    def __init__(self, script: List[Scripted]):
+        super().__init__(script)
+        self.streams: List[_ScriptedStream] = []
+
+    def stream(self, request: Dict[str, Any]) -> _ScriptedStream:
+        s = _ScriptedStream(self.complete(request))
+        self.streams.append(s)
+        return s
+
+
 class EchoBackend:
     """Unbounded backend: replies deterministically based on call count."""
 

@@ -131,3 +131,134 @@ def parse_sampled(ids: Sequence[int]) -> Tuple[str, List[Dict[str, Any]], bool]:
                                "type": "function",
                                "function": {"name": name, "arguments": args}})
     return text, tool_calls, closed
+
+
+# ---------------------------------------------------------------------------
+# incremental streaming (Engine.stream → proxy SSE relay)
+# ---------------------------------------------------------------------------
+
+_CALL_MARK = "\x00call:"
+
+
+class StreamDecoder:
+    """Incremental token-id → text decoder: bytes accumulate until a whole
+    UTF-8 character exists (a multi-byte character split across sampled
+    tokens emits nothing until its last byte arrives); special tokens decode
+    to ''.  The concatenation of every emitted delta equals
+    ``decode_text(ids)`` for the same ids."""
+
+    def __init__(self):
+        import codecs
+        self._dec = codecs.getincrementaldecoder("utf-8")(errors="replace")
+
+    def feed(self, token_id: int) -> str:
+        if token_id >= BYTE_VOCAB:
+            return ""
+        return self._dec.decode(bytes([token_id]))
+
+    def flush(self) -> str:
+        """Terminal flush: force-decode any dangling partial character."""
+        return self._dec.decode(b"", final=True)
+
+
+class StreamParser:
+    """Online inverse of ``parse_sampled``: feed decoded text chars, get
+    semantic deltas the provider encoders can relay incrementally:
+
+        ("text", s)          — visible assistant text
+        ("tool_start", name) — a tool call opened (name complete)
+        ("tool_args", s)     — incremental argument characters
+        ("tool_end", None)   — the tool call's arguments are complete
+
+    The ``\\x00call:name:args`` wire encoding is ambiguous until the whole
+    marker has arrived, so a pending ``\\x00`` holds back output; ``finish``
+    flushes held characters into the enclosing state (mirroring how
+    ``parse_sampled`` leaves a partial marker in the text).  Feeding every
+    delta then calling ``finish`` yields deltas whose reassembly equals
+    ``parse_sampled`` of the same ids, including aborted/truncated tails."""
+
+    def __init__(self):
+        self._state = "text"        # text | mark | name | args
+        self._prev = "text"         # state a confirmed/failed marker returns to
+        self._held = ""             # "\x00" + matched marker chars
+        self._name = ""
+
+    def feed(self, chars: str) -> List[Tuple[str, Any]]:
+        out: List[Tuple[str, Any]] = []
+        for ch in chars:
+            self._feed_one(ch, out)
+        return self._coalesce(out)
+
+    def finish(self) -> List[Tuple[str, Any]]:
+        """End of generation: flush the held partial marker and close any
+        open tool call (a call aborted mid-name still surfaces, matching
+        ``parse_sampled``'s partition semantics)."""
+        out: List[Tuple[str, Any]] = []
+        if self._state == "mark":
+            self._emit_plain(self._held, out)
+            self._held = ""
+            self._state = self._prev
+        if self._state == "name":
+            out.append(("tool_start", self._name))
+            out.append(("tool_end", None))
+        elif self._state == "args":
+            out.append(("tool_end", None))
+        self._state = "text"
+        return self._coalesce(out)
+
+    # -- internals ------------------------------------------------------------
+    def _feed_one(self, ch: str, out: List[Tuple[str, Any]]) -> None:
+        if self._state == "mark":
+            want = _CALL_MARK[len(self._held)]
+            if ch == want:
+                self._held += ch
+                if self._held == _CALL_MARK:     # marker confirmed
+                    if self._prev in ("name", "args"):
+                        if self._prev == "name":  # call aborted before ':'
+                            out.append(("tool_start", self._name))
+                        out.append(("tool_end", None))
+                    self._held = ""
+                    self._name = ""
+                    self._state = "name"
+                return
+            # mismatch: the held chars were literal text/args after all
+            self._emit_plain(self._held, out)
+            self._held = ""
+            self._state = self._prev
+            # fall through: ch re-enters the non-mark path below
+        if ch == "\x00":
+            self._prev = self._state
+            self._state = "mark"
+            self._held = ch
+            return
+        if self._state == "name":
+            if ch == ":":
+                out.append(("tool_start", self._name))
+                self._state = "args"
+            else:
+                self._name += ch
+            return
+        self._emit_plain(ch, out)
+
+    def _emit_plain(self, s: str, out: List[Tuple[str, Any]]) -> None:
+        if not s:
+            return
+        if self._state == "args" or (self._state == "mark"
+                                     and self._prev == "args"):
+            out.append(("tool_args", s))
+        elif self._state == "name" or (self._state == "mark"
+                                       and self._prev == "name"):
+            self._name += s
+        else:
+            out.append(("text", s))
+
+    @staticmethod
+    def _coalesce(ops: List[Tuple[str, Any]]) -> List[Tuple[str, Any]]:
+        merged: List[Tuple[str, Any]] = []
+        for kind, val in ops:
+            if merged and kind in ("text", "tool_args") \
+                    and merged[-1][0] == kind:
+                merged[-1] = (kind, merged[-1][1] + val)
+            else:
+                merged.append((kind, val))
+        return merged

@@ -1,7 +1,7 @@
-from repro.inference.engine import Engine
+from repro.inference.engine import CompletionStream, Engine
 from repro.inference.paged_kv import (BlockAllocator, PagedKVCache,
                                       PrefixIndex)
 from repro.inference.scheduler import ContinuousBatchingScheduler
 
-__all__ = ["Engine", "BlockAllocator", "PagedKVCache", "PrefixIndex",
-           "ContinuousBatchingScheduler"]
+__all__ = ["CompletionStream", "Engine", "BlockAllocator", "PagedKVCache",
+           "PrefixIndex", "ContinuousBatchingScheduler"]

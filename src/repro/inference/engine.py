@@ -11,14 +11,20 @@ Two generation paths share one sampling kernel:
     samples until the end-of-turn token or the budget.  This is the
     measured baseline and the fallback for model families without a paged
     decode path.
-  * continuous batching (``submit`` / ``complete``, default) — requests are
-    queued to a ``ContinuousBatchingScheduler`` that advances every
-    in-flight sequence one token per jitted step over a paged KV cache, so
-    concurrently-open harness sessions share forward passes.  Sampled ids
-    and log-probs are bit-identical to the one-shot path (same per-request
-    key chain, same arithmetic; see tests/test_continuous_batching.py).
+  * continuous batching (``stream`` / ``submit`` / ``complete``, default) —
+    requests are queued to a ``ContinuousBatchingScheduler`` that advances
+    every in-flight sequence one token per jitted step over a paged KV
+    cache, so concurrently-open harness sessions share forward passes.
+    ``stream`` is the v2 surface: a ``CompletionStream`` of per-token
+    deltas (first delta after prefill, not after the whole completion)
+    with mid-generation ``abort()`` that frees the request's decode slot
+    and KV blocks at the next step boundary; ``complete`` is a thin
+    blocking wrapper over it.  Sampled ids and log-probs are bit-identical
+    to the one-shot path (same per-request key chain, same arithmetic; see
+    tests/test_continuous_batching.py + tests/test_streaming.py).
     ``Engine(serial=True)`` is the escape hatch, mirroring
-    ``PipelineConfig(serial=True)`` on the rollout side.
+    ``PipelineConfig(serial=True)`` on the rollout side — its streams are
+    synthetic bursts (``streaming == False``).
 
 The engine returns the exact sampled ids + their behavior log-probs (no
 retokenization anywhere, paper §2.4).  Weight updates are atomic swaps
@@ -28,9 +34,10 @@ submission (stale-policy semantics handled by the trainer's TIS).
 """
 from __future__ import annotations
 
+import queue
 import threading
 from concurrent.futures import Future
-from typing import Any, Dict, Optional
+from typing import Any, Callable, Dict, Iterator, Optional
 
 import jax
 import jax.numpy as jnp
@@ -81,6 +88,123 @@ def sample_token(logits, rng, *, temperature: float, top_k: int):
             scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
         nxt = jax.random.categorical(rng, scaled).astype(jnp.int32)
     return nxt, logp_full[nxt]
+
+
+class CompletionStream:
+    """One in-flight generation as a stream (the v2 InferenceBackend surface).
+
+    Iterating yields one ``{"token_id", "logprob", "text_delta"}`` delta per
+    sampled token, pushed by the scheduler thread into a bounded per-request
+    queue the moment the token exists — time-to-first-delta is O(prefill),
+    not O(full completion).  The queue is sized to the request's own token
+    budget (``max_new`` deltas + the final record), so the producer never
+    blocks on a slow consumer.  After the last delta, ``result()`` returns
+    the same completion dict the blocking path returns (``finish_reason``,
+    usage, ids, logprobs — ``"aborted"`` with the partial generation when
+    the stream was aborted).
+
+    ``abort()`` is the capacity-reclaim path: the request leaves the
+    in-flight batch at the next scheduler step boundary and frees its KV
+    blocks immediately; whatever was sampled up to that point is still
+    delivered and recorded.  Aborting a finished or serial (synthetic)
+    stream is a no-op."""
+
+    _SENTINEL_TIMEOUT = 300.0
+
+    def __init__(self, max_new: int, on_abort: Optional[Callable] = None,
+                 synthetic: bool = False):
+        self._q: "queue.Queue" = queue.Queue(maxsize=max_new + 4)
+        self._on_abort = on_abort
+        self.synthetic = synthetic       # serial fallback: burst, not live
+        self._final: Optional[Dict[str, Any]] = None
+        self._exc: Optional[BaseException] = None
+        self._done = False
+        self._abort_once = threading.Event()
+        self._decoder = tok.StreamDecoder()
+
+    # -- producer side (scheduler / engine thread) ----------------------------
+    def _emit(self, token_id: int, logprob: float) -> None:
+        self._q.put_nowait(("delta", (int(token_id), float(logprob))))
+
+    def _finish(self, result: Dict[str, Any]) -> None:
+        self._q.put_nowait(("final", result))
+
+    def _fail(self, exc: BaseException) -> None:
+        self._q.put_nowait(("error", exc))
+
+    # -- consumer side --------------------------------------------------------
+    def __iter__(self) -> Iterator[Dict[str, Any]]:
+        return self
+
+    def __next__(self) -> Dict[str, Any]:
+        return self._next(self._SENTINEL_TIMEOUT)
+
+    def _next(self, timeout: float) -> Dict[str, Any]:
+        if self._done:
+            raise StopIteration
+        try:
+            kind, payload = self._q.get(timeout=timeout)
+        except queue.Empty:
+            raise TimeoutError(
+                f"no stream event within {timeout:.1f}s — producer "
+                "stalled?") from None
+        if kind == "delta":
+            t, lp = payload
+            return {"token_id": t, "logprob": lp,
+                    "text_delta": self._decoder.feed(t)}
+        self._done = True
+        if kind == "error":
+            self._exc = payload
+            raise payload
+        self._final = payload
+        raise StopIteration
+
+    def abort(self) -> None:
+        """Request mid-generation abort.  Idempotent; the final record (with
+        ``finish_reason="aborted"`` unless the generation had already
+        finished) arrives through the stream as usual."""
+        if self._abort_once.is_set() or self._done:
+            return
+        self._abort_once.set()
+        if self._on_abort is not None:
+            self._on_abort()
+
+    def flush_text(self) -> str:
+        """Terminal text flush: the replacement rendering of any dangling
+        partial UTF-8 character when the stream ended (abort/length) mid-
+        character.  Consumers reassembling text must append this after the
+        last delta to match ``decode_text`` of the full id sequence."""
+        return self._decoder.flush()
+
+    @property
+    def aborted(self) -> bool:
+        return self._abort_once.is_set()
+
+    @property
+    def finished(self) -> bool:
+        return self._done
+
+    def result(self, timeout: Optional[float] = None) -> Dict[str, Any]:
+        """Drain any remaining deltas and return the final completion dict
+        (the blocking ``complete()`` contract is exactly this call).
+        Raises TimeoutError when ``timeout`` elapses first."""
+        import time
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while not self._done:
+            if deadline is None:
+                wait = self._SENTINEL_TIMEOUT
+            else:
+                wait = deadline - time.monotonic()
+                if wait <= 0:
+                    raise TimeoutError("stream result timed out")
+            try:
+                self._next(min(wait, self._SENTINEL_TIMEOUT))
+            except StopIteration:
+                break
+        if self._exc is not None:
+            raise self._exc
+        assert self._final is not None, "stream closed without a final record"
+        return self._final
 
 
 class Engine:
@@ -268,16 +392,79 @@ class Engine:
         return ids, lps, finish
 
     # -- InferenceBackend protocol ----------------------------------------------
+    @property
+    def streaming(self) -> bool:
+        """True when live incremental streams exist (the continuous-batching
+        path): deltas arrive per scheduler step and ``abort()`` reclaims the
+        decode slot mid-generation.  Serial engines and families without a
+        paged decode path return False — their streams are synthetic bursts
+        and the proxy keeps its ``to_stream_events`` SSE synthesis."""
+        return (not self.serial and not self._closed
+                and M.supports_paged_decode(self.cfg)
+                and M.supports_chunked_prefill(self.cfg))
+
+    def _new_request(self, prompt_ids, max_new: Optional[int]):
+        """Shared request construction: bucket checks + the per-submission
+        RNG split that makes scheduler sampling bit-identical to the same
+        sequence of one-shot ``generate_ids`` calls."""
+        from repro.inference.scheduler import SchedRequest
+        max_new = min(max_new or self.max_new, self.max_new)
+        bucket = self._prompt_bucket(len(prompt_ids), max_new)
+        with self._lock:
+            self.rng, key = jax.random.split(self.rng)
+            version = self.policy_version
+        return SchedRequest(prompt_ids=list(prompt_ids), max_new=max_new,
+                            key=key, version=version, bucket=bucket)
+
+    def stream_ids(self, prompt_ids,
+                   max_new: Optional[int] = None) -> CompletionStream:
+        """Streaming generation: deltas flow as the scheduler samples them
+        (first delta after prefill, not after the whole completion) and
+        ``abort()`` frees the request's decode slot + KV blocks at the next
+        step boundary.  Ids and logprobs are bit-identical to
+        ``generate_ids`` on every non-aborted path."""
+        max_new = min(max_new or self.max_new, self.max_new)
+        sched = self.scheduler
+        if sched is None:
+            # serial fallback: the one-shot jitted program cannot be
+            # interrupted mid-while_loop, so the generation completes first
+            # and the deltas replay as a burst (stream.synthetic == True)
+            self._prompt_bucket(len(prompt_ids), max_new)
+            stream = CompletionStream(max_new, synthetic=True)
+            with self._lock:
+                version = self.policy_version
+            try:
+                ids, lps, finish = self.generate_ids(prompt_ids, max_new)
+            except Exception as e:  # noqa: BLE001
+                stream._fail(e)
+                return stream
+            for t, lp in zip(ids, lps):
+                stream._emit(t, lp)
+            stream._finish(self._build_result(
+                list(prompt_ids), ids, lps, finish, version))
+            return stream
+        req = self._new_request(prompt_ids, max_new)
+        stream = CompletionStream(req.max_new,
+                                  on_abort=lambda: sched.abort(req))
+        req.stream = stream
+        sched.submit(req)
+        return stream
+
+    def stream(self, request: Dict[str, Any]) -> CompletionStream:
+        """Normalized OpenAI-chat request → CompletionStream (the v2
+        InferenceBackend surface the proxy relays as provider SSE)."""
+        prompt_ids = tok.apply_chat_template(request["messages"])
+        return self.stream_ids(prompt_ids, request.get("max_tokens"))
+
     def submit_ids(self, prompt_ids, max_new: Optional[int] = None) -> Future:
         """Queue a generation; the returned Future resolves to the full
         completion result dict.  On the continuous-batching path the request
         joins the shared decode batch at the next step boundary; in serial
         mode it runs inline (one-shot) before returning."""
-        max_new = min(max_new or self.max_new, self.max_new)
-        plen = len(prompt_ids)
-        bucket = self._prompt_bucket(plen, max_new)
         sched = self.scheduler
         if sched is None:
+            max_new = min(max_new or self.max_new, self.max_new)
+            self._prompt_bucket(len(prompt_ids), max_new)
             with self._lock:
                 version = self.policy_version
             fut: Future = Future()
@@ -289,13 +476,7 @@ class Engine:
             fut.set_result(self._build_result(
                 list(prompt_ids), ids, lps, finish, version))
             return fut
-        from repro.inference.scheduler import SchedRequest
-        with self._lock:
-            self.rng, key = jax.random.split(self.rng)
-            version = self.policy_version
-        req = SchedRequest(prompt_ids=list(prompt_ids), max_new=max_new,
-                           key=key, version=version, bucket=bucket)
-        return sched.submit(req)
+        return sched.submit(self._new_request(prompt_ids, max_new))
 
     def submit(self, request: Dict[str, Any]) -> Future:
         """Normalized OpenAI-chat request → Future of the completion result
@@ -304,16 +485,21 @@ class Engine:
         return self.submit_ids(prompt_ids, request.get("max_tokens"))
 
     def complete(self, request: Dict[str, Any]) -> Dict[str, Any]:
-        """Thin synchronous wrapper over the scheduler path."""
-        return self.submit(request).result()
+        """Blocking completion — a thin wrapper over ``stream()`` (drain the
+        deltas, return the final record); bit-identical to the pre-v2 path."""
+        return self.stream(request).result()
 
     def _resolve(self, req, finish: str) -> None:
-        """Scheduler callback: build the result dict and resolve the future."""
+        """Scheduler callback: build the result dict, resolve the future,
+        and close the delta stream (when one is attached) with the final
+        record — partial aborted generations included."""
         result = self._build_result(
             req.prompt_ids, req.out_ids, req.out_lps, finish, req.version,
             cached_tokens=req.cached_tokens)
         if not req.future.done():      # caller may have cancelled
             req.future.set_result(result)
+            if req.stream is not None:
+                req.stream._finish(result)
 
     def _build_result(self, prompt_ids, ids, lps, finish: str,
                       version: int, cached_tokens: int = 0) -> Dict[str, Any]:

@@ -22,12 +22,21 @@ step through a jitted batched decode over a paged KV cache:
   step   — one jitted ``forward_decode_paged`` + vmapped sampling advances
            every active sequence; the batch is padded to a power-of-two
            slot count so only O(log max_batch) step programs ever compile.
-           Padded slots write into the trash block and are ignored.
+           Padded slots write into the trash block and are ignored.  Each
+           sampled token is also pushed into the request's delta stream
+           (when one is attached) the moment it exists — the streaming
+           API's time-to-first-token is prefill + one step, not the whole
+           completion.
   leave  — a sequence that samples end-of-turn (or exhausts its budget)
            publishes its prefill-computed prompt blocks into the prefix
            index (done at prefill completion), resolves its future and
            drops its page references; unshared pages are reusable at the
            same boundary, shared/cached ones live on.
+  abort  — a request flagged via ``abort()`` (client disconnect, straggler
+           cancellation, harness deadline) is reaped at the next step
+           boundary: it leaves queue/prefill/batch, frees its KV blocks
+           immediately (no publish of an incomplete chain), and resolves
+           with ``finish_reason="aborted"`` carrying the partial output.
 
 Determinism contract: per-request RNG keys are split off the engine RNG at
 *submission* (same order ⇒ same keys as serial ``generate_ids`` calls),
@@ -68,6 +77,11 @@ class SchedRequest:
     version: int             # policy version at submission
     bucket: int              # prompt bucket (same as the one-shot path)
     future: Future = field(default_factory=Future)
+    stream: Any = None       # CompletionStream (None = blocking caller)
+    # abort flag (set from ANY thread via scheduler.abort): the request
+    # leaves the in-flight batch at the next step boundary and frees its
+    # pages immediately; whatever was sampled is resolved as "aborted"
+    aborted: threading.Event = field(default_factory=threading.Event)
     # -- runtime state (owned by the scheduler thread) -----------------------
     seq_id: int = -1
     prefill_pos: int = 0     # next prompt position to compute (chunked)
@@ -76,6 +90,13 @@ class SchedRequest:
     last_token: int = -1
     out_ids: List[int] = field(default_factory=list)
     out_lps: List[float] = field(default_factory=list)
+
+    def emit(self, token_id: int, logprob: float) -> None:
+        """Push one sampled token to the attached stream (if any).  The
+        stream queue is sized to this request's budget, so the scheduler
+        thread can never block on a slow consumer."""
+        if self.stream is not None:
+            self.stream._emit(token_id, logprob)
 
 
 class ContinuousBatchingScheduler:
@@ -110,6 +131,7 @@ class ContinuousBatchingScheduler:
             "submitted": 0, "completed": 0, "joins": 0, "leaves": 0,
             "steps": 0, "step_slots": 0, "step_active": 0, "peak_batch": 0,
             "prefill_chunks": 0, "prefill_tokens": 0, "errors": 0,
+            "aborts": 0, "decode_steps_reclaimed": 0,
         }
         self._thread = threading.Thread(
             target=self._loop, name="cbatch-scheduler", daemon=True)
@@ -130,7 +152,7 @@ class ContinuousBatchingScheduler:
                 self.metrics["submitted"] += 1
                 self._queue.append(req)
         if not enqueued:
-            req.future.set_exception(RuntimeError("scheduler closed"))
+            self._fail_one(req, RuntimeError("scheduler closed"))
             return req.future
         self._wake.set()
         if self._stop.is_set():
@@ -182,6 +204,15 @@ class ContinuousBatchingScheduler:
             Bb *= 2
         return n
 
+    def abort(self, req: SchedRequest) -> None:
+        """Flag a request for mid-generation abort (thread-safe).  The
+        scheduler reaps it at the next step boundary: it leaves the batch,
+        frees its KV blocks, and resolves with ``finish_reason="aborted"``
+        carrying whatever was sampled so far.  A request still queued is
+        dropped before ever taking pages; a finished request is a no-op."""
+        req.aborted.set()
+        self._wake.set()
+
     def close(self) -> None:
         """Stop the scheduler thread.  Draining (failing any still-pending
         futures) happens ON the scheduler thread as it exits, so close never
@@ -194,6 +225,9 @@ class ContinuousBatchingScheduler:
     def _loop(self) -> None:
         while not self._stop.is_set():
             try:
+                # reap BEFORE admit: pages an abort frees this boundary are
+                # available to the very next admission
+                self._reap_aborted()
                 self._admit_pending()
                 if not self._active and not self._prefilling:
                     self._wake.wait(timeout=0.05)
@@ -213,6 +247,12 @@ class ContinuousBatchingScheduler:
                 self._fail_all(e)
         self._fail_all(RuntimeError("scheduler closed"))
 
+    def _fail_one(self, req: SchedRequest, exc: Exception) -> None:
+        if not req.future.done():
+            req.future.set_exception(exc)
+            if req.stream is not None:
+                req.stream._fail(exc)
+
     def _fail_all(self, exc: Exception) -> None:
         with self._qlock:
             pending = (list(self._queue) + list(self._prefilling)
@@ -221,14 +261,37 @@ class ContinuousBatchingScheduler:
         self._prefilling.clear()
         self._active.clear()
         for r in pending:
-            if not r.future.done():
-                r.future.set_exception(exc)
+            self._fail_one(r, exc)
         if pending:
             # the pools are donated into every step/chunk call, so after a
             # mid-call failure they may be invalidated — rebuild fresh (the
             # prefix index goes with them: its pins name dead pool content)
             # so the scheduler stays usable for new submissions
             self.cache = self._new_cache()
+
+    # -- abort: leave the batch at a step boundary, free pages now ------------
+    def _reap_aborted(self) -> None:
+        """Remove abort-flagged requests from every stage.  Runs at the step
+        boundary (top of the loop), so an abort frees the request's KV
+        blocks before the next decode step and its slot never pads another
+        batch.  Aborted prefills are NOT published to the prefix index —
+        their block chain is incomplete."""
+        with self._qlock:
+            dropped = [r for r in self._queue if r.aborted.is_set()]
+            for r in dropped:
+                self._queue.remove(r)
+        for r in dropped:
+            # never admitted: no pages to free, and no decode capacity was
+            # ever committed — reclaimed stays 0 for queued drops
+            self.metrics["aborts"] += 1
+            self.engine._resolve(r, "aborted")
+        for stage in (self._prefilling, self._active):
+            for r in [r for r in stage if r.aborted.is_set()]:
+                stage.remove(r)
+                self.metrics["aborts"] += 1
+                self.metrics["decode_steps_reclaimed"] += (
+                    r.max_new - len(r.out_ids))
+                self._retire(r, finish="aborted")
 
     # -- join: prefix match + admission --------------------------------------
     def _admit_pending(self) -> None:
@@ -250,7 +313,7 @@ class ContinuousBatchingScheduler:
                     # can never be admitted — fail it instead of wedging
                     with self._qlock:
                         self._queue.popleft()
-                    req.future.set_exception(ValueError(
+                    self._fail_one(req, ValueError(
                         f"request needs more KV blocks than the pool has "
                         f"(prompt {plen} + max_new {req.max_new}, "
                         f"{self.cache.num_blocks} blocks of "
@@ -315,6 +378,7 @@ class ContinuousBatchingScheduler:
         #                   removed below, _fail_all can still resolve it
         req.out_ids.append(t)
         req.out_lps.append(float(lp0))
+        req.emit(t, float(lp0))   # first delta: TTFT == prefill, not EOS
         req.last_token = t
         self.metrics["joins"] += 1
         self._prefilling.remove(req)
@@ -394,6 +458,7 @@ class ContinuousBatchingScheduler:
             t = int(nxt[i])
             r.out_ids.append(t)
             r.out_lps.append(float(lps[i]))
+            r.emit(t, float(lps[i]))
             r.last_token = t
             r.rng = rngs2[i]
             if t == tok.END_OF_TURN or len(r.out_ids) >= r.max_new:
@@ -427,10 +492,11 @@ class ContinuousBatchingScheduler:
         return jax.jit(step, donate_argnums=(1, 2))
 
     # -- leave ----------------------------------------------------------------
-    def _retire(self, req: SchedRequest) -> None:
+    def _retire(self, req: SchedRequest, finish: Optional[str] = None) -> None:
         self.cache.free(req.seq_id)
         self.metrics["leaves"] += 1
         self.metrics["completed"] += 1
-        finish = ("stop" if req.out_ids and req.out_ids[-1] == tok.END_OF_TURN
-                  else "length")
+        if finish is None:
+            finish = ("stop" if req.out_ids
+                      and req.out_ids[-1] == tok.END_OF_TURN else "length")
         self.engine._resolve(req, finish)

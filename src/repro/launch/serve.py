@@ -10,13 +10,19 @@ base URL here) and (2) the rollout service API:
     GET  /rollout/nodes             (per-node pipeline/pool telemetry:
                                      stage utilization, queue depths,
                                      prewarm hit/miss, stage seconds)
-    POST /trainer/register          ({"trainer_id", "weight"}: fair-share
-                                     admission across independent trainers)
-    GET  /trainer/{id}/results?max=N&wait=S   (durable queue, at-least-once)
+    POST /trainer/register          ({"trainer_id", "weight", "max_inflight"}:
+                                     fair-share admission + absolute quota)
+    GET  /trainer/{id}/results?max=N&wait=S&lease=T
+                                    (durable queue, at-least-once; lease =
+                                     per-fetch visibility timeout)
     POST /trainer/{id}/ack          ({"session_ids": [...]})
     POST /nodes/register            (membership is in-process; returns ids)
     POST /v1/chat/completions | /v1/messages | /v1/responses |
-         /v1beta/models/<m>:generateContent   (proxy surface)
+         /v1beta/models/<m>:generateContent   (proxy surface; "stream": true
+                                     relays TRUE incremental SSE — chunked
+                                     transfer, client disconnect aborts the
+                                     in-flight generation and frees its
+                                     decode slot + KV blocks)
 
     PYTHONPATH=src python -m repro.launch.serve --port 8089 --arch qwen3-32b
 """
@@ -31,6 +37,7 @@ from urllib.parse import parse_qs, urlparse
 import jax
 
 from repro.configs import get_smoke_config
+from repro.core.providers import ProviderError
 from repro.inference import Engine
 from repro.rollout import (AgentSpec, GatewayNode, PipelineConfig,
                            RolloutServer, RuntimeSpec, TaskRequest)
@@ -53,6 +60,10 @@ def make_handler(server: RolloutServer, nodes):
     proxy = nodes[0].proxy
 
     class Handler(BaseHTTPRequestHandler):
+        # HTTP/1.1: chunked transfer-encoding for live SSE relays (every
+        # non-streaming response still carries an explicit Content-Length)
+        protocol_version = "HTTP/1.1"
+
         def log_message(self, *a):  # quiet
             pass
 
@@ -63,6 +74,53 @@ def make_handler(server: RolloutServer, nodes):
             self.send_header("Content-Length", str(len(body)))
             self.end_headers()
             self.wfile.write(body)
+
+        # -- SSE writers -----------------------------------------------------
+        def _sse_burst(self, events):
+            """Synthetic (serial-fallback) stream: the whole payload exists
+            up front, so it ships with a Content-Length like any response."""
+            payload = b"".join(
+                b"data: " + json.dumps(e).encode() + b"\n\n" for e in events
+            ) + b"data: [DONE]\n\n"
+            self.send_response(200)
+            self.send_header("Content-Type", "text/event-stream")
+            self.send_header("Content-Length", str(len(payload)))
+            self.end_headers()
+            self.wfile.write(payload)
+
+        def _chunk(self, data: bytes):
+            self.wfile.write(f"{len(data):x}\r\n".encode() + data + b"\r\n")
+            self.wfile.flush()
+
+        def _sse_live(self, stream):
+            """True incremental relay: one chunked-transfer frame per
+            provider event, flushed as the scheduler samples (first byte
+            after prefill).  A client that disconnects mid-generation
+            aborts the stream — the backend frees the decode slot and KV
+            blocks at the next step boundary, and the partial completion is
+            still captured with finish_reason="aborted"."""
+            self.send_response(200)
+            self.send_header("Content-Type", "text/event-stream")
+            self.send_header("Cache-Control", "no-cache")
+            self.send_header("Transfer-Encoding", "chunked")
+            self.end_headers()
+            try:
+                for e in stream:
+                    self._chunk(b"data: " + json.dumps(e).encode() + b"\n\n")
+                self._chunk(b"data: [DONE]\n\n")
+                self.wfile.write(b"0\r\n\r\n")     # terminal chunk
+                self.wfile.flush()
+            except (BrokenPipeError, ConnectionResetError, OSError):
+                # client went away: reclaim capacity, keep the partial record
+                stream.close()
+                self.close_connection = True
+            except Exception:  # noqa: BLE001 — backend died mid-relay: the
+                # response is already partially written, so stop the stream
+                # (close() still captures whatever was generated and
+                # unregisters it) and drop the connection — no traceback on
+                # the wire
+                stream.close()
+                self.close_connection = True
 
         def do_GET(self):
             url = urlparse(self.path)
@@ -86,11 +144,13 @@ def make_handler(server: RolloutServer, nodes):
                     and url.path.endswith("/results")):
                 trainer_id = url.path.split("/")[2]
                 q = parse_qs(url.query)
+                lease = q.get("lease")
                 try:
                     results = server.fetch_results(
                         trainer_id,
                         max_results=int(q.get("max", ["32"])[0]),
-                        wait=float(q.get("wait", ["0"])[0]))
+                        wait=float(q.get("wait", ["0"])[0]),
+                        lease=float(lease[0]) if lease else None)
                     stats = server.trainer_stats(trainer_id)
                 except KeyError:
                     return self._json(404, {"error": "unknown trainer"})
@@ -134,10 +194,12 @@ def make_handler(server: RolloutServer, nodes):
             if self.path == "/trainer/register":
                 if "trainer_id" not in body:
                     return self._json(400, {"error": "trainer_id required"})
-                tid = server.register_trainer(body["trainer_id"],
-                                              weight=body.get("weight", 1.0))
+                tid = server.register_trainer(
+                    body["trainer_id"], weight=body.get("weight", 1.0),
+                    max_inflight=body.get("max_inflight"))
                 return self._json(200, {"trainer_id": tid,
-                                        "weight": body.get("weight", 1.0)})
+                                        "weight": body.get("weight", 1.0),
+                                        "max_inflight": body.get("max_inflight")})
             if self.path.startswith("/trainer/") and self.path.endswith("/ack"):
                 trainer_id = self.path.split("/")[2]
                 try:
@@ -148,19 +210,21 @@ def make_handler(server: RolloutServer, nodes):
             # everything else → provider proxy surface
             try:
                 resp = proxy.handle(self.path, body, dict(self.headers))
+            except ProviderError as e:
+                # typed 400 (unknown provider path / bad request shape)
+                # instead of a 500 traceback
+                return self._json(400, e.to_json())
             except ValueError as e:
-                return self._json(400, {"error": str(e)})
-            if isinstance(resp, list):   # synthetic SSE stream
-                payload = b"".join(
-                    b"data: " + json.dumps(e).encode() + b"\n\n" for e in resp
-                ) + b"data: [DONE]\n\n"
-                self.send_response(200)
-                self.send_header("Content-Type", "text/event-stream")
-                self.send_header("Content-Length", str(len(payload)))
-                self.end_headers()
-                self.wfile.write(payload)
-                return
-            return self._json(200, resp)
+                return self._json(400, {"error": {
+                    "type": "invalid_request_error", "message": str(e)}})
+            except Exception as e:  # noqa: BLE001 — never leak a traceback
+                return self._json(500, {"error": {
+                    "type": "internal_error", "message": str(e)}})
+            if isinstance(resp, dict):
+                return self._json(200, resp)
+            if isinstance(resp, list):      # synthetic SSE (serial fallback)
+                return self._sse_burst(resp)
+            return self._sse_live(resp)     # live ProxyStream relay
 
     return Handler
 

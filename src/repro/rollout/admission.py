@@ -46,6 +46,8 @@ class Delivery:
     result: SessionResult
     attempts: int = 0         # times handed to the consumer
     last_sent: float = 0.0    # monotonic; redelivery eligibility
+    lease: Optional[float] = None   # visibility timeout of the LAST handout
+    #                                 (per-fetch lease; None = server default)
 
 
 @dataclass
@@ -57,6 +59,12 @@ class TrainerState:
     # admission but NO durable queue: queueing results nobody will ever
     # fetch (a typo'd id, a retired consumer) would grow without bound.
     explicit: bool = False
+    # absolute concurrency cap layered ON TOP of the DRR share: at most
+    # this many of the trainer's sessions may be admitted-but-not-terminal
+    # at once (None = share-bounded only).  A capped trainer with backlog
+    # parks out of the rotation and rejoins when a session completes.
+    max_inflight: Optional[int] = None
+    inflight: int = 0                     # admitted, not yet terminal
     deficit: float = 0.0                  # DRR credit carried across turns
     credited: bool = False                # earned credit this rotation turn
     pending: Deque[Session] = field(default_factory=deque)
@@ -66,19 +74,27 @@ class TrainerState:
     completed: int = 0
     starved: int = 0          # grants missed beyond the fair-share period
     missed: int = 0           # consecutive grants to others while backlogged
+    quota_blocked: int = 0    # rotation turns skipped at the inflight cap
     delivered: int = 0
     redelivered: int = 0
     acked: int = 0
+
+    def at_quota(self) -> bool:
+        return (self.max_inflight is not None
+                and self.inflight >= self.max_inflight)
 
     def stats(self) -> Dict[str, Any]:
         return {
             "weight": self.weight,
             "explicit": self.explicit,
+            "max_inflight": self.max_inflight,
+            "inflight": self.inflight,
             "pending_sessions": len(self.pending),
             "queue_depth": len(self.queue),
             "admitted": self.admitted,
             "completed": self.completed,
             "starved": self.starved,
+            "quota_blocked": self.quota_blocked,
             "delivered": self.delivered,
             "redelivered": self.redelivered,
             "acked": self.acked,
@@ -95,16 +111,25 @@ class AdmissionController:
 
     # -- registration ---------------------------------------------------------
     def register(self, trainer_id: str, weight: float = 1.0,
-                 explicit: bool = False) -> TrainerState:
+                 explicit: bool = False,
+                 max_inflight: Optional[int] = None) -> TrainerState:
         weight = max(float(weight), _MIN_WEIGHT)
+        if max_inflight is not None:
+            max_inflight = max(1, int(max_inflight))
         st = self.trainers.get(trainer_id)
         if st is None:
             st = TrainerState(trainer_id=trainer_id, weight=weight,
-                              explicit=explicit)
+                              explicit=explicit, max_inflight=max_inflight)
             self.trainers[trainer_id] = st
         else:
             st.weight = weight                    # re-register updates weight
             st.explicit = st.explicit or explicit
+            st.max_inflight = max_inflight
+            if (not st.at_quota() and st.pending
+                    and trainer_id not in self._in_rotation):
+                # a raised/removed cap may unpark a backlogged trainer
+                self._rotation.append(trainer_id)
+                self._in_rotation.add(trainer_id)
         return st
 
     def get(self, trainer_id: str) -> Optional[TrainerState]:
@@ -138,12 +163,24 @@ class AdmissionController:
                 self._rotation.popleft()
                 self._in_rotation.discard(tid)
                 continue
+            if st.at_quota():
+                # absolute inflight cap reached: park OUT of the rotation
+                # (spinning in place would livelock the pump) and forfeit
+                # credit like a drained queue; release() re-enters the
+                # trainer when one of its sessions goes terminal
+                st.deficit = 0.0
+                st.credited = False
+                st.quota_blocked += 1
+                self._rotation.popleft()
+                self._in_rotation.discard(tid)
+                continue
             if not st.credited:
                 st.deficit += self.quantum * st.weight
                 st.credited = True
             if st.deficit >= 1.0:
                 st.deficit -= 1.0
                 st.admitted += 1
+                st.inflight += 1
                 got[tid] = got.get(tid, 0) + 1
                 admitted.append(st.pending.popleft())
                 budget -= 1
@@ -169,6 +206,19 @@ class AdmissionController:
                         st.starved += 1
         return admitted
 
+    def release(self, trainer_id: str) -> None:
+        """One of the trainer's admitted sessions went terminal: drop its
+        inflight slot and, if the trainer was parked at its quota with
+        backlog, re-enter it into the admission rotation."""
+        st = self.trainers.get(trainer_id)
+        if st is None:
+            return
+        st.inflight = max(0, st.inflight - 1)
+        if (st.pending and not st.at_quota()
+                and trainer_id not in self._in_rotation):
+            self._rotation.append(trainer_id)
+            self._in_rotation.add(trainer_id)
+
     # -- result queues (at-least-once + ack) ----------------------------------
     def route_result(self, trainer_id: str, result: SessionResult) -> bool:
         """Append a terminal result to its owner's durable queue.  Returns
@@ -186,16 +236,25 @@ class AdmissionController:
         return True
 
     def fetch(self, trainer_id: str, max_results: int, now: float,
-              redeliver_after: float) -> List[SessionResult]:
+              redeliver_after: float,
+              lease: Optional[float] = None) -> List[SessionResult]:
         """Hand out queued results, oldest first.  A result already handed
-        out is redelivered once ``redeliver_after`` elapses without an ack
-        (at-least-once: the consumer dedupes by session_id)."""
+        out is redelivered once its visibility timeout elapses without an
+        ack (at-least-once: the consumer dedupes by session_id).
+
+        ``lease`` is the PER-FETCH visibility timeout: every result handed
+        out by this call stays invisible for ``lease`` seconds (a slow
+        consumer takes a long lease, a crash-prone one a short lease)
+        instead of the one server-wide ``redeliver_after`` knob.  Each
+        delivery remembers the lease it was last handed out under, so
+        differently-leased fetches coexist on one queue."""
         st = self.trainers.get(trainer_id)
         if st is None:
             raise KeyError(f"unknown trainer_id: {trainer_id!r}")
         out: List[SessionResult] = []
         for d in st.queue.values():
-            if d.attempts and now - d.last_sent < redeliver_after:
+            visible_after = d.lease if d.lease is not None else redeliver_after
+            if d.attempts and now - d.last_sent < visible_after:
                 continue                            # in flight to consumer
             if d.attempts:
                 st.redelivered += 1
@@ -203,6 +262,7 @@ class AdmissionController:
                 st.delivered += 1
             d.attempts += 1
             d.last_sent = now
+            d.lease = lease
             out.append(d.result)
             if len(out) >= max_results:
                 break

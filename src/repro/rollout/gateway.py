@@ -144,12 +144,18 @@ class GatewayNode:
     def cancel(self, session_id: str) -> None:
         """Best-effort cancellation (straggler mitigation).  The runtime is
         flagged under the lock so it cannot race _detach_runtime: a runtime
-        already released back to the pool is never cancelled."""
+        already released back to the pool is never cancelled.  In-flight
+        model streams are aborted too, so the inference backend frees the
+        session's decode slots and KV blocks at the next step boundary
+        instead of generating tokens nobody will read — the partial
+        completions stay captured (finish_reason="aborted") for
+        reconstruction."""
         with self._lock:
             self._cancelled.add(session_id)
             live = self._live.get(session_id)
             if live and live.runtime is not None:
                 live.runtime.cancel()
+        self.proxy.abort_session(session_id)
 
     def status(self) -> Dict[str, Any]:
         with self._lock:

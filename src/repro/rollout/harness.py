@@ -58,6 +58,24 @@ class HarnessAdapter(ABC):
         if time.monotonic() > deadline:
             raise HarnessTimeout(self.name)
 
+    def _drain_stream(self, resp, deadline: float) -> List[Dict[str, Any]]:
+        """Consume a proxy SSE relay with deadline enforcement.  A synthetic
+        burst (list) is returned as-is; a live stream is iterated event by
+        event and, if the session deadline passes mid-generation, ABORTED —
+        the backend frees the request's decode slot and KV blocks at the
+        next step boundary, the proxy captures the partial completion
+        (finish_reason="aborted"), and HarnessTimeout propagates so the
+        gateway reconstructs what was captured."""
+        if isinstance(resp, list):
+            return resp
+        events: List[Dict[str, Any]] = []
+        for e in resp:
+            events.append(e)
+            if time.monotonic() > deadline:
+                resp.close()           # abort + capture on this thread
+                raise HarnessTimeout(self.name)
+        return events
+
     def _run_tools(self, runtime: Runtime,
                    tool_calls: List[Dict[str, Any]]) -> List[Tuple[str, str]]:
         """Execute OpenAI-shaped tool calls → [(call_id, output)]."""
@@ -247,6 +265,39 @@ class CodexHarness(HarnessAdapter):
 # claude_code — Anthropic Messages API with context compaction
 # ---------------------------------------------------------------------------
 
+def reassemble_anthropic_stream(events: List[Dict[str, Any]]
+                                ) -> List[Dict[str, Any]]:
+    """Anthropic SSE events → the content-block list of the equivalent
+    non-streaming response: text deltas concatenate per block and tool_use
+    ``input_json_delta`` fragments reassemble into the input object.  Works
+    on both the proxy's live relay and its synthetic burst."""
+    blocks: Dict[int, Dict[str, Any]] = {}
+    partial: Dict[int, str] = {}
+    for e in events:
+        t = e.get("type")
+        if t == "content_block_start":
+            blk = dict(e["content_block"])
+            blocks[e["index"]] = blk
+            if blk.get("type") == "tool_use":
+                partial[e["index"]] = ""
+        elif t == "content_block_delta":
+            d = e["delta"]
+            blk = blocks.get(e["index"])
+            if blk is None:
+                continue
+            if d.get("type") == "text_delta":
+                blk["text"] = blk.get("text", "") + d["text"]
+            elif d.get("type") == "input_json_delta":
+                partial[e["index"]] = (partial.get(e["index"], "")
+                                       + d["partial_json"])
+    for i, raw in partial.items():
+        try:
+            blocks[i]["input"] = json.loads(raw or "{}")
+        except json.JSONDecodeError:
+            blocks[i]["input"] = {"_raw": raw}
+    return [blocks[i] for i in sorted(blocks)]
+
+
 class ClaudeCodeHarness(HarnessAdapter):
     name = "claude_code"
     provider_path = "/v1/messages"
@@ -275,17 +326,14 @@ class ClaudeCodeHarness(HarnessAdapter):
                                  "messages": list(messages),
                                  "stream": self.spec.config.get("stream", False)},
                                 session_id=session_id)
-            if isinstance(resp, list):  # synthetic SSE — reassemble
-                text = "".join(e["delta"]["text"] for e in resp
-                               if e.get("type") == "content_block_delta"
-                               and e["delta"].get("type") == "text_delta")
-                content: List[Dict[str, Any]] = [{"type": "text", "text": text}]
-                tool_uses: List[Dict[str, Any]] = []
+            if not isinstance(resp, dict):  # SSE relay (live or burst)
+                events = self._drain_stream(resp, deadline)
+                content = reassemble_anthropic_stream(events)
             else:
                 content = resp.get("content", [])
-                tool_uses = [b for b in content if b.get("type") == "tool_use"]
-                text = "".join(b.get("text", "") for b in content
-                               if b.get("type") == "text")
+            tool_uses = [b for b in content if b.get("type") == "tool_use"]
+            text = "".join(b.get("text", "") for b in content
+                           if b.get("type") == "text")
             turns += 1
             transcript.append(text)
             messages.append({"role": "assistant", "content": content or

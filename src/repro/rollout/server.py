@@ -88,31 +88,41 @@ class RolloutServer:
         self._monitor.start()
 
     # -- trainer membership (paper Fig. 5a consumers) --------------------------
-    def register_trainer(self, trainer_id: str, weight: float = 1.0) -> str:
+    def register_trainer(self, trainer_id: str, weight: float = 1.0,
+                         max_inflight: Optional[int] = None) -> str:
         """Register (or re-weight) a consumer of this rollout service.
         Tasks carrying this trainer_id are admitted by deficit-round-robin
         over the registered weights and their results land in this
         trainer's durable queue.  Only explicitly registered trainers get
         a queue — tasks naming an unregistered trainer_id are admitted
         fairly but their results flow via callback/poll only (a typo'd id
-        must not accumulate results nobody will ever fetch)."""
+        must not accumulate results nobody will ever fetch).
+
+        ``max_inflight`` layers an ABSOLUTE concurrency cap on top of the
+        DRR share: at most that many of the trainer's sessions admitted at
+        once, regardless of available slots (surfaced in ``status()``)."""
         with self._lock:
-            self._admission.register(trainer_id, weight, explicit=True)
+            self._admission.register(trainer_id, weight, explicit=True,
+                                     max_inflight=max_inflight)
+        self._pump_admission()     # a raised cap may admit parked backlog
         return trainer_id
 
     def fetch_results(self, trainer_id: str, max_results: int = 32,
-                      wait: float = 0.0) -> List[SessionResult]:
+                      wait: float = 0.0,
+                      lease: Optional[float] = None) -> List[SessionResult]:
         """At-least-once delivery from the trainer's result queue: results
-        stay queued until acked; anything unacked for longer than the
-        server's ``redeliver_timeout`` is handed out again.  ``wait`` > 0
-        blocks until at least one result is deliverable or the wait
-        elapses."""
+        stay queued until acked; anything unacked past its visibility
+        timeout is handed out again.  ``lease`` sets the per-fetch
+        visibility timeout for the results THIS call hands out (default:
+        the server-wide ``redeliver_timeout`` knob).  ``wait`` > 0 blocks
+        until at least one result is deliverable or the wait elapses."""
         deadline = time.monotonic() + max(0.0, wait)
         with self._results_cv:
             while True:
                 now = time.monotonic()
                 out = self._admission.fetch(trainer_id, max_results, now,
-                                            self._redeliver_timeout)
+                                            self._redeliver_timeout,
+                                            lease=lease)
                 remaining = deadline - time.monotonic()
                 if out or remaining <= 0 or self._stop.is_set():
                     return out
@@ -305,6 +315,10 @@ class RolloutServer:
                 state.results.append(result)
                 cb = state.task.callback
                 self._inflight.discard(result.session_id)
+                # drop the owner's per-trainer inflight slot (max_inflight
+                # quota) — retries above keep theirs
+                self._admission.release(state.task.trainer_id
+                                        or DEFAULT_TRAINER)
                 if state.task.trainer_id is not None:
                     result.trainer_id = state.task.trainer_id
                     self._admission.route_result(state.task.trainer_id, result)

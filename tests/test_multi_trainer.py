@@ -428,6 +428,145 @@ def test_two_async_grpo_trainers_share_one_node_pool():
         assert m["trainable_tokens"] > 0
 
 
+# ---------------------------------------------------------------------------
+# lease-based redelivery (per-fetch visibility timeout)
+# ---------------------------------------------------------------------------
+
+def test_fetch_lease_overrides_server_redeliver_knob():
+    """A per-fetch lease sets the visibility timeout for the results that
+    fetch handed out — a long lease suppresses redelivery even when the
+    server-wide knob is tiny, a short lease expires on its own schedule,
+    and an ack inside the lease window retires the result for good."""
+    server = _quiet_server(redeliver_timeout=0.02, admission_limit=None)
+    gw = StubGateway()
+    server.register_node(gw, auto_heartbeat=False)
+    server.register_trainer("L", weight=1.0)
+    server.submit_task(_task("l0", "L", n=2))
+    for s in list(gw.submitted):
+        _complete(server, s)
+
+    # long lease: the tiny server knob must NOT redeliver inside it
+    first = server.fetch_results("L", max_results=1, lease=10.0)
+    assert len(first) == 1
+    time.sleep(0.05)       # > redeliver_timeout, < lease
+    more = server.fetch_results("L", max_results=10, lease=0.05)
+    assert [r.session_id for r in more] != [], "2nd result still deliverable"
+    assert first[0].session_id not in {r.session_id for r in more}, \
+        "long-leased result must stay invisible past the server knob"
+
+    # short lease: expires on its own schedule → redelivered
+    time.sleep(0.08)       # > the 0.05 lease on `more`
+    again = server.fetch_results("L", max_results=10, lease=0.05)
+    assert {r.session_id for r in again} == {r.session_id for r in more}
+    assert server.trainer_stats("L")["redelivered"] >= 1
+
+    # ack inside the lease: never redelivered again (the long-leased result
+    # may or may not have surfaced yet — only the acked one must be gone)
+    server.ack("L", [r.session_id for r in again])
+    time.sleep(0.08)
+    later = server.fetch_results("L", max_results=10)
+    assert all(r.session_id != again[0].session_id for r in later)
+    server.shutdown()
+
+
+def test_lease_expiry_vs_ack_regression():
+    """Regression (ROADMAP PR-4 follow-up): two consumers with different
+    lease needs share one queue; each delivery's visibility follows the
+    lease it was LAST handed out under."""
+    server = _quiet_server(redeliver_timeout=5.0, admission_limit=None)
+    gw = StubGateway()
+    server.register_node(gw, auto_heartbeat=False)
+    server.register_trainer("M", weight=1.0)
+    server.submit_task(_task("m0", "M", n=1))
+    for s in list(gw.submitted):
+        _complete(server, s)
+    # short-leased fetch: redelivery well before the 5s server default
+    got = server.fetch_results("M", max_results=1, lease=0.03)
+    assert len(got) == 1
+    assert server.fetch_results("M", max_results=1) == []   # in flight
+    time.sleep(0.05)
+    re = server.fetch_results("M", max_results=1, lease=0.03)
+    assert [r.session_id for r in re] == [got[0].session_id]
+    server.ack("M", [got[0].session_id])
+    time.sleep(0.05)
+    assert server.fetch_results("M", max_results=1) == [], \
+        "acked results must not resurrect after lease expiry"
+    server.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# per-trainer max_inflight quota (absolute cap over DRR shares)
+# ---------------------------------------------------------------------------
+
+def test_max_inflight_quota_caps_admission_and_releases():
+    server = _quiet_server(admission_limit=None)
+    gw = StubGateway()
+    server.register_node(gw, auto_heartbeat=False)
+    server.register_trainer("Q", weight=100.0, max_inflight=2)
+    server.register_trainer("R", weight=1.0)
+    server.submit_task(_task("q0", "Q", n=6))
+    server.submit_task(_task("r0", "R", n=6))
+    # despite Q's overwhelming weight and unlimited slots, only 2 of its
+    # sessions are admitted; R's whole backlog flows
+    by_trainer = {}
+    for s in gw.submitted:
+        by_trainer.setdefault(s.trainer_id, []).append(s)
+    assert len(by_trainer["Q"]) == 2
+    assert len(by_trainer["R"]) == 6
+    st = server.status()["trainers"]["Q"]
+    assert st["max_inflight"] == 2 and st["inflight"] == 2
+    assert st["pending_sessions"] == 4
+    assert st["quota_blocked"] >= 1
+
+    # one terminal result releases a slot → exactly one more admission
+    done = {by_trainer["Q"][0].session_id}
+    _complete(server, by_trainer["Q"][0])
+    q_now = [s for s in gw.submitted if s.trainer_id == "Q"]
+    assert len(q_now) == 3
+    assert server.status()["trainers"]["Q"]["inflight"] == 2
+
+    # raising the cap un-parks the remaining backlog
+    server.register_trainer("Q", weight=100.0, max_inflight=None)
+    q_now = [s for s in gw.submitted if s.trainer_id == "Q"]
+    assert len(q_now) == 6
+    for s in list(gw.submitted):
+        if s.session_id not in done:
+            done.add(s.session_id)
+            _complete(server, s)
+    st = server.status()["trainers"]["Q"]
+    assert st["inflight"] == 0 and st["pending_sessions"] == 0
+    server.shutdown()
+
+
+def test_max_inflight_quota_composes_with_admission_limit():
+    """The absolute per-trainer cap and the global admission limit stack:
+    the capped trainer never exceeds its quota, the other trainer keeps
+    the remaining slots busy."""
+    server = _quiet_server(admission_limit=4)
+    gw = StubGateway()
+    server.register_node(gw, auto_heartbeat=False)
+    server.register_trainer("capped", weight=10.0, max_inflight=1)
+    server.register_trainer("free", weight=1.0)
+    server.submit_task(_task("c0", "capped", n=4))
+    server.submit_task(_task("f0", "free", n=8))
+    done: set = set()
+    for _round in range(16):
+        counts = {}
+        for s in gw.submitted:
+            if s.session_id not in done:
+                counts[s.trainer_id] = counts.get(s.trainer_id, 0) + 1
+        assert counts.get("capped", 0) <= 1, counts
+        assert sum(counts.values()) <= 4
+        nxt = next((s for s in gw.submitted if s.session_id not in done),
+                   None)
+        if nxt is None:
+            break
+        done.add(nxt.session_id)
+        _complete(server, nxt)
+    assert len(done) == 12, "every session eventually admitted + completed"
+    server.shutdown()
+
+
 def test_unregistered_trainer_id_admitted_but_not_queued():
     """A typo'd / never-registered trainer_id gets fair admission under an
     implicit tenant but NO durable queue — results nobody will ever fetch

@@ -1,0 +1,531 @@
+"""Streaming-native completion API v2.
+
+ * equivalence — streamed deltas (ids AND logprobs) are bit-identical to
+   one-shot ``Engine.generate_ids`` on every non-aborted path, over waves
+   and mixed prompt buckets (mirroring test_continuous_batching.py),
+ * abort — a mid-generation abort leaves the batch at the next step
+   boundary, frees ALL its KV blocks (allocator ``check()`` holds), and
+   resolves the partial generation with finish_reason="aborted" while
+   concurrent requests stay bit-identical,
+ * provider round-trips — every dialect's incremental delta events
+   (Anthropic content_block_delta / OpenAI chunks / Responses
+   output_text.delta / Google streamGenerateContent) reassemble to the
+   SAME message as the non-streaming response, tool calls included,
+ * proxy capture — aborted streams still produce a complete
+   CompletionRecord with exactly the tokens the harness saw,
+ * HTTP façade — chunked live SSE, typed 400 for unknown provider paths,
+   client disconnect propagating to stream.abort() (slow lane).
+"""
+from __future__ import annotations
+
+import json
+import socket
+import threading
+import time
+
+import jax
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import tokenizer as tok
+from repro.core.proxy import ProxyGateway
+from repro.core.testing import Scripted, ScriptedStreamBackend
+from repro.inference import Engine
+
+CFG = get_smoke_config("qwen3-32b").replace(vocab_size=512)
+
+
+def _prompt(i: int) -> list:
+    if i % 2 == 0:
+        content = f"hi {i}"
+    else:
+        content = "a longer prompt with extra words to cross the bucket " + str(i)
+    return tok.apply_chat_template([{"role": "user", "content": content}])
+
+
+# ---------------------------------------------------------------------------
+# equivalence: stream ≡ one-shot, bit for bit
+# ---------------------------------------------------------------------------
+
+def test_stream_bit_identical_to_one_shot():
+    engA = Engine(CFG, rng=jax.random.PRNGKey(7), max_len=160, max_new=10,
+                  serial=True)
+    engB = Engine(CFG, rng=jax.random.PRNGKey(7), max_len=160, max_new=10,
+                  block_size=16, max_batch=8)
+    try:
+        i = 0
+        for wave in (1, 4, 8):
+            prompts = [_prompt(i + j) for j in range(wave)]
+            serial = [engA.generate_ids(p) for p in prompts]
+            streams = [engB.stream_ids(p) for p in prompts]
+            for (ids, lps, fin), st in zip(serial, streams):
+                deltas = list(st)
+                r = st.result()
+                assert [d["token_id"] for d in deltas] == ids \
+                    == r["response_ids"], "streamed ids must be bit-identical"
+                assert [d["logprob"] for d in deltas] == lps == r["logprobs"]
+                assert fin == r["finish_reason"]
+                # text deltas reassemble to the canonical decode
+                text = "".join(d["text_delta"] for d in deltas) \
+                    + st.flush_text()
+                assert text == tok.decode_text(ids)
+            i += wave
+        st = engB.scheduler_stats()
+        assert st["completed"] == i and st["errors"] == 0
+        assert st["live_sequences"] == 0
+        assert st["available_blocks"] == st["num_blocks"] - 1
+    finally:
+        engB.close()
+
+
+def test_complete_is_stream_wrapper_and_bit_identical():
+    """The blocking complete() path rides the stream surface and stays
+    bit-identical to one-shot generation."""
+    engA = Engine(CFG, rng=jax.random.PRNGKey(3), max_len=160, max_new=8,
+                  serial=True)
+    engB = Engine(CFG, rng=jax.random.PRNGKey(3), max_len=160, max_new=8,
+                  block_size=16, max_batch=4)
+    try:
+        msgs = [{"role": "user", "content": "compare paths"}]
+        ids, lps, fin = engA.generate_ids(tok.apply_chat_template(msgs))
+        r = engB.complete({"messages": msgs})
+        assert r["response_ids"] == ids and r["logprobs"] == lps
+        assert r["finish_reason"] == fin
+    finally:
+        engB.close()
+
+
+# ---------------------------------------------------------------------------
+# abort: frees KV at the next step boundary, neighbors unaffected
+# ---------------------------------------------------------------------------
+
+def test_abort_frees_blocks_and_neighbors_stay_bit_identical():
+    engA = Engine(CFG, rng=jax.random.PRNGKey(11), max_len=256, max_new=48,
+                  serial=True)
+    engB = Engine(CFG, rng=jax.random.PRNGKey(11), max_len=256, max_new=48,
+                  block_size=16, max_batch=8)
+    try:
+        p0, p1 = _prompt(0), _prompt(1)
+        ref0 = engA.generate_ids(p0)        # same submission order → same keys
+        ref1 = engA.generate_ids(p1)
+        st0 = engB.stream_ids(p0)           # will be aborted mid-flight
+        st1 = engB.stream_ids(p1)           # must stay bit-identical
+        got0 = []
+        for d in st0:
+            got0.append(d)
+            if len(got0) == 3:
+                st0.abort()
+        r0 = st0.result()
+        r1 = st1.result()
+        assert r0["finish_reason"] == "aborted"
+        assert 3 <= len(r0["response_ids"]) < 48
+        # the partial is a strict prefix of the uninterrupted generation
+        n = len(r0["response_ids"])
+        assert r0["response_ids"] == ref0[0][:n]
+        assert r0["logprobs"] == ref0[1][:n]
+        # the neighbor never noticed
+        assert r1["response_ids"] == ref1[0] and r1["logprobs"] == ref1[1]
+
+        sched = engB.scheduler
+        deadline = time.monotonic() + 10
+        while time.monotonic() < deadline and sched.stats()["in_flight"]:
+            time.sleep(0.02)
+        stats = sched.stats()
+        assert stats["aborts"] == 1
+        assert stats["decode_steps_reclaimed"] >= 48 - n - 1
+        assert stats["live_sequences"] == 0
+        # every block freed (only cache-pinned prompt blocks may remain)
+        assert stats["available_blocks"] == stats["num_blocks"] - 1
+        sched.cache.allocator.check()
+    finally:
+        engB.close()
+
+
+def test_abort_before_admission_never_takes_pages():
+    """Aborting a request still queued (batch full) resolves it as an empty
+    aborted completion without ever allocating KV."""
+    eng = Engine(CFG, rng=jax.random.PRNGKey(5), max_len=160, max_new=16,
+                 block_size=16, max_batch=1)    # 1 slot: the 2nd queues
+    try:
+        s1 = eng.stream_ids(_prompt(0))
+        s2 = eng.stream_ids(_prompt(2))
+        s2.abort()
+        r2 = s2.result()
+        assert r2["finish_reason"] == "aborted"
+        assert r2["response_ids"] == [] and r2["logprobs"] == []
+        r1 = s1.result()
+        assert len(r1["response_ids"]) > 0
+        stats = eng.scheduler_stats()
+        assert stats["aborts"] >= 1
+        eng.scheduler.cache.allocator.check()
+    finally:
+        eng.close()
+
+
+# ---------------------------------------------------------------------------
+# provider round-trips: streamed events ≡ non-streaming response (tools incl.)
+# ---------------------------------------------------------------------------
+
+_TOOLS = [{"id": "x", "type": "function",
+           "function": {"name": "bash", "arguments": "{\"cmd\": \"pwd\"}"}},
+          {"id": "y", "type": "function",
+           "function": {"name": "write_file",
+                        "arguments": "{\"path\": \"a.txt\", \"content\": \"z\"}"}}]
+
+
+def _stream_and_block(provider_path: str, body: dict,
+                      block_path: str = None):
+    """Same scripted turn through the live-stream path and the blocking
+    path; returns (events, blocking provider response)."""
+    script = lambda: [Scripted("result text", tool_calls=[dict(t) for t in _TOOLS])]  # noqa: E731
+    gw_s = ProxyGateway(ScriptedStreamBackend(script()))
+    events = list(gw_s.handle(provider_path, {**body, "stream": True},
+                              session_id="s"))
+    gw_b = ProxyGateway(ScriptedStreamBackend(script()))
+    resp = gw_b.handle(block_path or provider_path, dict(body),
+                       session_id="s")
+    # both paths captured identical records
+    rs, rb = gw_s.session("s").completions[0], gw_b.session("s").completions[0]
+    assert rs.response_ids == rb.response_ids
+    assert rs.response_logprobs == rb.response_logprobs
+    assert rs.finish_reason == rb.finish_reason
+    return events, resp
+
+
+def test_anthropic_stream_reassembles_to_response():
+    events, resp = _stream_and_block(
+        "/v1/messages",
+        {"model": "m", "max_tokens": 99,
+         "messages": [{"role": "user", "content": "hi"}]})
+    from repro.rollout.harness import reassemble_anthropic_stream
+    content = reassemble_anthropic_stream(events)
+    assert content == resp["content"]
+    stops = [e["delta"]["stop_reason"] for e in events
+             if e["type"] == "message_delta"]
+    assert stops == [resp["stop_reason"]]
+    assert events[-1]["type"] == "message_stop"
+
+
+def test_openai_chat_stream_reassembles_to_response():
+    events, resp = _stream_and_block(
+        "/v1/chat/completions",
+        {"model": "m", "messages": [{"role": "user", "content": "hi"}]})
+    msg = resp["choices"][0]["message"]
+    text = "".join(e["choices"][0]["delta"].get("content", "")
+                   for e in events)
+    assert text == msg["content"]
+    calls: dict = {}
+    for e in events:
+        for tc in e["choices"][0]["delta"].get("tool_calls", []):
+            c = calls.setdefault(tc["index"], {"id": None, "name": None,
+                                               "arguments": ""})
+            if tc.get("id"):
+                c["id"] = tc["id"]
+            fn = tc.get("function", {})
+            if fn.get("name"):
+                c["name"] = fn["name"]
+            c["arguments"] += fn.get("arguments", "")
+    rebuilt = [{"id": calls[i]["id"], "type": "function",
+                "function": {"name": calls[i]["name"],
+                             "arguments": calls[i]["arguments"]}}
+               for i in sorted(calls)]
+    assert rebuilt == msg["tool_calls"]
+    assert events[-1]["choices"][0]["finish_reason"] \
+        == resp["choices"][0]["finish_reason"]
+
+
+def test_responses_stream_reassembles_to_response():
+    events, resp = _stream_and_block(
+        "/v1/responses",
+        {"model": "m",
+         "input": [{"type": "message", "role": "user", "content": "hi"}]})
+    text = "".join(e["delta"] for e in events
+                   if e["type"] == "response.output_text.delta")
+    out_text = resp["output"][0]["content"][0]["text"]
+    assert text == out_text
+    opened = [e["item"] for e in events
+              if e["type"] == "response.output_item.added"]
+    args = "".join(e["delta"] for e in events
+                   if e["type"] == "response.function_call_arguments.delta")
+    fcalls = [o for o in resp["output"] if o["type"] == "function_call"]
+    assert [o["name"] for o in opened] == [f["name"] for f in fcalls]
+    assert args == "".join(f["arguments"] for f in fcalls)
+    final = [e for e in events if e["type"] == "response.completed"]
+    assert len(final) == 1 and final[0]["response"]["output"] == resp["output"]
+
+
+def test_google_stream_reassembles_to_response():
+    events, resp = _stream_and_block(
+        "/v1beta/models/m:streamGenerateContent",
+        {"contents": [{"role": "user", "parts": [{"text": "hi"}]}]},
+        block_path="/v1beta/models/m:generateContent")
+    parts = [p for e in events
+             for p in e["candidates"][0]["content"]["parts"]]
+    text = "".join(p.get("text", "") for p in parts)
+    fcalls = [p["functionCall"] for p in parts if "functionCall" in p]
+    ref = resp["candidates"][0]["content"]["parts"]
+    assert text == "".join(p.get("text", "") for p in ref)
+    assert fcalls == [p["functionCall"] for p in ref if "functionCall" in p]
+    assert events[-1]["candidates"][0]["finishReason"] \
+        == resp["candidates"][0]["finishReason"]
+
+
+def test_back_to_back_tool_markers_number_like_parse_sampled():
+    """Regression: a call aborted before its ':' (next marker immediately
+    follows) must stream with the SAME call_N numbering parse_sampled
+    assigns — the dangling call is call_0, the real one call_1."""
+    gw = ProxyGateway(ScriptedStreamBackend(
+        [Scripted("hi\x00call:foo", tool_calls=[dict(_TOOLS[0])])]))
+    events = list(gw.handle("/v1/messages",
+                            {"model": "m", "max_tokens": 99, "stream": True,
+                             "messages": [{"role": "user", "content": "x"}]},
+                            session_id="s"))
+    starts = [e["content_block"] for e in events
+              if e.get("type") == "content_block_start"
+              and e["content_block"].get("type") == "tool_use"]
+    assert [(b["id"], b["name"]) for b in starts] \
+        == [("call_0", "foo"), ("call_1", "bash")]
+    rec = gw.session("s").completions[0]
+    assert [(t["id"], t["function"]["name"])
+            for t in rec.response_messages[0]["tool_calls"]] \
+        == [("call_0", "foo"), ("call_1", "bash")]
+
+
+def test_google_burst_fallback_is_stream_chunk_shaped():
+    """Regression: the serial fallback for :streamGenerateContent must emit
+    Google stream chunks (parts per chunk + final finishReason), not a
+    foreign dialect — consumers must not care which path served them."""
+    from repro.core.testing import ScriptedBackend
+    gw = ProxyGateway(ScriptedBackend(
+        [Scripted("gg", tool_calls=[dict(_TOOLS[0])])]))
+    events = gw.handle("/v1beta/models/m:streamGenerateContent",
+                       {"contents": [{"role": "user",
+                                      "parts": [{"text": "hi"}]}]},
+                       session_id="s")
+    assert isinstance(events, list)
+    parts = [p for e in events
+             for p in e["candidates"][0]["content"]["parts"]]
+    assert "".join(p.get("text", "") for p in parts) == "gg"
+    assert [p["functionCall"]["name"] for p in parts
+            if "functionCall" in p] == ["bash"]
+    assert events[-1]["candidates"][0]["finishReason"] == "STOP"
+    assert "usageMetadata" in events[-1]
+
+
+def test_stream_events_split_mid_marker_and_mid_utf8():
+    """Token-granular chunk boundaries — multi-byte characters and the
+    tool-call marker split across deltas — must not corrupt reassembly."""
+    gw = ProxyGateway(ScriptedStreamBackend(
+        [Scripted("héllo ☃", tool_calls=[dict(_TOOLS[0])])]))
+    events = list(gw.handle("/v1/messages",
+                            {"model": "m", "max_tokens": 99, "stream": True,
+                             "messages": [{"role": "user", "content": "hi"}]},
+                            session_id="s"))
+    from repro.rollout.harness import reassemble_anthropic_stream
+    content = reassemble_anthropic_stream(events)
+    assert content[0] == {"type": "text", "text": "héllo ☃"}
+    assert content[1]["name"] == "bash"
+    assert content[1]["input"] == {"cmd": "pwd"}
+
+
+# ---------------------------------------------------------------------------
+# proxy capture on abort + session-level abort
+# ---------------------------------------------------------------------------
+
+def test_proxy_stream_abort_captures_partial_record():
+    gw = ProxyGateway(ScriptedStreamBackend(
+        [Scripted("a generously long streamed answer body")]))
+    ps = gw.handle("/v1/messages",
+                   {"model": "m", "max_tokens": 999, "stream": True,
+                    "messages": [{"role": "user", "content": "hi"}]},
+                   session_id="ab")
+    for i, _e in enumerate(ps):
+        if i == 4:
+            ps.close()        # client went away mid-stream
+            break
+    rec = gw.session("ab").completions[0]
+    assert rec.finish_reason == "aborted"
+    assert 0 < len(rec.response_ids) < 40
+    assert len(rec.response_logprobs) == len(rec.response_ids)
+    assert gw.live_streams("ab") == 0
+
+
+def test_abort_session_reclaims_blocking_call(request):
+    """abort_session aborts even BLOCKING proxy calls riding the stream
+    surface — the straggler-mitigation path (GatewayNode.cancel)."""
+    eng = Engine(CFG, rng=jax.random.PRNGKey(23), max_len=256, max_new=64,
+                 block_size=16, max_batch=4)
+    request.addfinalizer(eng.close)
+    gw = ProxyGateway(eng)
+    done = {}
+
+    def call():
+        done["resp"] = gw.handle(
+            "/v1/chat/completions",
+            {"model": "m", "max_tokens": 64,
+             "messages": [{"role": "user", "content": "stall for a while"}]},
+            session_id="straggler")
+
+    t = threading.Thread(target=call)
+    t.start()
+    deadline = time.monotonic() + 30
+    while time.monotonic() < deadline and gw.live_streams("straggler") == 0:
+        time.sleep(0.005)
+    assert gw.live_streams("straggler") == 1
+    assert gw.abort_session("straggler") == 1
+    t.join(timeout=60)
+    assert not t.is_alive()
+    rec = gw.session("straggler").completions[0]
+    assert rec.finish_reason in ("aborted", "stop", "length")
+    stats = eng.scheduler_stats()
+    assert stats["live_sequences"] == 0
+    eng.scheduler.cache.allocator.check()
+
+
+def test_harness_stream_deadline_aborts_and_raises():
+    from repro.rollout.harness import HarnessTimeout, ShellHarness
+    from repro.rollout.types import AgentSpec
+    gw = ProxyGateway(ScriptedStreamBackend(
+        [Scripted("long answer " * 4)]))
+    ps = gw.handle("/v1/messages",
+                   {"model": "m", "max_tokens": 999, "stream": True,
+                    "messages": [{"role": "user", "content": "hi"}]},
+                   session_id="dl")
+    h = ShellHarness(AgentSpec(harness="shell"))
+    with pytest.raises(HarnessTimeout):
+        h._drain_stream(ps, deadline=time.monotonic() - 1.0)
+    rec = gw.session("dl").completions[0]
+    assert rec.finish_reason == "aborted"
+
+
+def test_claude_code_harness_consumes_live_stream_with_tools():
+    """End-to-end: the anthropic harness in streaming mode receives the
+    live relay, reassembles tool_use blocks, and executes them."""
+    from repro.rollout.harness import make_harness
+    from repro.rollout.runtime import make_runtime
+    from repro.rollout.types import AgentSpec, RuntimeSpec
+    script = [
+        Scripted("inspecting", tool_calls=[
+            {"id": "t0", "type": "function",
+             "function": {"name": "write_file",
+                          "arguments": json.dumps(
+                              {"path": "out.txt", "content": "done"})}}]),
+        Scripted("DONE"),
+    ]
+    gw = ProxyGateway(ScriptedStreamBackend(script))
+    rt = make_runtime(RuntimeSpec())
+    rt.start()
+    spec = AgentSpec(harness="claude_code", max_turns=2,
+                     config={"stream": True, "max_tokens": 64})
+    info = make_harness(spec).run(gw, "cc", "solve it", rt,
+                                  time.monotonic() + 60)
+    assert info["turns"] == 2
+    assert rt.download("out.txt") == "done"
+    recs = gw.session("cc").completions
+    assert len(recs) == 2
+    assert recs[0].finish_reason == "tool_calls"
+    rt.stop()
+
+
+# ---------------------------------------------------------------------------
+# HTTP façade (slow lane, real engine)
+# ---------------------------------------------------------------------------
+
+def _http_stack(max_new=32):
+    from http.server import ThreadingHTTPServer
+    from repro.launch.serve import build_stack, make_handler
+    engine, server, nodes = build_stack("qwen3-32b")
+    engine.max_new = max_new
+    httpd = ThreadingHTTPServer(("127.0.0.1", 0), make_handler(server, nodes))
+    t = threading.Thread(target=httpd.serve_forever, daemon=True)
+    t.start()
+    return engine, server, nodes, httpd, httpd.server_address[1]
+
+
+@pytest.mark.slow
+def test_serve_live_sse_and_typed_400():
+    import urllib.request
+    engine, server, nodes, httpd, port = _http_stack()
+    try:
+        # typed 400: unknown provider path, JSON error body, no traceback
+        req = urllib.request.Request(
+            f"http://127.0.0.1:{port}/v1/unknown/surface", data=b"{}",
+            headers={"Content-Type": "application/json"})
+        try:
+            urllib.request.urlopen(req, timeout=30)
+            assert False, "must 400"
+        except urllib.error.HTTPError as e:
+            assert e.code == 400
+            err = json.loads(e.read())
+            assert err["error"]["type"] == "invalid_request_error"
+            assert "cannot detect provider" in err["error"]["message"]
+
+        # live chunked SSE: events parse, [DONE] terminates, record captured
+        req = urllib.request.Request(
+            f"http://127.0.0.1:{port}/v1/messages",
+            data=json.dumps({
+                "model": "m", "max_tokens": 8, "stream": True,
+                "messages": [{"role": "user", "content": "hi"}]}).encode(),
+            headers={"Content-Type": "application/json",
+                     "x-polar-session": "sse-1"})
+        resp = urllib.request.urlopen(req, timeout=120)
+        assert resp.headers["Content-Type"] == "text/event-stream"
+        assert resp.headers.get("Content-Length") is None, \
+            "live SSE must not buffer the whole payload"
+        lines = [ln for ln in resp.read().decode().split("\n\n") if ln]
+        assert lines[-1] == "data: [DONE]"
+        events = [json.loads(ln[len("data: "):]) for ln in lines[:-1]]
+        assert events[0]["type"] == "message_start"
+        assert events[-1]["type"] == "message_stop"
+        # the streamed content equals the captured record's parsed message
+        from repro.rollout.harness import reassemble_anthropic_stream
+        content = reassemble_anthropic_stream(events)
+        text = "".join(b.get("text", "") for b in content
+                       if b.get("type") == "text")
+        rec = nodes[0].proxy.session("sse-1").completions[0]
+        assert text == rec.response_messages[0].get("content", "")
+        assert len(rec.response_logprobs) == len(rec.response_ids) > 0
+    finally:
+        httpd.shutdown()
+        server.shutdown()
+
+
+@pytest.mark.slow
+def test_serve_client_disconnect_aborts_generation():
+    engine, server, _nodes, httpd, port = _http_stack(max_new=256)
+    try:
+        body = json.dumps({
+            "model": "m", "max_tokens": 256, "stream": True,
+            "messages": [{"role": "user",
+                          "content": "please ramble on for a very long time"
+                          }]}).encode()
+        s = socket.create_connection(("127.0.0.1", port), timeout=30)
+        s.sendall(b"POST /v1/messages HTTP/1.1\r\n"
+                  b"Host: x\r\nContent-Type: application/json\r\n"
+                  + f"Content-Length: {len(body)}\r\n\r\n".encode() + body)
+        buf = b""
+        while b"content_block_delta" not in buf:
+            chunk = s.recv(4096)
+            assert chunk, "server closed before first delta"
+            buf += chunk
+        # first token arrived while generation is still running: disconnect
+        # with an RST (SO_LINGER 0) so the server's next chunk write fails
+        # immediately instead of filling TCP buffers
+        import struct
+        s.setsockopt(socket.SOL_SOCKET, socket.SO_LINGER,
+                     struct.pack("ii", 1, 0))
+        s.close()
+        deadline = time.monotonic() + 60
+        while time.monotonic() < deadline:
+            st = engine.scheduler_stats()
+            if st and st["aborts"] >= 1 and st["in_flight"] == 0:
+                break
+            time.sleep(0.05)
+        st = engine.scheduler_stats()
+        assert st["aborts"] >= 1, "disconnect must abort the generation"
+        assert st["decode_steps_reclaimed"] > 0
+        assert st["live_sequences"] == 0
+        engine.scheduler.cache.allocator.check()
+    finally:
+        httpd.shutdown()
+        server.shutdown()
