@@ -1,0 +1,215 @@
+"""Hot weight swap vs drain-and-restart (``Engine.update_weights``, §2.2).
+
+Three waves of identical work against the SAME continuous-batching engine:
+
+  no_swap        — steady-state baseline: a wave of concurrent requests,
+                   no weight update.  Sets the tokens/sec reference.
+  hot_swap       — the same wave with K ``update_weights`` swaps landing
+                   MID-FLIGHT (staged, applied by the scheduler at its next
+                   step boundary, outgoing buffers donated).  Reports swap
+                   latency, in-flight count at the last swap, how many
+                   records straddled a swap (multi-segment
+                   ``version_segments``), and the tokens/sec dip vs the
+                   no-swap baseline — the cost of updating weights without
+                   evicting anything.
+  drain_restart  — the pre-hot-swap discipline: the wave split into K+1
+                   chunks, the engine DRAINED (all in-flight work finished)
+                   before each ``update_params``, then the next chunk
+                   submitted.  Same total work, same number of weight
+                   updates; the wall-clock gap vs hot_swap is the decode
+                   bubble a drain pays.
+
+    PYTHONPATH=src python -m benchmarks.bench_weight_swap \
+        [--dry-run] [--out results/bench_weight_swap.json]
+
+Emits a BENCH json line and writes the same record to --out; CI uploads it
+as an artifact (bench-smoke lane).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.inference import Engine
+
+
+def _engine(max_new: int, max_len: int = 256) -> Engine:
+    cfg = get_smoke_config("qwen3-32b").replace(vocab_size=512)
+    return Engine(cfg, rng=jax.random.PRNGKey(0), max_len=max_len,
+                  max_new=max_new, block_size=16, max_batch=16)
+
+
+def _prompts(tag: str, n: int):
+    from repro.core import tokenizer as tok
+    return [tok.apply_chat_template(
+        [{"role": "user",
+          "content": f"{tag} request {i}: keep talking " + "y" * 30}])
+        for i in range(n)]
+
+
+def _run_wave(engine: Engine, prompts, max_new: int):
+    t0 = time.perf_counter()
+    futs = [engine.submit_ids(p, max_new) for p in prompts]
+    results = [f.result(timeout=300) for f in futs]
+    wall = time.perf_counter() - t0
+    tokens = sum(len(r["response_ids"]) for r in results)
+    return wall, tokens, results
+
+
+def bench_no_swap(engine: Engine, n_streams: int, max_new: int) -> dict:
+    wall, tokens, _ = _run_wave(engine, _prompts("base", n_streams), max_new)
+    return {"streams": n_streams, "wall_s": round(wall, 3), "tokens": tokens,
+            "tokens_per_s": round(tokens / wall, 1)}
+
+
+def bench_hot_swap(engine: Engine, n_streams: int, max_new: int,
+                   n_swaps: int) -> dict:
+    sched = engine.scheduler
+    base_sched = dict(sched.stats())
+    base_swaps = engine.stats["weight_swaps"]
+    base_swap_ms = engine.stats["swap_ms_total"]
+    base_steps = base_sched["steps"]
+    # pre-built value-identical copies (distinct buffers, so the donated
+    # swap really runs): building them mid-wave would skew the trigger
+    payloads = [jax.tree.map(jnp.copy, engine.params)
+                for _ in range(n_swaps)]
+    jax.block_until_ready(payloads)
+
+    t0 = time.perf_counter()
+    futs = [engine.submit_ids(p, max_new)
+            for p in _prompts("hot", n_streams)]
+    # the wave decodes in lockstep (admitted at one boundary), so decode
+    # steps ≈ tokens per request: land swap i at ~i/(K+1) of the budget
+    for i in range(1, n_swaps + 1):
+        target = base_steps + (max_new * i) // (n_swaps + 1)
+        deadline = time.monotonic() + 60
+        while (sched.stats()["steps"] < target
+               and time.monotonic() < deadline):
+            time.sleep(0.002)
+        engine.update_weights(payloads[i - 1])
+    results = [f.result(timeout=300) for f in futs]
+    wall = time.perf_counter() - t0
+    # a swap staged right as the wave drained lands at the next (idle)
+    # boundary — wait for it so the telemetry below is complete
+    deadline = time.monotonic() + 5
+    while (engine.stats["weight_swaps"] < base_swaps + n_swaps
+           and time.monotonic() < deadline):
+        time.sleep(0.005)
+
+    tokens = sum(len(r["response_ids"]) for r in results)
+    straddled = sum(1 for r in results if len(r["version_segments"]) > 1)
+    now = sched.stats()
+    swaps = engine.stats["weight_swaps"] - base_swaps
+    return {
+        "streams": n_streams,
+        "swaps": swaps,
+        "wall_s": round(wall, 3),
+        "tokens": tokens,
+        "tokens_per_s": round(tokens / wall, 1),
+        "swap_ms_last": engine.stats["last_swap_ms"],
+        "swap_ms_mean": round(
+            (engine.stats["swap_ms_total"] - base_swap_ms)
+            / max(1, swaps), 3),
+        "in_flight_at_last_swap": engine.stats["last_swap_in_flight"],
+        "straddled_records": straddled,
+        # zero evictions: every request completed in place, none aborted
+        "completed": now["completed"] - base_sched["completed"],
+        "aborts": now["aborts"] - base_sched["aborts"],
+        "errors": now["errors"] - base_sched["errors"],
+    }
+
+
+def bench_drain_restart(engine: Engine, n_streams: int, max_new: int,
+                        n_swaps: int) -> dict:
+    prompts = _prompts("drain", n_streams)
+    chunk = -(-n_streams // (n_swaps + 1))
+    t0 = time.perf_counter()
+    tokens = 0
+    for i in range(0, n_streams, chunk):
+        _, tk, _ = _run_wave(engine, prompts[i:i + chunk], max_new)
+        tokens += tk
+        if i + chunk < n_streams:
+            # the old discipline: engine idle (drained) across the update
+            engine.update_params(jax.tree.map(jnp.copy, engine.params))
+    wall = time.perf_counter() - t0
+    return {"streams": n_streams, "swaps": n_swaps,
+            "wall_s": round(wall, 3), "tokens": tokens,
+            "tokens_per_s": round(tokens / wall, 1)}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry-run", action="store_true",
+                    help="CI smoke: short generations, same record shape")
+    ap.add_argument("--streams", type=int, default=None)
+    ap.add_argument("--max-new", type=int, default=None)
+    ap.add_argument("--swaps", type=int, default=None)
+    ap.add_argument("--out", default="results/bench_weight_swap.json")
+    args = ap.parse_args(argv)
+
+    n_streams = args.streams or (8 if args.dry_run else 16)
+    max_new = args.max_new or (16 if args.dry_run else 48)
+    n_swaps = args.swaps or (1 if args.dry_run else 3)
+
+    engine = _engine(max_new)
+    try:
+        # warmup: compile prefill/step programs AND the donating swap
+        # program out of the measured phase
+        _run_wave(engine, _prompts("warm", 2), max_new)
+        engine.scheduler.prewarm()
+        engine.update_weights(jax.tree.map(jnp.copy, engine.params))
+        deadline = time.monotonic() + 5
+        while (engine.stats["weight_swaps"] < 1
+               and time.monotonic() < deadline):
+            time.sleep(0.005)
+
+        no_swap = bench_no_swap(engine, n_streams, max_new)
+        print(f"  no_swap:       {no_swap['tokens_per_s']:8.1f} tok/s "
+              f"({no_swap['tokens']} tokens in {no_swap['wall_s']:.2f}s)")
+
+        hot = bench_hot_swap(engine, n_streams, max_new, n_swaps)
+        dip = (1.0 - hot["tokens_per_s"] / no_swap["tokens_per_s"]
+               if no_swap["tokens_per_s"] else 0.0)
+        hot["tps_dip_vs_no_swap_pct"] = round(100 * dip, 1)
+        print(f"  hot_swap:      {hot['tokens_per_s']:8.1f} tok/s "
+              f"| {hot['swaps']} swaps, mean {hot['swap_ms_mean']:.1f} ms, "
+              f"{hot['in_flight_at_last_swap']} in flight at last swap | "
+              f"{hot['straddled_records']}/{hot['streams']} straddled | "
+              f"dip {hot['tps_dip_vs_no_swap_pct']:+.1f}% | "
+              f"aborts={hot['aborts']} errors={hot['errors']}")
+
+        drain = bench_drain_restart(engine, n_streams, max_new, n_swaps)
+        speedup = (hot["tokens_per_s"] / drain["tokens_per_s"]
+                   if drain["tokens_per_s"] else 0.0)
+        print(f"  drain_restart: {drain['tokens_per_s']:8.1f} tok/s "
+              f"| hot-swap speedup {speedup:.2f}x")
+    finally:
+        engine.close()
+
+    record = {
+        "bench": "weight_swap",
+        "dry_run": args.dry_run,
+        "params": {"streams": n_streams, "max_new": max_new,
+                   "swaps": n_swaps},
+        "no_swap": no_swap,
+        "hot_swap": hot,
+        "drain_restart": drain,
+        "hot_vs_drain_speedup": round(speedup, 2),
+    }
+    print("BENCH " + json.dumps(record))
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(record, f, indent=2)
+        print(f"  wrote {args.out}")
+    return record
+
+
+if __name__ == "__main__":
+    main()

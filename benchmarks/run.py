@@ -18,6 +18,9 @@ Sections:
   bench_streaming    — streaming API v2: TTFT (stream vs blocking) and
                        decode steps reclaimed by mid-generation abort;
                        BENCH json to results/bench_streaming.json
+  bench_weight_swap  — hot weight swap latency + tokens/sec vs the
+                       drain-and-restart discipline (§2.2 async RL weight
+                       sync); BENCH json to results/bench_weight_swap.json
   fig5_utilization   — per_request vs prefix_merging trainer load (Fig. 5b)
   table1_rl          — GRPO reward climb across 4 harnesses (Table 1/Fig. 6)
   table2_offline     — offline SFT accept/reject generation (Table 2)
@@ -72,6 +75,11 @@ def main(argv=None):
     print("== bench_streaming (TTFT + mid-generation abort reclaim)")
     from benchmarks import bench_streaming
     bench_streaming.main(["--dry-run"] if args.fast else [])
+
+    print("=" * 72)
+    print("== bench_weight_swap (hot swap vs drain-and-restart)")
+    from benchmarks import bench_weight_swap
+    bench_weight_swap.main(["--dry-run"] if args.fast else [])
 
     print("=" * 72)
     print("== fig5_utilization")

@@ -48,6 +48,14 @@ prefill-computed KV blocks by refcount — ``resp["cached_tokens"]`` counts
 the reused positions, ``benchmarks/bench_prefix_cache.py`` measures the
 prefill savings on a 4-turn conversation workload, and
 ``Engine(prefix_cache=False)`` turns it off.
+
+Live weight updates (demoed in step 6 below): the async-RL loop pushes
+fresh trainer weights into the SERVING engine without draining —
+``engine.update_weights(params)`` stages a swap the scheduler applies at
+its next step boundary, every sampled token is stamped with the policy
+version that produced it (``version_segments``), and trainers fetch only
+fresh-enough rollouts via ``fetch_results(min_version=...)``.  See README
+"Live weight updates" and ``benchmarks/bench_weight_swap.py``.
 """
 import jax
 
@@ -113,6 +121,22 @@ def main():
           f"{st['prefix_tokens_saved']} prefill tokens saved, "
           f"{st['cached_blocks']} blocks cached, "
           f"{st['cow_copies']} copy-on-writes")
+
+    # 6. live weight update: the trainer's side of async RL.  Push new
+    # policy weights into the serving engine WITHOUT draining — the
+    # scheduler swaps them at its next step boundary — then sample again
+    # and read the version stamp off the completion.
+    print("\nlive weight update (hot swap):")
+    from repro.models import registry as M
+    new_params = M.init_params(cfg, jax.random.PRNGKey(1))
+    version = engine.update_weights(new_params)       # staged, non-blocking
+    resp = engine.complete({"messages": msgs, "max_tokens": 8})
+    print(f"  now serving policy v{version}; "
+          f"completion sampled at segments {resp['version_segments']}")
+    print(f"  engine: {engine.stats['weight_swaps']} swap(s), "
+          f"records by version {engine.stats['records_by_version']}")
+    # a trainer would now call server.fetch_results(min_version=version)
+    # to train only on rollouts that saw the new policy.
     engine.close()
 
 

@@ -2,11 +2,15 @@
 unchanged coding harness on simulated SWE tasks.
 
 Full pipeline: rollout server + gateway staging + provider proxy + JAX
-engine + trajectory reconstruction + group advantages + GRPO/TIS + async
-weight push + checkpointing.
+engine + trajectory reconstruction + group advantages + GRPO/TIS +
+checkpointing — with LIVE weight pushes: after each optimizer step the
+trainer calls ``engine.update_weights`` (hot swap, no drain, in-flight
+rollouts keep decoding) and fetches only rollouts within
+``--staleness-bound`` policy versions of the current one; GRPO's
+truncated-importance-sampling cap covers the residual lag.
 
     PYTHONPATH=src python examples/train_grpo_swe_sim.py --steps 12 \
-        --harness codex
+        --harness codex --staleness-bound 2
 """
 import sys
 
@@ -14,4 +18,5 @@ from repro.launch.train import main
 
 if __name__ == "__main__":
     main(sys.argv[1:] or ["--steps", "12", "--harness", "codex",
+                          "--staleness-bound", "2",
                           "--ckpt-dir", "results/ckpt_swe_sim"])

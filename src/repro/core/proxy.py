@@ -173,6 +173,14 @@ class ProxyStream:
 
 
 class ProxyGateway:
+    """The API-boundary proxy (see module docstring): provider detection +
+    normalization, backend dispatch, token-level capture into per-session
+    ``CompletionSession`` registries, and mid-generation abort plumbing.
+    Public surface: ``handle`` (one model-API call), ``session`` /
+    ``pop_session`` / ``delete_session`` (registry), ``abort_session`` /
+    ``live_streams`` (cancellation), ``prefix_stats`` / ``version_stats``
+    (telemetry)."""
+
     def __init__(self, backend: InferenceBackend, model_name: str = "policy"):
         self.backend = backend
         self.model_name = model_name
@@ -180,17 +188,23 @@ class ProxyGateway:
         self._prefix: Dict[str, Dict[str, int]] = {}   # per-session hit stats
         self._prefix_total = {"requests": 0, "prompt_tokens": 0,
                               "cached_tokens": 0}
+        self._version_total: Dict[int, int] = {}       # records per version
+        self._swap_straddles = 0       # records spanning a mid-flight swap
         self._streams: Dict[str, List[Any]] = {}       # in-flight per session
         self._lock = threading.Lock()
 
     # -- session registry ---------------------------------------------------
     def session(self, session_id: str) -> CompletionSession:
+        """The session's ``CompletionSession`` record registry, created on
+        first use (thread-safe)."""
         with self._lock:
             if session_id not in self._sessions:
                 self._sessions[session_id] = CompletionSession(session_id)
             return self._sessions[session_id]
 
     def pop_session(self, session_id: str) -> Optional[CompletionSession]:
+        """Remove and return the session's registry (None when the session
+        never made a model call) — the reconstruction handoff."""
         with self._lock:
             return self._sessions.pop(session_id, None)
 
@@ -228,6 +242,7 @@ class ProxyGateway:
         return len(live)
 
     def live_streams(self, session_id: Optional[str] = None) -> int:
+        """Open relay streams — for one session, or across the gateway."""
         with self._lock:
             if session_id is not None:
                 return len(self._streams.get(session_id, ()))
@@ -257,6 +272,16 @@ class ProxyGateway:
             st["cached_tokens"] / max(1, st["prompt_tokens"]), 3)
         return st
 
+    # -- policy-version telemetry --------------------------------------------
+    def version_stats(self) -> Dict[str, Any]:
+        """Staleness histogram over captured records: how many completions
+        the proxy has recorded per policy version (keyed by the newest
+        version that contributed sampled tokens), and how many straddled a
+        hot weight swap mid-generation (>1 ``version_segments`` run)."""
+        with self._lock:
+            return {"records_by_version": dict(self._version_total),
+                    "swap_straddles": self._swap_straddles}
+
     # -- capture ---------------------------------------------------------------
     def _capture(self, session_id: str, provider: str,
                  normalized: Dict[str, Any],
@@ -284,6 +309,21 @@ class ProxyGateway:
             # the version pinned at submission inside the backend — TIS in
             # the trainer consumes this to correct for mid-flight swaps
             rec.metadata["policy_version"] = result["policy_version"]
+        if result.get("version_segments") is not None:
+            # [version, count] runs over response_ids: >1 run means this
+            # completion straddled a hot weight swap
+            segs = [list(s) for s in result["version_segments"]]
+            rec.metadata["version_segments"] = segs
+            vmax = result.get(
+                "policy_version_max",
+                segs[-1][0] if segs else result.get("policy_version"))
+            rec.metadata["policy_version_max"] = vmax
+            with self._lock:
+                if vmax is not None:
+                    self._version_total[vmax] = (
+                        self._version_total.get(vmax, 0) + 1)
+                if len(segs) > 1:
+                    self._swap_straddles += 1
         cached = int(result.get("cached_tokens", 0))
         rec.metadata["cached_prompt_tokens"] = cached
         self._record_prefix(session_id, len(rec.prompt_ids), cached)

@@ -60,6 +60,27 @@ def _real_logprobs(rec: CompletionRecord) -> List[Dict[str, Any]]:
     return out
 
 
+def _version_metadata(recs: List[CompletionRecord]) -> Dict[str, Any]:
+    """Policy-version metadata for a trace built from ``recs``: min/max
+    version any sampled token ran under (hot swaps mid-generation make the
+    per-record max exceed the submission-pinned ``policy_version``), plus the
+    single record's ``version_segments`` verbatim when there is one record."""
+    out: Dict[str, Any] = {}
+    mins = [r.metadata["policy_version"] for r in recs
+            if "policy_version" in r.metadata]
+    maxs = [r.metadata.get("policy_version_max",
+                           r.metadata.get("policy_version")) for r in recs]
+    maxs = [v for v in maxs if v is not None]
+    if mins:
+        out["policy_version"] = min(mins)
+    if maxs:
+        out["policy_version_max"] = max(maxs)
+    if len(recs) == 1 and "version_segments" in recs[0].metadata:
+        out["version_segments"] = [
+            list(s) for s in recs[0].metadata["version_segments"]]
+    return out
+
+
 @register("per_request")
 def build_per_request(session: CompletionSession) -> Trajectory:
     """Every completion becomes one trace — lossless per call, but fragments
@@ -77,6 +98,7 @@ def build_per_request(session: CompletionSession) -> Trajectory:
             finish_reason=rec.finish_reason,
             metadata={"session_id": session.session_id, "seq": rec.seq,
                       "builder": "per_request",
+                      **_version_metadata([rec]),
                       **session.metadata},
         ))
     return Trajectory(session_id=session.session_id, traces=traces,
@@ -189,6 +211,7 @@ def merge_chain(chain: List[CompletionRecord],
                   "chain_len": len(chain),
                   "chain_seqs": [r.seq for r in chain],
                   "first_seq": first.seq, "last_seq": last.seq,
+                  **_version_metadata(chain),
                   **session.metadata},
     )
 

@@ -35,6 +35,12 @@ class _Group:
 
 
 class GroupBatcher:
+    """Collects ``SessionResult``s into GRPO groups (one per task), applies
+    quorum + staleness + zero-variance filters, and emits padded training
+    batches with group-relative advantages.  Thread-safe: the rollout
+    callback feeds :meth:`on_result` while the trainer blocks in
+    :meth:`wait_for_groups`."""
+
     def __init__(self, *, quorum_fraction: float = 1.0, max_staleness: int = 4,
                  min_groups_per_batch: int = 1, skip_zero_variance: bool = True,
                  owner: Optional[str] = None):
@@ -49,14 +55,20 @@ class GroupBatcher:
         self._lock = threading.Lock()
         self._ready = threading.Condition(self._lock)
         self.stats = {"results": 0, "groups_emitted": 0, "groups_skipped": 0,
-                      "traces_stale_dropped": 0, "results_foreign_dropped": 0}
+                      "traces_stale_dropped": 0, "results_foreign_dropped": 0,
+                      # histogram of (current_version - trace version) over
+                      # consumed traces: the trainer-side staleness picture
+                      "trace_version_lag": {}}
 
     # -- ingestion (rollout callback) -----------------------------------------
     def expect_group(self, task_id: str, num_samples: int) -> None:
+        """Pre-declare a group's size so quorum is computed against it."""
         with self._lock:
             self._groups.setdefault(task_id, _Group(task_id, num_samples))
 
     def on_result(self, result: SessionResult) -> None:
+        """Ingest one finished rollout (drops results owned by another
+        trainer when ``owner`` is set) and wake any batch waiter."""
         rid = getattr(result, "trainer_id", None)
         if self.owner is not None and rid is not None and rid != self.owner:
             with self._lock:
@@ -73,10 +85,12 @@ class GroupBatcher:
         return max(1, int(np.ceil(g.expected * self.quorum_fraction)))
 
     def ready_groups(self) -> List[_Group]:
+        """Unconsumed groups that have reached quorum."""
         return [g for g in self._groups.values()
                 if not g.consumed and len(g.results) >= self._quorum(g)]
 
     def wait_for_groups(self, n: int, timeout: float = 60.0) -> bool:
+        """Block until ``n`` groups are ready or ``timeout`` elapses."""
         import time
         deadline = time.monotonic() + timeout
         with self._ready:
@@ -106,6 +120,10 @@ class GroupBatcher:
                         and current_version - int(v) > self.max_staleness):
                     self.stats["traces_stale_dropped"] += 1
                     continue
+                if current_version is not None and v is not None:
+                    lag = current_version - int(v)
+                    hist = self.stats["trace_version_lag"]
+                    hist[lag] = hist.get(lag, 0) + 1
                 out.append((tr, float(a)))
         return out
 

@@ -27,10 +27,15 @@ Two generation paths share one sampling kernel:
     synthetic bursts (``streaming == False``).
 
 The engine returns the exact sampled ids + their behavior log-probs (no
-retokenization anywhere, paper §2.4).  Weight updates are atomic swaps
-tagged with a policy version — the async RL loop pushes new params
-mid-flight and in-progress requests keep the version captured at their
-submission (stale-policy semantics handled by the trainer's TIS).
+retokenization anywhere, paper §2.4).  Weight updates are **hot swaps**
+tagged with a policy version: ``update_weights`` stages new params that the
+scheduler swaps in at its next step boundary — in-flight sequences keep
+their decode slots and paged-KV blocks (zero evictions), the outgoing
+buffers are donated so no second parameter set stays resident, and every
+token sampled after the swap is stamped with the new version
+(``version_segments`` on the result / ``CompletionRecord.metadata``).
+In-progress requests keep the version captured at their submission as
+``policy_version`` (stale-policy semantics handled by the trainer's TIS).
 """
 from __future__ import annotations
 
@@ -178,10 +183,12 @@ class CompletionStream:
 
     @property
     def aborted(self) -> bool:
+        """True once ``abort()`` has been requested (even if not yet reaped)."""
         return self._abort_once.is_set()
 
     @property
     def finished(self) -> bool:
+        """True once the final record (or error) has been consumed."""
         return self._done
 
     def result(self, timeout: Optional[float] = None) -> Dict[str, Any]:
@@ -208,6 +215,15 @@ class CompletionStream:
 
 
 class Engine:
+    """The inference server behind the proxy (InferenceBackend protocol).
+
+    Construction is cheap (no tracing); jitted programs compile lazily per
+    (prompt-bucket, max_new) / batch-slot shape and are cached.  Public
+    surface: ``complete``/``submit``/``stream`` (normalized OpenAI-chat
+    request in), their ``*_ids`` raw-token variants, ``generate_ids`` (the
+    one-shot serial baseline), ``update_weights``/``update_params`` (async
+    RL weight push), and ``stats``/``scheduler_stats`` telemetry."""
+
     def __init__(self, cfg: ModelConfig, params=None, rng=None,
                  max_len: int = 1024, max_new: int = 64,
                  temperature: float = 1.0, top_k: int = 0,
@@ -229,6 +245,11 @@ class Engine:
         self.model_name = model_name
         self.serial = serial
         self.policy_version = 0
+        # the version whose params are actually live on device — lags
+        # policy_version between an update_weights() stage and the
+        # scheduler's next step boundary (identical in serial mode)
+        self._applied_version = 0
+        self._staged_weights = None            # (params, version) or None
         self._lock = threading.Lock()          # params / version / rng / stats
         self._compile_lock = threading.Lock()  # _gen_cache population
         self._gen_cache: Dict[Any, Any] = {}
@@ -240,14 +261,67 @@ class Engine:
                                 prefix_cache=prefix_cache,
                                 prefill_chunk=prefill_chunk,
                                 max_cached_blocks=max_cached_blocks)
-        self.stats = {"requests": 0, "prompt_tokens": 0, "sampled_tokens": 0}
+        self.stats = {
+            "requests": 0, "prompt_tokens": 0, "sampled_tokens": 0,
+            # hot-swap telemetry (see update_weights)
+            "weight_swaps": 0, "swap_ms_total": 0.0, "last_swap_ms": 0.0,
+            "last_swap_in_flight": 0,
+            # staleness histogram: finished records per (max sampled) version
+            "records_by_version": {},
+        }
 
     # -- async weight updates -------------------------------------------------
+    def update_weights(self, params, version: Optional[int] = None) -> int:
+        """Hot weight swap: serve ``params`` without evicting in-flight work.
+
+        With the continuous-batching scheduler running, the new params are
+        *staged* and swapped in by the scheduler thread at its next step
+        boundary — in-flight sequences keep their decode slots and paged-KV
+        blocks, the outgoing buffers are donated (no second parameter set
+        stays resident), and every token sampled after the swap is stamped
+        with the new version (``version_segments`` on the result).  Without
+        a running scheduler (serial mode, paged-decode-less families, or no
+        request served yet) the swap is an immediate atomic assignment.
+
+        Args:
+            params: new parameter pytree (same structure/shapes as the
+                current one for the donated in-place swap; a mismatched
+                tree falls back to a plain pointer swap).
+            version: explicit policy version to tag the new weights with;
+                ``None`` increments the current version.
+
+        Returns:
+            The new policy version.  ``Engine.policy_version`` reflects it
+            immediately (new submissions pin it), even while the device
+            swap is still pending at the next step boundary.
+        """
+        with self._sched_lock:
+            sched = self._scheduler
+        with self._lock:
+            self.policy_version = (version if version is not None
+                                   else self.policy_version + 1)
+            v = self.policy_version
+            if sched is None:
+                self.params = params
+                self._applied_version = v
+                self._staged_weights = None
+            else:
+                self._staged_weights = (params, v)
+        if sched is not None:
+            sched._wake.set()      # an idle scheduler applies it promptly
+        return v
+
     def update_params(self, params, version: Optional[int] = None) -> int:
+        """Immediate atomic weight swap (the pre-hot-swap surface, kept for
+        compatibility).  Unlike ``update_weights`` it does not wait for a
+        step boundary: the very next scheduler step/chunk uses the new
+        params.  Returns the new policy version."""
         with self._lock:
             self.params = params
             self.policy_version = (version if version is not None
                                    else self.policy_version + 1)
+            self._applied_version = self.policy_version
+            self._staged_weights = None
             return self.policy_version
 
     # -- continuous-batching scheduler ---------------------------------------
@@ -270,6 +344,9 @@ class Engine:
             return self._scheduler
 
     def scheduler_stats(self) -> Optional[Dict[str, Any]]:
+        """Continuous-batching telemetry (occupancy, joins/leaves, prefix-
+        cache hits, weight swaps, …) or None when no scheduler has started.
+        Never starts one — safe to poll from observability paths."""
         with self._sched_lock:
             sched = self._scheduler
         return sched.stats() if sched is not None else None
@@ -495,24 +572,39 @@ class Engine:
         record — partial aborted generations included."""
         result = self._build_result(
             req.prompt_ids, req.out_ids, req.out_lps, finish, req.version,
-            cached_tokens=req.cached_tokens)
+            cached_tokens=req.cached_tokens,
+            version_segments=req.out_versions)
         if not req.future.done():      # caller may have cancelled
             req.future.set_result(result)
             if req.stream is not None:
                 req.stream._finish(result)
 
     def _build_result(self, prompt_ids, ids, lps, finish: str,
-                      version: int, cached_tokens: int = 0) -> Dict[str, Any]:
+                      version: int, cached_tokens: int = 0,
+                      version_segments=None) -> Dict[str, Any]:
         content, tool_calls, _closed = tok.parse_sampled(ids)
         message: Dict[str, Any] = {"role": "assistant", "content": content}
         if tool_calls:
             message["tool_calls"] = tool_calls
             if finish == "stop":
                 finish = "tool_calls"
+        if version_segments is None:
+            # serial / one-shot path: the whole generation ran under the
+            # submission version (no mid-flight swap is possible there)
+            version_segments = [[version, len(ids)]] if ids else []
+        else:
+            version_segments = [list(s) for s in version_segments]
+        # the version that governs training staleness: the newest params
+        # that contributed sampled tokens (== submission version unless a
+        # swap landed mid-generation)
+        version_max = (version_segments[-1][0] if version_segments
+                       else version)
         with self._lock:
             self.stats["requests"] += 1
             self.stats["prompt_tokens"] += len(prompt_ids)
             self.stats["sampled_tokens"] += len(ids)
+            hist = self.stats["records_by_version"]
+            hist[version_max] = hist.get(version_max, 0) + 1
         return {
             "message": message,
             "prompt_ids": list(prompt_ids),
@@ -523,6 +615,11 @@ class Engine:
                       "completion_tokens": len(ids),
                       "total_tokens": len(prompt_ids) + len(ids)},
             "policy_version": version,
+            # [version, count] runs over response_ids, in sampling order: a
+            # request that straddles a weight swap records one segment per
+            # params it actually sampled under
+            "version_segments": version_segments,
+            "policy_version_max": version_max,
             # prompt positions whose KV came from the prefix cache (0 on the
             # serial path — the cache lives in the batching scheduler only)
             "cached_tokens": cached_tokens,

@@ -44,6 +44,7 @@ TRASH_BLOCK = 0
 
 
 def cdiv(a: int, b: int) -> int:
+    """Ceiling division (blocks needed to hold ``a`` items of size ``b``)."""
     return -(-a // b)
 
 
@@ -94,28 +95,36 @@ class BlockAllocator:
                 - sum(self._headroom.values()))
 
     def num_free(self) -> int:
+        """Blocks currently on the free list (excludes evictable cached)."""
         return len(self._free)
 
     def num_pinned(self) -> int:
+        """Blocks pinned by the prefix index (cached, maybe refcount-0)."""
         return len(self._pinned)
 
     def owned(self, seq_id) -> List[int]:
+        """The sequence's block chain, in token order."""
         return list(self._owned.get(seq_id, ()))
 
     def shared_prefix(self, seq_id) -> int:
+        """How many leading blocks of the chain are shared (refcounted)."""
         return self._shared_prefix.get(seq_id, 0)
 
     def headroom(self, seq_id) -> int:
+        """Blocks still reserved (admission worst case) but not yet taken."""
         return self._headroom.get(seq_id, 0)
 
     def refcount(self, blk: int) -> int:
+        """Number of sequences currently sharing block ``blk``."""
         return self._ref.get(blk, 0)
 
     def is_pinned(self, blk: int) -> bool:
+        """True when the prefix index holds a pin on block ``blk``."""
         return blk in self._pinned
 
     @property
     def live_sequences(self) -> int:
+        """Sequences currently holding blocks (admitted, not yet freed)."""
         return len(self._owned)
 
     # -- lifecycle ------------------------------------------------------------
@@ -512,9 +521,11 @@ class PagedKVCache:
         return row
 
     def free(self, seq_id) -> None:
+        """Release the sequence's blocks (shared/pinned ones stay live)."""
         self.allocator.free(seq_id)
 
     def stats(self) -> Dict[str, int]:
+        """Pool occupancy + prefix-cache hit/eviction counters."""
         out = {
             "num_blocks": self.num_blocks,
             "block_size": self.block_size,

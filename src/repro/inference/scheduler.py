@@ -45,9 +45,13 @@ prefix reuse (only prefill-computed KV is ever published), sampling — is
 arithmetic-identical to the one-shot path, so sampled ids and log-probs
 are bit-identical to ``Engine.generate_ids`` whether the prefix came from
 cache, chunks, or cold prefill (tests/test_continuous_batching.py).
-Policy-version tags are captured at submission; weight swaps mid-flight
-take effect at the next step boundary (stale-policy semantics are the
-trainer's TIS problem, paper §2.2).
+Policy-version tags are captured at submission; a hot weight swap
+(``Engine.update_weights``) staged mid-flight is applied by THIS thread at
+the next step boundary — in-flight sequences keep their slots and KV
+blocks, the outgoing param buffers are donated, and every token sampled
+afterwards is stamped with the new version (per-request
+``version_segments``; stale-policy semantics are the trainer's TIS
+problem, paper §2.2).
 """
 from __future__ import annotations
 
@@ -90,6 +94,18 @@ class SchedRequest:
     last_token: int = -1
     out_ids: List[int] = field(default_factory=list)
     out_lps: List[float] = field(default_factory=list)
+    # [version, count] runs over out_ids: one segment per params the tokens
+    # were actually sampled under (>1 segment ⇔ the request straddled a
+    # hot weight swap)
+    out_versions: List[List[int]] = field(default_factory=list)
+
+    def stamp(self, version: int) -> None:
+        """Record that the latest sampled token ran under ``version``
+        (run-length compressed into ``out_versions``)."""
+        if self.out_versions and self.out_versions[-1][0] == version:
+            self.out_versions[-1][1] += 1
+        else:
+            self.out_versions.append([version, 1])
 
     def emit(self, token_id: int, logprob: float) -> None:
         """Push one sampled token to the attached stream (if any).  The
@@ -100,6 +116,14 @@ class SchedRequest:
 
 
 class ContinuousBatchingScheduler:
+    """One shared decode loop advancing every in-flight request (see the
+    module docstring for the admit/prefill/step/leave lifecycle).  Public
+    surface: ``submit`` (a ``SchedRequest`` → its Future), ``abort``,
+    ``stats``, ``prewarm`` (AOT-compile the step programs), ``close``, and
+    the ``on_step_boundary`` test/bench hook, invoked on the scheduler
+    thread at the top of every loop iteration — the exact point where
+    staged weight swaps land and aborts are reaped."""
+
     def __init__(self, engine, *, block_size: int = 16, max_batch: int = 32,
                  num_blocks: Optional[int] = None, prefix_cache: bool = True,
                  prefill_chunk: int = 64,
@@ -126,12 +150,17 @@ class ContinuousBatchingScheduler:
         self._seq_ids = itertools.count()
         self._chunk_cache: Dict[Tuple[int, int], Any] = {}
         self._step_cache: Dict[int, Any] = {}
+        self._swap_fn = None            # jitted donating param swap (lazy)
         self._zero_key = jax.random.PRNGKey(0)
+        # test/bench hook: called on the scheduler thread at the top of
+        # every loop iteration (the step boundary), before staged weight
+        # swaps are applied — a deterministic place to trigger one
+        self.on_step_boundary = None
         self.metrics: Dict[str, int] = {
             "submitted": 0, "completed": 0, "joins": 0, "leaves": 0,
             "steps": 0, "step_slots": 0, "step_active": 0, "peak_batch": 0,
             "prefill_chunks": 0, "prefill_tokens": 0, "errors": 0,
-            "aborts": 0, "decode_steps_reclaimed": 0,
+            "aborts": 0, "decode_steps_reclaimed": 0, "weight_swaps": 0,
         }
         self._thread = threading.Thread(
             target=self._loop, name="cbatch-scheduler", daemon=True)
@@ -146,6 +175,10 @@ class ContinuousBatchingScheduler:
 
     # -- public surface -------------------------------------------------------
     def submit(self, req: SchedRequest) -> Future:
+        """Enqueue a request for the shared decode loop (thread-safe).
+        Returns ``req.future``, resolved by the scheduler thread with the
+        engine's result dict; the future carries a ``RuntimeError`` if the
+        scheduler is (or gets) closed before the request completes."""
         with self._qlock:
             enqueued = not self._stop.is_set()
             if enqueued:
@@ -164,6 +197,11 @@ class ContinuousBatchingScheduler:
         return req.future
 
     def stats(self) -> Dict[str, Any]:
+        """Snapshot of scheduler counters: lifecycle (submitted / joins /
+        leaves / completed / aborts / errors), batching shape (steps,
+        mean_batch, batch_occupancy, peak_batch), prefill + prefix-cache
+        counters, ``weight_swaps`` applied by this loop, and current
+        queue depths (queued / prefilling / in_flight)."""
         out = dict(self.metrics)
         steps = max(1, out["steps"])
         out["mean_batch"] = round(out["step_active"] / steps, 3)
@@ -225,6 +263,12 @@ class ContinuousBatchingScheduler:
     def _loop(self) -> None:
         while not self._stop.is_set():
             try:
+                if self.on_step_boundary is not None:
+                    self.on_step_boundary()
+                # staged weight swap lands here, BEFORE reap/admit: no step
+                # or prefill program is in flight, so donating the outgoing
+                # param buffers cannot race a device call that reads them
+                self._apply_staged_weights()
                 # reap BEFORE admit: pages an abort frees this boundary are
                 # available to the very next admission
                 self._reap_aborted()
@@ -246,6 +290,59 @@ class ContinuousBatchingScheduler:
                 self.metrics["errors"] += 1
                 self._fail_all(e)
         self._fail_all(RuntimeError("scheduler closed"))
+
+    # -- hot weight swap: applied at the step boundary ------------------------
+    def _apply_staged_weights(self) -> None:
+        """Make a staged ``Engine.update_weights`` live.  Runs on the
+        scheduler thread at the step boundary, so no jitted program holds
+        the outgoing buffers: they are donated to the incoming params and
+        in-flight sequences keep their slots, pages and RNG chains — the
+        only observable change is which params the NEXT token is sampled
+        under (recorded via ``SchedRequest.stamp``)."""
+        eng = self.engine
+        if eng._staged_weights is None:     # racy peek; real check under lock
+            return
+        import time as _time
+        with eng._lock:
+            staged, eng._staged_weights = eng._staged_weights, None
+            if staged is None:
+                return
+            new, v = staged
+            t0 = _time.perf_counter()
+            eng.params = self._swap_buffers(eng.params, new)
+            eng._applied_version = v
+            dt = (_time.perf_counter() - t0) * 1000.0
+            eng.stats["weight_swaps"] += 1
+            eng.stats["swap_ms_total"] = round(
+                eng.stats["swap_ms_total"] + dt, 3)
+            eng.stats["last_swap_ms"] = round(dt, 3)
+            eng.stats["last_swap_in_flight"] = (
+                len(self._active) + len(self._prefilling))
+        self.metrics["weight_swaps"] += 1
+
+    def _swap_buffers(self, old, new):
+        """Copy ``new`` param values into ``old``'s device storage (buffer
+        donation), so a swap costs one device-to-device copy and no extra
+        peak memory.  Falls back to a plain pointer swap when the trees do
+        not match leaf-for-leaf or share any leaf (donating an aliased
+        buffer would invalidate the caller's copy)."""
+        old_l = jax.tree_util.tree_leaves(old)
+        new_l = jax.tree_util.tree_leaves(new)
+        if (jax.tree_util.tree_structure(old)
+                != jax.tree_util.tree_structure(new)
+                or len(old_l) != len(new_l)
+                or any(o is n for o, n in zip(old_l, new_l))
+                or any(o.shape != n.shape or o.dtype != n.dtype
+                       for o, n in zip(old_l, new_l))):
+            return new
+        if self._swap_fn is None:
+            def swap(o, n):
+                return jax.tree.map(
+                    lambda a, b: jnp.where(jnp.bool_(True), b, a), o, n)
+            self._swap_fn = jax.jit(swap, donate_argnums=(0,))
+        out = self._swap_fn(old, new)
+        jax.block_until_ready(out)
+        return out
 
     def _fail_one(self, req: SchedRequest, exc: Exception) -> None:
         if not req.future.done():
@@ -358,7 +455,10 @@ class ContinuousBatchingScheduler:
         tokens[:len(seg)] = seg
         bt_row = self.cache.block_table_row(req.seq_id)
         with eng._lock:
+            # read params + the version they carry under ONE lock hold, so
+            # the stamp below is truthful even across a staged swap window
             params = eng.params
+            pv = eng._applied_version
         self.cache.kp, self.cache.vp, tok0, lp0, rng = fn(
             params, self.cache.kp, self.cache.vp, jnp.asarray(tokens),
             jnp.int32(start), jnp.int32(plen), jnp.asarray(bt_row), req.key)
@@ -378,6 +478,7 @@ class ContinuousBatchingScheduler:
         #                   removed below, _fail_all can still resolve it
         req.out_ids.append(t)
         req.out_lps.append(float(lp0))
+        req.stamp(pv)
         req.emit(t, float(lp0))   # first delta: TTFT == prefill, not EOS
         req.last_token = t
         self.metrics["joins"] += 1
@@ -443,6 +544,7 @@ class ContinuousBatchingScheduler:
             self._step_cache[Bb] = fn
         with self.engine._lock:
             params = self.engine.params
+            pv = self.engine._applied_version
         self.cache.kp, self.cache.vp, nxt, lps, rngs2 = fn(
             params, self.cache.kp, self.cache.vp,
             jnp.asarray(tokens), jnp.asarray(positions), jnp.asarray(bts),
@@ -458,6 +560,7 @@ class ContinuousBatchingScheduler:
             t = int(nxt[i])
             r.out_ids.append(t)
             r.out_lps.append(float(lps[i]))
+            r.stamp(pv)
             r.emit(t, float(lps[i]))
             r.last_token = t
             r.rng = rngs2[i]

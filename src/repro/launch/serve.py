@@ -10,12 +10,21 @@ base URL here) and (2) the rollout service API:
     GET  /rollout/nodes             (per-node pipeline/pool telemetry:
                                      stage utilization, queue depths,
                                      prewarm hit/miss, stage seconds)
-    POST /trainer/register          ({"trainer_id", "weight", "max_inflight"}:
-                                     fair-share admission + absolute quota)
-    GET  /trainer/{id}/results?max=N&wait=S&lease=T
+    POST /trainer/register          ({"trainer_id", "weight", "max_inflight",
+                                      "stale_policy"}: fair-share admission +
+                                     absolute quota + staleness policy)
+    GET  /trainer/{id}/results?max=N&wait=S&lease=T&min_version=V
                                     (durable queue, at-least-once; lease =
-                                     per-fetch visibility timeout)
+                                     per-fetch visibility timeout;
+                                     min_version = only rollouts whose newest
+                                     sampled token ran at policy version ≥ V)
     POST /trainer/{id}/ack          ({"session_ids": [...]})
+    POST /weights                   (hot weight swap: bump the served policy
+                                     version; {"version": int} to pin it,
+                                     {"reinit_seed": int} to re-init params —
+                                     in-process trainers push real weights
+                                     via Engine.update_weights instead)
+    GET  /weights                   (live policy version + swap telemetry)
     POST /nodes/register            (membership is in-process; returns ids)
     POST /v1/chat/completions | /v1/messages | /v1/responses |
          /v1beta/models/<m>:generateContent   (proxy surface; "stream": true
@@ -45,6 +54,9 @@ from repro.rollout import (AgentSpec, GatewayNode, PipelineConfig,
 
 def build_stack(arch: str, gateways: int = 1,
                 pipeline: PipelineConfig | None = None):
+    """Assemble the in-process serving stack — one smoke-config Engine,
+    a RolloutServer, and ``gateways`` registered GatewayNodes — and
+    return ``(engine, server, nodes)``."""
     cfg = get_smoke_config(arch).replace(vocab_size=512)
     engine = Engine(cfg, rng=jax.random.PRNGKey(0), max_len=512, max_new=32)
     server = RolloutServer()
@@ -56,8 +68,12 @@ def build_stack(arch: str, gateways: int = 1,
     return engine, server, nodes
 
 
-def make_handler(server: RolloutServer, nodes):
+def make_handler(server: RolloutServer, nodes, engine: Engine | None = None):
+    """Build the HTTP handler class exposing the trainer/rollout/proxy
+    surface (``/trainer/*``, ``/rollout/*``, ``/v1/*`` incl. SSE
+    streaming, and ``/weights`` when ``engine`` is given)."""
     proxy = nodes[0].proxy
+    from repro.rollout.admission import result_version
 
     class Handler(BaseHTTPRequestHandler):
         # HTTP/1.1: chunked transfer-encoding for live SSE relays (every
@@ -145,28 +161,42 @@ def make_handler(server: RolloutServer, nodes):
                 trainer_id = url.path.split("/")[2]
                 q = parse_qs(url.query)
                 lease = q.get("lease")
+                min_v = q.get("min_version")
                 try:
                     results = server.fetch_results(
                         trainer_id,
                         max_results=int(q.get("max", ["32"])[0]),
                         wait=float(q.get("wait", ["0"])[0]),
-                        lease=float(lease[0]) if lease else None)
+                        lease=float(lease[0]) if lease else None,
+                        min_version=int(min_v[0]) if min_v else None)
                     stats = server.trainer_stats(trainer_id)
                 except KeyError:
                     return self._json(404, {"error": "unknown trainer"})
                 return self._json(200, {
                     "trainer_id": trainer_id,
                     "queue_depth": stats["queue_depth"],
+                    "queue_by_version": stats["queue_by_version"],
+                    "stale_skipped": stats["stale_skipped"],
+                    "stale_dropped": stats["stale_dropped"],
                     # compact wire form: the full Trajectory stays
                     # in-process (in-process consumers use fetch_results)
                     "results": [{
                         "session_id": r.session_id, "task_id": r.task_id,
                         "status": r.status, "reward": r.reward,
                         "error": r.error,
+                        "policy_version": result_version(r),
                         "num_traces": (len(r.trajectory.traces)
                                        if r.trajectory else 0),
                     } for r in results],
                 })
+            if url.path == "/weights":
+                if engine is None:
+                    return self._json(503, {"error": "no engine attached"})
+                swap = {k: v for k, v in engine.stats.items()
+                        if k.startswith(("weight_", "swap_", "last_swap"))
+                        or k == "records_by_version"}
+                return self._json(200, {
+                    "policy_version": engine.policy_version, **swap})
             return self._json(404, {"error": "not found"})
 
         def do_POST(self):
@@ -194,12 +224,38 @@ def make_handler(server: RolloutServer, nodes):
             if self.path == "/trainer/register":
                 if "trainer_id" not in body:
                     return self._json(400, {"error": "trainer_id required"})
-                tid = server.register_trainer(
-                    body["trainer_id"], weight=body.get("weight", 1.0),
-                    max_inflight=body.get("max_inflight"))
+                try:
+                    tid = server.register_trainer(
+                        body["trainer_id"], weight=body.get("weight", 1.0),
+                        max_inflight=body.get("max_inflight"),
+                        stale_policy=body.get("stale_policy"))
+                except ValueError as e:
+                    return self._json(400, {"error": str(e)})
                 return self._json(200, {"trainer_id": tid,
                                         "weight": body.get("weight", 1.0),
-                                        "max_inflight": body.get("max_inflight")})
+                                        "max_inflight": body.get("max_inflight"),
+                                        "stale_policy": body.get("stale_policy")})
+            if self.path == "/weights":
+                # hot weight swap over HTTP: real params travel in-process
+                # (Engine.update_weights), so the endpoint bumps the served
+                # version with the current params, or re-inits them from a
+                # seed for staleness drills — either way a swap lands at
+                # the scheduler's next step boundary, zero evictions
+                if engine is None:
+                    return self._json(503, {"error": "no engine attached"})
+                try:
+                    if "reinit_seed" in body:
+                        from repro.models import registry as M
+                        params = M.init_params(
+                            engine.cfg,
+                            jax.random.PRNGKey(int(body["reinit_seed"])))
+                    else:
+                        params = engine.params
+                    v = engine.update_weights(params,
+                                              version=body.get("version"))
+                except Exception as e:  # noqa: BLE001 — surface, don't 500
+                    return self._json(400, {"error": str(e)})
+                return self._json(200, {"policy_version": v})
             if self.path.startswith("/trainer/") and self.path.endswith("/ack"):
                 trainer_id = self.path.split("/")[2]
                 try:
@@ -230,6 +286,7 @@ def make_handler(server: RolloutServer, nodes):
 
 
 def main(argv=None):
+    """CLI entry point: build the stack and serve it over HTTP."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--port", type=int, default=8089)
     ap.add_argument("--arch", default="qwen3-32b")
@@ -244,7 +301,7 @@ def main(argv=None):
                           prewarm_capacity=args.prewarm_capacity)
     engine, server, nodes = build_stack(args.arch, args.gateways, pipe)
     httpd = ThreadingHTTPServer(("127.0.0.1", args.port),
-                                make_handler(server, nodes))
+                                make_handler(server, nodes, engine))
     print(f"[serve] rollout service + provider proxy on :{args.port}",
           flush=True)
     try:

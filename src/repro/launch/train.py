@@ -75,6 +75,10 @@ def main(argv=None):
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--staleness-bound", type=int, default=None,
+                    help="only consume rollouts at policy version >= "
+                         "current - BOUND (off-policy ablation knob); "
+                         "default: consume everything, TIS corrects")
     ap.add_argument("--out", default=None, help="write history JSON here")
     args = ap.parse_args(argv)
 
@@ -90,6 +94,7 @@ def main(argv=None):
     tcfg = TrainerConfig(
         batch_rows=args.batch_rows, seqlen=args.seqlen,
         total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+        staleness_bound=args.staleness_bound,
         grpo=GRPOConfig(remat="none", logprob_chunk=512),
         adamw=AdamWConfig(lr=args.lr),
     )
@@ -106,7 +111,8 @@ def main(argv=None):
     server.shutdown()
     for m in history:
         print(f"[train] step={m['step']} loss={m['loss']:.4f} "
-              f"ratio={m['mean_ratio']:.3f} tokens={m['trainable_tokens']:.0f}",
+              f"ratio={m['mean_ratio']:.3f} tokens={m['trainable_tokens']:.0f} "
+              f"version={m.get('policy_version', '?')}",
               flush=True)
     rewards = [r for r in trainer.batcher.stats.items()]
     print(f"[train] done in {time.time()-t0:.1f}s; batcher={trainer.batcher.stats}",

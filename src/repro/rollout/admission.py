@@ -40,6 +40,20 @@ _MIN_WEIGHT = 1e-3        # floor: a zero/negative weight would never earn
 #                           credit and its queue would deadlock the rotation
 
 
+def result_version(result: SessionResult) -> Optional[int]:
+    """The policy version governing a result's staleness: the NEWEST version
+    any of its completions sampled tokens under (``policy_version_max``),
+    falling back to the submission-pinned ``policy_version``.  None when the
+    session recorded no version at all (e.g. a pre-model-call error) —
+    such results are never treated as stale."""
+    md = result.metadata or {}
+    v = md.get("policy_version_max", md.get("policy_version"))
+    if v is None and result.trajectory is not None:
+        tmd = result.trajectory.metadata or {}
+        v = tmd.get("policy_version_max", tmd.get("policy_version"))
+    return int(v) if v is not None else None
+
+
 @dataclass
 class Delivery:
     """One queued result awaiting ack (at-least-once envelope)."""
@@ -52,6 +66,10 @@ class Delivery:
 
 @dataclass
 class TrainerState:
+    """One registered consumer: admission weight + DRR accounting, the
+    inflight quota, the durable at-least-once result queue, and the
+    staleness policy a ``min_version`` fetch applies to it."""
+
     trainer_id: str
     weight: float = 1.0
     # explicit = registered via register_trainer.  Implicit tenants (an
@@ -64,6 +82,10 @@ class TrainerState:
     # at once (None = share-bounded only).  A capped trainer with backlog
     # parks out of the rotation and rejoins when a session completes.
     max_inflight: Optional[int] = None
+    # what a min_version-filtered fetch does with a result whose version is
+    # below the bound: "queue" keeps it for a later unfiltered fetch (the
+    # trainer may still want it for off-policy replay), "drop" discards it
+    stale_policy: str = "queue"
     inflight: int = 0                     # admitted, not yet terminal
     deficit: float = 0.0                  # DRR credit carried across turns
     credited: bool = False                # earned credit this rotation turn
@@ -78,19 +100,34 @@ class TrainerState:
     delivered: int = 0
     redelivered: int = 0
     acked: int = 0
+    stale_skipped: int = 0    # withheld by a min_version fetch (queue policy)
+    stale_dropped: int = 0    # discarded by a min_version fetch (drop policy)
 
     def at_quota(self) -> bool:
+        """True when the absolute ``max_inflight`` cap is currently hit."""
         return (self.max_inflight is not None
                 and self.inflight >= self.max_inflight)
 
     def stats(self) -> Dict[str, Any]:
+        """Telemetry snapshot incl. ``queue_by_version`` (the staleness
+        histogram over undelivered results) and stale skip/drop counts."""
+        # staleness histogram: queued (undelivered-or-unacked) results per
+        # policy version — the server-side view of how far behind the live
+        # weights this trainer's unconsumed rollouts are
+        by_version: Dict[Any, int] = {}
+        for d in self.queue.values():
+            v = result_version(d.result)
+            key = v if v is not None else "unknown"
+            by_version[key] = by_version.get(key, 0) + 1
         return {
             "weight": self.weight,
             "explicit": self.explicit,
             "max_inflight": self.max_inflight,
+            "stale_policy": self.stale_policy,
             "inflight": self.inflight,
             "pending_sessions": len(self.pending),
             "queue_depth": len(self.queue),
+            "queue_by_version": by_version,
             "admitted": self.admitted,
             "completed": self.completed,
             "starved": self.starved,
@@ -98,11 +135,17 @@ class TrainerState:
             "delivered": self.delivered,
             "redelivered": self.redelivered,
             "acked": self.acked,
+            "stale_skipped": self.stale_skipped,
+            "stale_dropped": self.stale_dropped,
             "deficit": round(self.deficit, 3),
         }
 
 
 class AdmissionController:
+    """Deficit-round-robin session admission + per-trainer result queues
+    (see the module docstring; every call is serialized by the
+    ``RolloutServer`` lock)."""
+
     def __init__(self, quantum: float = 1.0):
         self.quantum = quantum
         self.trainers: "OrderedDict[str, TrainerState]" = OrderedDict()
@@ -112,19 +155,29 @@ class AdmissionController:
     # -- registration ---------------------------------------------------------
     def register(self, trainer_id: str, weight: float = 1.0,
                  explicit: bool = False,
-                 max_inflight: Optional[int] = None) -> TrainerState:
+                 max_inflight: Optional[int] = None,
+                 stale_policy: Optional[str] = None) -> TrainerState:
+        """Create or update a trainer: weight (floored at a minimum so the
+        rotation cannot deadlock), inflight quota, and stale policy
+        ("queue" | "drop"; ValueError otherwise, None keeps current)."""
         weight = max(float(weight), _MIN_WEIGHT)
         if max_inflight is not None:
             max_inflight = max(1, int(max_inflight))
+        if stale_policy is not None and stale_policy not in ("queue", "drop"):
+            raise ValueError(
+                f"stale_policy must be 'queue' or 'drop', got {stale_policy!r}")
         st = self.trainers.get(trainer_id)
         if st is None:
             st = TrainerState(trainer_id=trainer_id, weight=weight,
-                              explicit=explicit, max_inflight=max_inflight)
+                              explicit=explicit, max_inflight=max_inflight,
+                              stale_policy=stale_policy or "queue")
             self.trainers[trainer_id] = st
         else:
             st.weight = weight                    # re-register updates weight
             st.explicit = st.explicit or explicit
             st.max_inflight = max_inflight
+            if stale_policy is not None:
+                st.stale_policy = stale_policy
             if (not st.at_quota() and st.pending
                     and trainer_id not in self._in_rotation):
                 # a raised/removed cap may unpark a backlogged trainer
@@ -133,10 +186,13 @@ class AdmissionController:
         return st
 
     def get(self, trainer_id: str) -> Optional[TrainerState]:
+        """The trainer's state, or None when never registered/seen."""
         return self.trainers.get(trainer_id)
 
     # -- session admission ----------------------------------------------------
     def enqueue(self, trainer_id: str, session: Session) -> None:
+        """Queue a session for admission under the trainer's share
+        (auto-registers implicit trainers) and join the rotation."""
         st = self.trainers.get(trainer_id) or self.register(trainer_id)
         st.pending.append(session)
         if trainer_id not in self._in_rotation:
@@ -144,6 +200,7 @@ class AdmissionController:
             self._in_rotation.add(trainer_id)
 
     def backlog(self) -> int:
+        """Sessions queued for admission across all trainers."""
         return sum(len(t.pending) for t in self.trainers.values())
 
     def next_batch(self, slots: Optional[int]) -> List[Session]:
@@ -237,7 +294,8 @@ class AdmissionController:
 
     def fetch(self, trainer_id: str, max_results: int, now: float,
               redeliver_after: float,
-              lease: Optional[float] = None) -> List[SessionResult]:
+              lease: Optional[float] = None,
+              min_version: Optional[int] = None) -> List[SessionResult]:
         """Hand out queued results, oldest first.  A result already handed
         out is redelivered once its visibility timeout elapses without an
         ack (at-least-once: the consumer dedupes by session_id).
@@ -247,12 +305,29 @@ class AdmissionController:
         consumer takes a long lease, a crash-prone one a short lease)
         instead of the one server-wide ``redeliver_after`` knob.  Each
         delivery remembers the lease it was last handed out under, so
-        differently-leased fetches coexist on one queue."""
+        differently-leased fetches coexist on one queue.
+
+        ``min_version`` filters by policy staleness: a result whose newest
+        sampled-token version (``result_version``) is below the bound is
+        NEVER delivered by this call — per the trainer's ``stale_policy``
+        it either stays queued for a later unfiltered fetch ("queue") or is
+        discarded ("drop").  A result that merely straddled a swap (any
+        segment at ≥ min_version) is deliverable; results with no recorded
+        version always deliver."""
         st = self.trainers.get(trainer_id)
         if st is None:
             raise KeyError(f"unknown trainer_id: {trainer_id!r}")
         out: List[SessionResult] = []
-        for d in st.queue.values():
+        for sid, d in list(st.queue.items()):
+            if min_version is not None:
+                v = result_version(d.result)
+                if v is not None and v < min_version:
+                    if st.stale_policy == "drop":
+                        del st.queue[sid]
+                        st.stale_dropped += 1
+                    else:
+                        st.stale_skipped += 1
+                    continue
             visible_after = d.lease if d.lease is not None else redeliver_after
             if d.attempts and now - d.last_sent < visible_after:
                 continue                            # in flight to consumer
@@ -269,6 +344,8 @@ class AdmissionController:
         return out
 
     def ack(self, trainer_id: str, session_ids: Iterable[str]) -> int:
+        """Remove acked results from the queue for good; returns how many
+        were actually dropped.  Raises KeyError for unknown trainers."""
         st = self.trainers.get(trainer_id)
         if st is None:
             raise KeyError(f"unknown trainer_id: {trainer_id!r}")
@@ -280,4 +357,5 @@ class AdmissionController:
         return n
 
     def stats(self) -> Dict[str, Any]:
+        """Per-trainer telemetry, keyed by trainer id."""
         return {tid: st.stats() for tid, st in self.trainers.items()}

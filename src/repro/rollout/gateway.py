@@ -60,6 +60,14 @@ class _Live:
 
 
 class GatewayNode:
+    """One rollout node (paper Fig. 4): a staged session pipeline
+    (init → run → post, each stage its own worker pool) around a
+    ``ProxyGateway`` + harness runtimes.  Sessions arrive via ``submit``,
+    stream their model calls through the proxy, and leave as
+    ``SessionResult``s pushed into ``result_sink`` (the rollout server).
+    ``PipelineConfig(serial=True)`` collapses the stages into one worker
+    (the measured baseline)."""
+
     def __init__(self, backend: InferenceBackend, *, gateway_id: Optional[str] = None,
                  pipeline: Optional[PipelineConfig] = None,
                  pool: Optional[RuntimePrewarmPool] = None,
@@ -131,6 +139,8 @@ class GatewayNode:
 
     # -- control surface (paper A.5: session create/status/delete) -----------
     def submit(self, session: Session) -> None:
+        """Accept a session into the init stage (non-blocking; the pipeline
+        threads carry it from there).  Sets status/deadline bookkeeping."""
         session.gateway_id = self.gateway_id
         session.status = "init"
         if session.deadline <= 0:
@@ -158,6 +168,8 @@ class GatewayNode:
         self.proxy.abort_session(session_id)
 
     def status(self) -> Dict[str, Any]:
+        """Node observability: in-flight sessions by status, stage worker
+        occupancy, backend engine + proxy version/staleness telemetry."""
         with self._lock:
             in_flight = {s: l.session.status for s, l in self._live.items()}
             busy = dict(self._busy)
@@ -194,6 +206,9 @@ class GatewayNode:
             "stats": dict(stats) if isinstance(stats, dict) else None,
             "scheduler": sched() if callable(sched) else None,
             "prefix": self.proxy.prefix_stats(),
+            # live policy version + per-version record histogram (hot swaps)
+            "policy_version": getattr(eng, "policy_version", None),
+            "versions": self.proxy.version_stats(),
         }
 
     def backpressure(self) -> float:
@@ -222,15 +237,18 @@ class GatewayNode:
         return cfg.init_workers + cfg.run_workers + cfg.ready_buffer
 
     def in_flight_sessions(self) -> List[Session]:
+        """Snapshot of the sessions currently alive on this node."""
         with self._lock:
             return [l.session for l in self._live.values()]
 
     @property
     def load(self) -> int:
+        """Live-session count (the server's least-loaded dispatch key)."""
         with self._lock:
             return len(self._live)
 
     def shutdown(self) -> None:
+        """Stop the stage workers and release pooled/prewarmed runtimes."""
         self._stop.set()
         self._prewarm_exec.shutdown(wait=False)
         if self.pool is not None and self._owns_pool:
@@ -328,6 +346,20 @@ class GatewayNode:
                 {"harness": s.task.agent.harness, "terminal": terminal,
                  "group_index": s.group_index,
                  **s.task.metadata})
+            # staleness envelope over the whole session: the oldest/newest
+            # policy version any of its completions sampled under (hot
+            # swaps mid-session make these differ) — trainers filter on it
+            versions = [r.metadata.get("policy_version")
+                        for r in completions.completions]
+            versions = [v for v in versions if v is not None]
+            vmaxs = [r.metadata.get("policy_version_max",
+                                    r.metadata.get("policy_version"))
+                     for r in completions.completions]
+            vmaxs = [v for v in vmaxs if v is not None]
+            if versions:
+                trajectory.metadata["policy_version_min"] = min(versions)
+            if vmaxs:
+                trajectory.metadata["policy_version_max"] = max(vmaxs)
             live.trajectory = trajectory
             live.artifacts = {
                 "status": terminal,
@@ -370,6 +402,9 @@ class GatewayNode:
             result.metadata = {"stage_t": dict(live.stage_t),
                                "harness": s.task.agent.harness,
                                "num_completions": live.num_completions}
+            for k in ("policy_version_min", "policy_version_max"):
+                if k in live.trajectory.metadata:
+                    result.metadata[k] = live.trajectory.metadata[k]
         except Exception as e:  # noqa: BLE001
             result.status = "error"
             result.error = f"eval: {e} (prior: {live.error})"

@@ -58,6 +58,13 @@ class _NodeState:
 
 
 class RolloutServer:
+    """The control-plane service trainers talk to (see module docstring for
+    the method ↔ HTTP-route mapping).  Tasks fan out into sessions, are
+    admitted DRR-fairly across registered trainers, dispatched to the least-
+    loaded alive gateway node, and their terminal results are delivered
+    at-least-once from per-trainer durable queues (``fetch_results`` /
+    ``ack``), with optional staleness filtering by policy version."""
+
     def __init__(self, *, heartbeat_timeout: float = 5.0,
                  max_session_attempts: int = 3,
                  monitor_interval: float = 0.5,
@@ -89,7 +96,8 @@ class RolloutServer:
 
     # -- trainer membership (paper Fig. 5a consumers) --------------------------
     def register_trainer(self, trainer_id: str, weight: float = 1.0,
-                         max_inflight: Optional[int] = None) -> str:
+                         max_inflight: Optional[int] = None,
+                         stale_policy: Optional[str] = None) -> str:
         """Register (or re-weight) a consumer of this rollout service.
         Tasks carrying this trainer_id are admitted by deficit-round-robin
         over the registered weights and their results land in this
@@ -100,29 +108,46 @@ class RolloutServer:
 
         ``max_inflight`` layers an ABSOLUTE concurrency cap on top of the
         DRR share: at most that many of the trainer's sessions admitted at
-        once, regardless of available slots (surfaced in ``status()``)."""
+        once, regardless of available slots (surfaced in ``status()``).
+
+        ``stale_policy`` governs results a ``min_version``-filtered fetch
+        deems stale: ``"queue"`` (default) keeps them queued for a later
+        unfiltered fetch, ``"drop"`` discards them.  Raises ValueError for
+        any other value; None keeps the trainer's current policy."""
         with self._lock:
             self._admission.register(trainer_id, weight, explicit=True,
-                                     max_inflight=max_inflight)
+                                     max_inflight=max_inflight,
+                                     stale_policy=stale_policy)
         self._pump_admission()     # a raised cap may admit parked backlog
         return trainer_id
 
     def fetch_results(self, trainer_id: str, max_results: int = 32,
                       wait: float = 0.0,
-                      lease: Optional[float] = None) -> List[SessionResult]:
+                      lease: Optional[float] = None,
+                      min_version: Optional[int] = None
+                      ) -> List[SessionResult]:
         """At-least-once delivery from the trainer's result queue: results
         stay queued until acked; anything unacked past its visibility
         timeout is handed out again.  ``lease`` sets the per-fetch
         visibility timeout for the results THIS call hands out (default:
         the server-wide ``redeliver_timeout`` knob).  ``wait`` > 0 blocks
-        until at least one result is deliverable or the wait elapses."""
+        until at least one result is deliverable or the wait elapses.
+
+        ``min_version`` targets "rollouts at policy version ≥ N": a result
+        whose newest sampled-token version is below N is never delivered
+        by this call — it stays queued or is dropped per the trainer's
+        registered ``stale_policy``.  Results that merely straddled a hot
+        weight swap (any token at ≥ N) and results with no recorded
+        version are deliverable.  Raises KeyError for an unknown
+        trainer_id."""
         deadline = time.monotonic() + max(0.0, wait)
         with self._results_cv:
             while True:
                 now = time.monotonic()
                 out = self._admission.fetch(trainer_id, max_results, now,
                                             self._redeliver_timeout,
-                                            lease=lease)
+                                            lease=lease,
+                                            min_version=min_version)
                 remaining = deadline - time.monotonic()
                 if out or remaining <= 0 or self._stop.is_set():
                     return out
@@ -136,6 +161,8 @@ class RolloutServer:
             return self._admission.ack(trainer_id, session_ids)
 
     def trainer_stats(self, trainer_id: str) -> Dict[str, Any]:
+        """One trainer's admission/queue/staleness counters (see
+        ``TrainerState.stats``).  Raises KeyError when unregistered."""
         with self._lock:
             st = self._admission.get(trainer_id)
             if st is None:
@@ -146,6 +173,9 @@ class RolloutServer:
     def register_node(self, gateway: GatewayNode,
                       auto_heartbeat: bool = True,
                       heartbeat_interval: float = 0.5) -> str:
+        """Add a gateway to the dispatch pool (its results flow back into
+        the per-trainer queues).  Returns the node id; re-registering a
+        dead node revives it with fresh heartbeat state."""
         gateway.result_sink = self._on_session_result
         # re-registration (the only way a dead node rejoins): retire the
         # previous heartbeat thread before installing fresh state
@@ -335,6 +365,8 @@ class RolloutServer:
 
     # -- polling --------------------------------------------------------------------
     def poll(self, task_id: str) -> TaskStatus:
+        """Non-blocking task progress snapshot (per-session statuses +
+        terminal results so far).  Raises UnknownTaskError."""
         with self._lock:
             state = self._tasks.get(task_id)
             if state is None:
@@ -349,6 +381,8 @@ class RolloutServer:
                               results=list(state.results))
 
     def wait(self, task_id: str, timeout: float = 60.0) -> TaskStatus:
+        """Block until every session of the task is terminal (or timeout);
+        returns the final ``poll`` snapshot either way."""
         t0 = time.monotonic()
         while time.monotonic() - t0 < timeout:
             st = self.poll(task_id)
@@ -358,6 +392,8 @@ class RolloutServer:
         return self.poll(task_id)
 
     def status(self) -> Dict[str, Any]:
+        """Service-wide observability: node liveness, per-trainer admission
+        + staleness stats, backlog depths, task completion counts."""
         with self._lock:
             nodes = dict(self._nodes)
             tasks = {tid: len(st.finished_ids) for tid, st in self._tasks.items()}
@@ -471,6 +507,7 @@ class RolloutServer:
                 self._dispatch(fresh)    # keeps its admission slot
 
     def shutdown(self) -> None:
+        """Stop the monitor, wake blocked fetches, shut every node down."""
         self._stop.set()
         with self._results_cv:
             self._results_cv.notify_all()

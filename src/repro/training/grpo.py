@@ -33,6 +33,10 @@ from repro.models import registry as M
 
 @dataclass(frozen=True)
 class GRPOConfig:
+    """GRPO loss hyperparameters: PPO-style clip range, KL penalty, and
+    the truncated-importance-sampling cap applied when a rollout was
+    sampled under an older policy version than the one being trained."""
+
     clip_eps: float = 0.2
     tis_cap: float = 2.0          # truncated-importance-sampling ceiling
     aux_coef: float = 0.01        # MoE load-balance coefficient
@@ -60,6 +64,9 @@ def policy_logprobs(cfg: ModelConfig, params, batch, gcfg: GRPOConfig):
 
 def grpo_loss(cfg: ModelConfig, params, batch,
               gcfg: GRPOConfig = GRPOConfig()) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """Clipped-surrogate GRPO loss over a padded token batch; returns
+    ``(scalar_loss, metrics)`` where metrics include the mean TIS weight
+    actually applied (``tis_weight_mean``) for staleness telemetry."""
     logp, aux = policy_logprobs(cfg, params, batch, gcfg)
     mask = batch["target_mask"].astype(jnp.float32)
     adv = batch["advantage"].astype(jnp.float32)
@@ -81,6 +88,9 @@ def grpo_loss(cfg: ModelConfig, params, batch,
         "loss": loss, "pg_loss": pg_loss, "aux": aux,
         "mean_ratio": jnp.sum(ratio * mask) / denom,
         "clipped_frac": clipped_frac,
+        # mean truncated-IS weight: 1.0 = fully on-policy; drops as rollouts
+        # lag the live weights (the off-policy ablation's staleness readout)
+        "tis_weight_mean": jnp.sum(w * mask) / denom,
         "mean_logp": jnp.sum(logp * mask) / denom,
         "trainable_tokens": jnp.sum(mask),
     }

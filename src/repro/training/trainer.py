@@ -35,6 +35,11 @@ from repro.training.optimizer import AdamWConfig, init_opt_state
 
 @dataclass
 class TrainerConfig:
+    """Knobs for one async GRPO trainer: identity/fairness on the rollout
+    server, batching shape, optimizer, and the staleness bound applied to
+    fetched results (``staleness_bound`` versions back, ``stale_policy``
+    queue|drop)."""
+
     batch_rows: int = 4
     seqlen: int = 512
     groups_per_step: int = 1
@@ -46,11 +51,25 @@ class TrainerConfig:
     trainer_id: Optional[str] = None    # None → a fresh unique id
     weight: float = 1.0                 # admission share vs. other trainers
     use_result_queue: bool = True       # False → legacy callback path
+    # -- off-policy staleness (hot weight swaps) -----------------------------
+    # only consume rollouts whose newest sampled token ran at policy version
+    # ≥ current - staleness_bound (None = consume everything; TIS corrects)
+    staleness_bound: Optional[int] = None
+    stale_policy: str = "queue"         # what the server does with filtered
+    #                                     results: keep queued or drop
     grpo: GRPOConfig = field(default_factory=GRPOConfig)
     adamw: AdamWConfig = field(default_factory=AdamWConfig)
 
 
 class AsyncGRPOTrainer:
+    """One GRPO consumer of a (possibly shared) rollout service: submits
+    task groups, drains its own durable result queue, steps the optimizer
+    on batches of evaluated groups, and hot-swaps fresh weights into the
+    inference engine after every step (``Engine.update_weights`` — in-flight
+    rollouts keep generating, their tokens version-stamped).  Public
+    surface: ``train`` (the loop), ``resume`` (checkpoint restore), and the
+    ``history`` of per-step metrics."""
+
     def __init__(self, cfg: ModelConfig, engine: Engine, server: RolloutServer,
                  task_factory: Callable[[int], TaskRequest],
                  tcfg: TrainerConfig = TrainerConfig()):
@@ -61,7 +80,8 @@ class AsyncGRPOTrainer:
         self.tcfg = tcfg
         self.trainer_id = tcfg.trainer_id or f"trainer-{uuid.uuid4().hex[:6]}"
         if tcfg.use_result_queue:
-            server.register_trainer(self.trainer_id, weight=tcfg.weight)
+            server.register_trainer(self.trainer_id, weight=tcfg.weight,
+                                    stale_policy=tcfg.stale_policy)
         self.batcher = GroupBatcher(
             min_groups_per_batch=tcfg.groups_per_step,
             owner=self.trainer_id if tcfg.use_result_queue else None)
@@ -153,8 +173,16 @@ class AsyncGRPOTrainer:
 
     def _consume_results(self, stop: threading.Event):
         while not stop.is_set():
+            min_version = None
+            if self.tcfg.staleness_bound is not None:
+                # "rollouts at version ≥ N": never ingest results whose
+                # newest sampled token is more than the bound behind the
+                # weights we are currently pushing
+                min_version = max(
+                    0, self.engine.policy_version - self.tcfg.staleness_bound)
             results = self.server.fetch_results(self.trainer_id,
-                                                max_results=64, wait=0.2)
+                                                max_results=64, wait=0.2,
+                                                min_version=min_version)
             if not results:
                 continue
             for r in results:
@@ -163,17 +191,28 @@ class AsyncGRPOTrainer:
 
     # -- training loop -------------------------------------------------------------
     def resume(self) -> int:
+        """Restore the latest checkpoint from ``ckpt_dir`` (if any) into
+        trainer state AND the serving engine.  Returns the restored step
+        number, 0 when starting fresh."""
         if self.ckpt is None:
             return 0
         restored, step = CKPT.restore(self.state, self.ckpt.ckpt_dir)
         if restored is not None:
             self.state = restored
-            self.engine.update_params(self.state["params"])
+            self.engine.update_weights(self.state["params"])
             return int(step)
         return 0
 
     def train(self, steps: Optional[int] = None,
               reward_log: Optional[List[float]] = None) -> List[Dict[str, Any]]:
+        """Run the async loop for ``steps`` optimizer steps (default:
+        ``total_steps``): background threads keep ``inflight_tasks`` task
+        groups in the rollout service and drain this trainer's result
+        queue; each step consumes ``groups_per_step`` evaluated groups and
+        hot-swaps the updated params into the engine under a new policy
+        version.  Returns the per-step metrics history (each entry carries
+        the ``policy_version`` its weights were published as).  Raises
+        TimeoutError when the rollout service produces no groups for 120s."""
         steps = steps or self.tcfg.total_steps
         stop = threading.Event()
         submitter = threading.Thread(target=self._keep_submitting,
@@ -202,8 +241,11 @@ class AsyncGRPOTrainer:
                 metrics["batch_meta"] = batch.meta
                 self.history.append(metrics)
                 done_steps += 1
-                # push fresh weights to the engine (async RL weight sync)
-                self.engine.update_params(self.state["params"])
+                # push fresh weights to the engine (async RL weight sync):
+                # a hot swap — in-flight rollouts keep their decode slots
+                # and pick the new params up at the next step boundary
+                metrics["policy_version"] = self.engine.update_weights(
+                    self.state["params"])
                 if (self.ckpt is not None
                         and done_steps % self.tcfg.ckpt_every == 0):
                     self.ckpt.save_async(self.state, int(self.state["step"]))

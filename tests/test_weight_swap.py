@@ -1,0 +1,396 @@
+"""Hot weight swap tests (``Engine.update_weights``, ISSUE PR 6).
+
+ * identity swap mid-wave — a swap whose new params are a deep COPY of the
+   old ones lands while a wave is in flight: every output stays
+   bit-identical to the serial baseline (the swap is value-preserving, so
+   any eviction/re-prefill or RNG drift would show), straddling requests
+   record two version segments, and nothing is evicted,
+ * real swap — a single request straddles a swap to genuinely different
+   params: pre-swap tokens are bit-identical to the OLD params' one-shot
+   output, post-swap tokens to a two-phase contiguous-cache oracle that
+   switches params at the same token boundary (the oracle is first
+   self-validated against the one-shot path under old params throughout),
+ * staleness filter — ``fetch_results(min_version=N)`` NEVER delivers a
+   fully-pre-N record; "queue" keeps it for a later unfiltered fetch,
+   "drop" discards it; straddlers (any token ≥ N) and version-less results
+   always deliver,
+ * HTTP surface — POST /weights bumps the served version, GET /weights
+   reports swap telemetry, ``min_version`` threads through the trainer
+   results route.
+"""
+from __future__ import annotations
+
+import json
+import threading
+import urllib.error
+import urllib.request
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import tokenizer as tok
+from repro.core.types import SessionResult
+from repro.inference import Engine
+from repro.inference.engine import _bucket, sample_logits_rows, sample_token
+from repro.models import registry as M
+from repro.rollout import RolloutServer
+
+CFG = get_smoke_config("qwen3-32b").replace(vocab_size=512)
+
+
+def _prompt(i: int) -> list:
+    if i % 2 == 0:
+        content = f"hi {i}"
+    else:
+        content = "a longer prompt with extra words to cross the bucket " + str(i)
+    return tok.apply_chat_template([{"role": "user", "content": content}])
+
+
+# ---------------------------------------------------------------------------
+# identity swap mid-wave: bit-exactness + zero evictions
+# ---------------------------------------------------------------------------
+
+def test_identity_swap_mid_wave_bit_identical():
+    """A mid-wave swap to a deep copy of the current params must be
+    invisible in the sampled ids/logprobs (vs. the serial baseline) while
+    still exercising the donated-buffer swap and version stamping."""
+    wave = 6
+    engA = Engine(CFG, rng=jax.random.PRNGKey(11), max_len=160, max_new=10,
+                  serial=True)
+    engB = Engine(CFG, rng=jax.random.PRNGKey(11), max_len=160, max_new=10,
+                  block_size=16, max_batch=8)
+    prompts = [_prompt(i) for i in range(wave)]
+    serial = [engA.generate_ids(p) for p in prompts]
+
+    sched = engB.scheduler
+    state = {"at": None}
+
+    def hook():
+        # fire exactly once, at a boundary where the whole wave is decoding
+        # (nothing queued/prefilling) and every active request already has
+        # ≥ 2 tokens — every active request is then a guaranteed straddler
+        if state["at"] is not None:
+            return
+        if sched._queue or sched._prefilling or len(sched._active) < 2:
+            return
+        if any(len(r.out_ids) < 2 for r in sched._active):
+            return
+        state["at"] = {tuple(r.prompt_ids): len(r.out_ids)
+                       for r in sched._active}
+        engB.update_weights(jax.tree.map(jnp.copy, engB.params))
+
+    sched.on_step_boundary = hook
+    try:
+        futs = [engB.submit_ids(p) for p in prompts]
+        results = [f.result(timeout=300) for f in futs]
+        st = engB.scheduler_stats()
+    finally:
+        engB.close()
+
+    straddlers = state["at"]
+    assert straddlers, "swap never fired mid-wave (tune the seed)"
+    assert len(straddlers) >= 2
+
+    for p, (ids, lps, fin), r in zip(prompts, serial, results):
+        assert ids == r["response_ids"], "swap must not perturb sampled ids"
+        assert lps == r["logprobs"], "swap must not perturb logprobs"
+        assert fin == r["finish_reason"]
+        assert r["policy_version"] == 0       # pinned at submission
+        n = len(ids)
+        k = straddlers.get(tuple(p))
+        if k is not None:
+            # active at the swap boundary ⇒ exactly one pre- and one
+            # post-swap segment, split at the recorded token count
+            assert r["version_segments"] == [[0, k], [1, n - k]]
+            assert r["policy_version_max"] == 1
+        else:
+            # finished before the swap (queue/prefill were empty)
+            assert r["version_segments"] == [[0, n]]
+            assert r["policy_version_max"] == 0
+
+    # zero evictions: everything submitted completed normally, in place
+    assert st["completed"] == wave
+    assert st["aborts"] == 0 and st["errors"] == 0
+    assert st["in_flight"] == 0 and st["queued"] == 0
+    assert st["weight_swaps"] == 1
+
+    # engine-side swap telemetry
+    es = engB.stats
+    assert es["weight_swaps"] == 1
+    assert es["last_swap_in_flight"] == len(straddlers)
+    assert es["swap_ms_total"] >= es["last_swap_ms"] >= 0.0
+    n_straddle = len(straddlers)
+    expected = {v: c for v, c in
+                ((0, wave - n_straddle), (1, n_straddle)) if c}
+    assert es["records_by_version"] == expected
+
+
+# ---------------------------------------------------------------------------
+# real swap: per-segment equivalence against a two-phase oracle
+# ---------------------------------------------------------------------------
+
+def _two_phase_oracle(params_old, params_new, prompt_ids, max_new, key,
+                      swap_at, *, max_len):
+    """Reference generation that switches params before sampling token
+    index ``swap_at``: token i is produced by ONE (forward + sample) pair
+    under params_old (i < swap_at) or params_new (i ≥ swap_at) — exactly
+    the scheduler's per-step granularity.  Built from the same shared
+    sampling head (``sample_logits_rows`` / ``sample_token``) and the same
+    contiguous-cache forward as ``Engine.generate_ids``."""
+    from repro.models import transformer as TF
+    cfg = CFG
+    plen = len(prompt_ids)
+    bucket = min(_bucket(plen, sizes=(64, 256, max_len)), max_len - max_new)
+    prompt = jnp.zeros((bucket,), jnp.int32).at[:plen].set(
+        jnp.asarray(prompt_ids, jnp.int32))
+    sample = partial(sample_token, temperature=1.0, top_k=0)
+
+    @jax.jit
+    def first(params, prompt, key):
+        pos = jnp.arange(bucket, dtype=jnp.int32)[None]
+        hidden_all, cache = TF.prefill(
+            cfg, params, {"tokens": prompt[None], "positions": pos}, max_len)
+        hidden = jax.lax.dynamic_slice_in_dim(hidden_all, plen - 1, 1, axis=1)
+        rng, k1 = jax.random.split(key)
+        logits = sample_logits_rows(cfg, params, hidden[:, -1])
+        nxt, lp = jax.vmap(sample)(logits, k1[None])
+        return nxt[0], lp[0], cache, rng
+
+    @jax.jit
+    def step(params, cache, token, cache_len, rng):
+        hidden, cache = M.forward_decode(
+            cfg, params, cache, {"tokens": token[None, None],
+                                 "cache_len": cache_len})
+        rng, k1 = jax.random.split(rng)
+        logits = sample_logits_rows(cfg, params, hidden[:, -1])
+        nxt, lp = jax.vmap(sample)(logits, k1[None])
+        return nxt[0], lp[0], cache, rng
+
+    ids, lps = [], []
+    t, lp, cache, rng = first(params_old if swap_at > 0 else params_new,
+                              prompt, key)
+    ids.append(int(t))
+    lps.append(float(lp))
+    for i in range(1, max_new):
+        if ids[-1] == tok.END_OF_TURN:
+            break
+        p = params_old if i < swap_at else params_new
+        t, lp, cache, rng = step(p, cache, t, jnp.int32(plen + i - 1), rng)
+        ids.append(int(t))
+        lps.append(float(lp))
+    return ids, lps
+
+
+def test_real_swap_segment_equivalence():
+    """Swap to genuinely different params after 3 sampled tokens: the
+    pre-swap tokens must equal the old params' one-shot output and the
+    post-swap tokens the two-phase oracle's — proving in-flight state (KV,
+    RNG chain, slot) survives the swap with only the params changing."""
+    seed, max_new, swap_at = 23, 12, 3
+    prompt = _prompt(0)
+    params_new = M.init_params(CFG, jax.random.PRNGKey(7))
+
+    engS = Engine(CFG, rng=jax.random.PRNGKey(seed), max_len=160,
+                  max_new=max_new, serial=True)
+    old_ids, old_lps, _ = engS.generate_ids(prompt, max_new)
+    assert len(old_ids) > swap_at, "reference run too short — tune the seed"
+
+    # the batching engine splits the same submission key off the same rng
+    key = jax.random.split(jax.random.PRNGKey(seed))[1]
+
+    # self-validate the oracle: old params throughout ≡ the one-shot path
+    o_ids, o_lps = _two_phase_oracle(engS.params, engS.params, prompt,
+                                     max_new, key, swap_at=max_new,
+                                     max_len=160)
+    assert o_ids == old_ids and o_lps == old_lps, (
+        "oracle drifted from the one-shot path under identical params")
+
+    mix_ids, mix_lps = _two_phase_oracle(engS.params, params_new, prompt,
+                                         max_new, key, swap_at=swap_at,
+                                         max_len=160)
+    assert mix_ids[:swap_at] == old_ids[:swap_at]
+
+    engB = Engine(CFG, rng=jax.random.PRNGKey(seed), max_len=160,
+                  max_new=max_new, block_size=16, max_batch=8)
+    sched = engB.scheduler
+    fired = {}
+
+    def hook():
+        if fired:
+            return
+        if (len(sched._active) == 1
+                and len(sched._active[0].out_ids) == swap_at):
+            fired["at"] = swap_at
+            engB.update_weights(params_new)
+
+    sched.on_step_boundary = hook
+    try:
+        r = engB.submit_ids(prompt, max_new).result(timeout=300)
+    finally:
+        engB.close()
+
+    assert fired, "swap never fired (request finished early — tune the seed)"
+    n = len(r["response_ids"])
+    assert n > swap_at
+    # pre-swap segment: bit-identical to the OLD params' one-shot output
+    assert r["response_ids"][:swap_at] == old_ids[:swap_at]
+    assert r["logprobs"][:swap_at] == old_lps[:swap_at]
+    # full stream: bit-identical to the two-phase oracle
+    assert r["response_ids"] == mix_ids
+    assert r["logprobs"] == mix_lps
+    assert r["version_segments"] == [[0, swap_at], [1, n - swap_at]]
+    assert r["policy_version"] == 0
+    assert r["policy_version_max"] == 1
+    assert engB.stats["records_by_version"] == {1: 1}
+
+
+# ---------------------------------------------------------------------------
+# staleness filter: fetch_results(min_version=N)
+# ---------------------------------------------------------------------------
+
+def _fake_result(sid, v=None, vmax=None):
+    r = SessionResult(session_id=sid, task_id="t0", status="completed",
+                      reward=1.0)
+    if v is not None:
+        r.metadata["policy_version"] = v
+    if vmax is not None:
+        r.metadata["policy_version_max"] = vmax
+    return r
+
+
+def _route(server, tid, *results):
+    with server._results_cv:
+        for r in results:
+            server._admission.route_result(tid, r)
+        server._results_cv.notify_all()
+
+
+def test_fetch_results_min_version_queue_and_drop():
+    server = RolloutServer(redeliver_timeout=60.0)
+    try:
+        server.register_trainer("tq", stale_policy="queue")
+        server.register_trainer("td", stale_policy="drop")
+        with pytest.raises(ValueError):
+            server.register_trainer("bad", stale_policy="sideways")
+        for tid in ("tq", "td"):
+            _route(server, tid,
+                   _fake_result(f"{tid}-old", v=1, vmax=1),
+                   _fake_result(f"{tid}-straddle", v=1, vmax=3),
+                   _fake_result(f"{tid}-new", v=3, vmax=3),
+                   _fake_result(f"{tid}-unversioned"))
+
+        # queue policy: the stale record is withheld, not lost
+        got = server.fetch_results("tq", min_version=3)
+        assert {r.session_id for r in got} == {
+            "tq-straddle", "tq-new", "tq-unversioned"}
+        st = server.trainer_stats("tq")
+        assert st["stale_skipped"] == 1 and st["stale_dropped"] == 0
+        assert st["queue_by_version"] == {1: 1, 3: 2, "unknown": 1}
+        # a later unfiltered fetch still sees it (delivered ones are leased)
+        got2 = server.fetch_results("tq")
+        assert {r.session_id for r in got2} == {"tq-old"}
+
+        # drop policy: the stale record is discarded at filter time
+        got = server.fetch_results("td", min_version=3)
+        assert {r.session_id for r in got} == {
+            "td-straddle", "td-new", "td-unversioned"}
+        st = server.trainer_stats("td")
+        assert st["stale_skipped"] == 0 and st["stale_dropped"] == 1
+        assert st["queue_depth"] == 3
+        assert server.fetch_results("td") == []
+    finally:
+        server.shutdown()
+
+
+def test_min_version_never_delivers_fully_stale():
+    """Regression: across repeated filtered fetches + acks, a record whose
+    newest sampled token predates the bound must never surface."""
+    server = RolloutServer(redeliver_timeout=0.0)
+    try:
+        server.register_trainer("t1", stale_policy="queue")
+        results = [_fake_result(f"s{i}", v=max(0, i - 1), vmax=i)
+                   for i in range(8)]
+        _route(server, "t1", *results)
+        bound = 4
+        seen = set()
+        for _ in range(6):
+            got = server.fetch_results("t1", min_version=bound)
+            for r in got:
+                assert r.metadata["policy_version_max"] >= bound
+                seen.add(r.session_id)
+            server.ack("t1", [r.session_id for r in got])
+        assert seen == {f"s{i}" for i in range(bound, 8)}
+        # the withheld pre-bound records are all still queued
+        assert server.trainer_stats("t1")["queue_depth"] == bound
+    finally:
+        server.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# HTTP surface: POST/GET /weights + min_version on the results route
+# ---------------------------------------------------------------------------
+
+def _http(url, data=None):
+    if data is not None:
+        req = urllib.request.Request(
+            url, data=json.dumps(data).encode(),
+            headers={"Content-Type": "application/json"})
+    else:
+        req = urllib.request.Request(url)
+    try:
+        with urllib.request.urlopen(req, timeout=60) as resp:
+            return resp.status, json.loads(resp.read())
+    except urllib.error.HTTPError as e:
+        return e.code, json.loads(e.read())
+
+
+@pytest.mark.slow
+def test_http_weights_and_min_version():
+    from http.server import ThreadingHTTPServer
+
+    from repro.launch.serve import build_stack, make_handler
+
+    engine, server, nodes = build_stack("qwen3-32b")
+    httpd = ThreadingHTTPServer(("127.0.0.1", 0),
+                                make_handler(server, nodes, engine))
+    port = httpd.server_address[1]
+    threading.Thread(target=httpd.serve_forever, daemon=True).start()
+    base = f"http://127.0.0.1:{port}"
+    try:
+        code, r = _http(f"{base}/trainer/register",
+                        {"trainer_id": "tA", "stale_policy": "drop"})
+        assert code == 200 and r["trainer_id"] == "tA"
+        code, r = _http(f"{base}/trainer/register",
+                        {"trainer_id": "bad", "stale_policy": "sideways"})
+        assert code == 400 and "stale_policy" in r["error"]
+
+        # hot swap over HTTP: version bump with current params, then a
+        # reinit-from-seed staleness drill pinned to an explicit version
+        code, r = _http(f"{base}/weights", {})
+        assert code == 200 and r["policy_version"] == 1
+        code, r = _http(f"{base}/weights", {"reinit_seed": 3, "version": 7})
+        assert code == 200 and r["policy_version"] == 7
+        code, r = _http(f"{base}/weights")
+        assert code == 200 and r["policy_version"] == 7
+        for key in ("weight_swaps", "swap_ms_total", "last_swap_ms",
+                    "last_swap_in_flight", "records_by_version"):
+            assert key in r
+
+        # results route: min_version filters by newest-sampled-token version
+        _route(server, "tA",
+               _fake_result("s-old", v=1, vmax=1),
+               _fake_result("s-new", v=7, vmax=7))
+        code, r = _http(f"{base}/trainer/tA/results?max=8&min_version=7")
+        assert code == 200
+        assert [x["session_id"] for x in r["results"]] == ["s-new"]
+        assert r["results"][0]["policy_version"] == 7
+        assert r["stale_dropped"] == 1 and r["stale_skipped"] == 0
+        assert r["queue_by_version"] == {"7": 1}   # json stringifies keys
+        code, r = _http(f"{base}/trainer/tA/ack", {"session_ids": ["s-new"]})
+        assert code == 200 and r["acked"] == 1
+    finally:
+        httpd.shutdown()
+        server.shutdown()
