@@ -1,0 +1,188 @@
+"""Write-ahead-journal overhead on the rollout-service hot path.
+
+Drives the same contended admission workload as ``bench_multi_trainer``
+(one RolloutServer + gateway pool, bounded admission, EchoBackend with
+per-call latency) twice — journaling off vs. on — with the full trainer
+consume loop (fetch → ack, so the ack's fsync barrier is inside the
+measured window).  Reports sessions/sec for both runs and the relative
+overhead; the durability ISSUE's acceptance bar is < 10% at these rates.
+A second section microbenchmarks the raw ``Journal`` append path
+(records/sec, fsync batching factor) with and without fsync.
+
+    PYTHONPATH=src python -m benchmarks.bench_journal [--dry-run] \
+        [--out results/bench_journal.json]
+
+Emits a BENCH json line and writes the same record to --out; CI uploads it
+as an artifact so journal-overhead regressions are visible per commit.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+
+from repro.core.testing import EchoBackend
+from repro.rollout import (AgentSpec, GatewayNode, PipelineConfig,
+                           RolloutServer, RuntimeSpec, TaskRequest)
+from repro.rollout.journal import Journal, scan
+
+
+class LatentEchoBackend(EchoBackend):
+    def __init__(self, latency: float):
+        super().__init__()
+        self.latency = latency
+
+    def complete(self, request):
+        time.sleep(self.latency)
+        return super().complete(request)
+
+
+def _tasks(n_tasks: int, samples: int, prepare_sleep: float):
+    return [TaskRequest(
+        task_id=f"jb-{i}",
+        instruction="Produce the text: durable",
+        num_samples=samples,
+        timeout_seconds=120.0,
+        runtime=RuntimeSpec(prepare=[f"sleep {prepare_sleep}"], pool_size=4),
+        agent=AgentSpec(harness="qwen_code", max_turns=1,
+                        config={"max_tokens": 16}),
+        evaluator={"strategy": "session_completion"},
+        trainer_id="bench",
+    ) for i in range(n_tasks)]
+
+
+def run_service(journal_dir, *, n_tasks: int, samples: int, latency: float,
+                prepare_sleep: float, admission_limit: int) -> dict:
+    """One full submit → rollout → fetch → ack pass; returns wall time,
+    sessions/sec, and (journal-on only) the WAL writer's counters."""
+    server = RolloutServer(heartbeat_timeout=30.0, monitor_interval=0.1,
+                           admission_limit=admission_limit,
+                           journal_dir=journal_dir)
+    gw = GatewayNode(LatentEchoBackend(latency), pipeline=PipelineConfig())
+    server.register_node(gw, heartbeat_interval=0.2)
+    server.register_trainer("bench")
+    total = n_tasks * samples
+    t0 = time.perf_counter()
+    for t in _tasks(n_tasks, samples, prepare_sleep):
+        server.submit_task(t)
+    consumed = 0
+    while consumed < total:
+        results = server.fetch_results("bench", max_results=64, wait=2.0)
+        if results:
+            server.ack("bench", [r.session_id for r in results])
+            consumed += len(results)
+    wall = time.perf_counter() - t0
+    jstats = server.status()["journal"]
+    server.shutdown()
+    out = {"wall_s": round(wall, 4), "sessions": total,
+           "sessions_per_s": round(total / wall, 3)}
+    if jstats is not None:
+        out["journal"] = {
+            "records": jstats["written"],
+            "fsync_batches": jstats["batches"],
+            "bytes": jstats["bytes"],
+            "records_per_batch": round(
+                jstats["written"] / max(1, jstats["batches"]), 2),
+        }
+    return out
+
+
+def run_append(n: int, fsync: bool) -> dict:
+    """Raw Journal append throughput for a typical terminal-result-sized
+    record (~0.5 KB), one flush barrier at the end (the batching writer's
+    natural shape)."""
+    record = {"t": "terminal", "result": {
+        "session_id": "s" * 16, "task_id": "t" * 12, "status": "completed",
+        "reward": 1.0, "trainer_id": "bench", "error": None,
+        "metadata": {"interaction_log": "/tmp/spool/s.jsonl"},
+        "trajectory": {"session_id": "s" * 16, "metadata": {},
+                       "traces": [{"prompt_ids": list(range(48)),
+                                   "response_ids": list(range(24)),
+                                   "loss_mask": [1] * 24,
+                                   "response_logprobs": [
+                                       {"token_id": i, "logprob": -0.5}
+                                       for i in range(24)],
+                                   "prompt_messages": [],
+                                   "response_messages": [],
+                                   "metadata": {}}]}}}
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "bench.wal")
+        jrn = Journal(path, fsync=fsync)
+        t0 = time.perf_counter()
+        for _ in range(n):
+            jrn.append(record)
+        jrn.flush(timeout=60.0)
+        wall = time.perf_counter() - t0
+        st = jrn.stats()
+        jrn.close()
+        good = scan(path)[1]
+    return {"records": n, "fsync": fsync, "wall_s": round(wall, 4),
+            "records_per_s": round(n / wall, 1),
+            "mb_per_s": round(st["bytes"] / wall / 1e6, 2),
+            "fsync_batches": st["batches"], "clean_bytes": good}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry-run", action="store_true",
+                    help="CI smoke: tiny workload, same record shape")
+    ap.add_argument("--tasks", type=int, default=None)
+    ap.add_argument("--samples", type=int, default=None)
+    ap.add_argument("--append-records", type=int, default=None)
+    ap.add_argument("--out", default="results/bench_journal.json")
+    args = ap.parse_args(argv)
+
+    if args.dry_run:
+        defaults = dict(n_tasks=4, samples=3, latency=0.005,
+                        prepare_sleep=0.01, admission_limit=3)
+        n_append = args.append_records or 2000
+    else:
+        # the PR-4 bench_multi_trainer admission regime: same task shape,
+        # latency, and bounded admission limit
+        defaults = dict(n_tasks=8, samples=4, latency=0.02,
+                        prepare_sleep=0.03, admission_limit=4)
+        n_append = args.append_records or 20000
+    params = dict(
+        n_tasks=args.tasks or defaults["n_tasks"],
+        samples=args.samples or defaults["samples"],
+        latency=defaults["latency"],
+        prepare_sleep=defaults["prepare_sleep"],
+        admission_limit=defaults["admission_limit"],
+    )
+
+    off = run_service(None, **params)
+    with tempfile.TemporaryDirectory() as jdir:
+        on = run_service(jdir, **params)
+    overhead = (on["wall_s"] - off["wall_s"]) / off["wall_s"] * 100.0
+    append = [run_append(n_append, fsync=True),
+              run_append(n_append, fsync=False)]
+
+    record = {"bench": "journal", "dry_run": args.dry_run, "params": params,
+              "journal_off": off, "journal_on": on,
+              "overhead_pct": round(overhead, 2),
+              "append": append}
+    print(f"  journal off: {off['sessions_per_s']:8.2f} sessions/s"
+          f"  ({off['wall_s']:.3f}s / {off['sessions']} sessions)")
+    jj = on["journal"]
+    print(f"  journal on : {on['sessions_per_s']:8.2f} sessions/s"
+          f"  ({on['wall_s']:.3f}s, {jj['records']} records in"
+          f" {jj['fsync_batches']} fsync batches,"
+          f" {jj['records_per_batch']:.1f} rec/batch)")
+    print(f"  overhead: {overhead:+.2f}%  (acceptance bar: < 10%)")
+    for a in append:
+        print(f"  append (fsync={a['fsync']}): {a['records_per_s']:10.0f}"
+              f" rec/s  {a['mb_per_s']:7.2f} MB/s"
+              f"  ({a['fsync_batches']} batches)")
+    print("BENCH " + json.dumps(record))
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(record, f, indent=2)
+        print(f"  wrote {args.out}")
+    return record
+
+
+if __name__ == "__main__":
+    main()

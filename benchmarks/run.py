@@ -21,6 +21,9 @@ Sections:
   bench_weight_swap  — hot weight swap latency + tokens/sec vs the
                        drain-and-restart discipline (§2.2 async RL weight
                        sync); BENCH json to results/bench_weight_swap.json
+  bench_journal      — write-ahead-journal overhead on the rollout
+                       service's admission/ack hot path (durability);
+                       BENCH json to results/bench_journal.json
   fig5_utilization   — per_request vs prefix_merging trainer load (Fig. 5b)
   table1_rl          — GRPO reward climb across 4 harnesses (Table 1/Fig. 6)
   table2_offline     — offline SFT accept/reject generation (Table 2)
@@ -80,6 +83,11 @@ def main(argv=None):
     print("== bench_weight_swap (hot swap vs drain-and-restart)")
     from benchmarks import bench_weight_swap
     bench_weight_swap.main(["--dry-run"] if args.fast else [])
+
+    print("=" * 72)
+    print("== bench_journal (WAL overhead on the admission path)")
+    from benchmarks import bench_journal
+    bench_journal.main(["--dry-run"] if args.fast else [])
 
     print("=" * 72)
     print("== fig5_utilization")

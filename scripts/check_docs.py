@@ -37,6 +37,7 @@ DOCSTRING_MODULES = [
     "src/repro/core/proxy.py",
     "src/repro/rollout/server.py",
     "src/repro/rollout/admission.py",
+    "src/repro/rollout/journal.py",
     "src/repro/rollout/gateway.py",
     "src/repro/training/trainer.py",
     "src/repro/training/grpo.py",

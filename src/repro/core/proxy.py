@@ -30,6 +30,9 @@ records enough to reconstruct training samples.
 """
 from __future__ import annotations
 
+import dataclasses
+import json
+import os
 import threading
 import uuid
 from collections import deque
@@ -38,6 +41,27 @@ from typing import Any, Dict, Iterator, List, Optional, Protocol, Tuple
 from repro.core import providers as P
 from repro.core import tokenizer as tok
 from repro.core.types import CompletionRecord, CompletionSession
+
+
+def read_interaction_log(path: str) -> CompletionSession:
+    """Rebuild a ``CompletionSession`` from a spilled interaction log (one
+    JSON ``CompletionRecord`` per line, in capture order) — the restart
+    path: a session orphaned by a gateway crash is reconstructable from
+    its on-disk log even though the in-memory registry died with the
+    process.  Torn trailing lines (crash mid-write) are skipped."""
+    session_id = os.path.splitext(os.path.basename(path))[0]
+    cs = CompletionSession(session_id)
+    with open(path, encoding="utf-8") as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                d = json.loads(line)
+            except ValueError:
+                break                      # torn tail: stop at last whole line
+            cs.append(CompletionRecord(**d))
+    return cs
 
 
 class InferenceBackend(Protocol):
@@ -181,9 +205,20 @@ class ProxyGateway:
     ``live_streams`` (cancellation), ``prefix_stats`` / ``version_stats``
     (telemetry)."""
 
-    def __init__(self, backend: InferenceBackend, model_name: str = "policy"):
+    def __init__(self, backend: InferenceBackend, model_name: str = "policy",
+                 spill_dir: Optional[str] = None):
+        """``spill_dir`` enables the interaction-log spill: every captured
+        ``CompletionRecord`` is ALSO appended (JSON-lines, one file per
+        session) under that directory, so a session's model-call history
+        survives a process crash and a restarted service can reconstruct
+        or resume it (``read_interaction_log``).  None (default) keeps
+        capture purely in-memory."""
         self.backend = backend
         self.model_name = model_name
+        self.spill_dir = spill_dir
+        self.spill_errors = 0
+        if spill_dir is not None:
+            os.makedirs(spill_dir, exist_ok=True)
         self._sessions: Dict[str, CompletionSession] = {}
         self._prefix: Dict[str, Dict[str, int]] = {}   # per-session hit stats
         self._prefix_total = {"requests": 0, "prompt_tokens": 0,
@@ -209,12 +244,35 @@ class ProxyGateway:
             return self._sessions.pop(session_id, None)
 
     def delete_session(self, session_id: str) -> None:
-        """Best-effort cleanup after a terminal result (paper §A.5)."""
+        """Best-effort cleanup after a terminal result (paper §A.5).  The
+        spilled interaction log (if any) is NOT removed — it is the durable
+        artifact the session's journal record references."""
         self.abort_session(session_id)
         self.pop_session(session_id)
         with self._lock:
             self._prefix.pop(session_id, None)   # aggregate totals persist
             self._streams.pop(session_id, None)
+
+    # -- interaction-log spill (durability) ----------------------------------
+    def spill_path(self, session_id: str) -> Optional[str]:
+        """Where the session's interaction log spills (None when spilling
+        is off).  Deterministic from the session id, so a restarted service
+        can locate an orphaned session's log without any registry."""
+        if self.spill_dir is None:
+            return None
+        return os.path.join(self.spill_dir, f"{session_id}.jsonl")
+
+    def _spill(self, session_id: str, rec: CompletionRecord) -> None:
+        """Append one captured record to the session's on-disk log.  Spill
+        failures never fail the model call — they are counted instead."""
+        path = self.spill_path(session_id)
+        try:
+            with open(path, "a", encoding="utf-8") as f:
+                f.write(json.dumps(dataclasses.asdict(rec),
+                                   separators=(",", ":")) + "\n")
+        except (OSError, TypeError, ValueError):
+            with self._lock:
+                self.spill_errors += 1
 
     # -- in-flight stream registry (mid-generation abort) --------------------
     def _register_stream(self, session_id: str, stream) -> None:
@@ -328,6 +386,8 @@ class ProxyGateway:
         rec.metadata["cached_prompt_tokens"] = cached
         self._record_prefix(session_id, len(rec.prompt_ids), cached)
         self.session(session_id).append(rec)
+        if self.spill_dir is not None:
+            self._spill(session_id, rec)
 
         usage = result.get("usage", {
             "prompt_tokens": len(rec.prompt_ids),

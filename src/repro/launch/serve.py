@@ -39,6 +39,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import threading
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from urllib.parse import parse_qs, urlparse
@@ -53,16 +54,25 @@ from repro.rollout import (AgentSpec, GatewayNode, PipelineConfig,
 
 
 def build_stack(arch: str, gateways: int = 1,
-                pipeline: PipelineConfig | None = None):
+                pipeline: PipelineConfig | None = None,
+                journal_dir: str | None = None):
     """Assemble the in-process serving stack — one smoke-config Engine,
     a RolloutServer, and ``gateways`` registered GatewayNodes — and
-    return ``(engine, server, nodes)``."""
+    return ``(engine, server, nodes)``.
+
+    ``journal_dir`` makes the service restart-safe: the server journals
+    admissions/results/acks to ``<journal_dir>/rollout.wal`` (replayed on
+    the next boot over the same directory) and every gateway proxy spills
+    per-session interaction logs under ``<journal_dir>/sessions/``."""
     cfg = get_smoke_config(arch).replace(vocab_size=512)
     engine = Engine(cfg, rng=jax.random.PRNGKey(0), max_len=512, max_new=32)
-    server = RolloutServer()
+    server = RolloutServer(journal_dir=journal_dir)
+    spill = (os.path.join(journal_dir, "sessions")
+             if journal_dir is not None else None)
     nodes = []
     for _ in range(gateways):
-        gw = GatewayNode(engine, pipeline=pipeline or PipelineConfig())
+        gw = GatewayNode(engine, pipeline=pipeline or PipelineConfig(),
+                         spill_dir=spill)
         server.register_node(gw)
         nodes.append(gw)
     return engine, server, nodes
@@ -296,19 +306,29 @@ def main(argv=None):
                          "(baseline mode, for A/B against /rollout/nodes)")
     ap.add_argument("--run-workers", type=int, default=2)
     ap.add_argument("--prewarm-capacity", type=int, default=16)
+    ap.add_argument("--journal-dir", default=None,
+                    help="durable restart-safe mode: journal admissions/"
+                         "results/acks to <dir>/rollout.wal (replayed on "
+                         "the next boot) and spill per-session interaction "
+                         "logs to <dir>/sessions/")
     args = ap.parse_args(argv)
     pipe = PipelineConfig(serial=args.serial, run_workers=args.run_workers,
                           prewarm_capacity=args.prewarm_capacity)
-    engine, server, nodes = build_stack(args.arch, args.gateways, pipe)
+    engine, server, nodes = build_stack(args.arch, args.gateways, pipe,
+                                        journal_dir=args.journal_dir)
     httpd = ThreadingHTTPServer(("127.0.0.1", args.port),
                                 make_handler(server, nodes, engine))
-    print(f"[serve] rollout service + provider proxy on :{args.port}",
+    print(f"[serve] rollout service + provider proxy on :{args.port}"
+          + (f" (journal: {args.journal_dir})" if args.journal_dir else ""),
           flush=True)
     try:
         httpd.serve_forever()
     except KeyboardInterrupt:
         pass
     finally:
+        # graceful shutdown: flush + close the journal so the next boot
+        # over the same --journal-dir replays to exactly this state
+        server.flush_journal()
         server.shutdown()
 
 

@@ -7,6 +7,7 @@ from repro.rollout.evaluators import evaluate, get_evaluator
 from repro.rollout.gateway import GatewayNode
 from repro.rollout.admission import (DEFAULT_TRAINER, AdmissionController,
                                      TrainerState)
+from repro.rollout.journal import Journal
 from repro.rollout.server import RolloutServer, UnknownTaskError
 
 __all__ = [
@@ -17,5 +18,5 @@ __all__ = [
     "HarnessAdapter", "make_harness", "register_harness",
     "evaluate", "get_evaluator", "GatewayNode", "RolloutServer",
     "AdmissionController", "TrainerState", "DEFAULT_TRAINER",
-    "UnknownTaskError",
+    "UnknownTaskError", "Journal",
 ]

@@ -343,6 +343,46 @@ class AdmissionController:
                 break
         return out
 
+    def mark_delivered(self, trainer_id: str,
+                       session_ids: Iterable[str]) -> None:
+        """Journal-replay restore: flag queued results as having been
+        handed out before the restart.  Idempotent (replay twice == once):
+        the delivered counter bumps only on the 0→1 attempts transition.
+        ``last_sent`` resets to the epoch so an unacked result is
+        immediately eligible again after boot — at-least-once redelivery,
+        counted as such."""
+        st = self.trainers.get(trainer_id)
+        if st is None:
+            return
+        for sid in session_ids:
+            d = st.queue.get(sid)
+            if d is None:
+                continue
+            if d.attempts == 0:
+                st.delivered += 1
+                d.attempts = 1
+            d.last_sent = 0.0
+            d.lease = None
+
+    def next_visible_in(self, trainer_id: str, now: float,
+                        redeliver_after: float) -> Optional[float]:
+        """Seconds until the earliest in-flight (delivered, unacked) result
+        becomes redeliverable — what a blocked ``fetch_results`` should nap
+        for when the queue holds only leased-out entries.  None when no
+        entry is leased out (nothing becomes deliverable by time alone)."""
+        st = self.trainers.get(trainer_id)
+        if st is None:
+            return None
+        best: Optional[float] = None
+        for d in st.queue.values():
+            if not d.attempts:
+                continue
+            vis = d.lease if d.lease is not None else redeliver_after
+            dt = d.last_sent + vis - now
+            if best is None or dt < best:
+                best = dt
+        return None if best is None else max(best, 0.0)
+
     def ack(self, trainer_id: str, session_ids: Iterable[str]) -> int:
         """Remove acked results from the queue for good; returns how many
         were actually dropped.  Raises KeyError for unknown trainers."""

@@ -72,11 +72,17 @@ class GatewayNode:
                  pipeline: Optional[PipelineConfig] = None,
                  pool: Optional[RuntimePrewarmPool] = None,
                  result_sink: Optional[Callable[[SessionResult], None]] = None,
+                 spill_dir: Optional[str] = None,
                  # legacy kwargs, kept so older call sites keep working
                  init_workers: Optional[int] = None,
                  run_workers: Optional[int] = None,
                  post_workers: Optional[int] = None,
                  ready_buffer: Optional[int] = None):
+        """``spill_dir`` turns on the proxy's interaction-log spill: every
+        captured model call is also appended to a per-session JSON-lines
+        file there, and each terminal ``SessionResult`` carries the file's
+        path as ``metadata["interaction_log"]`` — the durable reference the
+        rollout server journals with the session lifecycle."""
         # copy: legacy-kwarg overrides must not write through to a config
         # object shared across gateways
         cfg = replace(pipeline) if pipeline is not None else PipelineConfig()
@@ -90,7 +96,7 @@ class GatewayNode:
             cfg.ready_buffer = ready_buffer
         self.pipeline = cfg
         self.gateway_id = gateway_id or f"gw_{uuid.uuid4().hex[:8]}"
-        self.proxy = ProxyGateway(backend)
+        self.proxy = ProxyGateway(backend, spill_dir=spill_dir)
         self.result_sink = result_sink
         self._owns_pool = pool is None and cfg.prewarm and not cfg.serial
         self.pool: Optional[RuntimePrewarmPool] = pool
@@ -498,6 +504,12 @@ class GatewayNode:
                                    task_id=s.task.task_id,
                                    status=status, error=live.error,
                                    trainer_id=s.trainer_id)
+        log_path = self.proxy.spill_path(s.session_id)
+        if log_path is not None:
+            # the durable interaction-log reference: journaled with the
+            # terminal record so a restarted service can find the session's
+            # captured model calls on disk
+            result.metadata.setdefault("interaction_log", log_path)
         with self._lock:
             self._live.pop(s.session_id, None)
             self._cancelled.discard(s.session_id)

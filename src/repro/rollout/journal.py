@@ -1,0 +1,287 @@
+"""Write-ahead journal for the rollout service (ROADMAP: durable,
+restart-safe rollout service).
+
+Everything the ``RolloutServer`` promises trainers — at-least-once result
+delivery, fair admission of submitted tasks, re-dispatch of in-flight
+sessions — lives in Python dicts, so a server restart used to silently void
+the contract.  This module is the durability layer under those promises:
+
+  * ``Journal`` — an append-only record log.  Appends go through a bounded
+    queue to a background writer thread that batches frames into one
+    ``write`` + ``flush`` + ``fsync`` per drain, so journaling stays off
+    the admission/dispatch hot path (the caller only pays JSON encoding and
+    a queue put).  ``flush()`` is the durability barrier: it returns once
+    every record appended before it is fsynced (acks and graceful shutdown
+    use it).
+  * Framing — each record is ``u32 length | u32 crc32(payload) | payload``
+    (little-endian, payload = compact JSON).  A crash can only tear the
+    *tail* (frames are appended in order), and a torn tail fails either the
+    length read or the checksum, so ``replay`` truncates the file back to
+    the last whole record instead of propagating corruption into the
+    rebuilt state.
+  * ``replay(path)`` — yield every intact record in append order, then
+    truncate any torn tail in place so subsequent appends extend a clean
+    prefix.
+
+Record *semantics* (what the server journals and how boot replays it) live
+in ``rollout/server.py``; this module only guarantees ordered, durable,
+self-delimiting records.  Serialization helpers for the service's task /
+result payloads live here so server and tests share one wire shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import queue
+import struct
+import threading
+import zlib
+from typing import Any, Dict, Iterator, List, Optional, Tuple
+
+from repro.core.types import SessionResult, Trace, Trajectory
+from repro.rollout.types import AgentSpec, RuntimeSpec, TaskRequest
+
+_HEADER = struct.Struct("<II")          # (payload length, crc32(payload))
+_SENTINEL = object()                    # writer-thread shutdown marker
+
+
+class Journal:
+    """One append-only, checksum-framed record log with a background
+    fsync-batching writer (see the module docstring for the framing and
+    crash-semantics contract)."""
+
+    def __init__(self, path: str, *, max_queue: int = 4096,
+                 fsync: bool = True, poll_interval: float = 0.05):
+        """Open (creating or extending) the journal at ``path``.  A torn
+        tail left by a previous crash is truncated away before the first
+        append.  ``max_queue`` bounds the writer queue (appends beyond it
+        block — bounded memory, never unbounded buffering); ``fsync=False``
+        trades crash durability for speed (tests/benchmarks)."""
+        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+        repair_tail(path)
+        self.path = path
+        self._fsync = fsync
+        self._file = open(path, "ab")
+        self._q: "queue.Queue[Any]" = queue.Queue(maxsize=max_queue)
+        self._poll = poll_interval
+        self._closed = False
+        self._lock = threading.Lock()
+        self.counters = {"appended": 0, "written": 0, "batches": 0,
+                         "bytes": 0, "flushes": 0}
+        self._writer = threading.Thread(target=self._write_loop,
+                                        name="journal-writer", daemon=True)
+        self._writer.start()
+
+    # -- append path (hot) ---------------------------------------------------
+    def append(self, record: Dict[str, Any]) -> None:
+        """Queue one record for durable append.  The record is serialized
+        HERE (freezing its contents against later mutation by the caller);
+        the write + fsync happen on the background writer.  Appends after
+        ``close()`` are dropped."""
+        if self._closed:
+            return
+        payload = json.dumps(record, separators=(",", ":")).encode()
+        frame = _HEADER.pack(len(payload), zlib.crc32(payload)) + payload
+        with self._lock:
+            self.counters["appended"] += 1
+        self._q.put(frame)
+
+    def flush(self, timeout: float = 10.0) -> bool:
+        """Durability barrier: block until every record appended before this
+        call is written AND fsynced (False on timeout).  This is what makes
+        an ``ack`` safe to confirm and a graceful shutdown lossless."""
+        if self._closed:
+            return True
+        done = threading.Event()
+        self._q.put(done)
+        return done.wait(timeout)
+
+    def close(self, flush: bool = True) -> None:
+        """Stop the writer (flushing first by default) and close the file."""
+        if self._closed:
+            return
+        if flush:
+            self.flush()
+        self._closed = True
+        self._q.put(_SENTINEL)
+        self._writer.join(timeout=5.0)
+        try:
+            self._file.close()
+        except OSError:
+            pass
+
+    def stats(self) -> Dict[str, Any]:
+        """Writer telemetry: records appended/written, batches, bytes,
+        explicit flush barriers, and the current queue depth."""
+        with self._lock:
+            out = dict(self.counters)
+        out["queue_depth"] = self._q.qsize()
+        out["path"] = self.path
+        return out
+
+    # -- background writer ---------------------------------------------------
+    def _write_loop(self) -> None:
+        while True:
+            try:
+                item = self._q.get(timeout=self._poll)
+            except queue.Empty:
+                continue
+            frames: List[bytes] = []
+            barriers: List[threading.Event] = []
+            stop = False
+            while True:                 # drain everything available: 1 batch
+                if item is _SENTINEL:
+                    stop = True
+                elif isinstance(item, threading.Event):
+                    barriers.append(item)
+                else:
+                    frames.append(item)
+                try:
+                    item = self._q.get_nowait()
+                except queue.Empty:
+                    break
+            if frames:
+                buf = b"".join(frames)
+                try:
+                    self._file.write(buf)
+                    self._file.flush()
+                    if self._fsync:
+                        os.fsync(self._file.fileno())
+                except (OSError, ValueError):   # closed file: drop silently
+                    pass
+                with self._lock:
+                    self.counters["written"] += len(frames)
+                    self.counters["batches"] += 1
+                    self.counters["bytes"] += len(buf)
+            for b in barriers:
+                with self._lock:
+                    self.counters["flushes"] += 1
+                b.set()
+            if stop:
+                return
+
+
+def scan(path: str) -> Tuple[List[Dict[str, Any]], int]:
+    """Read every intact record; returns ``(records, clean_length)`` where
+    ``clean_length`` is the byte offset of the last whole frame (the torn
+    tail, if any, starts there).  Never modifies the file."""
+    records: List[Dict[str, Any]] = []
+    good = 0
+    if not os.path.exists(path):
+        return records, good
+    with open(path, "rb") as f:
+        data = f.read()
+    off, n = 0, len(data)
+    while off + _HEADER.size <= n:
+        length, crc = _HEADER.unpack_from(data, off)
+        start = off + _HEADER.size
+        end = start + length
+        if end > n:
+            break                               # torn tail: partial payload
+        payload = data[start:end]
+        if zlib.crc32(payload) != crc:
+            break                               # torn/corrupt frame: stop
+        try:
+            records.append(json.loads(payload))
+        except ValueError:
+            break                               # crc passed but not JSON
+        off = end
+        good = off
+    return records, good
+
+
+def repair_tail(path: str) -> int:
+    """Truncate a torn tail (crash mid-append) back to the last whole
+    record, in place.  Returns the number of bytes dropped (0 when the
+    journal is clean or absent)."""
+    if not os.path.exists(path):
+        return 0
+    _, good = scan(path)
+    size = os.path.getsize(path)
+    if good < size:
+        with open(path, "r+b") as f:
+            f.truncate(good)
+    return size - good
+
+
+def replay(path: str) -> Iterator[Dict[str, Any]]:
+    """Yield every intact record in append order, truncating any torn tail
+    first so the journal is clean for subsequent appends."""
+    repair_tail(path)
+    records, _ = scan(path)
+    return iter(records)
+
+
+# -- wire shapes for the service payloads ------------------------------------
+# (shared by the server's journaling and the durability tests: one place
+# defines how a TaskRequest / SessionResult crosses a restart)
+
+def task_to_dict(task: TaskRequest) -> Dict[str, Any]:
+    """JSON-safe form of a TaskRequest.  ``callback`` is NOT persisted —
+    functions do not survive a restart; the durable delivery path is the
+    per-trainer result queue."""
+    return {
+        "task_id": task.task_id,
+        "instruction": task.instruction,
+        "num_samples": task.num_samples,
+        "timeout_seconds": task.timeout_seconds,
+        "runtime": dataclasses.asdict(task.runtime),
+        "agent": dataclasses.asdict(task.agent),
+        "builder": task.builder,
+        "evaluator": task.evaluator,
+        "trainer_id": task.trainer_id,
+        "metadata": task.metadata,
+        "pipeline": task.pipeline,
+    }
+
+
+def task_from_dict(d: Dict[str, Any]) -> TaskRequest:
+    """Inverse of ``task_to_dict`` (callback comes back as None)."""
+    return TaskRequest(
+        task_id=d["task_id"],
+        instruction=d.get("instruction", ""),
+        num_samples=d.get("num_samples", 1),
+        timeout_seconds=d.get("timeout_seconds", 120.0),
+        runtime=RuntimeSpec(**d.get("runtime", {})),
+        agent=AgentSpec(**d.get("agent", {})),
+        builder=d.get("builder", {"strategy": "prefix_merging"}),
+        evaluator=d.get("evaluator", {"strategy": "session_completion"}),
+        trainer_id=d.get("trainer_id"),
+        metadata=d.get("metadata", {}),
+        pipeline=d.get("pipeline", {}),
+    )
+
+
+def result_to_dict(result: SessionResult) -> Dict[str, Any]:
+    """JSON-safe form of a terminal SessionResult, trajectory included
+    (the queue's at-least-once promise must survive a restart, so the full
+    trainer-facing payload is journaled, not just the envelope)."""
+    d = {
+        "session_id": result.session_id,
+        "task_id": result.task_id,
+        "status": result.status,
+        "reward": result.reward,
+        "error": result.error,
+        "trainer_id": result.trainer_id,
+        "metadata": result.metadata,
+        "trajectory": None,
+    }
+    if result.trajectory is not None:
+        d["trajectory"] = dataclasses.asdict(result.trajectory)
+    return d
+
+
+def result_from_dict(d: Dict[str, Any]) -> SessionResult:
+    """Inverse of ``result_to_dict``."""
+    traj = None
+    td = d.get("trajectory")
+    if td is not None:
+        traj = Trajectory(session_id=td["session_id"],
+                          traces=[Trace(**t) for t in td.get("traces", [])],
+                          metadata=td.get("metadata", {}))
+    return SessionResult(
+        session_id=d["session_id"], task_id=d["task_id"],
+        status=d["status"], trajectory=traj, reward=d.get("reward"),
+        error=d.get("error"), trainer_id=d.get("trainer_id"),
+        metadata=d.get("metadata", {}))

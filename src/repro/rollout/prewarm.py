@@ -43,7 +43,8 @@ class RuntimePrewarmPool:
         self._epoch: Dict[str, int] = {}
         self._building = 0            # cold starts in flight on the filler
         self.stats_counters = {"hits": 0, "misses": 0, "prewarmed": 0,
-                               "returned": 0, "discarded": 0, "invalidated": 0}
+                               "returned": 0, "discarded": 0,
+                               "invalidated": 0, "renew_failures": 0}
         self._filler = threading.Thread(target=self._fill_loop,
                                         args=(refill_interval,),
                                         name="prewarm-filler", daemon=True)
@@ -81,8 +82,12 @@ class RuntimePrewarmPool:
             if wanted:
                 try:
                     rt.renew()
-                except Exception:  # noqa: BLE001 — renewal failure → discard
-                    pass
+                except Exception:  # noqa: BLE001 — renewal failure → the
+                    # runtime is discarded below; count it so prewarm churn
+                    # from flaky renew() shows up in pool/gateway stats
+                    # instead of masquerading as ordinary discards
+                    with self._lock:
+                        self.stats_counters["renew_failures"] += 1
                 else:
                     with self._lock:
                         still = (not self._closed and key in self._targets

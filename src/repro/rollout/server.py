@@ -25,15 +25,25 @@ compatibility shim.
 """
 from __future__ import annotations
 
+import logging
+import os
 import threading
 import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Union
 
 from repro.core.types import SessionResult
+from repro.rollout import journal as J
 from repro.rollout.admission import DEFAULT_TRAINER, AdmissionController
 from repro.rollout.gateway import GatewayNode
 from repro.rollout.types import Session, TaskRequest, TaskStatus
+
+_log = logging.getLogger(__name__)
+
+# fetch_results fallback nap: fetchers are woken by a per-trainer Condition
+# on push/ack, so the nap only backstops time-based redelivery eligibility
+# (and is usually shortened to the exact next lease expiry)
+_FETCH_FALLBACK_NAP = 0.5
 
 
 class UnknownTaskError(KeyError):
@@ -70,18 +80,31 @@ class RolloutServer:
                  monitor_interval: float = 0.5,
                  admission_limit: Union[int, str, None] = None,
                  admission_quantum: float = 1.0,
-                 redeliver_timeout: float = 5.0):
+                 redeliver_timeout: float = 5.0,
+                 journal_dir: Optional[str] = None,
+                 journal_fsync: bool = True):
         """``admission_limit`` bounds concurrently admitted sessions across
         the node pool — the contention that makes weighted fairness
         meaningful.  None = unbounded (admission still orders dispatch by
         DRR, it just never queues); "auto" = sum of each alive node's
-        ``admission_slots``; an int = that fixed cap."""
+        ``admission_slots``; an int = that fixed cap.
+
+        ``journal_dir`` makes the service restart-safe: trainer
+        registrations, task admissions, terminal results, deliveries and
+        acks are journaled to an append-only WAL (``journal.py``), and a
+        server constructed over an existing journal REPLAYS it — unacked
+        results re-enter the owner's queue (never acked ones), un-terminal
+        sessions re-enter admission and are re-dispatched.  None (default)
+        keeps the pre-journal all-in-memory behavior.  ``journal_fsync=
+        False`` trades crash durability for write speed."""
         self._tasks: Dict[str, _TaskState] = {}
         self._nodes: Dict[str, _NodeState] = {}
         self._session_index: Dict[str, str] = {}   # session_id -> task_id
         self._hb_stops: Dict[str, threading.Event] = {}
         self._lock = threading.RLock()
-        self._results_cv = threading.Condition(self._lock)
+        # per-trainer fetch wakeups (push/ack notify; naps only backstop
+        # time-based redelivery eligibility) — all share the server lock
+        self._fetch_cvs: Dict[str, threading.Condition] = {}
         self._heartbeat_timeout = heartbeat_timeout
         self._max_attempts = max_session_attempts
         self._admission = AdmissionController(quantum=admission_quantum)
@@ -89,10 +112,134 @@ class RolloutServer:
         self._admission_limit = admission_limit
         self._redeliver_timeout = redeliver_timeout
         self._inflight: set = set()     # admitted, not yet terminal
+        self._callback_errors = 0       # swallowed trainer-callback raises
         self._stop = threading.Event()
+        # -- durability: open the WAL and rebuild state from it BEFORE the
+        # monitor starts dispatching anything
+        self._journal: Optional[J.Journal] = None
+        self._replaying = False
+        self._replay_counts: Dict[str, int] = {}
+        if journal_dir is not None:
+            os.makedirs(journal_dir, exist_ok=True)
+            path = os.path.join(journal_dir, "rollout.wal")
+            records = list(J.replay(path))       # truncates any torn tail
+            self._journal = J.Journal(path, fsync=journal_fsync)
+            self._replay(records)
         self._monitor = threading.Thread(target=self._monitor_loop,
                                          args=(monitor_interval,), daemon=True)
         self._monitor.start()
+
+    # -- durability: journaling + replay ---------------------------------------
+    def _jrn(self, record: Dict[str, Any]) -> None:
+        """Append one record to the WAL (no-op when journaling is off or
+        while replay is rebuilding state from old records)."""
+        if self._journal is not None and not self._replaying:
+            self._journal.append(record)
+
+    def _replay(self, records: List[Dict[str, Any]]) -> None:
+        """Rebuild service state from journal records (boot path).  Record
+        application is idempotent — replaying a journal twice produces the
+        same state as once — and ends by re-queueing every non-terminal
+        session for admission (at-least-once: a session in flight at the
+        crash is re-dispatched; trainers dedupe by session_id)."""
+        self._replaying = True
+        counts = {"records": len(records), "trainers": 0, "tasks": 0,
+                  "terminals": 0, "delivers": 0, "acks": 0,
+                  "sessions_requeued": 0}
+        try:
+            for rec in records:
+                self._apply_record(rec, counts)
+            # every session with no terminal result re-enters admission:
+            # parked, dispatched, even mid-run at the crash — the at-least-
+            # once contract re-runs it rather than losing it
+            for st in self._tasks.values():
+                tenant = st.task.trainer_id or DEFAULT_TRAINER
+                if self._admission.get(tenant) is None:
+                    self._admission.register(tenant)
+                for s in st.sessions.values():
+                    if s.session_id in st.finished_ids:
+                        s.status = "completed"
+                        continue
+                    s.status = "pending"
+                    s.gateway_id = None
+                    self._admission.enqueue(tenant, s)
+                    counts["sessions_requeued"] += 1
+        finally:
+            self._replaying = False
+            self._replay_counts = counts
+
+    def _apply_record(self, rec: Dict[str, Any],
+                      counts: Dict[str, int]) -> None:
+        """Apply one journal record to in-memory state (idempotently)."""
+        t = rec.get("t")
+        if t == "trainer":
+            self._admission.register(
+                rec["trainer_id"], rec.get("weight", 1.0), explicit=True,
+                max_inflight=rec.get("max_inflight"),
+                stale_policy=rec.get("stale_policy"))
+            counts["trainers"] += 1
+        elif t == "task":
+            td = rec["task"]
+            if td["task_id"] in self._tasks:
+                return                            # duplicate replay: no-op
+            task = J.task_from_dict(td)
+            state = _TaskState(task=task)
+            for sd in rec.get("sessions", ()):
+                s = Session(session_id=sd["session_id"], task=task,
+                            group_index=sd.get("group_index", 0),
+                            trainer_id=task.trainer_id)
+                state.sessions[s.session_id] = s
+                self._session_index[s.session_id] = task.task_id
+            self._tasks[task.task_id] = state
+            tenant = task.trainer_id or DEFAULT_TRAINER
+            if self._admission.get(tenant) is None:
+                self._admission.register(tenant)  # implicit, like submit
+            counts["tasks"] += 1
+        elif t == "dispatch":
+            task_id = self._session_index.get(rec["session_id"])
+            if task_id is None:
+                return
+            sess = self._tasks[task_id].sessions.get(rec["session_id"])
+            if sess is not None:
+                sess.attempts = max(sess.attempts, rec.get("attempts", 1))
+        elif t == "terminal":
+            result = J.result_from_dict(rec["result"])
+            task_id = self._session_index.get(result.session_id)
+            if task_id is None:
+                return
+            state = self._tasks[task_id]
+            if result.session_id in state.finished_ids:
+                return                            # duplicate replay: no-op
+            state.finished_ids.add(result.session_id)
+            state.results.append(result)
+            if state.task.trainer_id is not None:
+                self._admission.route_result(state.task.trainer_id, result)
+            counts["terminals"] += 1
+        elif t == "deliver":
+            self._admission.mark_delivered(rec["trainer_id"],
+                                           rec.get("session_ids", ()))
+            counts["delivers"] += 1
+        elif t == "ack":
+            if self._admission.get(rec["trainer_id"]) is not None:
+                self._admission.ack(rec["trainer_id"],
+                                    rec.get("session_ids", ()))
+            counts["acks"] += 1
+
+    def flush_journal(self, timeout: float = 10.0) -> bool:
+        """Durability barrier: block until every journaled record so far is
+        fsynced (True when journaling is off).  ``shutdown`` calls this;
+        exposed for graceful-drain call sites and tests."""
+        if self._journal is None:
+            return True
+        return self._journal.flush(timeout)
+
+    def _fetch_cv(self, trainer_id: str) -> threading.Condition:
+        """The trainer's fetch-wakeup Condition (caller holds the lock)."""
+        cv = self._fetch_cvs.get(trainer_id)
+        if cv is None:
+            cv = self._fetch_cvs.setdefault(
+                trainer_id, threading.Condition(self._lock))
+        return cv
 
     # -- trainer membership (paper Fig. 5a consumers) --------------------------
     def register_trainer(self, trainer_id: str, weight: float = 1.0,
@@ -115,9 +262,14 @@ class RolloutServer:
         unfiltered fetch, ``"drop"`` discards them.  Raises ValueError for
         any other value; None keeps the trainer's current policy."""
         with self._lock:
-            self._admission.register(trainer_id, weight, explicit=True,
-                                     max_inflight=max_inflight,
-                                     stale_policy=stale_policy)
+            st = self._admission.register(trainer_id, weight, explicit=True,
+                                          max_inflight=max_inflight,
+                                          stale_policy=stale_policy)
+            # journal the EFFECTIVE values so replay is deterministic even
+            # when a re-register passed None to keep current settings
+            self._jrn({"t": "trainer", "trainer_id": trainer_id,
+                       "weight": st.weight, "max_inflight": st.max_inflight,
+                       "stale_policy": st.stale_policy})
         self._pump_admission()     # a raised cap may admit parked backlog
         return trainer_id
 
@@ -139,26 +291,47 @@ class RolloutServer:
         registered ``stale_policy``.  Results that merely straddled a hot
         weight swap (any token at ≥ N) and results with no recorded
         version are deliverable.  Raises KeyError for an unknown
-        trainer_id."""
+        trainer_id.
+
+        Blocked fetchers are woken by a per-trainer Condition the moment a
+        result is pushed (or acked), so delivery latency is not quantized
+        to a poll nap; naps remain only as the fallback for time-based
+        redelivery eligibility, shortened to the next lease expiry."""
         deadline = time.monotonic() + max(0.0, wait)
-        with self._results_cv:
+        with self._lock:
+            cv = self._fetch_cv(trainer_id)
             while True:
                 now = time.monotonic()
                 out = self._admission.fetch(trainer_id, max_results, now,
                                             self._redeliver_timeout,
                                             lease=lease,
                                             min_version=min_version)
+                if out:
+                    self._jrn({"t": "deliver", "trainer_id": trainer_id,
+                               "session_ids": [r.session_id for r in out]})
                 remaining = deadline - time.monotonic()
                 if out or remaining <= 0 or self._stop.is_set():
                     return out
-                # bounded naps: redelivery eligibility is time-based, so a
-                # cv notify is not the only way work becomes deliverable
-                self._results_cv.wait(timeout=min(remaining, 0.05))
+                # woken on push/ack; the nap only backstops lease expiry
+                # (time-based, no notifier), so size it to the NEXT expiry
+                nxt = self._admission.next_visible_in(
+                    trainer_id, time.monotonic(), self._redeliver_timeout)
+                nap = _FETCH_FALLBACK_NAP if nxt is None \
+                    else max(min(nxt, _FETCH_FALLBACK_NAP), 0.001)
+                cv.wait(timeout=min(remaining, nap))
 
     def ack(self, trainer_id: str, session_ids: List[str]) -> int:
-        """Acknowledge delivered results: they leave the queue for good."""
+        """Acknowledge delivered results: they leave the queue for good.
+        With journaling on, the ack is fsynced before this returns — an
+        acked result is never redelivered, even across a restart."""
         with self._lock:
-            return self._admission.ack(trainer_id, session_ids)
+            n = self._admission.ack(trainer_id, session_ids)
+            self._jrn({"t": "ack", "trainer_id": trainer_id,
+                       "session_ids": list(session_ids)})
+            self._fetch_cv(trainer_id).notify_all()
+        if self._journal is not None:
+            self._journal.flush()
+        return n
 
     def trainer_stats(self, trainer_id: str) -> Dict[str, Any]:
         """One trainer's admission/queue/staleness counters (see
@@ -255,6 +428,12 @@ class RolloutServer:
                 state.sessions[s.session_id] = s
                 self._session_index[s.session_id] = task.task_id
                 self._admission.enqueue(tenant, s)
+            # session ids are journaled WITH the task so replay rebuilds
+            # the exact ids that results/acks will later reference
+            self._jrn({"t": "task", "task": J.task_to_dict(task),
+                       "sessions": [{"session_id": s.session_id,
+                                     "group_index": s.group_index}
+                                    for s in sessions]})
         self._pump_admission()
         return task.task_id
 
@@ -310,6 +489,11 @@ class RolloutServer:
             return
         target = min(nodes, key=lambda n: self._node_score(n.gateway))
         session.attempts += 1
+        # journal BEFORE submit (WAL discipline): a crash between the two
+        # replays into a re-dispatch, which at-least-once permits
+        self._jrn({"t": "dispatch", "session_id": session.session_id,
+                   "gateway_id": target.gateway.gateway_id,
+                   "attempts": session.attempts})
         target.gateway.submit(session)
 
     @staticmethod
@@ -352,15 +536,31 @@ class RolloutServer:
                 if state.task.trainer_id is not None:
                     result.trainer_id = state.task.trainer_id
                     self._admission.route_result(state.task.trainer_id, result)
-                    self._results_cv.notify_all()
+                # journal the terminal result (trajectory included) under
+                # the lock, so it is sequenced before any deliver/ack of
+                # the same session_id in the WAL
+                self._jrn({"t": "terminal",
+                           "result": J.result_to_dict(result)})
+                if state.task.trainer_id is not None:
+                    self._fetch_cv(state.task.trainer_id).notify_all()
         if retry is not None:
             self._dispatch(retry)        # keeps its admission slot
             return
         if cb is not None:               # compatibility shim
             try:
                 cb(result)
-            except Exception:  # noqa: BLE001 — trainer callback must not kill us
-                pass
+            except Exception:  # noqa: BLE001 — trainer callback must not
+                # kill us; but it must not vanish either: count it and log
+                # the FIRST traceback so a broken consumer is visible
+                with self._lock:
+                    self._callback_errors += 1
+                    first = self._callback_errors == 1
+                if first:
+                    _log.warning("trainer callback raised for session %s "
+                                 "(task %s); counting further callback "
+                                 "errors silently",
+                                 result.session_id, result.task_id,
+                                 exc_info=True)
         self._pump_admission()           # the freed slot admits backlog
 
     # -- polling --------------------------------------------------------------------
@@ -404,6 +604,11 @@ class RolloutServer:
                 "inflight": len(self._inflight),
                 "backlog": self._admission.backlog(),
             }
+            callback_errors = self._callback_errors
+            journal = None
+            if self._journal is not None:
+                journal = {**self._journal.stats(),
+                           "replayed": dict(self._replay_counts)}
         node_view: Dict[str, Any] = {}
         for nid, n in nodes.items():
             # a frozen/shut-down gateway must not take the observability
@@ -421,7 +626,8 @@ class RolloutServer:
             except Exception as e:  # noqa: BLE001
                 node_view[nid] = {"alive": False, "error": str(e)}
         return {"tasks": tasks, "nodes": node_view,
-                "trainers": trainers, "admission": admission}
+                "trainers": trainers, "admission": admission,
+                "callback_errors": callback_errors, "journal": journal}
 
     def node_stats(self) -> Dict[str, Any]:
         """Full per-node pipeline telemetry (the §A.5 observability surface):
@@ -507,9 +713,14 @@ class RolloutServer:
                 self._dispatch(fresh)    # keeps its admission slot
 
     def shutdown(self) -> None:
-        """Stop the monitor, wake blocked fetches, shut every node down."""
+        """Stop the monitor, wake blocked fetches, shut every node down,
+        then flush + close the journal (graceful shutdown loses nothing —
+        the next boot replays to exactly this state)."""
         self._stop.set()
-        with self._results_cv:
-            self._results_cv.notify_all()
+        with self._lock:
+            for cv in self._fetch_cvs.values():
+                cv.notify_all()
         for n in self._alive_nodes():
             n.gateway.shutdown()
+        if self._journal is not None:
+            self._journal.close()

@@ -93,6 +93,9 @@ class AsyncGRPOTrainer:
         self._inflight = 0
         self._inflight_lock = threading.Lock()
         self._open_tasks: Dict[str, int] = {}      # task_id -> samples left
+        # the open TaskRequests themselves, kept so reconnect() can resubmit
+        # any task a restarted server lost (bounded by inflight_tasks)
+        self._open_requests: Dict[str, TaskRequest] = {}
         self._task_versions: Dict[str, int] = {}   # task_id -> policy_version
         # per-open-task redelivery dedupe: dropped with the task, so the
         # memory footprint is bounded by inflight_tasks, not run length
@@ -113,6 +116,7 @@ class AsyncGRPOTrainer:
             #                                       fires via the server shim
             with self._inflight_lock:
                 self._open_tasks[task.task_id] = task.num_samples
+                self._open_requests[task.task_id] = task
                 self._task_versions[task.task_id] = version
                 self._inflight += 1
             self.server.submit_task(task)
@@ -161,6 +165,7 @@ class AsyncGRPOTrainer:
             version = self._task_versions.get(result.task_id)
             if left <= 1:
                 del self._open_tasks[result.task_id]
+                self._open_requests.pop(result.task_id, None)
                 self._task_versions.pop(result.task_id, None)
                 self._task_seen.pop(result.task_id, None)
                 self._inflight -= 1
@@ -180,14 +185,51 @@ class AsyncGRPOTrainer:
                 # weights we are currently pushing
                 min_version = max(
                     0, self.engine.policy_version - self.tcfg.staleness_bound)
-            results = self.server.fetch_results(self.trainer_id,
-                                                max_results=64, wait=0.2,
-                                                min_version=min_version)
+            try:
+                results = self.server.fetch_results(
+                    self.trainer_id, max_results=64, wait=0.2,
+                    min_version=min_version)
+            except KeyError:
+                # server swapped under us mid-restart (reconnect() races
+                # this loop): back off one tick and retry on the new one
+                stop.wait(0.02)
+                continue
             if not results:
+                # a shut-down server returns immediately — don't hot-spin
+                # while reconnect() is swapping in its replacement
+                stop.wait(0.005)
                 continue
             for r in results:
                 self._ingest(r)
             self.server.ack(self.trainer_id, [r.session_id for r in results])
+
+    def reconnect(self, server: RolloutServer) -> None:
+        """Reconnect-and-resume: point this trainer at a RESTARTED rollout
+        server (one rebooted from the journal of the server it replaces)
+        and keep training without losing or double-counting work.
+
+        Re-registers the trainer (idempotent — registration was journaled
+        too), then resubmits any open task the new server does not know
+        (lost in the crash's unsynced journal tail).  Everything else is
+        covered by the service's durability contract: unacked results are
+        redelivered from the replayed queue (``_ingest`` dedupes by
+        session_id), acked results never reappear, and in-flight sessions
+        were re-dispatched by the server's own replay.  The background
+        submit/consume threads pick up the new server on their next
+        iteration — no restart of the training loop required."""
+        with self._inflight_lock:
+            self.server = server
+            open_ids = list(self._open_tasks)
+        if self.tcfg.use_result_queue:
+            server.register_trainer(self.trainer_id, weight=self.tcfg.weight,
+                                    stale_policy=self.tcfg.stale_policy)
+        for task_id in open_ids:
+            try:
+                server.poll(task_id)
+            except KeyError:
+                task = self._open_requests.get(task_id)
+                if task is not None:
+                    server.submit_task(task)
 
     # -- training loop -------------------------------------------------------------
     def resume(self) -> int:

@@ -262,10 +262,10 @@ def _fake_result(sid, v=None, vmax=None):
 
 
 def _route(server, tid, *results):
-    with server._results_cv:
+    with server._lock:
         for r in results:
             server._admission.route_result(tid, r)
-        server._results_cv.notify_all()
+        server._fetch_cv(tid).notify_all()
 
 
 def test_fetch_results_min_version_queue_and_drop():
