@@ -1,0 +1,217 @@
+"""Batched multi-prompt prefill vs the per-request prefill loop (§2.3).
+
+A cold admission burst — N concurrent prompts with no cached prefix — is
+the shape every rollout restart, harness fan-out, and fresh RL step
+produces.  The per-request prefill loop pays one program dispatch AND
+(for every joining prompt) one host device-sync per request per pass;
+the batched path groups the wave by (bucket, chunk) shape and pays one
+vmapped program per group per pass plus ONE deferred readback for all
+requests joining that pass.  This benchmark drives identical cold waves
+through both modes:
+
+  per_request — Engine(prefill_batched=False): the old loop,
+  batched     — the default engine, prewarmed (``prewarm(prefill=True)``
+                AOT-compiles every reachable (bucket, chunk, pow-2 group)
+                program — the compile cost a long-lived server pays once
+                at startup, reported separately as ``prewarm_s``).
+
+``max_new=1`` by default, so a wave is PURE admission work (each request
+retires on the first token, which the prefill program samples fused) —
+joins/sec measures exactly the cost the batching removes; the decode
+tail both modes share is bench_continuous_batching's subject.  Two
+workloads: ``short`` (every prompt inside the smallest bucket — one
+chunk each, the dispatch/sync-bound shape; its speedup is the headline
+and the acceptance bar is >= 2x at 16 concurrent prompts) and ``mixed``
+(short + long prompts across buckets — on CPU the long chunks are
+compute-bound, so the grouping win narrows and power-of-two pad rows
+cost real compute; on a parallel accelerator the stacked rows ride
+together).  Both modes produce bit-identical tokens (the scheduler's
+equivalence contract, tests/test_batched_prefill.py), so every delta is
+pure dispatch/sync overhead.  Reported per workload x mode: joins/sec
+over the wave, wall time, mean/max time to first token, and the
+scheduler's prefill counters (passes, groups, chunks).
+
+    PYTHONPATH=src python -m benchmarks.bench_batched_prefill \
+        [--dry-run] [--out results/bench_batched_prefill.json]
+
+Emits a BENCH json line and writes the same record to --out; CI uploads
+it as an artifact (bench-smoke lane).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import threading
+import time
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.inference import Engine
+
+WORKLOADS = {
+    "short": (24, 40, 56, 60),      # one 64 bucket: one chunk per prompt
+    "mixed": (24, 90, 150, 60),     # crosses buckets: multi-chunk prompts
+}
+
+
+def _wave_prompts(wave: int, lens: tuple, tag: int) -> list:
+    """Deterministic mixed-length cold prompts (no shared prefix: each
+    starts from a distinct offset so the prefix cache never matches)."""
+    out = []
+    for i in range(wave):
+        n = lens[i % len(lens)]
+        lo = tag * 1000 + i * 17
+        out.append([(5 + (lo * 7 + j) % 240) for j in range(n)])
+    return out
+
+
+def _drive_wave(engine: Engine, prompts: list) -> dict:
+    """One coherent admission burst: every prompt is queued while the
+    scheduler is held at a step boundary, then the wave is released at
+    once (the whole point of the measurement is N prompts COLD AND
+    CONCURRENT — without the gate, thread-start raggedness smears the
+    wave over several boundaries and the numbers measure the OS thread
+    scheduler instead).  Returns wall time + per-request TTFT, both
+    clocked from the release."""
+    sched = engine.scheduler
+    gate = threading.Event()
+    sched.on_step_boundary = gate.wait
+    try:
+        streams = [engine.stream_ids(list(p)) for p in prompts]
+    except Exception:
+        sched.on_step_boundary = None
+        gate.set()
+        raise
+    ttft = [0.0] * len(prompts)
+    done = [None] * len(prompts)
+    errs: list = []
+    t0 = [0.0]
+
+    def one(i: int) -> None:
+        try:
+            next(iter(streams[i]))        # first delta == first token
+            ttft[i] = time.perf_counter() - t0[0]
+            done[i] = streams[i].result(timeout=300)
+        except Exception as e:  # noqa: BLE001
+            errs.append(e)
+
+    threads = [threading.Thread(target=one, args=(i,))
+               for i in range(len(prompts))]
+    for t in threads:
+        t.start()
+    t0[0] = time.perf_counter()
+    sched.on_step_boundary = None
+    gate.set()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0[0]
+    if errs:
+        raise errs[0]
+    return {"wall_s": wall, "ttft": ttft, "results": done}
+
+
+def run_mode(mode: str, workload: str, wave: int, *, max_new: int,
+             max_len: int, rounds: int) -> dict:
+    cfg = get_smoke_config("qwen3-32b").replace(vocab_size=512)
+    lens = WORKLOADS[workload]
+    engine = Engine(cfg, rng=jax.random.PRNGKey(0), max_len=max_len,
+                    max_new=max_new, block_size=16, max_batch=max(wave, 8),
+                    prefix_cache=False,   # pure cold prefill, every round
+                    prefill_batched=(mode == "batched"))
+    try:
+        # warmup: compile the step programs + (batched mode) AOT-prewarm
+        # every (bucket, chunk, group) prefill program, so the measured
+        # rounds see zero XLA compiles in either mode
+        t0 = time.perf_counter()
+        engine.scheduler.prewarm(prefill=True)
+        prewarm_s = time.perf_counter() - t0
+        _drive_wave(engine, _wave_prompts(wave, lens, tag=99))
+        base = engine.scheduler_stats()
+
+        walls, ttfts = [], []
+        for rnd in range(rounds):
+            r = _drive_wave(engine, _wave_prompts(wave, lens, tag=rnd))
+            walls.append(r["wall_s"])
+            ttfts.extend(r["ttft"])
+        st = engine.scheduler_stats()
+        joins = st["joins"] - base["joins"]
+        wall = sum(walls)
+        return {
+            "mode": mode,
+            "workload": workload,
+            "wave": wave,
+            "rounds": rounds,
+            "prewarm_s": round(prewarm_s, 3),
+            "wall_s": round(wall, 4),
+            "joins": joins,
+            "joins_per_s": round(joins / max(1e-9, wall), 2),
+            "ttft_mean_ms": round(1e3 * sum(ttfts) / max(1, len(ttfts)), 2),
+            "ttft_max_ms": round(1e3 * max(ttfts), 2),
+            "prefill_passes": st["prefill_passes"] - base["prefill_passes"],
+            "prefill_groups": st["prefill_groups"] - base["prefill_groups"],
+            "prefill_chunks": st["prefill_chunks"] - base["prefill_chunks"],
+        }
+    finally:
+        engine.close()
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry-run", action="store_true",
+                    help="CI smoke: smaller wave, fewer rounds, same shape")
+    ap.add_argument("--wave", type=int, default=None,
+                    help="concurrent cold prompts per round")
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--max-new", type=int, default=1,
+                    help="1 = pure admission (the measured subject)")
+    ap.add_argument("--out", default="results/bench_batched_prefill.json")
+    args = ap.parse_args(argv)
+
+    wave = args.wave or (4 if args.dry_run else 16)
+    rounds = args.rounds or (1 if args.dry_run else 5)
+    max_len = 256
+
+    rows: dict = {}
+    speedups: dict = {}
+    for workload in WORKLOADS:
+        rows[workload] = {}
+        for mode in ("per_request", "batched"):
+            rows[workload][mode] = run_mode(
+                mode, workload, wave, max_new=args.max_new,
+                max_len=max_len, rounds=rounds)
+            r = rows[workload][mode]
+            print(f"  {workload:5s}/{mode:11s}: {r['joins_per_s']:8.2f} "
+                  f"joins/s | ttft mean {r['ttft_mean_ms']:6.1f}ms "
+                  f"max {r['ttft_max_ms']:6.1f}ms | "
+                  f"{r['prefill_groups']:3d} groups / "
+                  f"{r['prefill_chunks']:3d} chunks | "
+                  f"wall {r['wall_s']:.3f}s")
+        speedups[workload] = round(
+            rows[workload]["batched"]["joins_per_s"]
+            / max(1e-9, rows[workload]["per_request"]["joins_per_s"]), 3)
+        print(f"  {workload:5s} joins/sec speedup {speedups[workload]:.2f}x")
+    print(f"  headline (short burst, {wave} concurrent cold prompts): "
+          f"{speedups['short']:.2f}x (bar: >= 2x at 16)")
+
+    record = {
+        "bench": "batched_prefill",
+        "dry_run": args.dry_run,
+        "params": {"wave": wave, "rounds": rounds, "max_new": args.max_new,
+                   "max_len": max_len},
+        "rows": rows,
+        "joins_per_s_speedup": speedups,
+        "headline_speedup": speedups["short"],
+    }
+    print("BENCH " + json.dumps(record))
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(record, f, indent=2)
+        print(f"  wrote {args.out}")
+    return record
+
+
+if __name__ == "__main__":
+    main()

@@ -12,6 +12,9 @@ Sections:
   bench_prefix_cache — prefix-cached vs cold prefill on a 4-turn
                        conversation workload (§2.3 prefix reuse); BENCH
                        json to results/bench_prefix_cache.json
+  bench_batched_prefill — batched multi-prompt prefill vs the per-request
+                       prefill loop on cold admission bursts (§2.3);
+                       BENCH json to results/bench_batched_prefill.json
   bench_multi_trainer — per-trainer admission fairness (4:1 weights, one
                        shared pool, §3.1 Fig. 5a); BENCH json to
                        results/bench_multi_trainer.json
@@ -68,6 +71,11 @@ def main(argv=None):
     print("== bench_prefix_cache (multi-turn conversation prefill reuse)")
     from benchmarks import bench_prefix_cache
     bench_prefix_cache.main(["--dry-run"] if args.fast else [])
+
+    print("=" * 72)
+    print("== bench_batched_prefill (cold-wave admission: batched vs loop)")
+    from benchmarks import bench_batched_prefill
+    bench_batched_prefill.main(["--dry-run"] if args.fast else [])
 
     print("=" * 72)
     print("== bench_multi_trainer (weighted-fair admission, 4:1)")

@@ -34,6 +34,8 @@ DOCSTRING_MODULES = [
     "src/repro/inference/engine.py",
     "src/repro/inference/scheduler.py",
     "src/repro/inference/paged_kv.py",
+    "src/repro/models/registry.py",
+    "src/repro/models/transformer.py",
     "src/repro/core/proxy.py",
     "src/repro/rollout/server.py",
     "src/repro/rollout/admission.py",

@@ -164,6 +164,14 @@ class CompletionStream:
         self._final = payload
         raise StopIteration
 
+    def backlog(self) -> float:
+        """Fraction of the delta queue currently sitting unconsumed
+        (0.0 = drained, →1.0 = the consumer has stopped reading).  The
+        scheduler samples this every step boundary and, past its
+        ``backpressure_hwm``, defers new joins and shrinks prefill chunks
+        instead of racing further ahead of the reader."""
+        return self._q.qsize() / max(1, self._q.maxsize)
+
     def abort(self) -> None:
         """Request mid-generation abort.  Idempotent; the final record (with
         ``finish_reason="aborted"`` unless the generation had already
@@ -231,7 +239,9 @@ class Engine:
                  block_size: int = 16, max_batch: int = 32,
                  num_blocks: Optional[int] = None, prefix_cache: bool = True,
                  prefill_chunk: int = 64,
-                 max_cached_blocks: Optional[int] = None):
+                 max_cached_blocks: Optional[int] = None,
+                 prefill_batched: bool = True,
+                 backpressure_hwm: float = 0.9):
         assert cfg.vocab_size >= tok.VOCAB_SIZE, (
             "engine models must cover the tokenizer vocab")
         self.cfg = cfg
@@ -260,7 +270,9 @@ class Engine:
                                 num_blocks=num_blocks,
                                 prefix_cache=prefix_cache,
                                 prefill_chunk=prefill_chunk,
-                                max_cached_blocks=max_cached_blocks)
+                                max_cached_blocks=max_cached_blocks,
+                                prefill_batched=prefill_batched,
+                                backpressure_hwm=backpressure_hwm)
         self.stats = {
             "requests": 0, "prompt_tokens": 0, "sampled_tokens": 0,
             # hot-swap telemetry (see update_weights)

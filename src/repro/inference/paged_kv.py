@@ -457,15 +457,18 @@ class PagedKVCache:
             return [], 0, None, 0
         return self.index.match(tokens)
 
-    def publish(self, seq_id, prompt_tokens: Sequence[int]) -> None:
+    def publish(self, seq_id, prompt_tokens: Sequence[int]) -> int:
         """Pin the sequence's *prefill-computed* full prompt blocks into the
         prefix index (decode-written blocks are never cached — their KV is
-        not bit-identical to prefill KV)."""
+        not bit-identical to prefill KV).  ``prompt_tokens`` may be a
+        *prefix* of the full prompt (speculative publish of an aborted
+        prefill's already-computed blocks).  Returns the number of newly
+        pinned blocks (0 when prefix caching is off)."""
         if self.index is None:
-            return
-        n = self.metrics["published_blocks"]
-        self.metrics["published_blocks"] = n + self.index.publish(
-            prompt_tokens, self.allocator.owned(seq_id))
+            return 0
+        pinned = self.index.publish(prompt_tokens, self.allocator.owned(seq_id))
+        self.metrics["published_blocks"] += pinned
+        return pinned
 
     def cow_into(self, seq_id, src_block: int) -> Optional[int]:
         """Copy-on-write: device-copy ``src_block`` into the sequence's first

@@ -12,13 +12,22 @@ step through a jitted batched decode over a paged KV cache:
            is copy-on-written, and only the uncached tail is allocated.
            Admission reserves the sequence's worst-case block count, so
            decode can never run out of pages mid-flight.
-  prefill— the uncached prompt suffix is computed by a fixed-size jitted
-           prefill-chunk program that writes straight into the paged pools:
+  prefill— the uncached prompt suffix is computed by fixed-size jitted
+           prefill-chunk programs that write straight into the paged pools:
            every prefilling request advances ONE chunk per loop iteration,
            interleaved with decode steps — a long cold prompt no longer
            stalls all in-flight decodes, and a warm prompt prefills only
-           its suffix.  The final chunk samples the first token off the
-           last prompt row in the same program.
+           its suffix.  Prefilling requests are BATCHED: each pass groups
+           them by (bucket, chunk) shape, pads each group to a power-of-two
+           row count, and runs ONE vmapped chunk program per group — one
+           dispatch and one all-layers pool scatter for the whole cold
+           wave, with fused batched first-token sampling off each row's
+           last prompt position.  The host reads back only the stacked
+           final-chunk outputs of requests finishing their prompt, in a
+           single deferred ``jax.device_get`` per pass (≤1 host sync per
+           pass, however many prompts join).  ``prefill_batched=False``
+           falls back to the per-request loop (one program + one sync per
+           request per pass).
   step   — one jitted ``forward_decode_paged`` + vmapped sampling advances
            every active sequence; the batch is padded to a power-of-two
            slot count so only O(log max_batch) step programs ever compile.
@@ -35,8 +44,18 @@ step through a jitted batched decode over a paged KV cache:
   abort  — a request flagged via ``abort()`` (client disconnect, straggler
            cancellation, harness deadline) is reaped at the next step
            boundary: it leaves queue/prefill/batch, frees its KV blocks
-           immediately (no publish of an incomplete chain), and resolves
-           with ``finish_reason="aborted"`` carrying the partial output.
+           immediately, and resolves with ``finish_reason="aborted"``
+           carrying the partial output.  A prefill aborted mid-prompt
+           first publishes its already-computed FULL prompt blocks
+           (speculative prefix publish) — the work is valid prefill KV, so
+           a long aborted prompt warms the cache for its successor instead
+           of being discarded.
+
+Backpressure: when an attached delta stream's consumer lags (its bounded
+queue fills past ``backpressure_hwm``), the scheduler defers new joins and
+halves the effective prefill chunk until the consumer drains — sampled
+tokens are never dropped (queues are sized to the request budget), this
+only stops the scheduler racing further ahead of slow readers.
 
 Determinism contract: per-request RNG keys are split off the engine RNG at
 *submission* (same order ⇒ same keys as serial ``generate_ids`` calls),
@@ -70,6 +89,38 @@ import numpy as np
 from repro.core import tokenizer as tok
 from repro.inference.paged_kv import PagedKVCache, cdiv
 from repro.models import registry as M
+
+
+def pow2_group(n: int) -> int:
+    """Smallest power of two >= n (the padded group/batch row count) —
+    grouping shapes to powers of two bounds the number of compiled batched
+    programs at O(log max_batch) per (bucket, chunk) pair."""
+    g = 1
+    while g < max(1, n):
+        g *= 2
+    return g
+
+
+def assemble_prefill_groups(reqs, prefill_chunk: int):
+    """Group prefilling requests by (bucket, chunk) program shape.
+
+    ``reqs`` is the prefill queue in FIFO order; each element only needs a
+    ``.bucket`` attribute.  The chunk size is ``min(prefill_chunk, bucket)``
+    — the same per-request rule the serial path uses, so a request computes
+    identical chunk boundaries whichever path runs it.  Returns
+    ``[((bucket, chunk), [reqs...]), ...]`` with groups ordered by first
+    appearance and members in FIFO order (admission order == sampling-key
+    order stays intact).  Pure host-side function — property-tested over
+    arbitrary bucket mixes in tests/test_batched_prefill.py."""
+    groups: Dict[Tuple[int, int], List[Any]] = {}
+    order: List[Tuple[int, int]] = []
+    for r in reqs:
+        key = (r.bucket, min(prefill_chunk, r.bucket))
+        if key not in groups:
+            groups[key] = []
+            order.append(key)
+        groups[key].append(r)
+    return [(key, groups[key]) for key in order]
 
 
 @dataclass
@@ -127,7 +178,9 @@ class ContinuousBatchingScheduler:
     def __init__(self, engine, *, block_size: int = 16, max_batch: int = 32,
                  num_blocks: Optional[int] = None, prefix_cache: bool = True,
                  prefill_chunk: int = 64,
-                 max_cached_blocks: Optional[int] = None):
+                 max_cached_blocks: Optional[int] = None,
+                 prefill_batched: bool = True,
+                 backpressure_hwm: float = 0.9):
         assert M.supports_paged_decode(engine.cfg), (
             engine.cfg.family, "has no paged decode path")
         assert M.supports_chunked_prefill(engine.cfg), (
@@ -138,6 +191,14 @@ class ContinuousBatchingScheduler:
         self.prefix_cache = prefix_cache
         self.prefill_chunk = max(1, prefill_chunk)
         self.max_cached_blocks = max_cached_blocks
+        # batched multi-prompt prefill: one program per (bucket, chunk)
+        # group per pass; families without the batched forward fall back to
+        # the per-request loop
+        self.prefill_batched = (prefill_batched
+                                and M.supports_batched_prefill(engine.cfg))
+        # stream-lag high-water mark in [0, 1] (fraction of a delta queue's
+        # capacity); <= 0 disables backpressure entirely
+        self.backpressure_hwm = backpressure_hwm
         mbs = cdiv(engine.max_len, block_size)
         self.num_blocks = num_blocks or 1 + max_batch * mbs
         self.cache = self._new_cache()
@@ -149,18 +210,35 @@ class ContinuousBatchingScheduler:
         self._stop = threading.Event()
         self._seq_ids = itertools.count()
         self._chunk_cache: Dict[Tuple[int, int], Any] = {}
+        self._bchunk_cache: Dict[Tuple[int, int, int], Any] = {}
         self._step_cache: Dict[int, Any] = {}
         self._swap_fn = None            # jitted donating param swap (lazy)
         self._zero_key = jax.random.PRNGKey(0)
+        # the one host-sync point of a batched prefill pass — an instance
+        # attribute so the ≤1-sync-per-pass regression test can wrap it
+        # with a counting spy
+        self._readback = jax.device_get
+        self._backpressured = False
         # test/bench hook: called on the scheduler thread at the top of
         # every loop iteration (the step boundary), before staged weight
         # swaps are applied — a deterministic place to trigger one
         self.on_step_boundary = None
-        self.metrics: Dict[str, int] = {
+        self.metrics: Dict[str, Any] = {
             "submitted": 0, "completed": 0, "joins": 0, "leaves": 0,
             "steps": 0, "step_slots": 0, "step_active": 0, "peak_batch": 0,
             "prefill_chunks": 0, "prefill_tokens": 0, "errors": 0,
             "aborts": 0, "decode_steps_reclaimed": 0, "weight_swaps": 0,
+            # batched prefill: passes = loop iterations that ran prefill,
+            # groups = batched programs dispatched (chunks still counts
+            # per-request chunk computations, as in the serial path)
+            "prefill_passes": 0, "prefill_groups": 0,
+            # stream backpressure: worst observed delta-queue fill fraction,
+            # boundaries where joins were deferred, chunks computed at the
+            # halved size
+            "stream_backlog_peak": 0.0, "backpressure_deferrals": 0,
+            "prefill_chunks_shrunk": 0,
+            # full prompt blocks salvaged from aborted prefills
+            "speculative_published_blocks": 0,
         }
         self._thread = threading.Thread(
             target=self._loop, name="cbatch-scheduler", daemon=True)
@@ -214,32 +292,55 @@ class ContinuousBatchingScheduler:
         out["in_flight"] = len(self._active) + len(self._prefilling)
         return out
 
-    def prewarm(self) -> int:
+    def prewarm(self, prefill: bool = False) -> int:
         """AOT-compile every power-of-two batched step program (there are
         only O(log max_batch) of them) so no serving-path call ever eats an
-        XLA compile mid-flight.  Benchmarks call this from their warmup
-        phase; long-lived servers can call it at startup.  Returns the
-        number of programs compiled."""
+        XLA compile mid-flight.  With ``prefill=True`` also compiles the
+        batched prefill-chunk programs for every reachable (prompt bucket,
+        chunk, power-of-two group) shape — O(buckets · log max_batch) extra
+        programs, so opt-in: benchmarks and long-lived servers pay it once
+        at startup, short tests skip it.  Returns the number of programs
+        compiled."""
         with self.engine._lock:
             params = self.engine.params
         pshape = jax.tree.map(
             lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params)
         kv = jax.ShapeDtypeStruct(self.cache.kp.shape, self.cache.kp.dtype)
         maxnb = self.cache.max_blocks_per_seq
-        top = 1
-        while top < max(1, self.max_batch):
-            top *= 2        # _step_once rounds n UP to a power of two, so a
-        #                     non-pow2 max_batch still reaches the next one
+        i32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)  # noqa: E731
+        key = lambda *s: jax.ShapeDtypeStruct((*s, 2), jnp.uint32)  # noqa: E731
+        top = pow2_group(self.max_batch)
+        #     _step_once rounds n UP to a power of two, so a non-pow2
+        #     max_batch still reaches the next one
         n, Bb = 0, 1
         while Bb <= top:
             if Bb not in self._step_cache:
                 fn = self._make_step(Bb)
-                i32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)  # noqa: E731
                 self._step_cache[Bb] = fn.lower(
                     pshape, kv, kv, i32(Bb), i32(Bb), i32(Bb, maxnb),
-                    jax.ShapeDtypeStruct((Bb, 2), jnp.uint32)).compile()
+                    key(Bb)).compile()
                 n += 1
             Bb *= 2
+        if not (prefill and self.prefill_batched):
+            return n
+        eng = self.engine
+        buckets = sorted({eng._prompt_bucket(1, eng.max_new),
+                          eng._prompt_bucket(min(256, eng.max_len - eng.max_new),
+                                             eng.max_new),
+                          eng._prompt_bucket(eng.max_len - eng.max_new,
+                                             eng.max_new)})
+        for bucket in buckets:
+            csz = min(self.prefill_chunk, bucket)
+            Gb = 1
+            while Gb <= top:
+                ck = (bucket, csz, Gb)
+                if ck not in self._bchunk_cache:
+                    fn = self._make_batched_chunk(bucket, csz, Gb)
+                    self._bchunk_cache[ck] = fn.lower(
+                        pshape, kv, kv, i32(Gb, csz), i32(Gb), i32(Gb),
+                        i32(Gb, maxnb), key(Gb)).compile()
+                    n += 1
+                Gb *= 2
         return n
 
     def abort(self, req: SchedRequest) -> None:
@@ -272,7 +373,18 @@ class ContinuousBatchingScheduler:
                 # reap BEFORE admit: pages an abort frees this boundary are
                 # available to the very next admission
                 self._reap_aborted()
-                self._admit_pending()
+                # stream backpressure: when a consumer lags (its bounded
+                # delta queue fills past the high-water mark), defer new
+                # joins and shrink prefill chunks until it drains — the
+                # scheduler stops racing ahead of readers, never drops
+                self._update_backpressure()
+                if self._backpressured:
+                    with self._qlock:
+                        waiting = bool(self._queue)
+                    if waiting:
+                        self.metrics["backpressure_deferrals"] += 1
+                else:
+                    self._admit_pending()
                 if not self._active and not self._prefilling:
                     self._wake.wait(timeout=0.05)
                     self._wake.clear()
@@ -371,8 +483,13 @@ class ContinuousBatchingScheduler:
         """Remove abort-flagged requests from every stage.  Runs at the step
         boundary (top of the loop), so an abort frees the request's KV
         blocks before the next decode step and its slot never pads another
-        batch.  Aborted prefills are NOT published to the prefix index —
-        their block chain is incomplete."""
+        batch.  A prefill aborted mid-prompt first publishes its already-
+        computed FULL prompt blocks (speculative prefix publish): chunk
+        passes complete before the boundary, so every position below
+        ``prefill_pos`` holds valid prefill KV — cached-prefix shares, CoW
+        copies completed past their block boundary, and freshly-computed
+        chunks alike — and ``publish`` only ever pins whole blocks below
+        it, so no partially-written block can leak into the index."""
         with self._qlock:
             dropped = [r for r in self._queue if r.aborted.is_set()]
             for r in dropped:
@@ -388,6 +505,10 @@ class ContinuousBatchingScheduler:
                 self.metrics["aborts"] += 1
                 self.metrics["decode_steps_reclaimed"] += (
                     r.max_new - len(r.out_ids))
+                if stage is self._prefilling and r.prefill_pos >= self.block_size:
+                    self.metrics["speculative_published_blocks"] += (
+                        self.cache.publish(
+                            r.seq_id, r.prompt_ids[:r.prefill_pos]))
                 self._retire(r, finish="aborted")
 
     # -- join: prefix match + admission --------------------------------------
@@ -436,15 +557,120 @@ class ContinuousBatchingScheduler:
                 cm["prefix_hits"] += 1
                 cm["prefix_tokens_saved"] += matched
 
+    # -- stream backpressure --------------------------------------------------
+    def _update_backpressure(self) -> None:
+        """Sample the worst delta-queue fill fraction across in-flight
+        streamed requests into the metrics and latch ``_backpressured``
+        (hysteresis-free: re-evaluated every boundary, and an empty
+        in-flight set always reads 0.0 — deferral can never deadlock)."""
+        worst = 0.0
+        for r in itertools.chain(self._prefilling, self._active):
+            if r.stream is not None:
+                b = r.stream.backlog()
+                if b > worst:
+                    worst = b
+        if worst > self.metrics["stream_backlog_peak"]:
+            self.metrics["stream_backlog_peak"] = round(worst, 4)
+        self._backpressured = (self.backpressure_hwm > 0
+                               and worst >= self.backpressure_hwm)
+
+    def _effective_chunk(self) -> int:
+        """Prefill chunk size for this pass: halved (floored at one block)
+        while a stream consumer lags.  Chunk-size changes are bit-safe —
+        chunk boundaries never affect sampled values, only how the prompt
+        work is sliced (the chunked-vs-one-shot equivalence tests run at
+        several sizes)."""
+        if self._backpressured:
+            return max(self.block_size, self.prefill_chunk // 2)
+        return self.prefill_chunk
+
     # -- prefill: fixed-size chunks inside the step loop ----------------------
     def _prefill_step(self) -> None:
+        if self.prefill_batched:
+            self._prefill_step_batched()
+            return
         for req in list(self._prefilling):   # FIFO: one chunk each per pass
             self._prefill_chunk_once(req)
+
+    def _prefill_step_batched(self) -> None:
+        """One batched prefill pass: every prefilling request advances one
+        chunk, via ONE vmapped program per (bucket, chunk) group (padded to
+        a power-of-two row count) and ONE deferred host readback for all
+        requests finishing their prompt this pass — admission cost per pass
+        is O(groups) dispatches + ≤1 sync, not O(requests) of each."""
+        if not self._prefilling:
+            return      # decode-only iteration: not a prefill pass
+        eng = self.engine
+        maxnb = self.cache.max_blocks_per_seq
+        eff = self._effective_chunk()
+        groups = assemble_prefill_groups(list(self._prefilling), eff)
+        self.metrics["prefill_passes"] += 1
+        if eff != self.prefill_chunk:
+            self.metrics["prefill_chunks_shrunk"] += len(self._prefilling)
+        pending: List[Tuple[List[SchedRequest], List[int], Any, Any, Any, int]] = []
+        for (bucket, csz), reqs in groups:
+            n = len(reqs)
+            Gb = pow2_group(n)
+            fn = self._bchunk_cache.get((bucket, csz, Gb))
+            if fn is None:
+                fn = self._make_batched_chunk(bucket, csz, Gb)
+                self._bchunk_cache[(bucket, csz, Gb)] = fn
+            tokens = np.zeros((Gb, csz), np.int32)
+            starts = np.zeros((Gb,), np.int32)
+            plens = np.zeros((Gb,), np.int32)
+            bts = np.zeros((Gb, maxnb), np.int32)
+            keys = []
+            for i, r in enumerate(reqs):
+                start = r.prefill_pos
+                seg = r.prompt_ids[start:start + csz]
+                tokens[i, :len(seg)] = seg
+                starts[i] = start
+                plens[i] = len(r.prompt_ids)
+                bts[i] = self.cache.block_table_row(r.seq_id)
+                keys.append(r.key)
+            # pad rows: plen 0 ⇒ every write diverted to the trash block,
+            # trash block tables ⇒ gathered context is masked garbage, zero
+            # key ⇒ the sampled token is ignored (host never reads pad rows)
+            keys.extend([self._zero_key] * (Gb - n))
+            with eng._lock:
+                # read params + the version they carry under ONE lock hold,
+                # so stamps stay truthful across a staged swap window
+                params = eng.params
+                pv = eng._applied_version
+            self.cache.kp, self.cache.vp, toks, lps, rngs2 = fn(
+                params, self.cache.kp, self.cache.vp, jnp.asarray(tokens),
+                jnp.asarray(starts), jnp.asarray(plens), jnp.asarray(bts),
+                jnp.stack(keys))
+            self.metrics["prefill_groups"] += 1
+            self.metrics["prefill_chunks"] += n
+            finishing: List[int] = []
+            for i, r in enumerate(reqs):
+                computed = min(csz, len(r.prompt_ids) - r.prefill_pos)
+                r.prefill_pos += computed
+                self.metrics["prefill_tokens"] += computed
+                if r.prefill_pos >= len(r.prompt_ids):
+                    finishing.append(i)
+            if finishing:
+                pending.append((reqs, finishing, toks, lps, rngs2, pv))
+        if not pending:
+            return      # nobody finished a prompt: zero host syncs this pass
+        # ONE deferred device readback for the whole pass — the stacked
+        # final-chunk outputs of every group with finishing requests ([Gb]
+        # tokens + [Gb] log-probs per group, indexed host-side: a device-
+        # side gather would re-trace per finisher-count for no transfer
+        # win).  May raise: the finishing requests are still in
+        # _prefilling, so _fail_all can resolve them.
+        fetch = [(toks, lps) for (_, _, toks, lps, _, _) in pending]
+        host = self._readback(fetch)
+        for (reqs, idx, _, _, rngs2, pv), (h_toks, h_lps) in zip(pending, host):
+            for i in idx:
+                self._finish_prefill(reqs[i], int(h_toks[i]),
+                                     float(h_lps[i]), rngs2[i], pv)
 
     def _prefill_chunk_once(self, req: SchedRequest) -> None:
         eng = self.engine
         plen = len(req.prompt_ids)
-        csz = min(self.prefill_chunk, req.bucket)
+        csz = min(self._effective_chunk(), req.bucket)
         fn = self._chunk_cache.get((req.bucket, csz))
         if fn is None:
             fn = self._make_chunk(req.bucket, csz)
@@ -465,21 +691,31 @@ class ContinuousBatchingScheduler:
         computed = min(csz, plen - start)
         req.prefill_pos = start + computed
         self.metrics["prefill_chunks"] += 1
+        if csz != self.prefill_chunk and self._backpressured:
+            self.metrics["prefill_chunks_shrunk"] += 1
         self.metrics["prefill_tokens"] += computed
         if req.prefill_pos < plen:
             return        # more chunks next iterations (the sampled token
         #                   is garbage until the last prompt row exists —
         #                   the host only reads it off the final chunk)
+        t = int(tok0)     # device sync — may raise; until the request is
+        #                   removed in _finish_prefill, _fail_all can still
+        #                   resolve it
+        self._finish_prefill(req, t, float(lp0), rng, pv)
+
+    def _finish_prefill(self, req: SchedRequest, t: int, lp: float,
+                        rng, pv: int) -> None:
+        """Join tail shared by the batched and per-request prefill paths:
+        publish the prompt blocks, record/emit the fused first token, and
+        move the request into the decode batch (or retire it)."""
         # publish BEFORE any retire: only prefill-computed prompt blocks are
         # cacheable (decode KV is not bit-identical to prefill KV)
         self.cache.publish(req.seq_id, req.prompt_ids)
         req.rng = rng
-        t = int(tok0)     # device sync — may raise; until the request is
-        #                   removed below, _fail_all can still resolve it
         req.out_ids.append(t)
-        req.out_lps.append(float(lp0))
+        req.out_lps.append(lp)
         req.stamp(pv)
-        req.emit(t, float(lp0))   # first delta: TTFT == prefill, not EOS
+        req.emit(t, lp)   # first delta: TTFT == prefill, not EOS
         req.last_token = t
         self.metrics["joins"] += 1
         self._prefilling.remove(req)
@@ -514,6 +750,42 @@ class ContinuousBatchingScheduler:
             logits = sample_logits_rows(cfg, params, row)
             nxt, lp = jax.vmap(sample)(logits, k1[None])
             return pools["k"], pools["v"], nxt[0], lp[0], rng
+
+        return jax.jit(chunk, donate_argnums=(1, 2))
+
+    def _make_batched_chunk(self, bucket: int, csz: int, Gb: int):
+        """Build the jitted batched chunk program for a (bucket, chunk,
+        group) shape: one ``prefill_chunk_paged_batched`` forward over Gb
+        stacked requests + fused batched first-token sampling off each
+        row's last prompt position.  The sampling chain (barriered head →
+        per-row split → sample, vmapped) is the same lowering as the decode
+        step's, so every row is bit-identical to the per-request program."""
+        from repro.inference.engine import sample_logits_rows, sample_token
+        eng = self.engine
+        cfg = eng.cfg
+        sample = partial(sample_token, temperature=eng.temperature,
+                         top_k=eng.top_k)
+
+        def chunk(params, kp, vp, tokens, starts, plens, bts, keys):
+            hidden, pools = M.prefill_chunk_paged_batched(
+                cfg, params, {"k": kp, "v": vp},
+                {"tokens": tokens, "starts": starts, "plens": plens,
+                 "block_tables": bts}, bucket)
+            # each row's last prompt position (garbage on non-final chunks
+            # and pad rows — the host only reads finishing requests' rows)
+            rows = jax.vmap(
+                lambda h, s, p: jax.lax.dynamic_slice_in_dim(
+                    h, jnp.clip(p - 1 - s, 0, csz - 1), 1, axis=0)[0]
+            )(hidden, starts, plens)
+            logits = sample_logits_rows(cfg, params, rows)
+
+            def samp(lg, r):
+                r2, k1 = jax.random.split(r)
+                nxt, lp = sample(lg, k1)
+                return nxt, lp, r2
+
+            nxt, lp, r2 = jax.vmap(samp)(logits, keys)
+            return pools["k"], pools["v"], nxt, lp, r2
 
         return jax.jit(chunk, donate_argnums=(1, 2))
 

@@ -145,6 +145,48 @@ def paged_prefill_attention(q, k_pool, v_pool, block_table, idx_q, *,
                      window=window, impl=impl)
 
 
+def paged_prefill_attention_batched(q, k_pool, v_pool, block_tables, idx_q, *,
+                                    ctx_len: int, window=0, k_new=None,
+                                    v_new=None, starts=None,
+                                    impl: Optional[str] = None):
+    """Chunked-prefill attention for a GROUP of independent sequences over a
+    PAGED KV cache (the batched multi-prompt prefill step).  q [G, C, H, D]
+    stacks one chunk per sequence; block_tables [G, maxnb] i32 names each
+    sequence's pages; idx_q [G, C] i32 holds per-row absolute positions;
+    ``k_new``/``v_new`` [G, C, Hkv, D] are each chunk's freshly-projected
+    kv, overlaid onto its gathered context at ``starts`` [G] i32.
+    ``ctx_len`` (static) is the shared prompt bucket — grouping is by
+    (bucket, chunk) so every row reduces over the same context shape.
+
+    The per-sequence gather + overlay are vmapped ``ref.gather_kv_pages`` /
+    ``ref.overlay_chunk`` (pure data movement — no values change), and the
+    reduction dispatches through the same ``attention`` entrypoint the
+    per-request chunk path uses, just at B=G instead of B=1.  Every
+    batched-vs-serial einsum on this stack is row-independent (the decode
+    step already relies on this at its power-of-two batch shapes), so each
+    row of the group is bit-identical to a lone ``paged_prefill_attention``
+    call — the property tests/test_batched_prefill.py enforces.
+    ``impl='xla_naive'`` short-circuits to the vmapped gather oracle."""
+    impl = impl or _default_impl()
+    if impl == "xla_naive":
+        return REF.paged_prefill_attention_batched_reference(
+            q, k_pool, v_pool, block_tables, idx_q, ctx_len=ctx_len,
+            window=window, k_new=k_new, v_new=v_new, starts=starts)
+    k = jax.vmap(lambda bt: REF.gather_kv_pages(k_pool, bt, ctx_len)
+                 )(block_tables)
+    v = jax.vmap(lambda bt: REF.gather_kv_pages(v_pool, bt, ctx_len)
+                 )(block_tables)
+    if k_new is not None:
+        k = jax.vmap(REF.overlay_chunk)(k, k_new, starts)
+        v = jax.vmap(REF.overlay_chunk)(v, v_new, starts)
+    G = q.shape[0]
+    idx_kv = jnp.broadcast_to(
+        jnp.arange(ctx_len, dtype=jnp.int32)[None], (G, ctx_len))
+    return attention(q, k.astype(q.dtype), v.astype(q.dtype),
+                     idx_q=idx_q, idx_kv=idx_kv, causal=True,
+                     window=window, impl=impl)
+
+
 # ---------------------------------------------------------------------------
 # Mamba-2 SSD
 # ---------------------------------------------------------------------------

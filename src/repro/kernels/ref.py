@@ -164,6 +164,34 @@ def paged_prefill_attention_reference(q, k_pool, v_pool, block_table, idx_q,
     return out.reshape(1, C, H, D).astype(q.dtype)
 
 
+def paged_prefill_attention_batched_reference(q, k_pool, v_pool, block_tables,
+                                              idx_q, *, ctx_len: int,
+                                              window=0, k_new=None,
+                                              v_new=None, starts=None,
+                                              scale: Optional[float] = None):
+    """Batched chunked-prefill attention over paged KV — the pure-jnp oracle
+    for the multi-prompt prefill step (one chunk of G *independent*
+    sequences per call).
+
+    q [G, C, H, D]; k_pool/v_pool [NB, bs, Hkv, D] (shared pools);
+    block_tables [G, maxnb] i32 (each sequence's pages, trash-padded);
+    idx_q [G, C] i32 absolute positions; k_new/v_new [G, C, Hkv, D] fresh
+    chunk kv overlaid at ``starts`` [G] i32.  Defined as a vmap of the
+    single-sequence oracle so the batched program is, by construction,
+    per-row identical to running ``paged_prefill_attention_reference`` G
+    times.  Returns [G, C, H, D]."""
+    def one(qr, bt, iq, kn, vn, st):
+        return paged_prefill_attention_reference(
+            qr[None], k_pool, v_pool, bt, iq, ctx_len=ctx_len, window=window,
+            k_new=None if kn is None else kn[None],
+            v_new=None if vn is None else vn[None],
+            start=st, scale=scale)[0]
+    if k_new is None:
+        return jax.vmap(lambda qr, bt, iq: one(qr, bt, iq, None, None, None)
+                        )(q, block_tables, idx_q)
+    return jax.vmap(one)(q, block_tables, idx_q, k_new, v_new, starts)
+
+
 # ---------------------------------------------------------------------------
 # SSD (Mamba-2 state-space duality)
 # ---------------------------------------------------------------------------

@@ -340,6 +340,35 @@ def paged_prefill_attention_block(cfg: ModelConfig, p: Params, x, sin, cos,
     return jnp.einsum("blhk,hkd->bld", out, p["wo"].astype(x.dtype))
 
 
+def paged_prefill_attention_block_batched(cfg: ModelConfig, p: Params, x,
+                                          sin, cos, k_pool, v_pool,
+                                          block_tables, idx_q, k_new, v_new,
+                                          starts, *, ctx_len: int, window=0):
+    """Chunk-of-prompt attention for a GROUP of independent sequences over a
+    PAGED KV cache (batched multi-prompt prefill).  x [G,C,d] stacks one
+    chunk per sequence; block_tables [G,maxnb]; idx_q [G,C] per-row
+    absolute positions; ``k_new``/``v_new`` [G,C,Hkv,D] fresh chunk kv
+    overlaid at ``starts`` [G]; ``ctx_len`` = the shared prompt bucket
+    (static).  The q path is the SAME einsum chain as
+    ``paged_prefill_attention_block`` — just at a leading batch of G rows
+    instead of 1 — and every op in it is row-independent, so each group row
+    stays bit-identical to a lone per-request chunk call (the same
+    batch-shape invariance the pow-2-padded decode step already relies on)."""
+    from repro.kernels import ops as OPS
+    q = jnp.einsum("bld,dhk->blhk", x, p["wq"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+    rotary_dim = cfg.head_dim // 2 if cfg.rope_style == "half" else cfg.head_dim
+    if sin is not None:
+        q = apply_rotary(q, sin, cos, rotary_dim)
+    out = OPS.paged_prefill_attention_batched(
+        q, k_pool.astype(x.dtype), v_pool.astype(x.dtype),
+        block_tables, idx_q.astype(jnp.int32), ctx_len=ctx_len, window=window,
+        k_new=k_new.astype(x.dtype), v_new=v_new.astype(x.dtype),
+        starts=starts)
+    return jnp.einsum("blhk,hkd->bld", out, p["wo"].astype(x.dtype))
+
+
 def project_kv(cfg: ModelConfig, p: Params, x, sin, cos):
     """k/v projection + rope only (decode: project the new token's kv)."""
     k = jnp.einsum("bld,dhk->blhk", x, p["wk"].astype(x.dtype))

@@ -31,30 +31,37 @@ _FAMILY = {
 
 
 def get_model(cfg: ModelConfig):
+    """Resolve the family module implementing ``cfg`` (see module header)."""
     return _FAMILY[cfg.family]
 
 
 def init_params(cfg: ModelConfig, rng):
+    """Initialise a params pytree for ``cfg`` (family-dispatched)."""
     return get_model(cfg).init_params(cfg, rng)
 
 
 def forward_train(cfg: ModelConfig, params, batch, remat: str = "full"):
+    """Training forward: (hidden [B,L,d], aux scalar), family-dispatched."""
     return get_model(cfg).forward_train(cfg, params, batch, remat)
 
 
 def init_decode_cache(cfg: ModelConfig, batch_size: int, max_len: int, dtype=None):
+    """Allocate the per-family decode cache pytree (contiguous KV/state)."""
     return get_model(cfg).init_decode_cache(cfg, batch_size, max_len, dtype)
 
 
 def forward_decode(cfg: ModelConfig, params, cache, batch):
+    """One decode step over the contiguous cache: (hidden [B,1,d], cache)."""
     return get_model(cfg).forward_decode(cfg, params, cache, batch)
 
 
 def supports_paged_decode(cfg: ModelConfig) -> bool:
+    """True when the family can decode over a paged KV pool (transformers)."""
     return hasattr(get_model(cfg), "forward_decode_paged")
 
 
 def supports_chunked_prefill(cfg: ModelConfig) -> bool:
+    """True when the family has the in-loop chunked prefill path."""
     return hasattr(get_model(cfg), "prefill_chunk_paged")
 
 
@@ -66,6 +73,25 @@ def prefill_chunk_paged(cfg: ModelConfig, params, pools, batch, ctx_len: int):
         raise NotImplementedError(
             f"family {cfg.family!r} has no chunked prefill path")
     return model.prefill_chunk_paged(cfg, params, pools, batch, ctx_len)
+
+
+def supports_batched_prefill(cfg: ModelConfig) -> bool:
+    """True when the family has the batched multi-prompt prefill step (one
+    program per (bucket, chunk) group of prefilling sequences)."""
+    return hasattr(get_model(cfg), "prefill_chunk_paged_batched")
+
+
+def prefill_chunk_paged_batched(cfg: ModelConfig, params, pools, batch,
+                                ctx_len: int):
+    """One in-loop prefill chunk for a GROUP of independent sequences over
+    paged KV (batched multi-prompt prefill); transformer families only —
+    bit-identical per row to ``prefill_chunk_paged``."""
+    model = get_model(cfg)
+    if not hasattr(model, "prefill_chunk_paged_batched"):
+        raise NotImplementedError(
+            f"family {cfg.family!r} has no batched chunked prefill path")
+    return model.prefill_chunk_paged_batched(cfg, params, pools, batch,
+                                             ctx_len)
 
 
 def forward_decode_paged(cfg: ModelConfig, params, pools, batch):
@@ -85,6 +111,7 @@ def forward_decode_paged(cfg: ModelConfig, params, pools, batch):
 # ---------------------------------------------------------------------------
 
 def make_train_batch(cfg: ModelConfig, batch_size: int, seq_len: int, rng=None):
+    """Random training batch with every family-specific key populated."""
     import jax
     rng = rng if rng is not None else jax.random.PRNGKey(0)
     ks = jax.random.split(rng, 3)
@@ -107,6 +134,7 @@ def make_train_batch(cfg: ModelConfig, batch_size: int, seq_len: int, rng=None):
 
 
 def make_decode_batch(cfg: ModelConfig, batch_size: int, cache_len: int, rng=None):
+    """Random one-token decode batch at ``cache_len`` context."""
     import jax
     rng = rng if rng is not None else jax.random.PRNGKey(1)
     tokens = jax.random.randint(rng, (batch_size, 1), 0, cfg.vocab_size, jnp.int32)

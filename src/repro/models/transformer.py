@@ -53,6 +53,8 @@ def _stack(trees):
 
 
 def init_params(cfg: ModelConfig, rng) -> Dict[str, Any]:
+    """Initialize the transformer parameter pytree: embed table, scan-stacked
+    layer params (grouped when ``moe_every > 1``), and the final norm."""
     k_embed, k_layers, k_final = jax.random.split(rng, 3)
     layer_keys = jax.random.split(k_layers, cfg.num_layers)
     if cfg.num_experts and cfg.moe_every > 1:
@@ -288,6 +290,8 @@ def forward_train(cfg: ModelConfig, params, batch, remat: str = "full"):
 # ---------------------------------------------------------------------------
 
 def init_decode_cache(cfg: ModelConfig, batch_size: int, max_len: int, dtype=None):
+    """Zero-filled contiguous KV cache {"k","v"} [L, B, max_len, Hkv, D] for
+    the one-shot decode path (the paged pools live in PagedKVCache)."""
     dtype = dtype or C.dt(cfg)
     shape = (cfg.num_layers, batch_size, max_len, cfg.num_kv_heads, cfg.head_dim)
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
@@ -603,6 +607,120 @@ def prefill_chunk_paged(cfg: ModelConfig, params, pools, batch, ctx_len: int):
 
     # ONE scatter for the whole chunk: ks/vs [L, C, Hkv, D] land at each
     # position's (page, slot) across every layer at once
+    new_pools = {"k": pools["k"].at[:, blk, slot].set(ks),
+                 "v": pools["v"].at[:, blk, slot].set(vs)}
+    x = C.apply_norm(cfg, params["final_norm"], x)
+    return x, new_pools
+
+
+# ---------------------------------------------------------------------------
+# batched chunked prefill (continuous batching: one fixed-size chunk of
+# SEVERAL independent sequences' prompts per call — the whole cold wave costs
+# one program dispatch per (bucket, chunk) group instead of one per prompt)
+# ---------------------------------------------------------------------------
+
+def prefill_chunk_paged_batched(cfg: ModelConfig, params, pools, batch,
+                                ctx_len: int):
+    """One prefill chunk for a GROUP of G independent sequences over paged
+    KV — the batched multi-prompt prefill step.  The scheduler stacks every
+    prefilling request of the same (bucket, chunk) shape into one call, so
+    a wave of cold prompts costs ONE dispatch and ONE all-layers pool
+    scatter per group per step instead of one of each per prompt.
+
+    pools: {"k": [L, NB, bs, Hkv, D], "v": ...} shared block pools.
+    batch: tokens [G, C] i32 (one chunk per sequence, zero-padded past each
+    prompt AND across padded group rows), starts [G] i32 (absolute position
+    of each row 0), plens [G] i32 (true prompt lengths — pad rows' kv, and
+    whole pad sequences with plen 0, divert to the trash block), and
+    block_tables [G, maxnb] i32 (trash-padded per-sequence page lists).
+    ctx_len: STATIC shared prompt bucket.
+
+    Returns (hidden [G, C, d] post-final-norm, new pools).  Per-row
+    arithmetic is identical to ``prefill_chunk_paged`` at G=1: the layer
+    body is the same einsum chain over a leading axis of G instead of 1,
+    attention gathers/overlays per sequence before one B=G reduction
+    (``kernels.ops.paged_prefill_attention_batched``), and requests never
+    read each other's pages within a pass — context pages were written in
+    PREVIOUS passes, fresh chunk kv is overlaid in-register, and the single
+    cross-request scatter happens after all layers (colliding trash-block
+    writes are garbage nobody reads unmasked).  That row independence is
+    what keeps batched admissions bit-identical to the per-request path —
+    and therefore to one-shot ``generate_ids``
+    (tests/test_batched_prefill.py)."""
+    from repro.inference.paged_kv import TRASH_BLOCK
+    tokens, starts, plens = batch["tokens"], batch["starts"], batch["plens"]
+    bts = batch["block_tables"].astype(jnp.int32)
+    bs = pools["k"].shape[2]
+    maxnb = bts.shape[1]
+    Gq, Cn = tokens.shape
+    x = C.embed_tokens(cfg, params["embed"], tokens)
+
+    abs_pos = starts[:, None] + jnp.arange(Cn, dtype=jnp.int32)[None]  # [G,C]
+    pos = abs_pos
+    if cfg.rope_style == "mrope":
+        pos = jnp.broadcast_to(pos[..., None], (Gq, Cn, 3))
+    tables = _rope_tables(cfg, pos)
+    flags = layer_flags(cfg)
+
+    # write mapping: real rows land in their own sequence's page, pad rows
+    # (prompt tail AND whole padded group slots) in the trash block
+    blk = jnp.where(abs_pos < plens[:, None],
+                    jnp.take_along_axis(
+                        bts, jnp.clip(abs_pos // bs, 0, maxnb - 1), axis=1),
+                    TRASH_BLOCK)
+    slot = abs_pos % bs
+    dtype = C.dt(cfg)
+
+    def chunk_layer(x, lp, pk, pv, is_global):
+        # pools READ-ONLY here, exactly as in prefill_chunk_paged: one
+        # scatter for the whole group after all layers
+        sin, cos = _select_rope(tables, is_global)
+        h = C.apply_norm(cfg, lp["ln1"], x)
+        k_new, v_new = C.project_kv(cfg, lp["attn"], h, sin, cos)
+        attn = C.paged_prefill_attention_block_batched(
+            cfg, lp["attn"], h, sin, cos, pk, pv, bts, abs_pos,
+            k_new, v_new, starts,
+            ctx_len=ctx_len, window=_layer_window(cfg, is_global))
+        x = x + attn
+        h = C.apply_norm(cfg, lp["ln2"], x)
+        if "moe" in lp:
+            y, _ = C.moe_block(cfg, lp["moe"], h)
+        else:
+            y = C.mlp_block(cfg, lp["mlp"], h)
+        return x + y, (k_new.astype(dtype), v_new.astype(dtype))
+
+    if cfg.num_experts and cfg.moe_every > 1:
+        k = cfg.moe_every
+        G = cfg.num_layers // k
+        gflags = flags.reshape(G, k)
+        pk = pools["k"].reshape(G, k, *pools["k"].shape[1:])
+        pv = pools["v"].reshape(G, k, *pools["v"].shape[1:])
+
+        def gbody(x, scanned):
+            gp, gk, gv, gf = scanned
+            nk, nv = [], []
+            for j in range(k):
+                lp = (jax.tree.map(lambda a: a[j], gp["pre"])
+                      if j < k - 1 else gp["last"])
+                x, (k2, v2) = chunk_layer(x, lp, gk[j], gv[j], gf[j])
+                nk.append(k2)
+                nv.append(v2)
+            return x, (jnp.stack(nk), jnp.stack(nv))
+
+        x, (ks, vs) = jax.lax.scan(gbody, x, (params["layers"], pk, pv, gflags))
+        ks = ks.reshape(cfg.num_layers, *ks.shape[2:])
+        vs = vs.reshape(cfg.num_layers, *vs.shape[2:])
+    else:
+        def body(x, scanned):
+            lp, pk, pv, is_global = scanned
+            x, (k2, v2) = chunk_layer(x, lp, pk, pv, is_global)
+            return x, (k2, v2)
+
+        x, (ks, vs) = jax.lax.scan(
+            body, x, (params["layers"], pools["k"], pools["v"], flags))
+
+    # ONE scatter for the whole GROUP: ks/vs [L, G, C, Hkv, D] land at each
+    # row's (page, slot) across every layer and every sequence at once
     new_pools = {"k": pools["k"].at[:, blk, slot].set(ks),
                  "v": pools["v"].at[:, blk, slot].set(vs)}
     x = C.apply_norm(cfg, params["final_norm"], x)

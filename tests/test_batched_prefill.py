@@ -1,0 +1,399 @@
+"""Batched multi-prompt prefill tests.
+
+ * equivalence — batched prefill (one vmapped program per (bucket, chunk)
+   group per pass) produces BIT-IDENTICAL sampled ids and log-probs to
+   both the per-request prefill loop and the one-shot serial path, for
+   cold waves of 1/4/8/16 mixed-bucket prompts and for warm / CoW / mixed
+   admissions,
+ * kernel — each row of ``paged_prefill_attention_batched`` equals a lone
+   ``paged_prefill_attention`` call bit for bit (the row-independence the
+   scheduler's grouping rests on), and matches the vmapped oracle,
+ * sync budget — one batched pass performs at most ONE host readback
+   however many prompts join (regression: the per-join ``int(tok0)``
+   device sync), counted via a spy on ``scheduler._readback``,
+ * speculative publish — a prefill aborted mid-prompt publishes its
+   completed FULL blocks; a successor with the same prompt hits the cache
+   and stays bit-identical (CoW-safety of the salvaged blocks),
+ * backpressure — a lagging stream consumer defers joins and shrinks
+   prefill chunks without perturbing a single sampled bit,
+ * properties — ``assemble_prefill_groups`` is an order-preserving
+   partition and ``pow2_group`` is the minimal power-of-two cover
+   (deterministic sweep always runs; hypothesis variant when installed).
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import tokenizer as tok
+from repro.inference import Engine
+from repro.inference.scheduler import assemble_prefill_groups, pow2_group
+
+CFG = get_smoke_config("qwen3-32b").replace(vocab_size=512)
+
+
+def _ids(lo: int, n: int) -> list:
+    """Deterministic raw prompt ids (plain tokens, no template)."""
+    return [(5 + (lo * 7 + j) % 240) for j in range(n)]
+
+
+def _prompt(i: int) -> list:
+    """Mixed prompt lengths: even i → short (64 bucket), odd i → long
+    (clamped max_len - max_new bucket)."""
+    if i % 2 == 0:
+        content = f"hi {i}"
+    else:
+        content = "a longer prompt with extra words to cross the bucket " + str(i)
+    return tok.apply_chat_template([{"role": "user", "content": content}])
+
+
+# ---------------------------------------------------------------------------
+# equivalence: batched ≡ per-request ≡ one-shot, bit for bit
+# ---------------------------------------------------------------------------
+
+def test_cold_waves_bit_identical_across_all_three_paths():
+    """Waves of 1/4/8/16 mixed-bucket cold prompts through three engines
+    with the same seed: serial one-shot, per-request prefill, batched
+    prefill.  Every sampled id and log-prob must agree bit for bit, and
+    the batched engine must actually dispatch GROUPS (fewer programs than
+    chunks)."""
+    engA = Engine(CFG, rng=jax.random.PRNGKey(7), max_len=160, max_new=8,
+                  serial=True)
+    engP = Engine(CFG, rng=jax.random.PRNGKey(7), max_len=160, max_new=8,
+                  block_size=16, max_batch=16, prefill_batched=False)
+    engB = Engine(CFG, rng=jax.random.PRNGKey(7), max_len=160, max_new=8,
+                  block_size=16, max_batch=16)
+    try:
+        assert engB.scheduler.prefill_batched
+        assert not engP.scheduler.prefill_batched
+        i = 0
+        for wave in (1, 4, 8, 16):
+            prompts = [_prompt(i + j) for j in range(wave)]
+            serial = [engA.generate_ids(p) for p in prompts]
+            futsP = [engP.submit_ids(p) for p in prompts]
+            futsB = [engB.submit_ids(p) for p in prompts]
+            for (ids, lps, fin), fp, fb in zip(serial, futsP, futsB):
+                rp = fp.result(timeout=300)
+                rb = fb.result(timeout=300)
+                assert ids == rb["response_ids"] == rp["response_ids"], \
+                    "sampled ids must be bit-identical on all three paths"
+                assert lps == rb["logprobs"] == rp["logprobs"], \
+                    "log-probs must be bit-identical on all three paths"
+                assert fin == rb["finish_reason"] == rp["finish_reason"]
+            i += wave
+        st = engB.scheduler_stats()
+        assert st["completed"] == i and st["errors"] == 0
+        assert st["prefill_passes"] > 0
+        assert 0 < st["prefill_groups"] < st["prefill_chunks"], \
+            "grouping must dispatch fewer programs than per-request chunks"
+        assert st["live_sequences"] == 0
+        assert engP.scheduler_stats()["prefill_groups"] == 0, \
+            "prefill_batched=False must never take the grouped path"
+    finally:
+        engP.close()
+        engB.close()
+
+
+def test_warm_cow_mixed_admissions_bit_identical():
+    """A wave mixing warm (cached-prefix), CoW (mid-block divergence) and
+    cold prompts, all prefilling together through the batched path — every
+    request bit-identical to one-shot."""
+    engA = Engine(CFG, rng=jax.random.PRNGKey(19), max_len=160, max_new=6,
+                  serial=True)
+    engB = Engine(CFG, rng=jax.random.PRNGKey(19), max_len=160, max_new=6,
+                  block_size=16, max_batch=8, prefill_chunk=32)
+    try:
+        warm_base = _ids(5, 48)              # 3 full 16-token blocks
+        ids0, lps0, _ = engA.generate_ids(list(warm_base))
+        r0 = engB.submit_ids(list(warm_base)).result(timeout=300)
+        assert ids0 == r0["response_ids"] and lps0 == r0["logprobs"]
+
+        wave = [warm_base + _ids(70, 5),         # warm, same bucket
+                _ids(80, 30),                    # cold
+                warm_base[:36] + _ids(71, 12),   # CoW: diverges mid-block 2
+                _ids(80, 30),                    # duplicate cold
+                _ids(82, 90)]                    # cold, bigger bucket
+        serial = [engA.generate_ids(list(p)) for p in wave]
+        futs = [engB.submit_ids(list(p)) for p in wave]
+        results = [f.result(timeout=300) for f in futs]
+        for (ids, lps, fin), r in zip(serial, results):
+            assert ids == r["response_ids"] and lps == r["logprobs"]
+            assert fin == r["finish_reason"]
+        assert results[0]["cached_tokens"] > 0, "warm admission must hit"
+        assert results[2]["cached_tokens"] > 0, "CoW admission must hit"
+        st = engB.scheduler_stats()
+        assert st["completed"] == 6 and st["errors"] == 0
+        assert st["cow_copies"] >= 1
+        assert st["prefill_groups"] > 0
+        assert st["live_sequences"] == 0
+    finally:
+        engB.close()
+
+
+# ---------------------------------------------------------------------------
+# kernel: batched rows ≡ per-request calls, bit for bit
+# ---------------------------------------------------------------------------
+
+def test_batched_prefill_attention_rows_match_per_request():
+    from repro.kernels import ops
+
+    rng = np.random.RandomState(23)
+    G, C, H, Hkv, D, NB, bs, maxnb = 4, 16, 8, 2, 8, 40, 16, 4
+    ctx = maxnb * bs
+    q = jnp.asarray(rng.randn(G, C, H, D), jnp.bfloat16)
+    kp = jnp.asarray(rng.randn(NB, bs, Hkv, D), jnp.bfloat16)
+    vp = jnp.asarray(rng.randn(NB, bs, Hkv, D), jnp.bfloat16)
+    bts = jnp.asarray(rng.randint(1, NB, size=(G, maxnb)), jnp.int32)
+    kn = jnp.asarray(rng.randn(G, C, Hkv, D), jnp.bfloat16)
+    vn = jnp.asarray(rng.randn(G, C, Hkv, D), jnp.bfloat16)
+    starts = jnp.asarray([0, 16, 32, 48], jnp.int32)
+    idx_q = starts[:, None] + jnp.arange(C, dtype=jnp.int32)[None]
+
+    out = ops.paged_prefill_attention_batched(
+        q, kp, vp, bts, idx_q, ctx_len=ctx, k_new=kn, v_new=vn, starts=starts)
+    ref = ops.paged_prefill_attention_batched(
+        q, kp, vp, bts, idx_q, ctx_len=ctx, k_new=kn, v_new=vn, starts=starts,
+        impl="xla_naive")
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=3e-2, rtol=3e-2)
+    for g in range(G):
+        lone = ops.paged_prefill_attention(
+            q[g][None], kp, vp, bts[g], idx_q[g], ctx_len=ctx,
+            k_new=kn[g][None], v_new=vn[g][None], start=starts[g])
+        assert bool(jnp.all(out[g] == lone[0])), \
+            f"row {g} of the batched op must be bit-identical to a lone call"
+
+
+# ---------------------------------------------------------------------------
+# sync budget: ≤1 host readback per batched pass
+# ---------------------------------------------------------------------------
+
+def test_single_host_readback_per_prefill_pass():
+    """Eight same-bucket short prompts admitted at one boundary must join
+    via ONE group dispatch and ONE host readback — not one device sync per
+    join (the regression this guards: per-request ``int(tok0)``)."""
+    engB = Engine(CFG, rng=jax.random.PRNGKey(29), max_len=160, max_new=4,
+                  block_size=16, max_batch=8)
+    try:
+        sched = engB.scheduler
+        gate = threading.Event()
+        sched.on_step_boundary = gate.wait   # hold the loop at the boundary
+        calls = []
+        orig = sched._readback
+
+        def spy(tree):
+            calls.append(1)
+            return orig(tree)
+
+        sched._readback = spy
+        # all 8 queue while the loop is held, then admit in one boundary
+        prompts = [_ids(100 + i, 20) for i in range(8)]   # one 64 bucket
+        futs = [engB.submit_ids(list(p)) for p in prompts]
+        gate.set()
+        results = [f.result(timeout=300) for f in futs]
+        assert all(len(r["response_ids"]) > 0 for r in results)
+        st = engB.scheduler_stats()
+        assert st["joins"] == 8
+        joining_passes = len(calls)
+        assert joining_passes == 1, \
+            f"8 one-chunk joins must cost ONE readback, got {joining_passes}"
+        assert st["prefill_groups"] == 1, \
+            "same-bucket wave must run as a single group program"
+    finally:
+        engB.close()
+
+
+# ---------------------------------------------------------------------------
+# speculative prefix publish of aborted prefills
+# ---------------------------------------------------------------------------
+
+def test_aborted_prefill_publishes_blocks_and_successor_is_bit_identical():
+    """Abort a long cold prefill mid-prompt: its completed FULL blocks are
+    published (speculative prefix publish), the identical successor prompt
+    hits the cache, and its output is bit-identical to the serial path —
+    including when the aborted prefill itself began from a CoW'd block."""
+    engA = Engine(CFG, rng=jax.random.PRNGKey(31), max_len=160, max_new=6,
+                  serial=True)
+    engB = Engine(CFG, rng=jax.random.PRNGKey(31), max_len=160, max_new=6,
+                  block_size=16, max_batch=8, prefill_chunk=16)
+    try:
+        sched = engB.scheduler
+        # seed the cache so the aborted request starts from a CoW'd block
+        seed_p = _ids(9, 48)
+        ids0, lps0, _ = engA.generate_ids(list(seed_p))
+        r0 = engB.submit_ids(list(seed_p)).result(timeout=300)
+        assert ids0 == r0["response_ids"] and lps0 == r0["logprobs"]
+
+        victim = seed_p[:40] + _ids(90, 60)      # CoW at block 2, then cold
+        state = {}
+
+        def hook():
+            # scheduler-thread hook at the boundary (runs BEFORE reap): flag
+            # the victim once ≥2 chunks past its cached prefix are computed
+            for r in list(sched._prefilling):
+                if (len(r.prompt_ids) == len(victim)
+                        and r.prefill_pos >= r.cached_tokens + 32
+                        and not r.aborted.is_set()):
+                    state["aborted_at"] = r.prefill_pos
+                    sched.abort(r)
+
+        sched.on_step_boundary = hook
+        engA.generate_ids(list(victim))          # burn the matching key
+        rv = engB.submit_ids(list(victim)).result(timeout=300)
+        sched.on_step_boundary = None
+        assert rv["finish_reason"] == "aborted"
+        assert state["aborted_at"] < len(victim), "must abort mid-prefill"
+        st = sched.stats()
+        assert st["speculative_published_blocks"] >= 1, \
+            "aborted prefill must salvage its full prompt blocks"
+
+        # identical successor: warm from the salvaged blocks, still bit-exact
+        ids1, lps1, fin1 = engA.generate_ids(list(victim))
+        r1 = engB.submit_ids(list(victim)).result(timeout=300)
+        assert r1["cached_tokens"] >= state["aborted_at"] - engB._sched_opts[
+            "block_size"], "successor must reuse the salvaged prefix"
+        assert ids1 == r1["response_ids"] and lps1 == r1["logprobs"]
+        assert fin1 == r1["finish_reason"]
+        sched.cache.allocator.check()            # asserts pool invariants
+        assert sched.stats()["live_sequences"] == 0
+    finally:
+        engB.close()
+
+
+# ---------------------------------------------------------------------------
+# stream backpressure: defer joins + shrink chunks, bits unchanged
+# ---------------------------------------------------------------------------
+
+def test_backpressure_defers_joins_shrinks_chunks_bit_identical():
+    """A lagging stream consumer crosses the high-water mark: the scheduler
+    defers the next admission and halves the prefill chunk — and once the
+    lag clears everything completes bit-identical to a reference engine
+    that never saw backpressure."""
+    p1 = _ids(40, 12)                 # streamed, never consumed
+    p2 = _ids(41, 200)                # long cold prefill, rides the squeeze
+    p3 = _ids(42, 12)                 # submitted while backpressured
+    engA = Engine(CFG, rng=jax.random.PRNGKey(37), max_len=256, max_new=20,
+                  serial=True)
+    engB = Engine(CFG, rng=jax.random.PRNGKey(37), max_len=256, max_new=20,
+                  block_size=16, max_batch=8, prefill_chunk=32,
+                  backpressure_hwm=0.2)
+    try:
+        sched = engB.scheduler
+        sem = threading.Semaphore(0)
+        sched.on_step_boundary = sem.acquire   # one release = one iteration
+
+        def run_until(cond, what, cap=120):
+            deadline = time.monotonic() + 300
+            for _ in range(cap):
+                if cond():
+                    return
+                sem.release()
+                while sem._value > 0 and time.monotonic() < deadline:
+                    time.sleep(0.002)          # let the iteration start
+                time.sleep(0.01)
+            raise AssertionError(f"never reached: {what}")
+
+        s1 = engB.stream_ids(list(p1))         # consumer never reads
+        f2 = engB.submit_ids(list(p2))
+        # build backlog: p1 decodes one delta per iteration while p2 chunks
+        run_until(lambda: s1.backlog() >= 0.2, "stream backlog ≥ hwm")
+        f3 = engB.submit_ids(list(p3))         # arrives while backpressured
+        run_until(lambda: sched.metrics["backpressure_deferrals"] >= 1,
+                  "a deferred admission")
+        run_until(lambda: sched.metrics["prefill_chunks_shrunk"] >= 1,
+                  "a shrunk prefill chunk")
+        # release the loop and drain the lagging consumer
+        sched.on_step_boundary = None
+        sem.release(10000)
+        r1 = s1.result(timeout=300)
+        r2 = f2.result(timeout=300)
+        r3 = f3.result(timeout=300)
+
+        st = engB.scheduler_stats()
+        assert st["stream_backlog_peak"] >= 0.2
+        assert st["backpressure_deferrals"] >= 1
+        assert st["prefill_chunks_shrunk"] >= 1
+        assert st["completed"] == 3 and st["errors"] == 0
+
+        for p, r in zip((p1, p2, p3), (r1, r2, r3)):
+            ids, lps, fin = engA.generate_ids(list(p))
+            assert ids == r["response_ids"], \
+                "backpressure must not perturb sampled ids"
+            assert lps == r["logprobs"], \
+                "backpressure must not perturb log-probs"
+            assert fin == r["finish_reason"]
+    finally:
+        engB.close()
+
+
+# ---------------------------------------------------------------------------
+# properties: group assembly + pow-2 padding
+# ---------------------------------------------------------------------------
+
+class _R:
+    def __init__(self, bucket, tag):
+        self.bucket = bucket
+        self.tag = tag
+
+
+def _check_groups(reqs, chunk):
+    groups = assemble_prefill_groups(reqs, chunk)
+    # partition: every request appears exactly once, nothing invented
+    flat = [r for _, members in groups for r in members]
+    assert sorted(r.tag for r in flat) == sorted(r.tag for r in reqs)
+    assert len(flat) == len(reqs)
+    seen_keys = []
+    for (bucket, csz), members in groups:
+        assert members, "no empty groups"
+        assert (bucket, csz) not in seen_keys, "one group per key"
+        seen_keys.append((bucket, csz))
+        assert csz == min(chunk, bucket), \
+            "chunk must follow the per-request rule min(prefill_chunk, bucket)"
+        for r in members:
+            assert (r.bucket, min(chunk, r.bucket)) == (bucket, csz)
+        # FIFO within the group (admission order == sampling-key order)
+        idx = [reqs.index(r) for r in members]
+        assert idx == sorted(idx)
+    # groups ordered by first appearance
+    firsts = [min(reqs.index(r) for r in members) for _, members in groups]
+    assert firsts == sorted(firsts)
+
+
+def test_group_assembly_and_pow2_properties_deterministic():
+    rng = np.random.RandomState(3)
+    buckets = [16, 64, 236, 256]
+    for trial in range(50):
+        n = int(rng.randint(0, 24))
+        chunk = int(rng.choice([8, 16, 32, 64, 256]))
+        reqs = [_R(int(rng.choice(buckets)), t) for t in range(n)]
+        _check_groups(reqs, chunk)
+    for n in range(1, 600):
+        g = pow2_group(n)
+        assert g >= n and (g & (g - 1)) == 0, "a power-of-two cover"
+        assert g == 1 or g // 2 < n, "the MINIMAL power-of-two cover"
+    assert pow2_group(0) == 1
+
+
+def test_group_assembly_properties_hypothesis():
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.settings(max_examples=60, deadline=None)
+    @hyp.given(
+        st.lists(st.sampled_from([16, 64, 128, 236, 256]), max_size=40),
+        st.sampled_from([1, 8, 16, 32, 64, 512]))
+    def prop(bs, chunk):
+        reqs = [_R(b, t) for t, b in enumerate(bs)]
+        _check_groups(reqs, chunk)
+        for (_, csz), members in assemble_prefill_groups(reqs, chunk):
+            g = pow2_group(len(members))
+            assert g >= len(members) and (g & (g - 1)) == 0
+
+    prop()
