@@ -1,0 +1,281 @@
+"""Disaggregated prefill/decode tiers vs the monolithic scheduler (§2.4).
+
+Three measurements, one per regime the tier split changes:
+
+  mixed      — a cold admission burst with a real decode tail (the
+               regime disaggregation targets: prefill-heavy joins
+               competing with long-lived decoders for the same pool).
+               Tiered (``tiers=2``) and monolithic (``tiers=1``) engines
+               drive identical waves; reported: tokens/sec over the
+               wave, mean/max time to first token, and the handoff
+               counters (``chains_exported/imported``, ``handoff_bytes``
+               — zero-copy in the monolithic config by construction).
+  turns      — a multi-turn conversation (each turn appends the prior
+               response plus a fixed user suffix, the agentic-harness
+               shape): turn-N TTFT per tier mode.  The prefix cache
+               carries the conversation across turns in both modes, so
+               this bounds the tier split's TTFT overhead on the warm
+               path.
+  cross_node — TWO engines joined by a ``SharedPrefixIndex``: node A
+               prefills a shared system prompt, node B's FIRST request
+               with the same prefix pulls the KV payload through the
+               service index instead of recomputing it.  The acceptance
+               bar is ``cached_tokens > 0`` on that first request — a
+               prefix prefilled once warms every node.
+
+Both tier modes produce bit-identical tokens (the equivalence contract,
+tests/test_disagg.py), so every throughput/TTFT delta is pure
+scheduling + handoff overhead, not different output.
+
+    PYTHONPATH=src python -m benchmarks.bench_disagg \
+        [--dry-run] [--out results/bench_disagg.json]
+
+Emits a BENCH json line and writes the same record to --out; CI uploads
+it as an artifact (bench-smoke lane).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import threading
+import time
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.inference import Engine
+from repro.rollout.prefix_service import SharedPrefixIndex
+
+# mixed cold burst: short prompts (admission-bound) + long prompts
+# (chunked prefill) sharing the step loop with each other's decode tails
+MIXED_LENS = (24, 90, 48, 150)
+
+
+def _cfg():
+    return get_smoke_config("qwen3-32b").replace(vocab_size=512)
+
+
+def _ids(lo: int, n: int) -> list:
+    """Deterministic token ids; distinct ``lo`` ⇒ no shared prefix."""
+    return [(5 + (lo * 7 + j) % 240) for j in range(n)]
+
+
+def _wave_prompts(wave: int, tag: int) -> list:
+    return [_ids(tag * 1000 + i * 17, MIXED_LENS[i % len(MIXED_LENS)])
+            for i in range(wave)]
+
+
+def _drive_wave(engine: Engine, prompts: list) -> dict:
+    """Queue every prompt while the scheduler is gated at a step
+    boundary, release the wave at once, and clock wall + per-request
+    TTFT from the release (same coherent-burst gate as
+    bench_batched_prefill — without it the numbers measure OS thread
+    scheduling, not the engine)."""
+    sched = engine.scheduler
+    gate = threading.Event()
+    sched.on_step_boundary = gate.wait
+    try:
+        streams = [engine.stream_ids(list(p)) for p in prompts]
+    except Exception:
+        sched.on_step_boundary = None
+        gate.set()
+        raise
+    ttft = [0.0] * len(prompts)
+    toks = [0] * len(prompts)
+    errs: list = []
+    t0 = [0.0]
+
+    def one(i: int) -> None:
+        try:
+            next(iter(streams[i]))
+            ttft[i] = time.perf_counter() - t0[0]
+            toks[i] = len(streams[i].result(timeout=300)["response_ids"])
+        except Exception as e:  # noqa: BLE001
+            errs.append(e)
+
+    threads = [threading.Thread(target=one, args=(i,))
+               for i in range(len(prompts))]
+    for t in threads:
+        t.start()
+    t0[0] = time.perf_counter()
+    sched.on_step_boundary = None
+    gate.set()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0[0]
+    if errs:
+        raise errs[0]
+    return {"wall_s": wall, "ttft": ttft, "tokens": sum(toks)}
+
+
+def run_mixed(tiers: int, wave: int, rounds: int, max_new: int) -> dict:
+    """Cold-burst + decode-tail throughput for one tier mode."""
+    engine = Engine(_cfg(), rng=jax.random.PRNGKey(0), max_len=256,
+                    max_new=max_new, block_size=16, max_batch=max(wave, 8),
+                    tiers=tiers)
+    try:
+        _drive_wave(engine, _wave_prompts(wave, tag=99))       # warmup
+        base = engine.scheduler_stats()
+        walls, ttfts, tokens = [], [], 0
+        for rnd in range(rounds):
+            r = _drive_wave(engine, _wave_prompts(wave, tag=rnd))
+            walls.append(r["wall_s"])
+            ttfts.extend(r["ttft"])
+            tokens += r["tokens"]
+        st = engine.scheduler_stats()
+        wall = sum(walls)
+        return {
+            "tiers": tiers,
+            "wave": wave,
+            "rounds": rounds,
+            "max_new": max_new,
+            "wall_s": round(wall, 4),
+            "tokens": tokens,
+            "tokens_per_s": round(tokens / max(1e-9, wall), 2),
+            "ttft_mean_ms": round(1e3 * sum(ttfts) / max(1, len(ttfts)), 2),
+            "ttft_max_ms": round(1e3 * max(ttfts), 2),
+            "chains_exported": st["chains_exported"] - base["chains_exported"],
+            "chains_imported": st["chains_imported"] - base["chains_imported"],
+            "handoff_bytes": st["handoff_bytes"] - base["handoff_bytes"],
+        }
+    finally:
+        engine.close()
+
+
+def run_turns(tiers: int, turns: int, max_new: int) -> dict:
+    """Turn-N TTFT for a growing conversation in one tier mode."""
+    engine = Engine(_cfg(), rng=jax.random.PRNGKey(1), max_len=512,
+                    max_new=max_new, block_size=16, max_batch=8, tiers=tiers)
+    try:
+        convo = _ids(7, 48)
+        ttft_ms, cached = [], []
+        for turn in range(turns):
+            stream = engine.stream_ids(list(convo))
+            t0 = time.perf_counter()
+            next(iter(stream))
+            ttft_ms.append(round(1e3 * (time.perf_counter() - t0), 2))
+            res = stream.result(timeout=300)
+            cached.append(res["cached_tokens"])
+            convo = (convo + res["response_ids"]
+                     + _ids(60 + turn * 13, 24))         # next user message
+        return {"tiers": tiers, "turns": turns, "ttft_ms": ttft_ms,
+                "cached_tokens": cached,
+                "ttft_last_ms": ttft_ms[-1], "ttft_first_ms": ttft_ms[0]}
+    finally:
+        engine.close()
+
+
+def run_cross_node(max_new: int) -> dict:
+    """Two engines + a SharedPrefixIndex: node B's FIRST request with
+    node A's system prefix must be warm (``cached_tokens > 0``)."""
+    svc = SharedPrefixIndex(block_size=16)
+    engines = {}
+    for node in ("node-a", "node-b"):
+        eng = Engine(_cfg(), rng=jax.random.PRNGKey(2), max_len=256,
+                     max_new=max_new, block_size=16, max_batch=8, tiers=2)
+        engines[node] = eng
+        svc.register_node(node, exporter=eng.export_prefix)
+        eng.prefix_publish_hook = (
+            lambda toks, n=node: svc.publish(n, toks))
+
+        def resolver(prompt_ids, eng=eng, node=node):
+            matched, holders = svc.match(prompt_ids)
+            if matched == 0 or node in holders:
+                return
+            payload = svc.fetch(prompt_ids, exclude=(node,))
+            if payload is not None and eng.import_prefix(payload) > 0:
+                svc.publish(node, payload["tokens"])
+
+        eng.prefix_resolver = resolver
+    try:
+        system = _ids(11, 64)                # the shared system prompt
+        t0 = time.perf_counter()
+        engines["node-a"].submit_ids(system + _ids(201, 16)).result(
+            timeout=300)
+        node_a_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        res = engines["node-b"].submit_ids(system + _ids(307, 16)).result(
+            timeout=300)
+        node_b_s = time.perf_counter() - t0
+        stats = svc.stats()
+        return {
+            "system_prompt_tokens": len(system),
+            "node_a_first_request_s": round(node_a_s, 4),
+            "node_b_first_request_s": round(node_b_s, 4),
+            "node_b_cached_tokens": res["cached_tokens"],
+            "node_b_imported_tokens":
+                engines["node-b"].stats["prefix_imported_tokens"],
+            "index_entries": stats["entries"],
+            "fetches": stats["fetches"],
+            "fetch_failures": stats["fetch_failures"],
+        }
+    finally:
+        for eng in engines.values():
+            eng.close()
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry-run", action="store_true",
+                    help="CI smoke: smaller wave, fewer rounds, same shape")
+    ap.add_argument("--wave", type=int, default=None)
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--max-new", type=int, default=None)
+    ap.add_argument("--turns", type=int, default=None)
+    ap.add_argument("--out", default="results/bench_disagg.json")
+    args = ap.parse_args(argv)
+
+    wave = args.wave or (4 if args.dry_run else 12)
+    rounds = args.rounds or (1 if args.dry_run else 3)
+    max_new = args.max_new or (4 if args.dry_run else 24)
+    turns = args.turns or (2 if args.dry_run else 4)
+
+    mixed = {}
+    for tiers in (1, 2):
+        mixed[f"tiers{tiers}"] = run_mixed(tiers, wave, rounds, max_new)
+        r = mixed[f"tiers{tiers}"]
+        print(f"  mixed/tiers={tiers}: {r['tokens_per_s']:8.2f} tok/s | "
+              f"ttft mean {r['ttft_mean_ms']:6.1f}ms "
+              f"max {r['ttft_max_ms']:6.1f}ms | "
+              f"handoff {r['chains_imported']} chains / "
+              f"{r['handoff_bytes']} bytes | wall {r['wall_s']:.3f}s")
+    tput_ratio = round(mixed["tiers2"]["tokens_per_s"]
+                       / max(1e-9, mixed["tiers1"]["tokens_per_s"]), 3)
+    print(f"  mixed tiered/monolithic tokens/sec ratio: {tput_ratio:.2f}x")
+
+    turn_rows = {}
+    for tiers in (1, 2):
+        turn_rows[f"tiers{tiers}"] = run_turns(tiers, turns, max_new)
+        r = turn_rows[f"tiers{tiers}"]
+        print(f"  turns/tiers={tiers}: ttft per turn "
+              f"{r['ttft_ms']} ms | cached {r['cached_tokens']}")
+
+    cross = run_cross_node(max_new)
+    print(f"  cross_node: node B first request cached_tokens="
+          f"{cross['node_b_cached_tokens']} "
+          f"(system prompt {cross['system_prompt_tokens']} tokens, "
+          f"{cross['fetches']} fetch) — bar: > 0")
+
+    record = {
+        "bench": "disagg",
+        "dry_run": args.dry_run,
+        "params": {"wave": wave, "rounds": rounds, "max_new": max_new,
+                   "turns": turns},
+        "mixed": mixed,
+        "mixed_tokens_per_s_ratio": tput_ratio,
+        "turns": turn_rows,
+        "cross_node": cross,
+        "cross_node_warm": cross["node_b_cached_tokens"] > 0,
+    }
+    print("BENCH " + json.dumps(record))
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(record, f, indent=2)
+        print(f"  wrote {args.out}")
+    return record
+
+
+if __name__ == "__main__":
+    main()

@@ -15,6 +15,10 @@ Sections:
   bench_batched_prefill — batched multi-prompt prefill vs the per-request
                        prefill loop on cold admission bursts (§2.3);
                        BENCH json to results/bench_batched_prefill.json
+  bench_disagg       — disaggregated prefill/decode tiers vs monolithic
+                       scheduler (mixed cold-burst + decode, turn-N TTFT,
+                       cross-node shared-prefix warm-up, §2.4); BENCH
+                       json to results/bench_disagg.json
   bench_multi_trainer — per-trainer admission fairness (4:1 weights, one
                        shared pool, §3.1 Fig. 5a); BENCH json to
                        results/bench_multi_trainer.json
@@ -76,6 +80,11 @@ def main(argv=None):
     print("== bench_batched_prefill (cold-wave admission: batched vs loop)")
     from benchmarks import bench_batched_prefill
     bench_batched_prefill.main(["--dry-run"] if args.fast else [])
+
+    print("=" * 72)
+    print("== bench_disagg (tiered vs monolithic + shared-prefix warm-up)")
+    from benchmarks import bench_disagg
+    bench_disagg.main(["--dry-run"] if args.fast else [])
 
     print("=" * 72)
     print("== bench_multi_trainer (weighted-fair admission, 4:1)")

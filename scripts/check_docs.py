@@ -41,6 +41,7 @@ DOCSTRING_MODULES = [
     "src/repro/rollout/admission.py",
     "src/repro/rollout/journal.py",
     "src/repro/rollout/gateway.py",
+    "src/repro/rollout/prefix_service.py",
     "src/repro/training/trainer.py",
     "src/repro/training/grpo.py",
     "src/repro/data/batcher.py",

@@ -241,7 +241,8 @@ class Engine:
                  prefill_chunk: int = 64,
                  max_cached_blocks: Optional[int] = None,
                  prefill_batched: bool = True,
-                 backpressure_hwm: float = 0.9):
+                 backpressure_hwm: float = 0.9,
+                 tiers: int = 1):
         assert cfg.vocab_size >= tok.VOCAB_SIZE, (
             "engine models must cover the tokenizer vocab")
         self.cfg = cfg
@@ -272,12 +273,25 @@ class Engine:
                                 prefill_chunk=prefill_chunk,
                                 max_cached_blocks=max_cached_blocks,
                                 prefill_batched=prefill_batched,
-                                backpressure_hwm=backpressure_hwm)
+                                backpressure_hwm=backpressure_hwm,
+                                tiers=tiers)
+        # shared-prefix-service hooks, set by the hosting GatewayNode:
+        #   prefix_resolver(prompt_ids)  — called before every scheduler
+        #     submission; may warm the local cache by importing a peer's
+        #     exported prefix (best-effort: failures never fail the request)
+        #   prefix_publish_hook(tokens)  — called by the scheduler when a
+        #     prefill-computed prefix is published locally, so the service
+        #     index learns this engine holds it
+        self.prefix_resolver: Optional[Callable] = None
+        self.prefix_publish_hook: Optional[Callable] = None
         self.stats = {
             "requests": 0, "prompt_tokens": 0, "sampled_tokens": 0,
             # hot-swap telemetry (see update_weights)
             "weight_swaps": 0, "swap_ms_total": 0.0, "last_swap_ms": 0.0,
             "last_swap_in_flight": 0,
+            # shared-prefix handoff telemetry (export_prefix/import_prefix)
+            "prefix_exports": 0, "prefix_imports": 0,
+            "prefix_imported_tokens": 0,
             # staleness histogram: finished records per (max sampled) version
             "records_by_version": {},
         }
@@ -362,6 +376,54 @@ class Engine:
         with self._sched_lock:
             sched = self._scheduler
         return sched.stats() if sched is not None else None
+
+    # -- shared prefix service surface ----------------------------------------
+    def export_prefix(self, tokens):
+        """Serialize this engine's longest cached prefix of ``tokens`` into
+        a host payload a peer engine can import (the pull side of the
+        shared prefix index).  Runs at the scheduler's next step boundary —
+        the one point where the pools are not mid-donation.  Returns None
+        on a miss or when no scheduler is running (nothing cached yet)."""
+        with self._sched_lock:
+            sched = self._scheduler
+        if sched is None:
+            return None
+        payload = sched.call_at_boundary(
+            lambda: sched.cache.export_prefix_payload(tokens))
+        if payload is not None:
+            with self._lock:
+                self.stats["prefix_exports"] += 1
+        return payload
+
+    def import_prefix(self, payload) -> int:
+        """Import a peer engine's exported prefix payload into the local
+        prefill cache and publish it, so the next admission of a prompt
+        sharing the prefix is a warm hit without recomputing prefill
+        (``cached_tokens > 0`` on its result).  Runs at the scheduler's
+        next step boundary.  Returns the number of newly cached tokens
+        (0 when serial, caching is off, or the pool has no room)."""
+        if payload is None:
+            return 0
+        sched = self.scheduler
+        if sched is None:
+            return 0
+        n = sched.call_at_boundary(
+            lambda: sched.cache.import_prefix_payload(payload))
+        with self._lock:
+            self.stats["prefix_imports"] += 1
+            self.stats["prefix_imported_tokens"] += n
+        return n
+
+    def _resolve_shared_prefix(self, prompt_ids) -> None:
+        """Best-effort pre-submission hook: give the attached shared-prefix
+        resolver a chance to warm the local cache from a peer before this
+        prompt is admitted cold.  Never fails the request."""
+        if self.prefix_resolver is None:
+            return
+        try:
+            self.prefix_resolver(list(prompt_ids))
+        except Exception:  # noqa: BLE001 — warming is advisory
+            pass
 
     def close(self) -> None:
         """Shut down the batching scheduler (requests after close are served
@@ -532,6 +594,7 @@ class Engine:
             stream._finish(self._build_result(
                 list(prompt_ids), ids, lps, finish, version))
             return stream
+        self._resolve_shared_prefix(prompt_ids)
         req = self._new_request(prompt_ids, max_new)
         stream = CompletionStream(req.max_new,
                                   on_abort=lambda: sched.abort(req))
@@ -565,6 +628,7 @@ class Engine:
             fut.set_result(self._build_result(
                 list(prompt_ids), ids, lps, finish, version))
             return fut
+        self._resolve_shared_prefix(prompt_ids)
         return sched.submit(self._new_request(prompt_ids, max_new))
 
     def submit(self, request: Dict[str, Any]) -> Future:

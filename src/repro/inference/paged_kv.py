@@ -24,15 +24,32 @@ cached prefix is admitted with only its tail blocks allocated:
     hit/eviction telemetry.  Block 0 is a reserved trash block that absorbs
     the writes of padded/inactive batch slots and prompt-padding garbage.
 
-Everything host-side is deliberately simple Python — it is the subject of
-the hypothesis property tests (no double allocation, refcount == owners +
-cache pins, exact frees, token order preserved under arbitrary
-join/share/CoW/evict interleavings).
+PR 9 adds the **KV-handoff layer** for disaggregated prefill/decode tiers:
+``export_chain`` seals a prefilled sequence's prompt blocks into a
+``KVChain`` and ``import_chain`` makes that chain resident in another
+pool's allocator (admitting the sequence there with its full decode
+reservation before any KV is copied).  Three paths:
+
+  * same pool  — zero-copy: the sequence already owns its blocks and its
+    reservation, so the import is pure accounting (the single-engine
+    configuration pays nothing for the tier split).
+  * cross pool — one jitted donating gather/scatter copies the chain's
+    blocks device-to-device; index arrays are padded to a power of two
+    (trash→trash) so only O(log blocks-per-seq) programs ever compile.
+  * host chain — ``KVChain.to_host()`` detaches the chain from its source
+    pool into numpy arrays (exact bf16 roundtrip), the serde form a
+    cross-node shared-prefix fetch ships between engines.
+
+Export is refcount- and CoW-safe by construction: the chain only *names*
+blocks the source sequence owns (shared prefix blocks and CoW copies
+included) — they cannot be evicted or reused until the source sequence is
+freed, which the scheduler does only after a successful import.
 """
 from __future__ import annotations
 
 import heapq
-from typing import Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -444,9 +461,13 @@ class PagedKVCache:
                                   max_cached_blocks)
                       if prefix_cache else None)
         self._copy_fn = None
+        self._xfer_fns: Dict[int, Any] = {}       # padded n -> device xfer
+        self._xfer_host_fns: Dict[int, Any] = {}  # padded n -> host scatter
+        self._import_ids = 0                      # prefix-import pseudo-seqs
         self.metrics: Dict[str, int] = {
             "prefix_queries": 0, "prefix_hits": 0, "prefix_tokens_saved": 0,
             "cow_copies": 0, "published_blocks": 0,
+            "imported_prefix_tokens": 0,
         }
 
     # -- prefix cache ---------------------------------------------------------
@@ -527,6 +548,85 @@ class PagedKVCache:
         """Release the sequence's blocks (shared/pinned ones stay live)."""
         self.allocator.free(seq_id)
 
+    # -- cross-node shared-prefix payloads ------------------------------------
+    def export_prefix_payload(self, tokens: Sequence[int]):
+        """Serialize this cache's longest cached prefix of ``tokens`` into a
+        host payload (``{"tokens", "block_size", "k", "v"}``, numpy arrays
+        ``[L, n, block_size, Hkv, D]``) a peer cache can import.  Only
+        prefill-computed (published) blocks can match, so the payload obeys
+        the bit-exactness rule by construction.  Returns None on a cache
+        miss.  Must run on the thread that owns this cache (the scheduler
+        thread — see ``ContinuousBatchingScheduler.call_at_boundary``)."""
+        shared, matched, _, _ = self.match_prefix(tokens)
+        if not matched:
+            return None
+        idx = jnp.asarray(shared, jnp.int32)
+        return {
+            "tokens": [int(t) for t in tokens[:matched]],
+            "block_size": self.block_size,
+            "k": jax.device_get(jnp.take(self.kp, idx, axis=1)),
+            "v": jax.device_get(jnp.take(self.vp, idx, axis=1)),
+        }
+
+    def import_prefix_payload(self, payload) -> int:
+        """Make a peer's exported prefix payload resident in THIS cache and
+        publish it into the local prefix index, so the next admission of a
+        prompt sharing the prefix is a warm hit (``cached_tokens > 0``)
+        without recomputing prefill.  Blocks are taken through a transient
+        pseudo-sequence: admitted, scatter-written, pinned by ``publish``,
+        then the pseudo-sequence is freed — leaving only the cache pins
+        (already-cached prefix blocks are skipped and returned to the free
+        list untouched).  Returns the number of newly cached tokens; 0 when
+        prefix caching is off, shapes mismatch, or the pool has no room.
+        Must run on the thread that owns this cache."""
+        if self.index is None or payload is None:
+            return 0
+        if payload["block_size"] != self.block_size:
+            return 0
+        bs = self.block_size
+        tokens = list(payload["tokens"])[:(len(payload["tokens"]) // bs) * bs]
+        nb = len(tokens) // bs
+        if nb == 0:
+            return 0
+        self._import_ids += 1
+        seq_id = ("prefix-import", self._import_ids)
+        if self.allocator.admit(seq_id, nb, nb) is None:
+            return 0
+        blocks = self.allocator.owned(seq_id)
+        self._scatter_host(np.asarray(payload["k"]), np.asarray(payload["v"]),
+                           blocks)
+        pinned = self.index.publish(tokens, blocks)
+        self.metrics["published_blocks"] += pinned
+        self.metrics["imported_prefix_tokens"] += pinned * bs
+        self.allocator.free(seq_id)
+        return pinned * bs
+
+    def _scatter_host(self, hk: np.ndarray, hv: np.ndarray,
+                      blocks: Sequence[int]) -> None:
+        """Write host block arrays ``[L, n, bs, Hkv, D]`` into pool blocks
+        (donating jitted scatter, padded to a power-of-two block count with
+        trash-block writes so only O(log blocks-per-seq) programs compile)."""
+        n = len(blocks)
+        assert hk.shape[1] == n, (hk.shape, n)
+        pn = 1
+        while pn < n:
+            pn *= 2
+        if pn > n:
+            pad = ((0, 0), (0, pn - n), (0, 0), (0, 0), (0, 0))
+            hk = np.pad(hk, pad)
+            hv = np.pad(hv, pad)
+        idx = np.full((pn,), TRASH_BLOCK, np.int32)
+        idx[:n] = blocks
+        fn = self._xfer_host_fns.get(pn)
+        if fn is None:
+            def scatter(kp, vp, k, v, di):
+                return (kp.at[:, di].set(k.astype(kp.dtype)),
+                        vp.at[:, di].set(v.astype(vp.dtype)))
+            fn = jax.jit(scatter, donate_argnums=(0, 1))
+            self._xfer_host_fns[pn] = fn
+        self.kp, self.vp = fn(self.kp, self.vp, jnp.asarray(hk),
+                              jnp.asarray(hv), jnp.asarray(idx))
+
     def stats(self) -> Dict[str, int]:
         """Pool occupancy + prefix-cache hit/eviction counters."""
         out = {
@@ -544,3 +644,139 @@ class PagedKVCache:
         q = max(1, out["prefix_queries"])
         out["prefix_hit_rate"] = round(out["prefix_hits"] / q, 3)
         return out
+
+
+# -- KV-handoff layer: sealed chains between pools ----------------------------
+@dataclass
+class KVChain:
+    """A sealed prompt KV block chain, the unit of prefill→decode handoff.
+
+    Produced by ``export_chain`` when a sequence finishes prefill: every
+    prompt position's KV is computed and no further writes will touch the
+    named blocks until the source sequence is freed — which the exporter
+    does only after a successful ``import_chain``.  The tail block may be
+    partially filled (``plen`` not a block multiple); it is copied whole,
+    and the garbage beyond ``plen`` is never read (attention masks by
+    position) — the importing tier's decode writes continue mid-block.
+
+    A chain is either *attached* (``src`` names the pool whose ``blocks``
+    hold the KV) or *host-form* (``src is None``; ``host_k``/``host_v``
+    carry the block contents as numpy, the serde form for cross-node
+    transfer — bf16 roundtrips bit-exactly)."""
+
+    tokens: List[int]                 # the prompt positions the chain covers
+    block_size: int
+    blocks: List[int] = field(default_factory=list)   # src-pool ids, in order
+    src: Optional[PagedKVCache] = None
+    host_k: Optional[np.ndarray] = None   # [L, n, bs, Hkv, D] when detached
+    host_v: Optional[np.ndarray] = None
+
+    @property
+    def num_blocks(self) -> int:
+        """Blocks in the chain (covers ``len(tokens)`` prompt positions)."""
+        return (len(self.blocks) if self.src is not None
+                else int(self.host_k.shape[1]))
+
+    @property
+    def nbytes(self) -> int:
+        """Payload size of the chain's KV (both pools, all layers)."""
+        if self.src is not None:
+            per = int(np.prod(self.src.kp.shape)) // self.src.num_blocks
+            return 2 * self.num_blocks * per * self.src.kp.dtype.itemsize
+        return int(self.host_k.nbytes + self.host_v.nbytes)
+
+    def to_host(self) -> "KVChain":
+        """Detach the chain from its source pool into numpy block arrays
+        (the serde form).  One device readback; the result no longer pins
+        any pool state and survives the source sequence being freed."""
+        if self.src is None:
+            return self
+        idx = jnp.asarray(self.blocks, jnp.int32)
+        return KVChain(
+            tokens=list(self.tokens), block_size=self.block_size,
+            host_k=jax.device_get(jnp.take(self.src.kp, idx, axis=1)),
+            host_v=jax.device_get(jnp.take(self.src.vp, idx, axis=1)))
+
+
+@dataclass
+class ImportResult:
+    """What ``import_chain`` did: the destination block chain (token order),
+    the (src, dst) block pairs actually copied (empty on the zero-copy
+    path — property tests mirror their ledger through these), whether the
+    fast path was taken, and the bytes moved."""
+
+    blocks: List[int]
+    pairs: List[Tuple[int, int]]
+    zero_copy: bool
+    nbytes: int
+
+
+def export_chain(cache: PagedKVCache, seq_id,
+                 tokens: Sequence[int]) -> KVChain:
+    """Seal a prefilled sequence's prompt blocks into a ``KVChain``.
+
+    Pure accounting — no device work.  The chain names the leading blocks
+    of the sequence's owned list (shared prefix blocks and CoW copies
+    included: the importer copies their *content*, so sharing in the source
+    pool is invisible to it).  The caller must keep ``seq_id`` admitted in
+    ``cache`` until the chain is imported (or dropped) — ownership is what
+    keeps the named blocks from being evicted or reused."""
+    nb = cdiv(max(1, len(tokens)), cache.block_size)
+    owned = cache.allocator.owned(seq_id)
+    assert len(owned) >= nb, (seq_id, len(owned), nb)
+    return KVChain(tokens=list(tokens), block_size=cache.block_size,
+                   blocks=owned[:nb], src=cache)
+
+
+def import_chain(dst: PagedKVCache, chain: KVChain, seq_id,
+                 total_len: int) -> Optional[ImportResult]:
+    """Make a chain resident in ``dst`` under ``seq_id``, reserving the
+    sequence's full decode budget (``total_len``) at admission — the decode
+    tier admits a sequence only once its KV is resident AND its worst case
+    fits, so decode can never run out of pages mid-flight.
+
+    Same-pool chains take the zero-copy fast path: the sequence already
+    owns its blocks and its reservation there (the single-tier config), so
+    the import is a no-op returning the existing chain.  Cross-pool chains
+    are admitted fresh in ``dst`` and copied block-for-block (device
+    gather/scatter for attached chains, host scatter for serde chains).
+    Returns None when ``dst`` cannot cover the worst case right now — the
+    caller parks the chain and retries after a leave; nothing was taken."""
+    bs = dst.block_size
+    assert chain.block_size == bs, (chain.block_size, bs)
+    if chain.src is dst:
+        nb = cdiv(max(1, len(chain.tokens)), bs)
+        owned = dst.allocator.owned(seq_id)
+        assert owned[:nb] == chain.blocks, "chain does not match its owner"
+        return ImportResult(blocks=list(chain.blocks), pairs=[],
+                            zero_copy=True, nbytes=0)
+    if not dst.admit(seq_id, len(chain.tokens), total_len):
+        return None
+    blocks = dst.allocator.owned(seq_id)
+    n = chain.num_blocks
+    assert len(blocks) == n, (len(blocks), n)
+    if chain.src is None:
+        dst._scatter_host(chain.host_k, chain.host_v, blocks)
+        pairs = [(-1, b) for b in blocks]
+    else:
+        pn = 1
+        while pn < n:
+            pn *= 2
+        si = np.full((pn,), TRASH_BLOCK, np.int32)
+        di = np.full((pn,), TRASH_BLOCK, np.int32)
+        si[:n] = chain.blocks
+        di[:n] = blocks
+        fn = dst._xfer_fns.get(pn)
+        if fn is None:
+            def xfer(dkp, dvp, skp, svp, s, d):
+                kb = jnp.take(skp, s, axis=1)
+                vb = jnp.take(svp, s, axis=1)
+                return dkp.at[:, d].set(kb.astype(dkp.dtype)), \
+                    dvp.at[:, d].set(vb.astype(dvp.dtype))
+            fn = jax.jit(xfer, donate_argnums=(0, 1))
+            dst._xfer_fns[pn] = fn
+        dst.kp, dst.vp = fn(dst.kp, dst.vp, chain.src.kp, chain.src.vp,
+                            jnp.asarray(si), jnp.asarray(di))
+        pairs = list(zip(chain.blocks, blocks))
+    return ImportResult(blocks=blocks, pairs=pairs, zero_copy=False,
+                        nbytes=chain.nbytes)

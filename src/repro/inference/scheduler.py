@@ -55,7 +55,27 @@ Backpressure: when an attached delta stream's consumer lags (its bounded
 queue fills past ``backpressure_hwm``), the scheduler defers new joins and
 halves the effective prefill chunk until the consumer drains — sampled
 tokens are never dropped (queues are sized to the request budget), this
-only stops the scheduler racing further ahead of slow readers.
+only stops the scheduler racing further ahead of slow readers.  The
+shrunk chunk is clamped to a whole block multiple: exported handoff
+chains must never contain a partially-written tail block, so chunk
+boundaries always land on block boundaries.
+
+Tiered serving (PR 9): the loop is structured as two cooperating tiers —
+a PREFILL tier (admission + chunked/batched prefill against the prefill
+pool, which hosts the prefix index) and a DECODE tier (the batched step
+over the decode pool).  A request finishing prefill is sealed into a
+``KVChain`` (``paged_kv.export_chain``) and parked in the handoff stage;
+``import_chain`` admits it into the decode pool — with its full decode
+reservation — before it joins the decode batch, so decode admits a
+sequence only once its KV is resident.  With ``tiers=1`` (default) both
+tiers share ONE pool and the handoff is the zero-copy fast path (pure
+accounting, no device work); with ``tiers=2`` the pools are separate
+(each sized ``num_blocks``) and the handoff is one donating gather/
+scatter per chain.  Both tiers run on the single scheduler thread, so
+step-boundary semantics (weight swaps, aborts, ``on_step_boundary``) are
+unchanged and sampled ids/logprobs stay bit-identical across tier modes
+(tests/test_disagg.py).  ``call_at_boundary`` runs host callbacks (shared
+prefix export/import) between steps, where no device call is in flight.
 
 Determinism contract: per-request RNG keys are split off the engine RNG at
 *submission* (same order ⇒ same keys as serial ``generate_ids`` calls),
@@ -87,7 +107,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import tokenizer as tok
-from repro.inference.paged_kv import PagedKVCache, cdiv
+from repro.inference.paged_kv import (PagedKVCache, cdiv, export_chain,
+                                      import_chain)
 from repro.models import registry as M
 
 
@@ -139,6 +160,8 @@ class SchedRequest:
     aborted: threading.Event = field(default_factory=threading.Event)
     # -- runtime state (owned by the scheduler thread) -----------------------
     seq_id: int = -1
+    tier: str = "prefill"    # which pool owns the seq ("prefill" | "decode")
+    chain: Any = None        # sealed KVChain while parked in the handoff stage
     prefill_pos: int = 0     # next prompt position to compute (chunked)
     cached_tokens: int = 0   # prefix positions served from the cache
     rng: Any = None          # carried per-sequence key chain
@@ -170,27 +193,32 @@ class ContinuousBatchingScheduler:
     """One shared decode loop advancing every in-flight request (see the
     module docstring for the admit/prefill/step/leave lifecycle).  Public
     surface: ``submit`` (a ``SchedRequest`` → its Future), ``abort``,
-    ``stats``, ``prewarm`` (AOT-compile the step programs), ``close``, and
-    the ``on_step_boundary`` test/bench hook, invoked on the scheduler
-    thread at the top of every loop iteration — the exact point where
-    staged weight swaps land and aborts are reaped."""
+    ``stats``, ``prewarm`` (AOT-compile the step programs), ``close``,
+    ``call_at_boundary`` (run a host callback between steps — the shared-
+    prefix export/import path), and the ``on_step_boundary`` test/bench
+    hook, invoked on the scheduler thread at the top of every loop
+    iteration — the exact point where staged weight swaps land and aborts
+    are reaped."""
 
     def __init__(self, engine, *, block_size: int = 16, max_batch: int = 32,
                  num_blocks: Optional[int] = None, prefix_cache: bool = True,
                  prefill_chunk: int = 64,
                  max_cached_blocks: Optional[int] = None,
                  prefill_batched: bool = True,
-                 backpressure_hwm: float = 0.9):
+                 backpressure_hwm: float = 0.9,
+                 tiers: int = 1):
         assert M.supports_paged_decode(engine.cfg), (
             engine.cfg.family, "has no paged decode path")
         assert M.supports_chunked_prefill(engine.cfg), (
             engine.cfg.family, "has no chunked prefill path")
+        assert tiers in (1, 2), tiers
         self.engine = engine
         self.block_size = block_size
         self.max_batch = max_batch
         self.prefix_cache = prefix_cache
         self.prefill_chunk = max(1, prefill_chunk)
         self.max_cached_blocks = max_cached_blocks
+        self.tiers = tiers
         # batched multi-prompt prefill: one program per (bucket, chunk)
         # group per pass; families without the batched forward fall back to
         # the per-request loop
@@ -201,10 +229,23 @@ class ContinuousBatchingScheduler:
         self.backpressure_hwm = backpressure_hwm
         mbs = cdiv(engine.max_len, block_size)
         self.num_blocks = num_blocks or 1 + max_batch * mbs
+        # prefill pool: hosts the prefix index (only prefill-computed blocks
+        # are ever published); decode pool: full generation chains, no index.
+        # tiers=1 aliases both names to ONE pool — the handoff layer's
+        # zero-copy fast path makes the tier split free there.
         self.cache = self._new_cache()
+        self.dcache = (self.cache if tiers == 1
+                       else self._new_cache(prefix=False))
         self._queue: Deque[SchedRequest] = deque()
         self._prefilling: Deque[SchedRequest] = deque()
+        # sealed chains waiting for decode-pool admission (FIFO; only ever
+        # non-empty in tiered mode when the decode pool is momentarily full)
+        self._handoff: Deque[SchedRequest] = deque()
         self._active: List[SchedRequest] = []
+        # host callbacks to run at the next step boundary (shared-prefix
+        # export/import — they touch pools/allocators, so they must run on
+        # this thread between device calls); (fn, Future) pairs
+        self._boundary_tasks: Deque[Tuple[Any, Future]] = deque()
         self._qlock = threading.Lock()
         self._wake = threading.Event()
         self._stop = threading.Event()
@@ -239,16 +280,20 @@ class ContinuousBatchingScheduler:
             "prefill_chunks_shrunk": 0,
             # full prompt blocks salvaged from aborted prefills
             "speculative_published_blocks": 0,
+            # prefill→decode handoff: every join exports/imports a chain;
+            # bytes stay 0 on the same-pool zero-copy path (tiers=1)
+            "chains_exported": 0, "chains_imported": 0, "handoff_bytes": 0,
+            "handoff_waits": 0,
         }
         self._thread = threading.Thread(
             target=self._loop, name="cbatch-scheduler", daemon=True)
         self._thread.start()
 
-    def _new_cache(self) -> PagedKVCache:
+    def _new_cache(self, prefix: Optional[bool] = None) -> PagedKVCache:
         return PagedKVCache(
             self.engine.cfg, block_size=self.block_size,
             max_len=self.engine.max_len, num_blocks=self.num_blocks,
-            prefix_cache=self.prefix_cache,
+            prefix_cache=self.prefix_cache if prefix is None else prefix,
             max_cached_blocks=self.max_cached_blocks)
 
     # -- public surface -------------------------------------------------------
@@ -289,8 +334,55 @@ class ContinuousBatchingScheduler:
         with self._qlock:
             out["queued"] = len(self._queue)
         out["prefilling"] = len(self._prefilling)
-        out["in_flight"] = len(self._active) + len(self._prefilling)
+        out["in_flight"] = (len(self._active) + len(self._prefilling)
+                            + len(self._handoff))
+        out["tiers"] = self.tiers
+        # per-tier occupancy: requests currently owned by each stage
+        out["tier_occupancy"] = {"prefill": len(self._prefilling),
+                                 "handoff": len(self._handoff),
+                                 "decode": len(self._active)}
+        if self.tiers > 1:
+            out["decode_pool"] = self.dcache.stats()
         return out
+
+    def call_at_boundary(self, fn, timeout: float = 60.0):
+        """Run ``fn()`` on the scheduler thread at the next step boundary
+        and return its result (thread-safe; raises what ``fn`` raises, or
+        RuntimeError when the scheduler closes first).  The boundary is the
+        one point where no device call is in flight and no stage list is
+        being mutated — shared-prefix export/import (which read and write
+        the pools and allocators) go through here."""
+        fut: Future = Future()
+        with self._qlock:
+            if self._stop.is_set():
+                raise RuntimeError("scheduler closed")
+            self._boundary_tasks.append((fn, fut))
+        self._wake.set()
+        if self._stop.is_set():
+            # raced with close(): the exit drain may have run before our
+            # append — drain again ourselves once the thread is gone
+            self._thread.join(timeout=60)
+            self._drain_boundary_tasks(RuntimeError("scheduler closed"))
+        return fut.result(timeout)
+
+    def _run_boundary_tasks(self) -> None:
+        while True:
+            with self._qlock:
+                if not self._boundary_tasks:
+                    return
+                fn, fut = self._boundary_tasks.popleft()
+            try:
+                fut.set_result(fn())
+            except Exception as e:  # noqa: BLE001 — deliver to the caller
+                fut.set_exception(e)
+
+    def _drain_boundary_tasks(self, exc: Exception) -> None:
+        with self._qlock:
+            pending = list(self._boundary_tasks)
+            self._boundary_tasks.clear()
+        for _, fut in pending:
+            if not fut.done():
+                fut.set_exception(exc)
 
     def prewarm(self, prefill: bool = False) -> int:
         """AOT-compile every power-of-two batched step program (there are
@@ -366,6 +458,11 @@ class ContinuousBatchingScheduler:
             try:
                 if self.on_step_boundary is not None:
                     self.on_step_boundary()
+                # boundary host tasks (shared-prefix export/import) run
+                # first: no device call is in flight, no stage list is mid-
+                # mutation, and anything they publish/import is visible to
+                # this very iteration's admissions
+                self._run_boundary_tasks()
                 # staged weight swap lands here, BEFORE reap/admit: no step
                 # or prefill program is in flight, so donating the outgoing
                 # param buffers cannot race a device call that reads them
@@ -385,23 +482,29 @@ class ContinuousBatchingScheduler:
                         self.metrics["backpressure_deferrals"] += 1
                 else:
                     self._admit_pending()
-                if not self._active and not self._prefilling:
+                if (not self._active and not self._prefilling
+                        and not self._handoff):
                     self._wake.wait(timeout=0.05)
                     self._wake.clear()
                     continue
-                # prefill, then one decode step.  Every prefilling request
-                # advances ONE chunk per iteration: a burst of short
-                # prompts joins at the next boundary (full batch occupancy,
-                # same as the old one-shot joins), while a long cold prompt
-                # spreads its chunks across iterations and never stalls
-                # in-flight decodes for more than a chunk's latency.
+                # prefill tier, then handoff drain, then one decode-tier
+                # step.  Every prefilling request advances ONE chunk per
+                # iteration: a burst of short prompts joins at the next
+                # boundary (full batch occupancy, same as the old one-shot
+                # joins), while a long cold prompt spreads its chunks
+                # across iterations and never stalls in-flight decodes for
+                # more than a chunk's latency.  Chains parked in the
+                # handoff stage (decode pool momentarily full) retry here
+                # every iteration, after any leave has freed pages.
                 self._prefill_step()
+                self._admit_handoff()
                 if self._active:
                     self._step_once()
             except Exception as e:  # noqa: BLE001 — fail loudly, stay alive
                 self.metrics["errors"] += 1
                 self._fail_all(e)
         self._fail_all(RuntimeError("scheduler closed"))
+        self._drain_boundary_tasks(RuntimeError("scheduler closed"))
 
     # -- hot weight swap: applied at the step boundary ------------------------
     def _apply_staged_weights(self) -> None:
@@ -465,9 +568,10 @@ class ContinuousBatchingScheduler:
     def _fail_all(self, exc: Exception) -> None:
         with self._qlock:
             pending = (list(self._queue) + list(self._prefilling)
-                       + list(self._active))
+                       + list(self._handoff) + list(self._active))
             self._queue.clear()
         self._prefilling.clear()
+        self._handoff.clear()
         self._active.clear()
         for r in pending:
             self._fail_one(r, exc)
@@ -477,6 +581,8 @@ class ContinuousBatchingScheduler:
             # prefix index goes with them: its pins name dead pool content)
             # so the scheduler stays usable for new submissions
             self.cache = self._new_cache()
+            self.dcache = (self.cache if self.tiers == 1
+                           else self._new_cache(prefix=False))
 
     # -- abort: leave the batch at a step boundary, free pages now ------------
     def _reap_aborted(self) -> None:
@@ -499,7 +605,10 @@ class ContinuousBatchingScheduler:
             # ever committed — reclaimed stays 0 for queued drops
             self.metrics["aborts"] += 1
             self.engine._resolve(r, "aborted")
-        for stage in (self._prefilling, self._active):
+        # every admitted stage — a request parked mid-handoff (sealed chain
+        # waiting for decode-pool room) still owns its prefill-pool blocks,
+        # and an abort there must free ALL of them (tests/test_disagg.py)
+        for stage in (self._prefilling, self._handoff, self._active):
             for r in [r for r in stage if r.aborted.is_set()]:
                 stage.remove(r)
                 self.metrics["aborts"] += 1
@@ -507,13 +616,14 @@ class ContinuousBatchingScheduler:
                     r.max_new - len(r.out_ids))
                 if stage is self._prefilling and r.prefill_pos >= self.block_size:
                     self.metrics["speculative_published_blocks"] += (
-                        self.cache.publish(
-                            r.seq_id, r.prompt_ids[:r.prefill_pos]))
+                        self._publish(r, r.prompt_ids[:r.prefill_pos]))
+                r.chain = None
                 self._retire(r, finish="aborted")
 
     # -- join: prefix match + admission --------------------------------------
     def _admit_pending(self) -> None:
-        while len(self._active) + len(self._prefilling) < self.max_batch:
+        while (len(self._active) + len(self._prefilling)
+               + len(self._handoff)) < self.max_batch:
             with self._qlock:
                 req = self._queue[0] if self._queue else None
             if req is None:
@@ -521,10 +631,16 @@ class ContinuousBatchingScheduler:
             plen = len(req.prompt_ids)
             seq_id = next(self._seq_ids)
             total = min(plen + req.max_new, self.engine.max_len)
+            # single-pool mode reserves the whole generation at admission
+            # (decode extends from that headroom); tiered mode reserves only
+            # the prompt here — the decode budget is reserved in the DECODE
+            # pool at handoff import, the point where KV becomes resident
+            reserve = total if self.tiers == 1 else plen
             shared, matched, cow_src, cow_len = self.cache.match_prefix(
                 req.prompt_ids)
-            if not self.cache.admit(seq_id, plen, total, shared=shared):
+            if not self.cache.admit(seq_id, plen, reserve, shared=shared):
                 if (not self._active and not self._prefilling
+                        and not self._handoff
                         and self.cache.allocator.available()
                         == self.cache.num_blocks - 1):
                     # pool is idle and the request STILL does not fit: it
@@ -564,7 +680,8 @@ class ContinuousBatchingScheduler:
         (hysteresis-free: re-evaluated every boundary, and an empty
         in-flight set always reads 0.0 — deferral can never deadlock)."""
         worst = 0.0
-        for r in itertools.chain(self._prefilling, self._active):
+        for r in itertools.chain(self._prefilling, self._handoff,
+                                 self._active):
             if r.stream is not None:
                 b = r.stream.backlog()
                 if b > worst:
@@ -575,13 +692,19 @@ class ContinuousBatchingScheduler:
                                and worst >= self.backpressure_hwm)
 
     def _effective_chunk(self) -> int:
-        """Prefill chunk size for this pass: halved (floored at one block)
-        while a stream consumer lags.  Chunk-size changes are bit-safe —
-        chunk boundaries never affect sampled values, only how the prompt
-        work is sliced (the chunked-vs-one-shot equivalence tests run at
-        several sizes)."""
+        """Prefill chunk size for this pass: halved while a stream consumer
+        lags, then CLAMPED DOWN to a whole block multiple (floored at one
+        block) — the handoff granularity.  A chunk that stopped mid-block
+        would leave a partially-written non-tail block in the sequence's
+        chain if the request were aborted and speculatively published, and
+        chunk boundaries must stay block-aligned for exported chains.
+        Chunk-size changes are bit-safe — chunk boundaries never affect
+        sampled values, only how the prompt work is sliced (the chunked-
+        vs-one-shot equivalence tests run at several sizes)."""
         if self._backpressured:
-            return max(self.block_size, self.prefill_chunk // 2)
+            half = self.prefill_chunk // 2
+            return max(self.block_size,
+                       (half // self.block_size) * self.block_size)
         return self.prefill_chunk
 
     # -- prefill: fixed-size chunks inside the step loop ----------------------
@@ -703,14 +826,33 @@ class ContinuousBatchingScheduler:
         #                   resolve it
         self._finish_prefill(req, t, float(lp0), rng, pv)
 
+    def _publish(self, req: SchedRequest, tokens) -> int:
+        """Publish prefill-computed prompt blocks into the prefix index and
+        notify the engine's publish hook (the shared-index plumbing) with
+        the full-block token prefix.  Best-effort on the hook side — a
+        failing service callback must never take the scheduler down."""
+        pinned = self.cache.publish(req.seq_id, tokens)
+        hook = getattr(self.engine, "prefix_publish_hook", None)
+        if hook is not None and self.cache.index is not None:
+            nfull = (len(tokens) // self.block_size) * self.block_size
+            if nfull:
+                try:
+                    hook(list(tokens[:nfull]))
+                except Exception:  # noqa: BLE001 — telemetry, not serving
+                    pass
+        return pinned
+
     def _finish_prefill(self, req: SchedRequest, t: int, lp: float,
                         rng, pv: int) -> None:
         """Join tail shared by the batched and per-request prefill paths:
-        publish the prompt blocks, record/emit the fused first token, and
-        move the request into the decode batch (or retire it)."""
-        # publish BEFORE any retire: only prefill-computed prompt blocks are
-        # cacheable (decode KV is not bit-identical to prefill KV)
-        self.cache.publish(req.seq_id, req.prompt_ids)
+        publish the prompt blocks, record/emit the fused first token, seal
+        the prompt KV into a handoff chain and move the request toward the
+        decode tier (or retire it)."""
+        # publish BEFORE any retire or export: only prefill-computed prompt
+        # blocks are cacheable (decode KV is not bit-identical to prefill
+        # KV) — and publishing before the handoff frees the prefill-side
+        # copy is what keeps the prefix cached across the tier boundary
+        self._publish(req, req.prompt_ids)
         req.rng = rng
         req.out_ids.append(t)
         req.out_lps.append(lp)
@@ -721,7 +863,53 @@ class ContinuousBatchingScheduler:
         self._prefilling.remove(req)
         if t == tok.END_OF_TURN or req.max_new <= 1:
             self._retire(req)
-        else:
+            return
+        # seal the chain (pure accounting) and park it in the handoff
+        # stage; _admit_handoff drains it immediately when the decode pool
+        # has room (always, in the same-pool configuration)
+        req.chain = export_chain(self.cache, req.seq_id, req.prompt_ids)
+        self.metrics["chains_exported"] += 1
+        self._handoff.append(req)
+        self._admit_handoff()
+
+    def _admit_handoff(self) -> None:
+        """Drain the handoff stage in FIFO order: admit each sealed chain
+        into the decode pool (full decode reservation), copy its KV when the
+        pools differ, free the prefill-side sequence, and join the decode
+        batch.  Stops at the first chain that does not fit — decode-pool
+        admission order stays FIFO, and the parked chain's prefill-pool
+        blocks stay owned (so its KV cannot be evicted) until it either
+        imports or aborts.  A chain that can never fit (idle decode pool
+        and still no room) fails loudly instead of wedging the stage."""
+        while self._handoff:
+            req = self._handoff[0]
+            total = min(len(req.prompt_ids) + req.max_new,
+                        self.engine.max_len)
+            res = import_chain(self.dcache, req.chain, req.seq_id, total)
+            if res is None:
+                if (not self._active
+                        and self.dcache.allocator.available()
+                        == self.dcache.num_blocks - 1):
+                    self._handoff.popleft()
+                    self.cache.free(req.seq_id)
+                    req.chain = None
+                    self._fail_one(req, ValueError(
+                        f"sequence needs more decode-pool KV blocks than "
+                        f"the pool has (prompt {len(req.prompt_ids)} + "
+                        f"max_new {req.max_new}, {self.dcache.num_blocks} "
+                        f"blocks of {self.block_size})"))
+                    continue
+                self.metrics["handoff_waits"] += 1
+                return          # decode pool full — retry next boundary
+            self._handoff.popleft()
+            if not res.zero_copy:
+                # the decode tier now owns a private copy; drop the
+                # prefill-side sequence (published/cached blocks live on)
+                self.cache.free(req.seq_id)
+                self.metrics["handoff_bytes"] += res.nbytes
+            req.chain = None
+            req.tier = "decode"
+            self.metrics["chains_imported"] += 1
             self._active.append(req)
             self.metrics["peak_batch"] = max(self.metrics["peak_batch"],
                                              len(self._active))
@@ -796,17 +984,18 @@ class ContinuousBatchingScheduler:
         Bb = 1
         while Bb < n:
             Bb *= 2
-        maxnb = self.cache.max_blocks_per_seq
+        cache = self.dcache       # decode tier: same pool when tiers == 1
+        maxnb = cache.max_blocks_per_seq
         tokens = np.zeros((Bb,), np.int32)
         positions = np.zeros((Bb,), np.int32)
         bts = np.zeros((Bb, maxnb), np.int32)
         rngs = []
         for i, r in enumerate(acts):
             p_feed = len(r.prompt_ids) + len(r.out_ids) - 1
-            self.cache.ensure(r.seq_id, p_feed)
+            cache.ensure(r.seq_id, p_feed)
             tokens[i] = r.last_token
             positions[i] = p_feed
-            bts[i] = self.cache.block_table_row(r.seq_id)
+            bts[i] = cache.block_table_row(r.seq_id)
             rngs.append(r.rng)
         rngs.extend([self._zero_key] * (Bb - n))
 
@@ -817,8 +1006,8 @@ class ContinuousBatchingScheduler:
         with self.engine._lock:
             params = self.engine.params
             pv = self.engine._applied_version
-        self.cache.kp, self.cache.vp, nxt, lps, rngs2 = fn(
-            params, self.cache.kp, self.cache.vp,
+        cache.kp, cache.vp, nxt, lps, rngs2 = fn(
+            params, cache.kp, cache.vp,
             jnp.asarray(tokens), jnp.asarray(positions), jnp.asarray(bts),
             jnp.stack(rngs))
         nxt = np.asarray(nxt)
@@ -868,7 +1057,9 @@ class ContinuousBatchingScheduler:
 
     # -- leave ----------------------------------------------------------------
     def _retire(self, req: SchedRequest, finish: Optional[str] = None) -> None:
-        self.cache.free(req.seq_id)
+        # a request retires from whichever pool currently owns its sequence:
+        # the prefill pool before the handoff import, the decode pool after
+        (self.cache if req.tier == "prefill" else self.dcache).free(req.seq_id)
         self.metrics["leaves"] += 1
         self.metrics["completed"] += 1
         if finish is None:

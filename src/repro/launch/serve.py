@@ -55,23 +55,39 @@ from repro.rollout import (AgentSpec, GatewayNode, PipelineConfig,
 
 def build_stack(arch: str, gateways: int = 1,
                 pipeline: PipelineConfig | None = None,
-                journal_dir: str | None = None):
-    """Assemble the in-process serving stack — one smoke-config Engine,
-    a RolloutServer, and ``gateways`` registered GatewayNodes — and
-    return ``(engine, server, nodes)``.
+                journal_dir: str | None = None,
+                tiers: int = 1, shared_prefix: bool = False):
+    """Assemble the in-process serving stack — Engine(s), a RolloutServer,
+    and ``gateways`` registered GatewayNodes — and return
+    ``(engine, server, nodes)`` (``engine`` is the first one).
 
     ``journal_dir`` makes the service restart-safe: the server journals
     admissions/results/acks to ``<journal_dir>/rollout.wal`` (replayed on
     the next boot over the same directory) and every gateway proxy spills
-    per-session interaction logs under ``<journal_dir>/sessions/``."""
+    per-session interaction logs under ``<journal_dir>/sessions/``.
+
+    ``tiers=2`` disaggregates every engine's continuous-batching loop into
+    a prefill tier and a decode tier with KV-chain handoff (scheduler
+    module docstring); ``shared_prefix=True`` gives each gateway its OWN
+    engine and hosts a service-level SharedPrefixIndex on the server, so a
+    prompt prefix prefilled on one node warms all of them (per-gateway
+    engines are required — the index maps prefixes to nodes, which is
+    meaningless when every node aliases one cache)."""
     cfg = get_smoke_config(arch).replace(vocab_size=512)
-    engine = Engine(cfg, rng=jax.random.PRNGKey(0), max_len=512, max_new=32)
-    server = RolloutServer(journal_dir=journal_dir)
+
+    def _engine():
+        return Engine(cfg, rng=jax.random.PRNGKey(0), max_len=512,
+                      max_new=32, tiers=tiers)
+
+    engine = _engine()
+    server = RolloutServer(journal_dir=journal_dir,
+                           shared_prefix=shared_prefix)
     spill = (os.path.join(journal_dir, "sessions")
              if journal_dir is not None else None)
     nodes = []
-    for _ in range(gateways):
-        gw = GatewayNode(engine, pipeline=pipeline or PipelineConfig(),
+    for i in range(gateways):
+        eng = engine if (i == 0 or not shared_prefix) else _engine()
+        gw = GatewayNode(eng, pipeline=pipeline or PipelineConfig(),
                          spill_dir=spill)
         server.register_node(gw)
         nodes.append(gw)
@@ -306,6 +322,15 @@ def main(argv=None):
                          "(baseline mode, for A/B against /rollout/nodes)")
     ap.add_argument("--run-workers", type=int, default=2)
     ap.add_argument("--prewarm-capacity", type=int, default=16)
+    ap.add_argument("--tiers", type=int, default=1, choices=(1, 2),
+                    help="disaggregated serving: 2 = separate prefill and "
+                         "decode KV pools with chain handoff (doubles KV "
+                         "memory); 1 = both tiers alias one pool "
+                         "(zero-copy handoff, the default)")
+    ap.add_argument("--shared-prefix", action="store_true",
+                    help="host a service-level shared prefix index and "
+                         "give each gateway its own engine: a prompt "
+                         "prefix prefilled on one node warms every node")
     ap.add_argument("--journal-dir", default=None,
                     help="durable restart-safe mode: journal admissions/"
                          "results/acks to <dir>/rollout.wal (replayed on "
@@ -315,7 +340,9 @@ def main(argv=None):
     pipe = PipelineConfig(serial=args.serial, run_workers=args.run_workers,
                           prewarm_capacity=args.prewarm_capacity)
     engine, server, nodes = build_stack(args.arch, args.gateways, pipe,
-                                        journal_dir=args.journal_dir)
+                                        journal_dir=args.journal_dir,
+                                        tiers=args.tiers,
+                                        shared_prefix=args.shared_prefix)
     httpd = ThreadingHTTPServer(("127.0.0.1", args.port),
                                 make_handler(server, nodes, engine))
     print(f"[serve] rollout service + provider proxy on :{args.port}"

@@ -121,6 +121,15 @@ class GatewayNode:
             "run_busy_s": 0.0, "init_s": 0.0, "recon_s": 0.0, "eval_s": 0.0,
             "stage_log": [],   # (session_id, stage, start, end)
         }
+        # shared prefix index (attach_prefix_service): resolution + publish
+        # counters surfaced via status()["backend"]["shared_prefix"]
+        self._prefix_service = None
+        self._prefix_node: Optional[str] = None
+        self.prefix_metrics: Dict[str, int] = {
+            "shared_prefix_hits": 0, "shared_prefix_misses": 0,
+            "shared_prefix_local_hits": 0, "shared_prefix_imports": 0,
+            "shared_prefix_imported_tokens": 0, "shared_prefix_published": 0,
+        }
         self._threads: List[threading.Thread] = []
         if cfg.serial:
             self._workers = {s: 1 for s in _STAGES}
@@ -212,10 +221,83 @@ class GatewayNode:
             "stats": dict(stats) if isinstance(stats, dict) else None,
             "scheduler": sched() if callable(sched) else None,
             "prefix": self.proxy.prefix_stats(),
+            # shared-prefix resolution counters (None until a service-level
+            # index is attached via attach_prefix_service)
+            "shared_prefix": (dict(self.prefix_metrics)
+                              if self._prefix_service is not None else None),
             # live policy version + per-version record histogram (hot swaps)
             "policy_version": getattr(eng, "policy_version", None),
             "versions": self.proxy.version_stats(),
         }
+
+    # -- service-level shared prefix index ------------------------------------
+    def attach_prefix_service(self, service,
+                              node_id: Optional[str] = None) -> bool:
+        """Wire this node into a ``SharedPrefixIndex``: register an exporter
+        (peers pull cached KV from this engine), hook the engine's publish
+        path (local prefill-computed prefixes get indexed service-wide) and
+        its pre-submission resolver (cold prompts warm from peers before
+        admission).  No-op returning False when the backend is not an
+        engine with the shared-prefix surface (fake/serial backends)."""
+        eng = self.proxy.backend
+        if not (hasattr(eng, "export_prefix")
+                and hasattr(eng, "import_prefix")
+                and hasattr(eng, "prefix_resolver")):
+            return False
+        self._prefix_service = service
+        self._prefix_node = node_id or self.gateway_id
+        service.register_node(self._prefix_node, exporter=self._export_prefix)
+        eng.prefix_publish_hook = self._publish_prefix
+        eng.prefix_resolver = self._resolve_prefix
+        return True
+
+    def _export_prefix(self, tokens):
+        """Exporter the shared index calls when a PEER pulls a prefix this
+        node published: serialize the engine's cached KV for it."""
+        try:
+            return self.proxy.backend.export_prefix(tokens)
+        except Exception:  # noqa: BLE001 — a failed export is a miss
+            return None
+
+    def _publish_prefix(self, tokens) -> None:
+        """Engine publish hook: index a locally-published prefix key in the
+        shared service index (no KV moves — peers pull on demand)."""
+        if self._prefix_service is None:
+            return
+        self._prefix_service.publish(self._prefix_node, tokens)
+        self.prefix_metrics["shared_prefix_published"] += 1
+
+    def _resolve_prefix(self, prompt_ids) -> None:
+        """Engine pre-submission resolver: when the shared index knows a
+        longer prefix of this prompt than the local cache holds, pull the
+        KV payload from a holder node and import it — the admission that
+        follows then takes the warm path (``cached_tokens > 0``) without
+        recomputing prefill.  Best-effort: any failure is just a miss."""
+        svc = self._prefix_service
+        if svc is None:
+            return
+        matched, holders = svc.match(prompt_ids)
+        if matched == 0:
+            self.prefix_metrics["shared_prefix_misses"] += 1
+            return
+        if self._prefix_node in holders:
+            # this node already holds the deepest published block — the
+            # local prefix cache serves it without any transfer
+            self.prefix_metrics["shared_prefix_hits"] += 1
+            self.prefix_metrics["shared_prefix_local_hits"] += 1
+            return
+        payload = svc.fetch(prompt_ids, exclude=(self._prefix_node,))
+        if payload is None:
+            self.prefix_metrics["shared_prefix_misses"] += 1
+            return
+        imported = self.proxy.backend.import_prefix(payload)
+        if imported > 0:
+            # this node now holds the prefix too — index it so later
+            # sessions (and peers) resolve straight to it
+            svc.publish(self._prefix_node, payload["tokens"])
+        self.prefix_metrics["shared_prefix_hits"] += 1
+        self.prefix_metrics["shared_prefix_imports"] += 1
+        self.prefix_metrics["shared_prefix_imported_tokens"] += imported
 
     def backpressure(self) -> float:
         """Dispatch score: sessions in flight plus queued work, normalized

@@ -1,0 +1,242 @@
+"""Service-level shared prefix index (paper §2.3, PR 9).
+
+The per-engine radix ``PrefixIndex`` makes a prompt prefix warm for ONE
+node.  Multi-turn agent traffic shares long system prompts across every
+node of a rollout service, so this module promotes the index one level:
+``RolloutServer`` hosts a ``SharedPrefixIndex`` mapping token-block
+prefixes to the set of *nodes* whose engines hold prefill-computed KV for
+them.  The design is publish-key/pull-payload:
+
+  * publish — cheap: when an engine publishes a prefill-computed prefix
+    into its local index, its gateway forwards just the TOKEN KEY here
+    (no KV moves).  First word of traffic on any node indexes the prefix
+    for the whole service.
+  * resolve — on a cold prompt, the dispatching gateway asks this index
+    for the longest published prefix.  A local holder means the engine's
+    own cache already has it; a remote-only holder triggers a PULL: the
+    holder's exporter serializes the KV block chain
+    (``PagedKVCache.export_prefix_payload``) and the resolving engine
+    imports + republishes it — so a system prompt prefilled on one node
+    warms every node that ever sees it, and the copied KV is bit-exact
+    (only prefill-computed blocks are ever published, PR 3's rule).
+
+Thread-safe (gateways resolve/publish concurrently); the trie is bounded
+by ``max_entries`` with LRU leaf eviction, mirroring the engine-level
+index's leaf-only rule so a hot conversation's chain stays indexed.
+
+``affinity_key`` is the companion routing key: ``RolloutServer._dispatch``
+uses it to pin same-conversation sessions to the node already holding
+their prefix (sticky map) before falling back to load ranking.
+"""
+from __future__ import annotations
+
+import hashlib
+import threading
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+
+def affinity_key(session) -> str:
+    """Stable routing key for prefix-affine dispatch: sessions that share
+    it almost surely share a prompt prefix, so routing them to one node
+    compounds that node's warm cache.  Uses the task's explicit
+    ``conversation_id``/``affinity_key`` metadata when present, else a
+    hash of (harness, model, instruction) — samples of one task group and
+    repeat rollouts of one conversation land together either way."""
+    task = session.task
+    meta = task.metadata or {}
+    explicit = meta.get("conversation_id") or meta.get("affinity_key")
+    if explicit is not None:
+        return str(explicit)
+    raw = f"{task.agent.harness}|{task.agent.model_name}|{task.instruction}"
+    return hashlib.sha1(raw.encode()).hexdigest()[:16]
+
+
+class _Node:
+    __slots__ = ("key", "parent", "children", "holders", "tick")
+
+    def __init__(self, key: Tuple[int, ...], parent: Optional["_Node"]):
+        self.key = key
+        self.parent = parent
+        self.children: Dict[Tuple[int, ...], "_Node"] = {}
+        self.holders: Set[str] = set()
+        self.tick = 0
+
+
+class SharedPrefixIndex:
+    """Radix trie over token blocks → the NODES holding their prefill KV.
+
+    Hosted by ``RolloutServer``; gateways attach at ``register_node`` with
+    an exporter callable (``tokens -> payload | None``) backed by their
+    engine's cache.  ``publish`` indexes keys (no KV), ``match`` finds the
+    longest published prefix and its holders, ``fetch`` pulls the actual
+    KV payload from a holder — the resolving gateway imports it into its
+    own engine.  All methods are thread-safe."""
+
+    def __init__(self, block_size: int = 16, max_entries: int = 4096):
+        assert block_size > 0 and max_entries > 0
+        self.block_size = block_size
+        self.max_entries = max_entries
+        self._lock = threading.Lock()
+        self._root = _Node((), None)
+        self._exporters: Dict[str, Optional[Callable]] = {}
+        self._count = 0
+        self._tick = 0
+        self.metrics: Dict[str, int] = {
+            "publishes": 0, "published_blocks": 0, "queries": 0,
+            "hits": 0, "fetches": 0, "fetch_failures": 0, "evictions": 0,
+        }
+
+    def __len__(self) -> int:
+        return self._count
+
+    # -- node registry --------------------------------------------------------
+    def register_node(self, node_id: str,
+                      exporter: Optional[Callable] = None) -> None:
+        """Attach a node: ``exporter(tokens)`` serializes the node's cached
+        prefix of ``tokens`` (None = the node only publishes, e.g. tests)."""
+        with self._lock:
+            self._exporters[node_id] = exporter
+
+    def forget_node(self, node_id: str) -> None:
+        """Remove a dead node everywhere: its holder marks vanish and
+        entries nobody else holds are pruned (their KV is gone)."""
+        with self._lock:
+            self._exporters.pop(node_id, None)
+            self._forget(self._root, node_id)
+
+    def _forget(self, node: _Node, node_id: str) -> None:
+        for key, child in list(node.children.items()):
+            self._forget(child, node_id)
+            child.holders.discard(node_id)
+            if not child.holders and not child.children:
+                del node.children[key]
+                self._count -= 1
+
+    # -- publish / match / fetch ----------------------------------------------
+    def publish(self, node_id: str, tokens: Sequence[int]) -> int:
+        """Index every full token block of ``tokens`` as held by
+        ``node_id``.  Returns the number of blocks newly indexed (marking
+        an existing entry as also-held counts zero)."""
+        bs = self.block_size
+        with self._lock:
+            self._tick += 1
+            node, created = self._root, 0
+            for i in range(len(tokens) // bs):
+                key = tuple(int(t) for t in tokens[i * bs:(i + 1) * bs])
+                child = node.children.get(key)
+                if child is None:
+                    if self._count >= self.max_entries:
+                        self._evict_leaf()
+                    if self._count >= self.max_entries:
+                        break           # everything left is un-evictable
+                    child = _Node(key, node)
+                    node.children[key] = child
+                    self._count += 1
+                    created += 1
+                child.holders.add(node_id)
+                child.tick = self._tick
+                node = child
+            self.metrics["publishes"] += 1
+            self.metrics["published_blocks"] += created
+            return created
+
+    def match(self, tokens: Sequence[int]) -> Tuple[int, Set[str]]:
+        """Longest published prefix of ``tokens`` (whole blocks, capped one
+        token short of the prompt — the last token is always recomputed).
+        Returns ``(matched_tokens, holders_of_the_deepest_block)``."""
+        bs = self.block_size
+        max_full = max(0, (len(tokens) - 1) // bs)
+        with self._lock:
+            self._tick += 1
+            node, depth = self._root, 0
+            while depth < max_full:
+                key = tuple(int(t)
+                            for t in tokens[depth * bs:(depth + 1) * bs])
+                child = node.children.get(key)
+                if child is None:
+                    break
+                node = child
+                node.tick = self._tick
+                depth += 1
+            self.metrics["queries"] += 1
+            if depth:
+                self.metrics["hits"] += 1
+            return depth * bs, set(node.holders)
+
+    def fetch(self, tokens: Sequence[int],
+              exclude: Sequence[str] = ()) -> Optional[Any]:
+        """Pull the KV payload for the longest published prefix of
+        ``tokens`` from a holder node (deepest holders first, walking up
+        the chain on failure).  Returns the exporter's payload — the dict
+        ``PagedKVCache.import_prefix_payload`` accepts — or None when no
+        reachable holder still has the prefix cached."""
+        bs = self.block_size
+        max_full = max(0, (len(tokens) - 1) // bs)
+        with self._lock:
+            chain: List[_Node] = []
+            node = self._root
+            for depth in range(max_full):
+                key = tuple(int(t)
+                            for t in tokens[depth * bs:(depth + 1) * bs])
+                child = node.children.get(key)
+                if child is None:
+                    break
+                chain.append(child)
+                node = child
+            candidates: List[Tuple[str, Callable, int]] = []
+            seen: Set[str] = set()
+            for depth, n in zip(range(len(chain), 0, -1), reversed(chain)):
+                for holder in sorted(n.holders):
+                    exporter = self._exporters.get(holder)
+                    if (holder in seen or holder in exclude
+                            or exporter is None):
+                        continue
+                    seen.add(holder)
+                    candidates.append((holder, exporter, depth))
+        for _holder, exporter, depth in candidates:
+            try:
+                # one extra token of context, so the holder's own
+                # leave-one-token-to-compute match cap lands exactly on
+                # ``depth`` full blocks instead of truncating the last one
+                payload = exporter(list(tokens[:depth * bs + 1]))
+            except Exception:  # noqa: BLE001 — a dead peer is a miss
+                payload = None
+            if payload is not None:
+                with self._lock:
+                    self.metrics["fetches"] += 1
+                return payload
+        if candidates:
+            with self._lock:
+                self.metrics["fetch_failures"] += 1
+        return None
+
+    # -- eviction -------------------------------------------------------------
+    def _evict_leaf(self) -> None:
+        """Drop the least-recently-touched leaf (O(entries) scan — this
+        runs once per over-budget publish on the service control plane,
+        not on the engines' admission hot path)."""
+        victim: Optional[_Node] = None
+
+        def walk(node: _Node) -> None:
+            nonlocal victim
+            for child in node.children.values():
+                if child.children:
+                    walk(child)
+                elif victim is None or child.tick < victim.tick:
+                    victim = child
+        walk(self._root)
+        if victim is None:
+            return
+        del victim.parent.children[victim.key]
+        self._count -= 1
+        self.metrics["evictions"] += 1
+
+    def stats(self) -> Dict[str, int]:
+        """Entry count, registered nodes, and publish/match/fetch counters."""
+        with self._lock:
+            out = dict(self.metrics)
+            out["entries"] = self._count
+            out["nodes"] = len(self._exporters)
+            q = max(1, out["queries"])
+            out["hit_rate"] = round(out["hits"] / q, 3)
+            return out

@@ -29,6 +29,7 @@ import logging
 import os
 import threading
 import time
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Union
 
@@ -36,6 +37,7 @@ from repro.core.types import SessionResult
 from repro.rollout import journal as J
 from repro.rollout.admission import DEFAULT_TRAINER, AdmissionController
 from repro.rollout.gateway import GatewayNode
+from repro.rollout.prefix_service import SharedPrefixIndex, affinity_key
 from repro.rollout.types import Session, TaskRequest, TaskStatus
 
 _log = logging.getLogger(__name__)
@@ -44,6 +46,10 @@ _log = logging.getLogger(__name__)
 # on push/ack, so the nap only backstops time-based redelivery eligibility
 # (and is usually shortened to the exact next lease expiry)
 _FETCH_FALLBACK_NAP = 0.5
+
+# prefix-affine sticky-map bound: distinct conversation keys remembered at
+# once (LRU) — an evicted key just falls back to load ranking and re-sticks
+_AFFINITY_CAPACITY = 4096
 
 
 class UnknownTaskError(KeyError):
@@ -82,7 +88,8 @@ class RolloutServer:
                  admission_quantum: float = 1.0,
                  redeliver_timeout: float = 5.0,
                  journal_dir: Optional[str] = None,
-                 journal_fsync: bool = True):
+                 journal_fsync: bool = True,
+                 shared_prefix: bool = True):
         """``admission_limit`` bounds concurrently admitted sessions across
         the node pool — the contention that makes weighted fairness
         meaningful.  None = unbounded (admission still orders dispatch by
@@ -96,7 +103,15 @@ class RolloutServer:
         results re-enter the owner's queue (never acked ones), un-terminal
         sessions re-enter admission and are re-dispatched.  None (default)
         keeps the pre-journal all-in-memory behavior.  ``journal_fsync=
-        False`` trades crash durability for write speed."""
+        False`` trades crash durability for write speed.
+
+        ``shared_prefix`` (default on) hosts a service-level
+        ``SharedPrefixIndex``: gateways whose backend is a real engine
+        attach at ``register_node`` so a prompt prefix prefilled on one
+        node warms every node (publish-key/pull-payload, prefix_service
+        module docstring).  Dispatch becomes prefix-affine either way:
+        same-conversation sessions stick to one node before falling back
+        to backpressure ranking."""
         self._tasks: Dict[str, _TaskState] = {}
         self._nodes: Dict[str, _NodeState] = {}
         self._session_index: Dict[str, str] = {}   # session_id -> task_id
@@ -113,6 +128,14 @@ class RolloutServer:
         self._redeliver_timeout = redeliver_timeout
         self._inflight: set = set()     # admitted, not yet terminal
         self._callback_errors = 0       # swallowed trainer-callback raises
+        # service-level shared prefix index (PR 9) + prefix-affine routing:
+        # sticky conversation-key -> node_id LRU consulted before the
+        # backpressure min() in _dispatch
+        self._prefix_index: Optional[SharedPrefixIndex] = \
+            SharedPrefixIndex() if shared_prefix else None
+        self._affinity: "OrderedDict[str, str]" = OrderedDict()
+        self._affinity_hits = 0
+        self._affinity_misses = 0
         self._stop = threading.Event()
         # -- durability: open the WAL and rebuild state from it BEFORE the
         # monitor starts dispatching anything
@@ -350,6 +373,16 @@ class RolloutServer:
         the per-trainer queues).  Returns the node id; re-registering a
         dead node revives it with fresh heartbeat state."""
         gateway.result_sink = self._on_session_result
+        # wire the node into the shared prefix index; attach_prefix_service
+        # returns False (and we skip) when the backend is not an engine
+        # with the shared-prefix surface (fake/serial backends, tests)
+        if self._prefix_index is not None:
+            attach = getattr(gateway, "attach_prefix_service", None)
+            if callable(attach):
+                try:
+                    attach(self._prefix_index, node_id=gateway.gateway_id)
+                except Exception:  # noqa: BLE001 — shared prefix is an
+                    pass           # optimization; registration must succeed
         # re-registration (the only way a dead node rejoins): retire the
         # previous heartbeat thread before installing fresh state
         old_stop = self._hb_stops.pop(gateway.gateway_id, None)
@@ -392,8 +425,16 @@ class RolloutServer:
         """Elastic scale-down: sessions on the node are rescheduled."""
         with self._lock:
             st = self._nodes.pop(node_id, None)
+        self._forget_prefix_holder(node_id)
         if st is not None:
             self._reschedule_from(st.gateway)
+
+    def _forget_prefix_holder(self, node_id: str) -> None:
+        """Drop a departed node from the shared prefix index: its holder
+        marks vanish and prefixes nobody else holds are pruned (the KV
+        they pointed at is gone with the node)."""
+        if self._prefix_index is not None:
+            self._prefix_index.forget_node(node_id)
 
     def heartbeat(self, node_id: str,
                   metrics: Optional[Dict[str, Any]] = None) -> bool:
@@ -472,11 +513,15 @@ class RolloutServer:
             self._dispatch(s)
 
     def _dispatch(self, session: Session) -> None:
-        """Backpressure-aware routing: rank nodes by the queue-depth /
-        utilization telemetry they already export (``backpressure()``,
-        derived from ``status()`` / GET /rollout/nodes) instead of raw
-        session count, so a node with more workers — or with drained stage
-        queues — absorbs proportionally more sessions."""
+        """Prefix-affine, backpressure-aware routing.  Sessions sharing an
+        ``affinity_key`` (same conversation / task group → almost surely
+        the same prompt prefix) stick to the node that served the key
+        last, so that node's warm prefix cache compounds instead of the
+        prefix being re-prefilled on every node the load ranking happens
+        to pick.  Only when the key is new — or its sticky node is dead —
+        do we fall back to ranking nodes by the queue-depth / utilization
+        telemetry they already export (``backpressure()``), and re-stick
+        the key to the chosen node."""
         # reset any stale terminal status from a prior attempt NOW: poll()
         # must never keep counting a retried session as "error" while it
         # waits for the gateway to overwrite the status.  "scheduled", not
@@ -487,7 +532,7 @@ class RolloutServer:
         if not nodes:
             session.status = "pending"   # parked; picked up by the monitor
             return
-        target = min(nodes, key=lambda n: self._node_score(n.gateway))
+        target = self._affine_target(session, nodes)
         session.attempts += 1
         # journal BEFORE submit (WAL discipline): a crash between the two
         # replays into a re-dispatch, which at-least-once permits
@@ -495,6 +540,30 @@ class RolloutServer:
                    "gateway_id": target.gateway.gateway_id,
                    "attempts": session.attempts})
         target.gateway.submit(session)
+
+    def _affine_target(self, session: Session,
+                       nodes: List[_NodeState]) -> _NodeState:
+        """Pick the dispatch target: the session's sticky affinity node
+        when it is still alive (hit), else the least-backpressured node
+        (miss) — which the key then re-sticks to.  The sticky map is a
+        bounded LRU; eviction only costs a re-rank on the key's next
+        session."""
+        key = affinity_key(session)
+        by_id = {n.gateway.gateway_id: n for n in nodes}
+        with self._lock:
+            stuck = self._affinity.get(key)
+            if stuck is not None and stuck in by_id:
+                self._affinity.move_to_end(key)
+                self._affinity_hits += 1
+                return by_id[stuck]
+        target = min(nodes, key=lambda n: self._node_score(n.gateway))
+        with self._lock:
+            self._affinity_misses += 1
+            self._affinity[key] = target.gateway.gateway_id
+            self._affinity.move_to_end(key)
+            while len(self._affinity) > _AFFINITY_CAPACITY:
+                self._affinity.popitem(last=False)
+        return target
 
     @staticmethod
     def _node_score(gateway: GatewayNode) -> float:
@@ -593,7 +662,10 @@ class RolloutServer:
 
     def status(self) -> Dict[str, Any]:
         """Service-wide observability: node liveness, per-trainer admission
-        + staleness stats, backlog depths, task completion counts."""
+        + staleness stats, backlog depths, task completion counts, the
+        prefix-affine routing counters + shared-prefix index stats, and a
+        per-node tiered-serving rollup (chains exported/imported across
+        the prefill→decode handoff, handoff bytes, per-tier occupancy)."""
         with self._lock:
             nodes = dict(self._nodes)
             tasks = {tid: len(st.finished_ids) for tid, st in self._tasks.items()}
@@ -605,10 +677,15 @@ class RolloutServer:
                 "backlog": self._admission.backlog(),
             }
             callback_errors = self._callback_errors
+            affinity = {"hits": self._affinity_hits,
+                        "misses": self._affinity_misses,
+                        "entries": len(self._affinity)}
             journal = None
             if self._journal is not None:
                 journal = {**self._journal.stats(),
                            "replayed": dict(self._replay_counts)}
+        shared_prefix = (self._prefix_index.stats()
+                         if self._prefix_index is not None else None)
         node_view: Dict[str, Any] = {}
         for nid, n in nodes.items():
             # a frozen/shut-down gateway must not take the observability
@@ -622,12 +699,31 @@ class RolloutServer:
                     "utilization": gs["utilization"],
                     "queue_depths": gs["queue_depths"],
                     "pool": gs["pool"],
+                    "handoff": self._handoff_rollup(gs.get("backend")),
                 }
             except Exception as e:  # noqa: BLE001
                 node_view[nid] = {"alive": False, "error": str(e)}
         return {"tasks": tasks, "nodes": node_view,
                 "trainers": trainers, "admission": admission,
+                "affinity": affinity, "shared_prefix": shared_prefix,
                 "callback_errors": callback_errors, "journal": journal}
+
+    @staticmethod
+    def _handoff_rollup(backend: Optional[Dict[str, Any]]
+                        ) -> Optional[Dict[str, Any]]:
+        """Condense one node's backend telemetry to the tiered-serving
+        essentials: prefill→decode chain counters, handoff bytes, per-tier
+        occupancy and the node's shared-prefix resolution counters (None
+        when the node has no scheduler-backed engine)."""
+        sched = (backend or {}).get("scheduler")
+        if not sched:
+            return None
+        return {"tiers": sched.get("tiers"),
+                "tier_occupancy": sched.get("tier_occupancy"),
+                "chains_exported": sched.get("chains_exported"),
+                "chains_imported": sched.get("chains_imported"),
+                "handoff_bytes": sched.get("handoff_bytes"),
+                "shared_prefix": (backend or {}).get("shared_prefix")}
 
     def node_stats(self) -> Dict[str, Any]:
         """Full per-node pipeline telemetry (the §A.5 observability surface):
@@ -658,6 +754,7 @@ class RolloutServer:
                         n.alive = False
                         dead.append(n)
             for n in dead:
+                self._forget_prefix_holder(n.gateway.gateway_id)
                 self._reschedule_from(n.gateway)
             # dispatch any admitted sessions parked while no node was alive
             with self._lock:

@@ -333,6 +333,31 @@ def test_backpressure_defers_joins_shrinks_chunks_bit_identical():
         engB.close()
 
 
+def test_backpressure_chunk_clamped_to_whole_block_multiple():
+    """The backpressure-shrunk prefill chunk is clamped DOWN to a whole
+    block multiple (floored at one block): chunk boundaries must land on
+    block boundaries so an exported/speculatively-published chain never
+    contains a partially-written non-tail block (regression: the raw
+    ``prefill_chunk // 2`` could stop mid-block)."""
+    from types import SimpleNamespace
+    from repro.inference.scheduler import ContinuousBatchingScheduler as S
+    cases = [
+        (48, 16, 16),    # half = 24 → floored to one block boundary
+        (64, 16, 32),    # half = 32 → already block-aligned
+        (16, 16, 16),    # half = 8 → floored at one whole block
+        (40, 8, 16),     # half = 20 → floored to 16
+        (8, 16, 16),     # chunk smaller than a block still floors at one
+    ]
+    for chunk, bs, want in cases:
+        s = SimpleNamespace(prefill_chunk=chunk, block_size=bs,
+                            _backpressured=True)
+        assert S._effective_chunk(s) == want, (chunk, bs)
+        assert S._effective_chunk(s) % bs == 0
+        s._backpressured = False
+        assert S._effective_chunk(s) == chunk, \
+            "clamping must only apply while backpressured"
+
+
 # ---------------------------------------------------------------------------
 # properties: group assembly + pow-2 padding
 # ---------------------------------------------------------------------------

@@ -1,0 +1,274 @@
+"""Disaggregated prefill/decode tier tests (PR 9).
+
+  * equivalence — the tiered scheduler (``tiers=2``: separate prefill and
+    decode pools joined by KV-chain handoff) produces BIT-IDENTICAL
+    sampled ids and log-probs to the single-pool scheduler (``tiers=1``)
+    and the one-shot serial path, for cold waves of 1/4/8 prompts and for
+    warm / CoW / mixed admissions,
+  * handoff accounting — every join exports exactly one chain and imports
+    exactly one; bytes move only in tiered mode (the same-pool handoff is
+    the zero-copy fast path),
+  * mid-handoff abort — a request aborted while its sealed chain is
+    parked (decode pool full) frees ALL of its prefill-pool blocks, the
+    decode pool is untouched, and an identical successor is warm (the
+    chain's blocks were published before export) and bit-exact,
+  * shared prefix index — a prompt prefilled on engine 1 warms engine 2's
+    FIRST request through the service-level ``SharedPrefixIndex``
+    (publish-key → cross-engine fetch → import), bit-identically.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.inference import Engine
+from repro.rollout.prefix_service import SharedPrefixIndex
+
+CFG = get_smoke_config("qwen3-32b").replace(vocab_size=512)
+
+
+def _ids(lo: int, n: int) -> list:
+    """Deterministic raw prompt ids (plain tokens, no template)."""
+    return [(5 + (lo * 7 + j) % 240) for j in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# equivalence: tiered ≡ monolithic ≡ serial, bit for bit
+# ---------------------------------------------------------------------------
+
+def test_cold_waves_tiered_bit_identical_to_monolithic_and_serial():
+    """Waves of 1/4/8 cold prompts through three engines with the same
+    seed: serial one-shot, single-pool scheduler, tiered scheduler.  Every
+    sampled id and log-prob must agree bit for bit, and the handoff
+    counters must show one export + one import per join — with bytes
+    moved ONLY by the tiered engine (tiers=1 is the zero-copy path)."""
+    engA = Engine(CFG, rng=jax.random.PRNGKey(7), max_len=160, max_new=8,
+                  serial=True)
+    eng1 = Engine(CFG, rng=jax.random.PRNGKey(7), max_len=160, max_new=8,
+                  block_size=16, max_batch=16, tiers=1)
+    eng2 = Engine(CFG, rng=jax.random.PRNGKey(7), max_len=160, max_new=8,
+                  block_size=16, max_batch=16, tiers=2)
+    try:
+        assert eng1.scheduler.dcache is eng1.scheduler.cache, \
+            "tiers=1 must alias both tiers to one pool"
+        assert eng2.scheduler.dcache is not eng2.scheduler.cache, \
+            "tiers=2 must split the pools"
+        i = 0
+        for wave in (1, 4, 8):
+            prompts = [_ids(i + j, 24 + 16 * (j % 3)) for j in range(wave)]
+            serial = [engA.generate_ids(list(p)) for p in prompts]
+            futs1 = [eng1.submit_ids(list(p)) for p in prompts]
+            futs2 = [eng2.submit_ids(list(p)) for p in prompts]
+            for (ids, lps, fin), f1, f2 in zip(serial, futs1, futs2):
+                r1 = f1.result(timeout=300)
+                r2 = f2.result(timeout=300)
+                assert ids == r1["response_ids"] == r2["response_ids"], \
+                    "sampled ids must be bit-identical across tier modes"
+                assert lps == r1["logprobs"] == r2["logprobs"], \
+                    "log-probs must be bit-identical across tier modes"
+                assert fin == r1["finish_reason"] == r2["finish_reason"]
+            i += wave
+        for eng, tiers in ((eng1, 1), (eng2, 2)):
+            st = eng.scheduler_stats()
+            assert st["completed"] == i and st["errors"] == 0
+            assert st["tiers"] == tiers
+            assert st["chains_exported"] == st["chains_imported"] > 0
+            assert st["tier_occupancy"] == {"prefill": 0, "handoff": 0,
+                                            "decode": 0}
+            assert st["live_sequences"] == 0
+        assert eng1.scheduler_stats()["handoff_bytes"] == 0, \
+            "same-pool handoff must be zero-copy"
+        st2 = eng2.scheduler_stats()
+        assert st2["handoff_bytes"] > 0, \
+            "cross-pool handoff must actually move the chain KV"
+        assert st2["decode_pool"]["live_sequences"] == 0
+        assert st2["decode_pool"]["cached_blocks"] == 0, \
+            "the decode pool must never host the prefix index"
+    finally:
+        eng1.close()
+        eng2.close()
+
+
+def test_warm_cow_mixed_admissions_tiered_bit_identical():
+    """Warm (cached-prefix), CoW (mid-block divergence) and cold prompts
+    through the TIERED scheduler: the prefix index lives in the prefill
+    pool, chains carry shared and CoW'd blocks across the handoff, and
+    every request stays bit-identical to one-shot."""
+    engA = Engine(CFG, rng=jax.random.PRNGKey(19), max_len=160, max_new=6,
+                  serial=True)
+    eng2 = Engine(CFG, rng=jax.random.PRNGKey(19), max_len=160, max_new=6,
+                  block_size=16, max_batch=8, prefill_chunk=32, tiers=2)
+    try:
+        warm_base = _ids(5, 48)              # 3 full 16-token blocks
+        ids0, lps0, _ = engA.generate_ids(list(warm_base))
+        r0 = eng2.submit_ids(list(warm_base)).result(timeout=300)
+        assert ids0 == r0["response_ids"] and lps0 == r0["logprobs"]
+
+        wave = [warm_base + _ids(70, 5),         # warm
+                _ids(80, 30),                    # cold
+                warm_base[:36] + _ids(71, 12),   # CoW: diverges mid-block 2
+                _ids(82, 90)]                    # cold, bigger bucket
+        serial = [engA.generate_ids(list(p)) for p in wave]
+        futs = [eng2.submit_ids(list(p)) for p in wave]
+        results = [f.result(timeout=300) for f in futs]
+        for (ids, lps, fin), r in zip(serial, results):
+            assert ids == r["response_ids"] and lps == r["logprobs"]
+            assert fin == r["finish_reason"]
+        assert results[0]["cached_tokens"] > 0, "warm admission must hit"
+        assert results[2]["cached_tokens"] > 0, "CoW admission must hit"
+        st = eng2.scheduler_stats()
+        assert st["completed"] == 5 and st["errors"] == 0
+        assert st["cow_copies"] >= 1
+        assert st["chains_exported"] == st["chains_imported"] == st["joins"]
+        assert st["handoff_bytes"] > 0
+        assert st["live_sequences"] == 0
+        assert st["decode_pool"]["live_sequences"] == 0
+        eng2.scheduler.cache.allocator.check()
+        eng2.scheduler.dcache.allocator.check()
+    finally:
+        eng2.close()
+
+
+# ---------------------------------------------------------------------------
+# mid-handoff abort: a parked chain frees ALL its blocks
+# ---------------------------------------------------------------------------
+
+def test_mid_handoff_abort_frees_all_blocks_and_successor_is_warm():
+    """Fill the decode pool with one long request, park a second request's
+    sealed chain in the handoff stage, abort it there — its prefill-pool
+    blocks must all free (only cache pins remain), the decode pool is
+    untouched — then an identical successor must admit WARM (the chain
+    was published before export) and stay bit-exact vs. serial."""
+    # pool math: block 16, prompt 48 + max_new 40 → 6-block worst case per
+    # sequence; num_blocks=11 (1 trash + 10 usable) fits ONE such decode
+    # reservation but not two, so the second chain must park
+    engA = Engine(CFG, rng=jax.random.PRNGKey(31), max_len=160, max_new=40,
+                  serial=True)
+    eng2 = Engine(CFG, rng=jax.random.PRNGKey(31), max_len=160, max_new=40,
+                  block_size=16, max_batch=8, num_blocks=11, tiers=2)
+    p1 = _ids(9, 48)      # 3 blocks of prompt + full decode budget
+    p2 = _ids(50, 48)     # parks: decode pool has no room left
+    try:
+        sched = eng2.scheduler
+        sem = threading.Semaphore(0)
+        sched.on_step_boundary = sem.acquire   # one release = one iteration
+
+        def run_until(cond, what, cap=200):
+            deadline = time.monotonic() + 300
+            for _ in range(cap):
+                if cond():
+                    return
+                sem.release()
+                while sem._value > 0 and time.monotonic() < deadline:
+                    time.sleep(0.002)          # let the iteration start
+                time.sleep(0.005)
+            raise AssertionError(f"never reached: {what}")
+
+        f1 = eng2.submit_ids(list(p1))
+        run_until(lambda: sched.metrics["chains_imported"] == 1,
+                  "first chain imported into the decode pool")
+        assert sched.dcache.allocator.available() < 6, \
+            "a second 6-block decode reservation must not fit"
+        f2 = eng2.submit_ids(list(p2))
+        run_until(lambda: sched.metrics["handoff_waits"] >= 1
+                  and len(sched._handoff) == 1,
+                  "second chain parked mid-handoff")
+        # the parked request still owns its prefill-pool blocks (its chain
+        # must stay resident until import) — abort it right there
+        sched.abort(sched._handoff[0])
+        run_until(lambda: sched.metrics["aborts"] == 1,
+                  "parked chain reaped")
+        r2 = f2.result(timeout=300)
+        assert r2["finish_reason"] == "aborted"
+        # ALL of the aborted chain's blocks are freed: the prefill pool
+        # holds nothing but cache pins (published prompt blocks of p1+p2),
+        # and the decode pool still holds exactly the long request
+        pa = sched.cache.allocator
+        pa.check()
+        assert pa.live_sequences == 0, \
+            "mid-handoff abort must free the prefill-side sequence"
+        assert pa.num_free() + pa.num_pinned() == sched.num_blocks - 1, \
+            "every non-pinned prefill block must be back on the free list"
+        da = sched.dcache.allocator
+        da.check()
+        assert da.live_sequences == 1, "decode pool must be untouched"
+        # identical successor: warm from p2's published blocks, bit-exact
+        sched.on_step_boundary = None
+        sem.release(100000)
+        ids1, lps1, fin1 = engA.generate_ids(list(p1))
+        r1 = f1.result(timeout=300)
+        assert ids1 == r1["response_ids"] and lps1 == r1["logprobs"]
+        assert fin1 == r1["finish_reason"]
+        engA.generate_ids(list(p2))          # burn the aborted request's key
+        ids3, lps3, _ = engA.generate_ids(list(p2))
+        r3 = eng2.submit_ids(list(p2)).result(timeout=300)
+        assert r3["cached_tokens"] >= 32, \
+            "successor must hit the aborted chain's published blocks"
+        assert ids3 == r3["response_ids"] and lps3 == r3["logprobs"]
+        sched.cache.allocator.check()
+        sched.dcache.allocator.check()
+        assert sched.dcache.allocator.num_free() == sched.num_blocks - 1
+    finally:
+        eng2.close()
+
+
+# ---------------------------------------------------------------------------
+# service-level shared prefix index: cross-engine warm-up
+# ---------------------------------------------------------------------------
+
+def test_shared_prefix_index_warms_second_engine_bit_identical():
+    """Two engines joined only by a ``SharedPrefixIndex``: engine 1
+    prefills a prompt (its publish hook indexes the prefix key), then
+    engine 2's FIRST request resolves the key, pulls the KV payload from
+    engine 1, imports it — and admits warm (``cached_tokens > 0``) with
+    bit-identical output (only prefill-computed blocks ever travel)."""
+    svc = SharedPrefixIndex(block_size=16)
+    engA = Engine(CFG, rng=jax.random.PRNGKey(43), max_len=160, max_new=8,
+                  serial=True)
+    eng1 = Engine(CFG, rng=jax.random.PRNGKey(43), max_len=160, max_new=8,
+                  block_size=16, max_batch=8)
+    eng2 = Engine(CFG, rng=jax.random.PRNGKey(43), max_len=160, max_new=8,
+                  block_size=16, max_batch=8)
+    try:
+        svc.register_node("n1", exporter=eng1.export_prefix)
+        svc.register_node("n2", exporter=eng2.export_prefix)
+        eng1.prefix_publish_hook = lambda toks: svc.publish("n1", toks)
+
+        def resolve(prompt_ids):
+            matched, holders = svc.match(prompt_ids)
+            if matched == 0 or "n2" in holders:
+                return
+            payload = svc.fetch(prompt_ids, exclude=("n2",))
+            if payload is not None:
+                imported = eng2.import_prefix(payload)
+                if imported > 0:
+                    svc.publish("n2", payload["tokens"])
+
+        eng2.prefix_resolver = resolve
+        prompt = _ids(11, 48)                # 3 full blocks
+        ids0, lps0, fin0 = engA.generate_ids(list(prompt))
+        r1 = eng1.submit_ids(list(prompt)).result(timeout=300)
+        assert ids0 == r1["response_ids"] and lps0 == r1["logprobs"]
+        assert svc.stats()["entries"] == 3, \
+            "engine 1's publish hook must index the full prompt blocks"
+        r2 = eng2.submit_ids(list(prompt)).result(timeout=300)
+        assert r2["cached_tokens"] >= 32, \
+            "engine 2's first request must warm from the shared index"
+        assert ids0 == r2["response_ids"], \
+            "imported prefix KV must keep sampled ids bit-identical"
+        assert lps0 == r2["logprobs"], \
+            "imported prefix KV must keep log-probs bit-identical"
+        assert fin0 == r2["finish_reason"]
+        assert eng2.stats["prefix_imports"] == 1
+        assert eng2.stats["prefix_imported_tokens"] >= 32
+        assert "n2" in svc.match(prompt)[1], \
+            "the importing node must republish as a holder"
+        st = svc.stats()
+        assert st["fetches"] == 1 and st["fetch_failures"] == 0
+        eng2.scheduler.cache.allocator.check()
+    finally:
+        eng1.close()
+        eng2.close()

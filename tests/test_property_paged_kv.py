@@ -9,7 +9,14 @@ continuous-batching scheduler:
   * arbitrary share/CoW/evict interleavings through the prefix cache keep
     the refcount invariants (refcount == owning sequences + cache pins, no
     block both free and referenced) and every live sequence's pages still
-    replay its exact tokens — shared prefix pages included.
+    replay its exact tokens — shared prefix pages included,
+  * the KV-handoff layer (PR 9): same-pool ``import_chain`` is a pure
+    accounting no-op (zero-copy), and arbitrary export → (evict) →
+    import → decode → free interleavings across TWO pools preserve the
+    refcount invariants in both and replay every imported sequence's
+    tokens through the destination pool's page mapping — attached and
+    host-serde chains alike (the ledger is mirrored through
+    ``ImportResult.pairs``).
 """
 from __future__ import annotations
 
@@ -21,6 +28,7 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.configs import get_smoke_config  # noqa: E402
 from repro.inference import BlockAllocator, PagedKVCache  # noqa: E402
+from repro.inference.paged_kv import cdiv, export_chain, import_chain  # noqa: E402
 
 CFG = get_smoke_config("qwen3-32b").replace(vocab_size=512)
 
@@ -198,5 +206,140 @@ def test_share_cow_evict_interleavings_preserve_tokens_and_refcounts(events):
     assert cache.allocator.evictable() == cache.allocator.num_pinned()
     assert (cache.allocator.num_free() + cache.allocator.num_pinned()
             == cache.num_blocks - 1)
+
+
+# ---------------------------------------------------------------------------
+# KV-handoff layer: export_chain / import_chain
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 23), st.integers(0, 8))
+def test_same_pool_import_is_zero_copy_accounting_noop(plen, extra):
+    """The tiers=1 fast path: importing a chain into its own source pool
+    must take the zero-copy branch and change NOTHING — no pairs, no
+    bytes, identical owned list / headroom / free list before and after."""
+    cache = PagedKVCache(CFG, block_size=4, num_blocks=16, max_len=24)
+    prompt = list(range(100, 100 + plen))
+    total = min(plen + extra + 1, cache.max_len)
+    assert cache.admit(0, plen, total)       # single-pool: full reservation
+    chain = export_chain(cache, 0, prompt)
+    assert chain.num_blocks == cdiv(plen, 4)
+    before = (cache.allocator.owned(0), cache.allocator.headroom(0),
+              cache.allocator.num_free())
+    res = import_chain(cache, chain, 0, total)
+    assert res is not None and res.zero_copy
+    assert res.pairs == [] and res.nbytes == 0
+    assert res.blocks == chain.blocks
+    assert (cache.allocator.owned(0), cache.allocator.headroom(0),
+            cache.allocator.num_free()) == before
+    cache.allocator.check()
+    cache.free(0)
+    cache.allocator.check()
+    assert cache.allocator.num_free() == cache.num_blocks - 1
+
+
+# one event: (slot 0-1, prompt len, decode appends, host-serde?, leave?)
+xfer_st = st.tuples(st.integers(0, 1), st.integers(2, 20), st.integers(0, 5),
+                    st.booleans(), st.booleans())
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(xfer_st, max_size=8))
+def test_export_import_interleavings_preserve_tokens_and_refcounts(events):
+    """Tiered-style interleavings across TWO pools: prompts (prefixes of
+    one shared stream, so prefill-pool admissions genuinely share and CoW
+    blocks) are prefilled into pool P with prompt-only reservations,
+    published, sealed with ``export_chain``, imported into pool D with the
+    full decode reservation — attached or via the host-serde form — then
+    decoded and freed in arbitrary order.  After every step: both
+    allocators hold their refcount invariants, and every imported
+    sequence's pages in D replay its exact tokens (the ledger is mirrored
+    through ``ImportResult.pairs``)."""
+    BS = 4
+    P = PagedKVCache(CFG, block_size=BS, num_blocks=12, max_len=24)
+    D = PagedKVCache(CFG, block_size=BS, num_blocks=12, max_len=24,
+                     prefix_cache=False)
+    stream = [100 + p for p in range(P.max_len)]     # shared prompt pool
+    ledger: dict = {}          # (pool, block, slot) -> token value
+    live: dict = {}            # slot -> (seq_id, plen, written in D)
+    seq_counter = 0
+
+    def verify():
+        for seq, plen, written in live.values():
+            for p in range(written):
+                want = stream[p] if p < plen else 1000 * seq + p
+                blk, s = D.slot_of(seq, p)
+                assert ledger[("D", blk, s)] == want, \
+                    "D pages must replay the imported sequence's tokens"
+        P.allocator.check()
+        D.allocator.check()
+
+    for slot, plen, appends, host, leave in events:
+        if slot not in live:
+            prompt = stream[:plen]
+            shared, matched, cow_src, cow_len = P.match_prefix(prompt)
+            # tiered admission: the prefill pool reserves the PROMPT only
+            if not P.admit(seq_counter, plen, plen, shared=shared):
+                continue
+            seq = seq_counter
+            seq_counter += 1
+            if cow_src is not None and cow_len > 0:
+                dst = P.cow_into(seq, cow_src)
+                if dst is not None:
+                    for s in range(BS):             # host mirror of the copy
+                        if ("P", cow_src, s) in ledger:
+                            ledger[("P", dst, s)] = ledger[("P", cow_src, s)]
+                    matched += cow_len
+            for p in range(matched, plen):          # prefill the suffix
+                P.ensure(seq, p)
+                blk, s = P.slot_of(seq, p)
+                ledger[("P", blk, s)] = stream[p]
+            P.publish(seq, prompt)
+            chain = export_chain(P, seq, prompt)
+            src_blocks = list(chain.blocks)
+            assert src_blocks == P.allocator.owned(seq)[:cdiv(plen, BS)]
+            if host:
+                chain = chain.to_host()             # serde form (cross-node)
+                assert chain.src is None
+                assert chain.num_blocks == len(src_blocks)
+            # decode budget reserved at IMPORT, not at prefill admission
+            total = min(plen + appends + 1, D.max_len)
+            res = import_chain(D, chain, seq, total)
+            P.free(seq)        # the scheduler frees the prefill side either
+            #                    way: on import success or on abort
+            P.allocator.check()
+            if res is None:    # decode pool full — treat as an abort
+                continue
+            assert not res.zero_copy
+            assert len(res.blocks) == cdiv(plen, BS)
+            assert res.nbytes > 0
+            for sb, db in zip(src_blocks, res.blocks):
+                for s in range(BS):
+                    if ("P", sb, s) in ledger:
+                        ledger[("D", db, s)] = ledger[("P", sb, s)]
+            live[slot] = (seq, plen, plen)
+            verify()
+        seq, plen, written = live[slot]
+        capacity = (len(D.allocator.owned(seq)) * BS
+                    + D.allocator.headroom(seq) * BS)
+        budget = min(written + appends, D.max_len, capacity)
+        for p in range(written, budget):            # decode continues in D,
+            D.ensure(seq, p)                        # mid-block, reservation-
+            blk, s = D.slot_of(seq, p)              # backed extends
+            ledger[("D", blk, s)] = 1000 * seq + p
+        live[slot] = (seq, plen, budget)
+        verify()
+        if leave:
+            D.free(seq)
+            del live[slot]
+            verify()
+    for slot in list(live):
+        D.free(live.pop(slot)[0])
+    P.allocator.check()
+    D.allocator.check()
+    # D has no prefix index: every block returns to the free list
+    assert D.allocator.num_free() == D.num_blocks - 1
+    assert (P.allocator.num_free() + P.allocator.num_pinned()
+            == P.num_blocks - 1)
 
 
