@@ -46,6 +46,12 @@ DOCSTRING_MODULES = [
     "src/repro/training/grpo.py",
     "src/repro/data/batcher.py",
     "src/repro/launch/serve.py",
+    "src/repro/analysis/annotations.py",
+    "src/repro/analysis/guarded_by.py",
+    "src/repro/analysis/host_sync.py",
+    "src/repro/analysis/jit_hygiene.py",
+    "src/repro/analysis/reprolint.py",
+    "src/repro/analysis/sanitizer.py",
 ]
 
 _LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")

@@ -1,0 +1,51 @@
+#!/usr/bin/env python
+"""reprolint CI driver: run the analysis passes, diff against the baseline.
+
+    PYTHONPATH=src python scripts/run_lint.py [--root .] \\
+        [--baseline .lint-baseline.json] [--update-baseline]
+
+Exit codes: 0 = no findings outside the baseline; 1 = new findings (the
+CI ``lint`` lane fails).  Baselined findings that no longer fire are
+printed as stale — remove them (or rerun with ``--update-baseline``) so
+the baseline only ever shrinks.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--root", default=".")
+    ap.add_argument("--baseline", default=".lint-baseline.json")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline to the current findings")
+    args = ap.parse_args(argv)
+    sys.path.insert(0, os.path.join(args.root, "src"))
+    from repro.analysis import reprolint
+
+    findings, scanned, allows = reprolint.lint_tree(args.root)
+    bl_path = os.path.join(args.root, args.baseline)
+    if args.update_baseline:
+        reprolint.save_baseline(bl_path, findings)
+        print(f"[reprolint] baseline rewritten: {len(findings)} finding(s)")
+        return 0
+    diff = reprolint.diff_baseline(findings,
+                                   reprolint.load_baseline(bl_path))
+    print(f"[reprolint] {scanned} files, {len(findings)} finding(s) "
+          f"({len(diff['new'])} new, {len(diff['grandfathered'])} "
+          f"baselined, {len(diff['stale'])} stale baseline entries, "
+          f"{allows} allow-comments)")
+    for f in diff["new"]:
+        print(f"  NEW  {f.render()}")
+    for f in diff["grandfathered"]:
+        print(f"  old  {f.render()}")
+    for key in diff["stale"]:
+        print(f"  stale baseline entry (fixed — remove it): {key}")
+    return 1 if diff["new"] else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

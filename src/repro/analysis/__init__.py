@@ -1,0 +1,19 @@
+"""Static analysis + runtime sanitizing for the serving/training stack.
+
+``reprolint`` (the AST suite) keeps three disciplines machine-checked —
+guarded fields under their lock, hot paths within the one-readback
+budget, donated buffers and jit-cache keys honest — and
+:mod:`repro.analysis.sanitizer` catches lock-order inversions at runtime
+under ``REPRO_SANITIZE=1``.  See docs/ARCHITECTURE.md "Concurrency &
+discipline checks" for the annotation syntax.
+"""
+from .annotations import Finding, ModuleSource
+from .reprolint import (diff_baseline, lint_file, lint_source, lint_tree,
+                        load_baseline, save_baseline)
+from .sanitizer import LockOrderError, named_lock
+
+__all__ = [
+    "Finding", "ModuleSource", "LockOrderError", "named_lock",
+    "lint_source", "lint_file", "lint_tree",
+    "load_baseline", "save_baseline", "diff_baseline",
+]

@@ -1,0 +1,175 @@
+"""Shared source model for the ``reprolint`` passes.
+
+The passes key off *annotations* — structured trailing comments the
+runtime modules carry next to the code they describe:
+
+  ``# guarded-by: <lock>``   on a ``self.field = ...`` line: every read or
+                             write of ``self.field`` from threaded context
+                             must sit inside ``with self.<lock>:``.
+  ``# hot-path``             on a ``def`` line (or the line above it): the
+                             function is on the per-step serving path —
+                             implicit device readbacks inside it must go
+                             through the sanctioned ``self._readback`` hook.
+  ``# cold-path``            on a ``def`` line: the function performs
+                             device readbacks *by design* (serde, weight
+                             swap, boundary work) — explicitly classified,
+                             not checked.
+  ``# holds: <lock>``        on a ``def`` line: every caller already holds
+                             ``<lock>`` (documented precondition); the body
+                             is analyzed as if inside ``with self.<lock>:``.
+  ``# thread-entry``         on a ``def`` line: the function runs on a
+                             thread the analyzer cannot see being spawned
+                             (callback, executor) — it seeds reachability.
+  ``# lint: allow(<pass>)``  on any line: suppress that pass's findings on
+                             the line.  A count of these is reported; the
+                             goal is zero (use annotations, not gags).
+
+A module may also declare a ``_GUARDED = {"field": "_lock", ...}`` dict at
+top level instead of (or in addition to) per-line ``guarded-by`` comments.
+
+:class:`ModuleSource` parses a file once (AST + tokenized comments) and
+serves all three passes; :class:`Finding` is the common result record,
+with a line-number-free ``key`` so baselines survive unrelated edits.
+"""
+from __future__ import annotations
+
+import ast
+import io
+import re
+import tokenize
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Set, Tuple
+
+_ALLOW_RE = re.compile(r"lint:\s*allow\(([\w\-, ]+)\)")
+_GUARDED_RE = re.compile(r"guarded-by:\s*(\w+)")
+_HOLDS_RE = re.compile(r"holds:\s*(\w+)")
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One analyzer result: where, which pass, and a stable identity."""
+
+    file: str          # repo-relative path
+    line: int
+    pass_name: str     # guarded-by | host-sync | jit-hygiene
+    scope: str         # Class.method, function name, or <module>
+    detail: str        # the field / callable / parameter at issue
+    message: str
+
+    @property
+    def key(self) -> str:
+        """Line-number-free identity used by the baseline file."""
+        return f"{self.file}::{self.pass_name}::{self.scope}::{self.detail}"
+
+    def render(self) -> str:
+        """Human-readable one-liner (``file:line: [pass] message``)."""
+        return f"{self.file}:{self.line}: [{self.pass_name}] {self.message}"
+
+
+class ModuleSource:
+    """One parsed module: AST, per-line comments, and annotation lookups."""
+
+    def __init__(self, path: str, rel: str, source: Optional[str] = None):
+        self.path = path
+        self.rel = rel
+        self.source = (source if source is not None
+                       else open(path, encoding="utf-8").read())
+        self.tree = ast.parse(self.source, filename=rel)
+        self.comments: Dict[int, str] = {}
+        try:
+            for tok in tokenize.generate_tokens(
+                    io.StringIO(self.source).readline):
+                if tok.type == tokenize.COMMENT:
+                    self.comments[tok.start[0]] = tok.string
+        except tokenize.TokenError:  # pragma: no cover — ast would fail 1st
+            pass
+
+    # -- line-level annotations ------------------------------------------------
+    def allowed(self, line: int, pass_name: str) -> bool:
+        """True when the line carries ``# lint: allow(<pass>)``."""
+        m = _ALLOW_RE.search(self.comments.get(line, ""))
+        if not m:
+            return False
+        allowed = {p.strip() for p in m.group(1).split(",")}
+        return pass_name in allowed or "all" in allowed
+
+    def allow_count(self) -> int:
+        """Number of ``lint: allow`` comment lines in the module."""
+        return sum(1 for c in self.comments.values() if _ALLOW_RE.search(c))
+
+    def guarded_lock(self, line: int) -> Optional[str]:
+        """Lock named by a ``# guarded-by: <lock>`` comment on the line."""
+        m = _GUARDED_RE.search(self.comments.get(line, ""))
+        return m.group(1) if m else None
+
+    def _def_comment(self, node: ast.AST) -> str:
+        """Comments attached to a def: its own line plus the line above
+        (above the first decorator, when decorated)."""
+        first = min([node.lineno]
+                    + [d.lineno for d in getattr(node, "decorator_list", [])])
+        return (self.comments.get(first, "")
+                + " " + self.comments.get(first - 1, ""))
+
+    def fn_mark(self, node: ast.AST, mark: str) -> bool:
+        """True when a def carries the ``# <mark>`` annotation."""
+        return f"# {mark}" in self._def_comment(node).replace("#  ", "# ")
+
+    def fn_holds(self, node: ast.AST) -> Optional[str]:
+        """Lock named by a ``# holds: <lock>`` annotation on the def."""
+        m = _HOLDS_RE.search(self._def_comment(node))
+        return m.group(1) if m else None
+
+    # -- module-level registry -------------------------------------------------
+    def guarded_registry(self) -> Dict[str, str]:
+        """The module's ``_GUARDED`` dict (field -> lock), when present."""
+        for node in self.tree.body:
+            if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)
+                    and node.targets[0].id == "_GUARDED"
+                    and isinstance(node.value, ast.Dict)):
+                out = {}
+                for k, v in zip(node.value.keys, node.value.values):
+                    if (isinstance(k, ast.Constant)
+                            and isinstance(v, ast.Constant)):
+                        out[str(k.value)] = str(v.value)
+                return out
+        return {}
+
+
+def attr_path(node: ast.AST) -> Optional[Tuple[str, ...]]:
+    """Dotted path of a Name/Attribute chain (``self.cache.kp`` ->
+    ``("self", "cache", "kp")``); None for anything more dynamic."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return tuple(reversed(parts))
+    return None
+
+
+def self_attr(node: ast.AST) -> Optional[str]:
+    """``X`` when ``node`` is exactly ``self.X``."""
+    p = attr_path(node)
+    return p[1] if p is not None and len(p) == 2 and p[0] == "self" else None
+
+
+def assign_target_paths(stmt: ast.stmt) -> Set[Tuple[str, ...]]:
+    """Dotted paths stored by an assignment statement (tuple targets
+    flattened)."""
+    targets: List[ast.AST] = []
+    if isinstance(stmt, ast.Assign):
+        targets = list(stmt.targets)
+    elif isinstance(stmt, (ast.AnnAssign, ast.AugAssign)):
+        targets = [stmt.target]
+    out: Set[Tuple[str, ...]] = set()
+    while targets:
+        t = targets.pop()
+        if isinstance(t, (ast.Tuple, ast.List)):
+            targets.extend(t.elts)
+        else:
+            p = attr_path(t)
+            if p is not None:
+                out.add(p)
+    return out

@@ -1,0 +1,261 @@
+"""``guarded-by`` pass: guarded fields are only touched under their lock.
+
+A field registered via a trailing ``# guarded-by: <lock>`` comment on its
+initializing ``self.field = ...`` line (or via the module's ``_GUARDED``
+registry) may only be read or written lexically inside a
+``with self.<lock>:`` block, in any function reachable from *threaded
+context*.  Threaded context seeds from:
+
+  * ``threading.Thread(target=self.X)`` / ``target=<nested def>`` sites,
+  * functions annotated ``# thread-entry`` (callbacks, executor bodies),
+  * every public method of a class that registers guarded fields — public
+    surfaces are called from arbitrary client threads; that cross-thread
+    exposure is *why* the lock exists,
+
+and closes over ``self.<method>`` references (worker pools that pass
+stage bodies around are followed through the reference, not the call).
+
+Escapes that keep the pass honest instead of noisy:
+
+  * ``__init__`` is exempt — construction happens before the object is
+    published to any other thread.
+  * ``# holds: <lock>`` on a def marks a documented caller-holds-the-lock
+    precondition; the body is analyzed as if wrapped in the lock.
+  * a ``with`` over an attribute initialized as
+    ``threading.Condition(self.<lock>)`` counts as holding ``<lock>``
+    (condition variables share their lock).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from .annotations import Finding, ModuleSource, self_attr
+
+PASS = "guarded-by"
+
+
+def _methods(cls: ast.ClassDef) -> Dict[str, ast.FunctionDef]:
+    return {n.name: n for n in cls.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+
+
+def _guarded_fields(src: ModuleSource, cls: ast.ClassDef) -> Dict[str, str]:
+    """field -> lock, from trailing comments + the module registry."""
+    fields = dict(src.guarded_registry())
+    for fn in _methods(cls).values():
+        for stmt in ast.walk(fn):
+            if not isinstance(stmt, (ast.Assign, ast.AnnAssign)):
+                continue
+            lock = src.guarded_lock(stmt.lineno)
+            if lock is None:
+                continue
+            targets = (stmt.targets if isinstance(stmt, ast.Assign)
+                       else [stmt.target])
+            for t in targets:
+                field = self_attr(t)
+                if field is not None:
+                    fields[field] = lock
+    return fields
+
+
+def _lock_aliases(cls: ast.ClassDef) -> Dict[str, str]:
+    """Attrs built as ``threading.Condition(self.<lock>)`` -> that lock."""
+    out: Dict[str, str] = {}
+    for fn in _methods(cls).values():
+        for stmt in ast.walk(fn):
+            if not (isinstance(stmt, ast.Assign)
+                    and isinstance(stmt.value, ast.Call)):
+                continue
+            call = stmt.value
+            fname = getattr(call.func, "attr", getattr(call.func, "id", ""))
+            if fname != "Condition" or not call.args:
+                continue
+            shared = self_attr(call.args[0])
+            if shared is None:
+                continue
+            for t in stmt.targets:
+                alias = self_attr(t)
+                if alias is not None:
+                    out[alias] = shared
+    return out
+
+
+def _cv_factories(cls: ast.ClassDef, aliases: Dict[str, str]) -> Dict[str, str]:
+    """Methods that hand out a ``threading.Condition(self.<lock>)`` (the
+    per-trainer fetch-CV pattern) -> the lock their conditions share."""
+    out: Dict[str, str] = {}
+    for fn in _methods(cls).values():
+        if not any(isinstance(n, ast.Return) for n in ast.walk(fn)):
+            continue
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            fname = getattr(node.func, "attr", getattr(node.func, "id", ""))
+            if fname != "Condition" or not node.args:
+                continue
+            shared = self_attr(node.args[0])
+            if shared is not None:
+                out[fn.name] = aliases.get(shared, shared)
+    return out
+
+
+def _thread_targets(tree: ast.AST) -> Set[str]:
+    """Names passed as ``target=`` to ``threading.Thread(...)``."""
+    out: Set[str] = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fname = getattr(node.func, "attr", getattr(node.func, "id", ""))
+        if fname != "Thread":
+            continue
+        for kw in node.keywords:
+            if kw.arg != "target":
+                continue
+            m = self_attr(kw.value)
+            if m is not None:
+                out.add(m)
+            elif isinstance(kw.value, ast.Name):
+                out.add(kw.value.id)
+    return out
+
+
+def _self_refs(fn: ast.AST, method_names: Set[str]) -> Set[str]:
+    """Method names referenced as ``self.X`` anywhere in ``fn``'s body —
+    calls AND bare references (stage bodies handed to worker pools)."""
+    out: Set[str] = set()
+    for node in ast.walk(fn):
+        name = self_attr(node)
+        if name is not None and name in method_names:
+            out.add(name)
+    return out
+
+
+class _LockWalker(ast.NodeVisitor):
+    """Walk one function body tracking the stack of held ``self.*`` locks
+    (aliases resolved) and record unguarded guarded-field accesses."""
+
+    def __init__(self, src: ModuleSource, scope: str,
+                 fields: Dict[str, str], aliases: Dict[str, str],
+                 factories: Dict[str, str], held: Set[str],
+                 findings: List[Finding]):
+        self.src = src
+        self.scope = scope
+        self.fields = fields
+        self.aliases = aliases
+        self.factories = factories
+        self.held = set(held)
+        self.local_locks: Dict[str, str] = {}
+        self.findings = findings
+
+    def _lock_of(self, expr: ast.AST) -> Optional[str]:
+        """Lock named by a with-item / alias-assignment RHS, if any."""
+        name = self_attr(expr)
+        if name is not None:
+            return self.aliases.get(name, name)
+        if isinstance(expr, ast.Name):
+            return self.local_locks.get(expr.id)
+        if isinstance(expr, ast.Call):      # with self._fetch_cv(tid):
+            factory = self_attr(expr.func)
+            if factory is not None:
+                return self.factories.get(factory)
+        return None
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        # track `cv = self._fetch_cv(tid)` / `l = self._lock` local aliases
+        lock = self._lock_of(node.value)
+        if lock is not None:
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    self.local_locks[t.id] = lock
+        self.generic_visit(node)
+
+    def visit_With(self, node: ast.With) -> None:
+        added: List[str] = []
+        for item in node.items:
+            lock = self._lock_of(item.context_expr)
+            if lock is not None and lock not in self.held:
+                self.held.add(lock)
+                added.append(lock)
+        for stmt in node.body:
+            self.visit(stmt)
+        for name in added:
+            self.held.discard(name)
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        return  # nested defs run on their own schedule — handled separately
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+    visit_Lambda = visit_FunctionDef
+
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        field = self_attr(node)
+        if field in self.fields:
+            lock = self.fields[field]
+            if (lock not in self.held
+                    and not self.src.allowed(node.lineno, PASS)):
+                kind = "written" if isinstance(node.ctx,
+                                               (ast.Store, ast.Del)) else "read"
+                self.findings.append(Finding(
+                    self.src.rel, node.lineno, PASS, self.scope, field,
+                    f"guarded field `self.{field}` {kind} outside "
+                    f"`with self.{lock}` in `{self.scope}` (threaded "
+                    f"context)"))
+        self.generic_visit(node)
+
+
+def _check_body(src: ModuleSource, cls_name: str, fn: ast.AST,
+                fields: Dict[str, str], aliases: Dict[str, str],
+                factories: Dict[str, str], findings: List[Finding]) -> None:
+    scope = f"{cls_name}.{fn.name}" if cls_name else fn.name
+    held: Set[str] = set()
+    holds = src.fn_holds(fn)
+    if holds is not None:
+        held.add(holds)
+    walker = _LockWalker(src, scope, fields, aliases, factories, held,
+                         findings)
+    for stmt in fn.body:
+        walker.visit(stmt)
+    # nested defs that are themselves thread targets (heartbeat loops):
+    # analyze with a FRESH lock stack — they run later, on another thread
+    nested_targets = _thread_targets(fn)
+    for node in ast.walk(fn):
+        if (isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+                and node is not fn and node.name in nested_targets):
+            inner = _LockWalker(src, f"{scope}.{node.name}", fields,
+                                aliases, factories, set(), findings)
+            for stmt in node.body:
+                inner.visit(stmt)
+
+
+def run(src: ModuleSource) -> List[Finding]:
+    """Run the pass over one module; returns its findings."""
+    findings: List[Finding] = []
+    for cls in src.tree.body:
+        if not isinstance(cls, ast.ClassDef):
+            continue
+        fields = _guarded_fields(src, cls)
+        if not fields:
+            continue
+        methods = _methods(cls)
+        names = set(methods)
+        aliases = _lock_aliases(cls)
+        factories = _cv_factories(cls, aliases)
+        entries = _thread_targets(cls) & names
+        entries |= {n for n, fn in methods.items()
+                    if src.fn_mark(fn, "thread-entry")}
+        entries |= {n for n in names if not n.startswith("_")}
+        reached: Set[str] = set()
+        frontier = [n for n in entries if n != "__init__"]
+        while frontier:
+            name = frontier.pop()
+            if name in reached:
+                continue
+            reached.add(name)
+            frontier.extend(_self_refs(methods[name], names) - reached)
+        for name in sorted(reached):
+            if name == "__init__":
+                continue
+            _check_body(src, cls.name, methods[name], fields, aliases,
+                        factories, findings)
+    return findings

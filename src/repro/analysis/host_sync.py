@@ -1,0 +1,254 @@
+"""``host-sync`` pass: no stray device readbacks on ``# hot-path`` code.
+
+The scheduler's serving loop budgets ≤1 host sync per pass (the PR 8
+``int(tok0)`` bug class: one innocent-looking ``int()`` on a jax array
+turns a pipelined loop into a per-token device round-trip).  This pass
+makes the budget structural:
+
+  * Functions annotated ``# hot-path`` may not call the sync primitives
+    (``jax.device_get``, ``jax.block_until_ready``, ``.item()``,
+    ``.block_until_ready()``) except through the sanctioned
+    ``self._readback`` hook, and may not convert *device-tainted* values
+    with ``int()/float()/bool()`` or ``np.asarray()/np.array()``.
+  * Device taint is tracked per function, in statement order: results of
+    calling a jitted program (a local bound from ``self._make_*`` /
+    a ``*_cache``/``*_fns`` lookup / a ``jax.jit(...)`` value) or a
+    ``jnp.*`` call are tainted; rebinding a name from
+    ``self._readback(...)`` (or any untainted source) clears it — so
+    ``nxt, lps = self._readback((nxt, lps))`` launders a whole step's
+    outputs through the ONE budgeted sync.
+  * In a module that audits hot paths (≥1 ``# hot-path`` mark), every
+    *other* function that calls a sync primitive must be explicitly
+    classified ``# cold-path`` — readbacks are either on the budget, or
+    deliberately off the serving path; never unexamined.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set
+
+from .annotations import Finding, ModuleSource, attr_path
+
+PASS = "host-sync"
+_SYNC_FUNCS = {("jax", "device_get"), ("jax", "block_until_ready")}
+_SYNC_METHODS = {"item", "block_until_ready"}
+_NP_CONVERT = {("np", "asarray"), ("np", "array"),
+               ("numpy", "asarray"), ("numpy", "array")}
+_PY_CONVERT = {"int", "float", "bool"}
+_HOOK = ("self", "_readback")
+
+
+def _functions(tree: ast.Module):
+    """Yield (scope, node) for module functions and class methods."""
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node.name, node
+        elif isinstance(node, ast.ClassDef):
+            for sub in node.body:
+                if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    yield f"{node.name}.{sub.name}", sub
+
+
+def _root_name(node: ast.AST) -> Optional[str]:
+    """Base Name under subscripts/attributes (``nxt[i]`` -> ``nxt``)."""
+    while isinstance(node, (ast.Subscript, ast.Attribute, ast.Starred)):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def _is_jit_maker(expr: ast.AST) -> bool:
+    """Calls that hand back a jitted (device-returning) program."""
+    if not isinstance(expr, ast.Call):
+        return False
+    p = attr_path(expr.func)
+    if p is None:
+        return False
+    if p[-1].startswith("_make_") or p == ("jax", "jit"):
+        return True
+    # pool._xfer_fns.get(pn) / self._step_cache[Bb]-style cache lookups
+    if (p[-1] == "get" and len(p) >= 2
+            and ("_cache" in p[-2] or p[-2].endswith("_fns"))):
+        return True
+    return False
+
+
+def _is_cache_subscript(expr: ast.AST) -> bool:
+    if not isinstance(expr, ast.Subscript):
+        return False
+    p = attr_path(expr.value)
+    return p is not None and ("_cache" in p[-1] or p[-1].endswith("_fns"))
+
+
+class _Taint:
+    """Statement-order device-taint tracking for one function body."""
+
+    def __init__(self, src: ModuleSource, scope: str,
+                 findings: List[Finding]):
+        self.src = src
+        self.scope = scope
+        self.findings = findings
+        self.programs: Set[str] = set()   # locals holding jitted programs
+        self.device: Set[str] = set()     # locals holding device values
+
+    def _flag(self, node: ast.AST, detail: str, msg: str) -> None:
+        if not self.src.allowed(node.lineno, PASS):
+            self.findings.append(Finding(
+                self.src.rel, node.lineno, PASS, self.scope, detail, msg))
+
+    def _value_taints(self, expr: ast.AST) -> bool:
+        """True when assigning from ``expr`` makes the target device-held."""
+        if isinstance(expr, ast.Call):
+            p = attr_path(expr.func)
+            if p is not None:
+                if p == _HOOK:
+                    return False          # the sanctioned sync: host now
+                if p[0] in ("jnp", "jax") and p != ("jax", "jit"):
+                    return True
+            root = _root_name(expr.func)
+            if root in self.programs:
+                return True               # jitted program call
+        if isinstance(expr, ast.Name):
+            return expr.id in self.device
+        return False
+
+    def _scan_expr(self, expr: ast.AST) -> None:
+        for node in ast.walk(expr):
+            if not isinstance(node, ast.Call):
+                continue
+            p = attr_path(node.func)
+            if p is not None:
+                if p == _HOOK:
+                    continue
+                tail2 = p[-2:] if len(p) >= 2 else p
+                if tail2 in _SYNC_FUNCS:
+                    self._flag(node, p[-1],
+                               f"`{'.'.join(p)}` on a hot path in "
+                               f"`{self.scope}` — route through the "
+                               f"sanctioned `self._readback` hook")
+                    continue
+                if tail2 in _NP_CONVERT and node.args:
+                    root = _root_name(node.args[0])
+                    if root in self.device:
+                        self._flag(node, root,
+                                   f"`{'.'.join(tail2)}({root})` forces a "
+                                   f"device readback on a hot path in "
+                                   f"`{self.scope}` — use `self._readback`")
+                    continue
+                if (p[-1] in _SYNC_METHODS and len(p) >= 2
+                        and p[0] != "self"):
+                    self._flag(node, p[-1],
+                               f"`.{p[-1]}()` device sync on a hot path "
+                               f"in `{self.scope}`")
+                    continue
+            if (isinstance(node.func, ast.Name)
+                    and node.func.id in _PY_CONVERT and node.args):
+                root = _root_name(node.args[0])
+                if root in self.device:
+                    self._flag(node, root,
+                               f"`{node.func.id}({root})` converts a device "
+                               f"value on a hot path in `{self.scope}` — "
+                               f"one `self._readback` for the whole pass "
+                               f"instead")
+
+    def _assign(self, targets: List[ast.AST], value: ast.AST) -> None:
+        self._scan_expr(value)
+        taints = self._value_taints(value)
+        is_prog = _is_jit_maker(value) or _is_cache_subscript(value)
+        flat: List[ast.AST] = []
+        stack = list(targets)
+        while stack:
+            t = stack.pop()
+            if isinstance(t, (ast.Tuple, ast.List)):
+                stack.extend(t.elts)
+            else:
+                flat.append(t)
+        # tuple-unpacked program results: every Name target becomes tainted
+        multi = len(flat) > 1
+        for t in flat:
+            if not isinstance(t, ast.Name):
+                continue
+            if is_prog and not multi:
+                self.programs.add(t.id)
+                self.device.discard(t.id)
+            elif taints:
+                self.device.add(t.id)
+                self.programs.discard(t.id)
+            else:
+                self.device.discard(t.id)
+                self.programs.discard(t.id)
+
+    def run(self, body: List[ast.stmt]) -> None:
+        for stmt in body:
+            if isinstance(stmt, ast.Assign):
+                self._assign(stmt.targets, stmt.value)
+            elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+                self._assign([stmt.target], stmt.value)
+            elif isinstance(stmt, ast.AugAssign):
+                self._scan_expr(stmt.value)
+            elif isinstance(stmt, (ast.Expr, ast.Return)):
+                if stmt.value is not None:
+                    self._scan_expr(stmt.value)
+            elif isinstance(stmt, (ast.If, ast.While)):
+                self._scan_expr(stmt.test)
+                self.run(stmt.body)
+                self.run(stmt.orelse)
+            elif isinstance(stmt, ast.For):
+                self._scan_expr(stmt.iter)
+                self.run(stmt.body)
+                self.run(stmt.orelse)
+            elif isinstance(stmt, ast.With):
+                for item in stmt.items:
+                    self._scan_expr(item.context_expr)
+                self.run(stmt.body)
+            elif isinstance(stmt, ast.Try):
+                self.run(stmt.body)
+                for h in stmt.handlers:
+                    self.run(h.body)
+                self.run(stmt.orelse)
+                self.run(stmt.finalbody)
+            elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                pass    # nested defs (jit bodies) are traced, not executed
+            elif isinstance(stmt, (ast.Raise, ast.Assert)):
+                if getattr(stmt, "exc", None) is not None:
+                    self._scan_expr(stmt.exc)
+
+
+def _calls_sync_primitive(fn: ast.AST) -> Optional[ast.Call]:
+    """First unconditional sync-primitive call in a function, if any."""
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        p = attr_path(node.func)
+        if p is None:
+            continue
+        if (p[-2:] in _SYNC_FUNCS
+                or (p[-1] in _SYNC_METHODS and len(p) >= 2
+                    and p[0] not in ("self",))):
+            if p == _HOOK:
+                continue
+            return node
+    return None
+
+
+def run(src: ModuleSource) -> List[Finding]:
+    """Run the pass over one module; returns its findings."""
+    findings: List[Finding] = []
+    fns = list(_functions(src.tree))
+    hot = [(scope, fn) for scope, fn in fns if src.fn_mark(fn, "hot-path")]
+    if not hot:
+        return findings
+    for scope, fn in hot:
+        taint = _Taint(src, scope, findings)
+        taint.run(fn.body)
+    # audited module: every other sync-primitive caller must be classified
+    for scope, fn in fns:
+        if src.fn_mark(fn, "hot-path") or src.fn_mark(fn, "cold-path"):
+            continue
+        call = _calls_sync_primitive(fn)
+        if call is not None and not src.allowed(call.lineno, PASS):
+            findings.append(Finding(
+                src.rel, call.lineno, PASS, scope, "unclassified",
+                f"`{scope}` performs a device readback but is neither "
+                f"`# hot-path` nor `# cold-path` — classify it (this "
+                f"module audits host syncs)"))
+    return findings

@@ -1,0 +1,380 @@
+"""``jit-hygiene`` pass: donated buffers and jit-cache keys stay honest.
+
+Two checks over every module that builds jitted programs:
+
+**use-after-donate** — a call site of a program jitted with
+``donate_argnums`` invalidates the buffers passed at the donated
+positions.  Any later *read* of the same binding in the same function
+(before it is rebound) is flagged: the canonical shape is
+``pool.kp, pool.vp = fn(pool.kp, pool.vp, ...)`` where the donated
+bindings are rebound by the very statement that donates them.  Donating
+callables are recognized whether built inline (``fn = jax.jit(f,
+donate_argnums=...)``), returned by a ``self._make_*`` factory, or pulled
+back out of a ``*_cache`` / ``*_fns`` dict that a factory fills.
+
+**cache-key completeness** — for fills like
+``self._chunk_cache[(bucket, csz)] = self._make_chunk(bucket, csz)``,
+every factory parameter the traced inner function *closes over* must
+appear in the cache key: a key that omits a shape- or semantics-affecting
+knob silently serves a program traced for different values (jit only
+re-specializes on argument shapes, not on Python closure state).  Extra
+key components are fine — supersets are cheap, collisions are not.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .annotations import (Finding, ModuleSource, assign_target_paths,
+                          attr_path)
+
+PASS = "jit-hygiene"
+
+
+def _donate_positions(call: ast.Call) -> Optional[Tuple[int, ...]]:
+    """``donate_argnums`` of a ``jax.jit(...)`` call, when present."""
+    if attr_path(call.func) != ("jax", "jit"):
+        return None
+    for kw in call.keywords:
+        if kw.arg != "donate_argnums":
+            continue
+        v = kw.value
+        if isinstance(v, ast.Constant) and isinstance(v.value, int):
+            return (v.value,)
+        if isinstance(v, (ast.Tuple, ast.List)):
+            out = []
+            for e in v.elts:
+                if not (isinstance(e, ast.Constant)
+                        and isinstance(e.value, int)):
+                    return None
+                out.append(e.value)
+            return tuple(out)
+        return None
+    return ()
+
+
+def _functions(tree: ast.Module):
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield None, node
+        elif isinstance(node, ast.ClassDef):
+            for sub in node.body:
+                if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    yield node.name, sub
+
+
+class _Factory:
+    """A function returning ``jax.jit(inner, donate_argnums=...)``."""
+
+    def __init__(self, name: str, params: List[str],
+                 donate: Tuple[int, ...], closes_over: Set[str]):
+        self.name = name
+        self.params = params            # positional params, self excluded
+        self.donate = donate
+        self.closes_over = closes_over  # params the traced fn references
+
+
+def _collect_factories(tree: ast.Module) -> Dict[str, _Factory]:
+    """Factory name -> closure/donation facts, across the module."""
+    out: Dict[str, _Factory] = {}
+    for _cls, fn in _functions(tree):
+        jit_call: Optional[ast.Call] = None
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                d = _donate_positions(node)
+                if d is not None:
+                    jit_call = node
+                    donate = d
+                    break
+        if jit_call is None:
+            continue
+        params = [a.arg for a in fn.args.args if a.arg != "self"]
+        inner_name = (jit_call.args[0].id
+                      if jit_call.args and isinstance(jit_call.args[0],
+                                                      ast.Name) else None)
+        closes: Set[str] = set()
+        for node in ast.walk(fn):
+            if (isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+                    and node.name == inner_name):
+                refs = {n.id for n in ast.walk(node)
+                        if isinstance(n, ast.Name)}
+                inner_params = {a.arg for a in node.args.args}
+                closes = (refs & set(params)) - inner_params
+                break
+        out[fn.name] = _Factory(fn.name, params, donate, closes)
+    return out
+
+
+def _cache_attr(expr: ast.AST) -> Optional[str]:
+    """``C`` when expr subscripts/gets an attr named ``*_cache``/``*_fns``."""
+    p = attr_path(expr)
+    if p is not None and ("_cache" in p[-1] or p[-1].endswith("_fns")):
+        return p[-1]
+    return None
+
+
+def _expr_names(expr: ast.AST) -> Set[str]:
+    return {n.id for n in ast.walk(expr) if isinstance(n, ast.Name)}
+
+
+def _contains_expr(haystack: ast.AST, needle: ast.AST) -> bool:
+    """Structural containment: some subexpression of ``haystack`` dumps
+    identically to ``needle``."""
+    want = ast.dump(needle)
+    return any(ast.dump(n) == want for n in ast.walk(haystack))
+
+
+class _FnState:
+    """Per-function resolution state for both checks."""
+
+    def __init__(self) -> None:
+        self.assigns: Dict[str, ast.AST] = {}   # local -> last RHS expr
+        self.donating: Dict[str, Tuple[int, ...]] = {}  # local -> positions
+
+    def resolve(self, name: str) -> Optional[ast.AST]:
+        return self.assigns.get(name)
+
+
+def _maker_call(expr: ast.AST, state: _FnState,
+                factories: Dict[str, _Factory]) -> Optional[ast.Call]:
+    """Resolve an expression to the underlying ``self._make_*(...)`` call:
+    direct calls, ``fn.lower(...).compile()`` chains (via the local
+    ``fn``), and plain local references."""
+    if isinstance(expr, ast.Name):
+        expr = state.resolve(expr.id) or expr
+    seen = 0
+    while isinstance(expr, ast.Call) and seen < 8:
+        seen += 1
+        p = attr_path(expr.func)
+        if p is not None and p[-1] in factories:
+            return expr
+        # fn.lower(...).compile(): walk down the func chain to the root
+        if isinstance(expr.func, ast.Attribute):
+            base = expr.func.value
+            if isinstance(base, ast.Name):
+                base = state.resolve(base.id) or base
+            expr = base
+            continue
+        break
+    if isinstance(expr, ast.Name):
+        resolved = state.resolve(expr.id)
+        if resolved is not None and resolved is not expr:
+            return _maker_call(resolved, state, factories)
+    return None
+
+
+def _donate_info(expr: ast.AST, state: _FnState,
+                 factories: Dict[str, _Factory],
+                 cache_donates: Dict[str, Tuple[int, ...]],
+                 ) -> Optional[Tuple[int, ...]]:
+    """Donated positions of the program an expression evaluates to."""
+    d = _donate_positions(expr) if isinstance(expr, ast.Call) else None
+    if d:
+        return d
+    if isinstance(expr, ast.Call):
+        p = attr_path(expr.func)
+        if p is not None:
+            if p[-1] in factories and factories[p[-1]].donate:
+                return factories[p[-1]].donate
+            if p[-1] == "get" and len(p) >= 2:
+                c = p[-2]
+                if ("_cache" in c or c.endswith("_fns")) \
+                        and cache_donates.get(c):
+                    return cache_donates[c]
+    if isinstance(expr, ast.Subscript):
+        c = _cache_attr(expr.value)
+        if c is not None and cache_donates.get(c):
+            return cache_donates[c]
+    return None
+
+
+def _iter_stmts(body: Sequence[ast.stmt]):
+    """Statements in source order, recursing into compound bodies."""
+    for stmt in body:
+        yield stmt
+        for field in ("body", "orelse", "finalbody"):
+            yield from _iter_stmts(getattr(stmt, field, []) or [])
+        for h in getattr(stmt, "handlers", []) or []:
+            yield from _iter_stmts(h.body)
+
+
+_SIMPLE_STMTS = (ast.Assign, ast.AnnAssign, ast.AugAssign, ast.Expr,
+                 ast.Return)
+
+
+def _check_use_after_donate(src: ModuleSource, scope: str, fn: ast.AST,
+                            factories: Dict[str, _Factory],
+                            cache_donates: Dict[str, Tuple[int, ...]],
+                            attr_donates: Dict[str, Tuple[int, ...]],
+                            findings: List[Finding]) -> None:
+    state = _FnState()
+    stmts = [s for s in _iter_stmts(fn.body)
+             if not isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef))]
+    for idx, stmt in enumerate(stmts):
+        if isinstance(stmt, ast.Assign):
+            for t in stmt.targets:
+                if isinstance(t, ast.Name):
+                    state.assigns[t.id] = stmt.value
+        if not isinstance(stmt, _SIMPLE_STMTS):
+            continue    # compound statements: their bodies are yielded
+        #                 separately by _iter_stmts — don't double-scan
+        # find calls OF donating programs inside this statement (calls of a
+        # factory only *build* a program — they donate nothing themselves)
+        for node in ast.walk(stmt):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if not isinstance(node, ast.Call):
+                continue
+            donate = None
+            if isinstance(node.func, ast.Name):
+                rhs = state.resolve(node.func.id)
+                if rhs is not None:
+                    donate = _donate_info(rhs, state, factories,
+                                          cache_donates)
+            else:
+                p = attr_path(node.func)
+                if p is not None and p[-1] in attr_donates:
+                    donate = attr_donates[p[-1]]
+            if not donate:
+                continue
+            rebound = assign_target_paths(stmt)
+            for pos in donate:
+                if pos >= len(node.args):
+                    continue
+                path = attr_path(node.args[pos])
+                if path is None or path in rebound:
+                    continue
+                # scan subsequent statements for a load before a store
+                for later in stmts[idx + 1:]:
+                    stores = assign_target_paths(later)
+                    loaded = None
+                    for n in ast.walk(later):
+                        q = attr_path(n)
+                        if (q == path and isinstance(n, (ast.Attribute,
+                                                         ast.Name))
+                                and isinstance(getattr(n, "ctx", None),
+                                               ast.Load)):
+                            loaded = n
+                            break
+                    if loaded is not None:
+                        dotted = ".".join(path)
+                        if not src.allowed(loaded.lineno, PASS):
+                            findings.append(Finding(
+                                src.rel, loaded.lineno, PASS, scope, dotted,
+                                f"`{dotted}` used after being donated to a "
+                                f"jitted call (donate_argnums position "
+                                f"{pos}) in `{scope}` — the buffer is "
+                                f"invalidated; rebind it from the call's "
+                                f"result first"))
+                        break
+                    if path in stores:
+                        break
+
+
+def _check_cache_keys(src: ModuleSource, scope: str, fn: ast.AST,
+                      factories: Dict[str, _Factory],
+                      findings: List[Finding]) -> None:
+    state = _FnState()
+    for stmt in _iter_stmts(fn.body):
+        if isinstance(stmt, ast.Assign):
+            for t in stmt.targets:
+                if isinstance(t, ast.Name):
+                    state.assigns[t.id] = stmt.value
+            for t in stmt.targets:
+                if not isinstance(t, ast.Subscript):
+                    continue
+                cache = _cache_attr(t.value)
+                if cache is None:
+                    continue
+                maker = _maker_call(stmt.value, state, factories)
+                if maker is None:
+                    continue
+                fac = factories[attr_path(maker.func)[-1]]
+                key = t.slice
+                if isinstance(key, ast.Name):
+                    key = state.resolve(key.id) or key
+                for param in sorted(fac.closes_over):
+                    try:
+                        pos = fac.params.index(param)
+                    except ValueError:
+                        continue
+                    if pos >= len(maker.args):
+                        continue
+                    arg = maker.args[pos]
+                    if not _contains_expr(key, arg):
+                        if not src.allowed(stmt.lineno, PASS):
+                            findings.append(Finding(
+                                src.rel, stmt.lineno, PASS, scope,
+                                f"{cache}:{param}",
+                                f"cache `self.{cache}` key omits `{param}` "
+                                f"(bound to `{ast.unparse(arg)}`), which "
+                                f"the traced function in "
+                                f"`{fac.name}` closes over — stale "
+                                f"programs will be served for other "
+                                f"values"))
+
+
+def _collect_attr_donates(tree: ast.Module) -> Dict[str, Tuple[int, ...]]:
+    """Attrs assigned ``jax.jit(..., donate_argnums=...)`` directly
+    (``self._swap_fn = jax.jit(swap, donate_argnums=(0,))``)."""
+    out: Dict[str, Tuple[int, ...]] = {}
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Assign)
+                and isinstance(node.value, ast.Call)):
+            continue
+        d = _donate_positions(node.value)
+        if not d:
+            continue
+        for t in node.targets:
+            p = attr_path(t)
+            if p is not None and len(p) >= 2:
+                out[p[-1]] = d
+    return out
+
+
+def _collect_cache_donates(tree: ast.Module, factories: Dict[str, _Factory],
+                           ) -> Dict[str, Tuple[int, ...]]:
+    """cache attr -> donate positions of the programs stored in it."""
+    out: Dict[str, Tuple[int, ...]] = {}
+    for _cls, fn in _functions(tree):
+        state = _FnState()
+        for stmt in _iter_stmts(fn.body):
+            if not isinstance(stmt, ast.Assign):
+                continue
+            for t in stmt.targets:
+                if isinstance(t, ast.Name):
+                    state.assigns[t.id] = stmt.value
+            for t in stmt.targets:
+                if not isinstance(t, ast.Subscript):
+                    continue
+                cache = _cache_attr(t.value)
+                if cache is None:
+                    continue
+                maker = _maker_call(stmt.value, state, factories)
+                if maker is not None:
+                    fac = factories[attr_path(maker.func)[-1]]
+                    if fac.donate:
+                        out[cache] = fac.donate
+                    continue
+                value = stmt.value
+                if isinstance(value, ast.Name):
+                    value = state.resolve(value.id) or value
+                if isinstance(value, ast.Call):
+                    d = _donate_positions(value)
+                    if d:
+                        out[cache] = d
+    return out
+
+
+def run(src: ModuleSource) -> List[Finding]:
+    """Run the pass over one module; returns its findings."""
+    findings: List[Finding] = []
+    factories = _collect_factories(src.tree)
+    cache_donates = _collect_cache_donates(src.tree, factories)
+    attr_donates = _collect_attr_donates(src.tree)
+    for cls, fn in _functions(src.tree):
+        scope = f"{cls}.{fn.name}" if cls else fn.name
+        _check_use_after_donate(src, scope, fn, factories, cache_donates,
+                                attr_donates, findings)
+        _check_cache_keys(src, scope, fn, factories, findings)
+    return findings

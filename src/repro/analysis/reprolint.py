@@ -1,0 +1,93 @@
+"""``reprolint`` — the repo's concurrency / JAX-discipline analyzer.
+
+Orchestrates the three AST passes over a source tree and diffs the
+result against a checked-in baseline:
+
+  * :mod:`repro.analysis.guarded_by` — guarded fields only under their lock,
+  * :mod:`repro.analysis.host_sync`  — no stray device readbacks on hot paths,
+  * :mod:`repro.analysis.jit_hygiene` — no use-after-donate, complete
+    jit-cache keys.
+
+The baseline file (``.lint-baseline.json``) lists *grandfathered* finding
+keys (line-number-free, so unrelated edits don't churn them).  The CI
+``lint`` lane fails on any finding not in the baseline; baselined
+findings that no longer fire are reported as stale, so the file only ever
+shrinks.  ``scripts/run_lint.py`` is the CLI.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from . import guarded_by, host_sync, jit_hygiene
+from .annotations import Finding, ModuleSource
+
+PASSES = (guarded_by, host_sync, jit_hygiene)
+
+
+def lint_source(source: str, rel: str = "<memory>",
+                passes: Iterable = PASSES) -> List[Finding]:
+    """Lint one in-memory module (the test-fixture entry point)."""
+    src = ModuleSource(path=rel, rel=rel, source=source)
+    findings: List[Finding] = []
+    for p in passes:
+        findings.extend(p.run(src))
+    return sorted(findings, key=lambda f: (f.file, f.line, f.pass_name))
+
+
+def lint_file(path: str, rel: Optional[str] = None) -> List[Finding]:
+    """Lint one on-disk module."""
+    return lint_source(open(path, encoding="utf-8").read(), rel or path)
+
+
+def lint_tree(root: str, subdir: str = "src/repro") -> Tuple[List[Finding],
+                                                             int, int]:
+    """Lint every ``*.py`` under ``root/subdir``.
+
+    Returns ``(findings, files_scanned, allow_comments)`` — the allow
+    count is surfaced so "zero suppressions" stays a checkable claim."""
+    findings: List[Finding] = []
+    scanned = allows = 0
+    base = os.path.join(root, subdir)
+    for dirpath, _dirs, files in os.walk(base):
+        for name in sorted(files):
+            if not name.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, name)
+            rel = os.path.relpath(path, root).replace(os.sep, "/")
+            src = ModuleSource(path=path, rel=rel)
+            scanned += 1
+            allows += src.allow_count()
+            for p in PASSES:
+                findings.extend(p.run(src))
+    return (sorted(findings, key=lambda f: (f.file, f.line, f.pass_name)),
+            scanned, allows)
+
+
+def load_baseline(path: str) -> List[str]:
+    """Grandfathered finding keys from a baseline file ([] if absent)."""
+    if not os.path.exists(path):
+        return []
+    data = json.load(open(path, encoding="utf-8"))
+    return list(data.get("findings", []))
+
+
+def save_baseline(path: str, findings: Iterable[Finding]) -> None:
+    """Write the current findings as the new baseline."""
+    keys = sorted({f.key for f in findings})
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump({"version": 1, "findings": keys}, fh, indent=2)
+        fh.write("\n")
+
+
+def diff_baseline(findings: List[Finding],
+                  baseline: Iterable[str]) -> Dict[str, List]:
+    """Split findings into new vs grandfathered; list stale baseline keys."""
+    base = set(baseline)
+    current = {f.key for f in findings}
+    return {
+        "new": [f for f in findings if f.key not in base],
+        "grandfathered": [f for f in findings if f.key in base],
+        "stale": sorted(base - current),
+    }

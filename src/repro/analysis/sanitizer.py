@@ -1,0 +1,236 @@
+"""Runtime lock-order sanitizer (opt-in via ``REPRO_SANITIZE=1``).
+
+The static ``guarded-by`` pass proves that guarded state is touched under
+its owning lock; it cannot prove that two locks are always taken in the
+same ORDER.  This module closes that gap at runtime: every named lock the
+stack creates through :func:`named_lock` is (when sanitizing is enabled)
+wrapped in a proxy that records the lock-acquisition graph — an edge
+``A -> B`` means some thread acquired ``B`` while holding ``A`` — and
+raises :class:`LockOrderError` the moment an acquisition would close a
+cycle, instead of letting the inversion ride until the day two threads
+interleave into a real deadlock.
+
+Design notes:
+
+  * **Per-instance names.**  Two ``Engine`` instances' ``_lock``\\ s are
+    different vertices (``engine._lock#1`` vs ``engine._lock#2``): engine
+    A pulling a shared prefix from engine B nests the two instances'
+    locks legitimately, and only a genuine A→B→A instance cycle is a
+    deadlock.  The base name still makes reports readable.
+  * **Check before block.**  The cycle test runs before the underlying
+    ``acquire`` — an actual inversion raises deterministically rather
+    than deadlocking the test run.
+  * **Condition-compatible.**  The proxy implements ``_release_save`` /
+    ``_acquire_restore`` / ``_is_owned``, so ``threading.Condition``
+    built over a sanitized lock keeps the held-set truthful across
+    ``wait()`` (the lock really is released while waiting).
+  * **Zero overhead when off.**  With ``REPRO_SANITIZE`` unset,
+    :func:`named_lock` returns a plain ``threading.Lock``/``RLock`` —
+    the serving path pays nothing.
+
+The fast CI lane runs the whole test suite under ``REPRO_SANITIZE=1``,
+so any lock-order inversion introduced by a PR fails deterministically.
+"""
+from __future__ import annotations
+
+import itertools
+import os
+import sys
+import threading
+from typing import Dict, List, Optional, Set, Tuple
+
+
+class LockOrderError(RuntimeError):
+    """An acquisition would close a cycle in the lock-order graph."""
+
+
+def enabled() -> bool:
+    """True when ``REPRO_SANITIZE`` opts this process into sanitizing."""
+    return os.environ.get("REPRO_SANITIZE", "").lower() in ("1", "true", "on")
+
+
+# -- global acquisition graph --------------------------------------------------
+_graph_lock = threading.Lock()
+_edges: Dict[str, Set[str]] = {}            # held -> acquired-while-held
+_edge_sites: Dict[Tuple[str, str], str] = {}  # first site that drew the edge
+_counters: Dict[str, "itertools.count"] = {}
+_tls = threading.local()
+
+
+def _held() -> List[List]:
+    """This thread's stack of [lock, recursion-count] entries."""
+    stack = getattr(_tls, "held", None)
+    if stack is None:
+        stack = _tls.held = []
+    return stack
+
+
+def reset() -> None:
+    """Forget the recorded graph (test isolation)."""
+    with _graph_lock:
+        _edges.clear()
+        _edge_sites.clear()
+        _counters.clear()
+
+
+def edges() -> Dict[str, Set[str]]:
+    """Snapshot of the recorded acquisition DAG (name -> successors)."""
+    with _graph_lock:
+        return {a: set(bs) for a, bs in _edges.items()}
+
+
+def _find_path(src: str, dst: str) -> Optional[List[str]]:
+    """DFS path src -> dst through the recorded edges (caller holds
+    ``_graph_lock``)."""
+    stack, seen = [(src, [src])], {src}
+    while stack:
+        node, path = stack.pop()
+        if node == dst:
+            return path
+        for nxt in _edges.get(node, ()):
+            if nxt not in seen:
+                seen.add(nxt)
+                stack.append((nxt, path + [nxt]))
+    return None
+
+
+def _caller_site() -> str:
+    f = sys._getframe(3)
+    return f"{f.f_code.co_filename}:{f.f_lineno}"
+
+
+def _record_acquire(lock: "_SanitizedLock") -> None:
+    """Add edges held-locks -> ``lock``; raise on cycle formation."""
+    stack = _held()
+    for entry in stack:
+        if entry[0] is lock:
+            if not lock.reentrant:
+                raise LockOrderError(
+                    f"non-reentrant lock {lock.name!r} re-acquired by the "
+                    f"thread already holding it (self-deadlock)")
+            entry[1] += 1
+            return
+    site = _caller_site()
+    with _graph_lock:
+        for entry in stack:
+            a, b = entry[0].name, lock.name
+            if b in _edges.get(a, ()):
+                continue
+            back = _find_path(b, a)
+            if back is not None:
+                cycle = " -> ".join(back + [b])
+                hints = "; ".join(
+                    f"{x}->{y} first seen at {_edge_sites[(x, y)]}"
+                    for x, y in zip(back, back[1:])
+                    if (x, y) in _edge_sites)
+                raise LockOrderError(
+                    f"lock-order inversion: acquiring {b!r} while holding "
+                    f"{a!r} closes the cycle [{cycle}] (this acquisition: "
+                    f"{site}{'; ' + hints if hints else ''})")
+            _edges.setdefault(a, set()).add(b)
+            _edge_sites[(a, b)] = site
+    stack.append([lock, 1])
+
+
+def _record_release(lock: "_SanitizedLock") -> None:
+    stack = _held()
+    for i in range(len(stack) - 1, -1, -1):
+        if stack[i][0] is lock:
+            stack[i][1] -= 1
+            if stack[i][1] == 0:
+                del stack[i]
+            return
+
+
+class _SanitizedLock:
+    """Lock proxy that feeds the acquisition graph.
+
+    Wraps a real ``threading.Lock``/``RLock``; exposes the full lock
+    protocol plus the private Condition hooks so it can back a
+    ``threading.Condition``."""
+
+    def __init__(self, inner, name: str, reentrant: bool):
+        self._inner = inner
+        self.name = name
+        self.reentrant = reentrant
+
+    def acquire(self, blocking: bool = True, timeout: float = -1) -> bool:
+        _record_acquire(self)
+        got = self._inner.acquire(blocking, timeout)
+        if not got:
+            _record_release(self)
+        return got
+
+    def release(self) -> None:
+        self._inner.release()
+        _record_release(self)
+
+    __enter__ = acquire
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+    def locked(self) -> bool:
+        return self._inner.locked()
+
+    # -- threading.Condition integration --------------------------------------
+    def _release_save(self):
+        stack = _held()
+        count = 0
+        for i in range(len(stack) - 1, -1, -1):
+            if stack[i][0] is self:
+                count = stack[i][1]
+                del stack[i]
+                break
+        if hasattr(self._inner, "_release_save"):
+            return (self._inner._release_save(), count)
+        self._inner.release()
+        return (None, count)
+
+    def _acquire_restore(self, saved) -> None:
+        state, count = saved
+        if hasattr(self._inner, "_acquire_restore"):
+            self._inner._acquire_restore(state)
+        else:
+            self._inner.acquire()
+        # re-entering the held set after a wait(): same cycle check as a
+        # fresh acquisition (the thread may hold other locks — it should
+        # not, and the graph will say so)
+        stack = _held()
+        site_guard = [self, max(1, count)]
+        with _graph_lock:
+            for entry in stack:
+                a, b = entry[0].name, self.name
+                if b not in _edges.get(a, ()):
+                    _edges.setdefault(a, set()).add(b)
+                    _edge_sites[(a, b)] = "condition-wait-reacquire"
+        stack.append(site_guard)
+
+    def _is_owned(self) -> bool:
+        if hasattr(self._inner, "_is_owned"):
+            return self._inner._is_owned()
+        return any(e[0] is self for e in _held())
+
+    def __repr__(self) -> str:  # pragma: no cover — debugging aid
+        return f"<SanitizedLock {self.name} wrapping {self._inner!r}>"
+
+
+def wrap(inner, name: str, *, reentrant: bool = False):
+    """Wrap an existing lock object under ``name`` (always sanitized —
+    used by tests; production code goes through :func:`named_lock`)."""
+    with _graph_lock:
+        seq = _counters.setdefault(name, itertools.count(1))
+    return _SanitizedLock(inner, f"{name}#{next(seq)}", reentrant)
+
+
+def named_lock(name: str, *, reentrant: bool = False):
+    """Create the lock the runtime modules use for their named locks.
+
+    Returns a plain ``threading.Lock`` (or ``RLock`` when ``reentrant``)
+    unless ``REPRO_SANITIZE`` is set, in which case the lock is wrapped
+    in the order-checking proxy under a per-instance name
+    (``"<name>#<seq>"``)."""
+    inner = threading.RLock() if reentrant else threading.Lock()
+    if not enabled():
+        return inner
+    return wrap(inner, name, reentrant=reentrant)

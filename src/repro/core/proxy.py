@@ -38,6 +38,7 @@ import uuid
 from collections import deque
 from typing import Any, Dict, Iterator, List, Optional, Protocol, Tuple
 
+from repro.analysis.sanitizer import named_lock
 from repro.core import providers as P
 from repro.core import tokenizer as tok
 from repro.core.types import CompletionRecord, CompletionSession
@@ -119,8 +120,8 @@ class ProxyStream:
         self._parser = tok.StreamParser()
         self._pending: deque = deque(self._encoder.start())
         self._tool_count = 0
-        self._final_lock = threading.Lock()
-        self._finalized = False
+        self._final_lock = named_lock("proxy_stream._final_lock")
+        self._finalized = False  # guarded-by: _final_lock
         self.record: Optional[CompletionRecord] = None
         proxy._register_stream(session_id, backend_stream)
 
@@ -216,17 +217,21 @@ class ProxyGateway:
         self.backend = backend
         self.model_name = model_name
         self.spill_dir = spill_dir
-        self.spill_errors = 0
+        self.spill_errors = 0  # guarded-by: _lock
         if spill_dir is not None:
             os.makedirs(spill_dir, exist_ok=True)
-        self._sessions: Dict[str, CompletionSession] = {}
-        self._prefix: Dict[str, Dict[str, int]] = {}   # per-session hit stats
-        self._prefix_total = {"requests": 0, "prompt_tokens": 0,
+        self._sessions: Dict[str, CompletionSession] = {}  # guarded-by: _lock
+        # per-session hit stats; guarded-by: _lock
+        self._prefix: Dict[str, Dict[str, int]] = {}
+        self._prefix_total = {"requests": 0, "prompt_tokens": 0,  # guarded-by: _lock
                               "cached_tokens": 0}
-        self._version_total: Dict[int, int] = {}       # records per version
-        self._swap_straddles = 0       # records spanning a mid-flight swap
-        self._streams: Dict[str, List[Any]] = {}       # in-flight per session
-        self._lock = threading.Lock()
+        # records per version; guarded-by: _lock
+        self._version_total: Dict[int, int] = {}
+        # records spanning a mid-flight swap; guarded-by: _lock
+        self._swap_straddles = 0
+        # in-flight per session; guarded-by: _lock
+        self._streams: Dict[str, List[Any]] = {}
+        self._lock = named_lock("proxy._lock")
 
     # -- session registry ---------------------------------------------------
     def session(self, session_id: str) -> CompletionSession:

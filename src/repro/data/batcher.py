@@ -22,6 +22,7 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.analysis.sanitizer import named_lock
 from repro.core.types import SessionResult, Trace
 from repro.data.packing import PackedBatch, pack_traces
 
@@ -51,10 +52,10 @@ class GroupBatcher:
         # multi-trainer guard: when set, results stamped with a different
         # trainer_id are dropped (zero cross-trainer leakage into batches)
         self.owner = owner
-        self._groups: Dict[str, _Group] = {}
-        self._lock = threading.Lock()
+        self._groups: Dict[str, _Group] = {}  # guarded-by: _lock
+        self._lock = named_lock("group_batcher._lock")
         self._ready = threading.Condition(self._lock)
-        self.stats = {"results": 0, "groups_emitted": 0, "groups_skipped": 0,
+        self.stats = {"results": 0, "groups_emitted": 0, "groups_skipped": 0,  # guarded-by: _lock
                       "traces_stale_dropped": 0, "results_foreign_dropped": 0,
                       # histogram of (current_version - trace version) over
                       # consumed traces: the trainer-side staleness picture
@@ -84,8 +85,9 @@ class GroupBatcher:
     def _quorum(self, g: _Group) -> int:
         return max(1, int(np.ceil(g.expected * self.quorum_fraction)))
 
-    def ready_groups(self) -> List[_Group]:
-        """Unconsumed groups that have reached quorum."""
+    def ready_groups(self) -> List[_Group]:  # holds: _lock
+        """Unconsumed groups that have reached quorum (caller holds the
+        lock — ``wait_for_groups`` / ``next_batch`` call this inside it)."""
         return [g for g in self._groups.values()
                 if not g.consumed and len(g.results) >= self._quorum(g)]
 
@@ -102,7 +104,7 @@ class GroupBatcher:
             return True
 
     # -- advantage computation + batch emission ---------------------------------
-    def _group_traces(self, g: _Group,
+    def _group_traces(self, g: _Group,  # holds: _lock
                       current_version: Optional[int]) -> List[Tuple[Trace, float]]:
         rewards = np.array([r.reward if r.reward is not None else 0.0
                             for r in g.results], np.float32)

@@ -47,6 +47,7 @@ from typing import Any, Callable, Dict, Iterator, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.sanitizer import named_lock
 from repro.configs.base import ModelConfig
 from repro.core import tokenizer as tok
 from repro.models import registry as M
@@ -259,13 +260,16 @@ class Engine:
         # the version whose params are actually live on device — lags
         # policy_version between an update_weights() stage and the
         # scheduler's next step boundary (identical in serial mode)
-        self._applied_version = 0
-        self._staged_weights = None            # (params, version) or None
-        self._lock = threading.Lock()          # params / version / rng / stats
-        self._compile_lock = threading.Lock()  # _gen_cache population
+        self._applied_version = 0              # guarded-by: _lock
+        # (params, version) or None; guarded-by: _lock
+        self._staged_weights = None
+        # params / version / rng / stats
+        self._lock = named_lock("engine._lock")
+        # _gen_cache population (double-checked: first read is lock-free)
+        self._compile_lock = named_lock("engine._compile_lock")
         self._gen_cache: Dict[Any, Any] = {}
-        self._sched_lock = threading.Lock()
-        self._scheduler = None
+        self._sched_lock = named_lock("engine._sched_lock")
+        self._scheduler = None                 # guarded-by: _sched_lock
         self._closed = False
         self._sched_opts = dict(block_size=block_size, max_batch=max_batch,
                                 num_blocks=num_blocks,
@@ -284,7 +288,7 @@ class Engine:
         #     index learns this engine holds it
         self.prefix_resolver: Optional[Callable] = None
         self.prefix_publish_hook: Optional[Callable] = None
-        self.stats = {
+        self.stats = {  # guarded-by: _lock
             "requests": 0, "prompt_tokens": 0, "sampled_tokens": 0,
             # hot-swap telemetry (see update_weights)
             "weight_swaps": 0, "swap_ms_total": 0.0, "last_swap_ms": 0.0,

@@ -549,6 +549,7 @@ class PagedKVCache:
         self.allocator.free(seq_id)
 
     # -- cross-node shared-prefix payloads ------------------------------------
+    # cold-path: once per cross-node prefix handoff, readbacks budgeted
     def export_prefix_payload(self, tokens: Sequence[int]):
         """Serialize this cache's longest cached prefix of ``tokens`` into a
         host payload (``{"tokens", "block_size", "k", "v"}``, numpy arrays
@@ -568,7 +569,7 @@ class PagedKVCache:
             "v": jax.device_get(jnp.take(self.vp, idx, axis=1)),
         }
 
-    def import_prefix_payload(self, payload) -> int:
+    def import_prefix_payload(self, payload) -> int:  # cold-path
         """Make a peer's exported prefix payload resident in THIS cache and
         publish it into the local prefix index, so the next admission of a
         prompt sharing the prefix is a warm hit (``cached_tokens > 0``)
@@ -601,6 +602,7 @@ class PagedKVCache:
         self.allocator.free(seq_id)
         return pinned * bs
 
+    # hot-path: device-side scatter, no host readbacks
     def _scatter_host(self, hk: np.ndarray, hv: np.ndarray,
                       blocks: Sequence[int]) -> None:
         """Write host block arrays ``[L, n, bs, Hkv, D]`` into pool blocks
@@ -685,7 +687,7 @@ class KVChain:
             return 2 * self.num_blocks * per * self.src.kp.dtype.itemsize
         return int(self.host_k.nbytes + self.host_v.nbytes)
 
-    def to_host(self) -> "KVChain":
+    def to_host(self) -> "KVChain":  # cold-path: serde detach, one readback
         """Detach the chain from its source pool into numpy block arrays
         (the serde form).  One device readback; the result no longer pins
         any pool state and survives the source sequence being freed."""
@@ -711,7 +713,7 @@ class ImportResult:
     nbytes: int
 
 
-def export_chain(cache: PagedKVCache, seq_id,
+def export_chain(cache: PagedKVCache, seq_id,  # hot-path: pure accounting
                  tokens: Sequence[int]) -> KVChain:
     """Seal a prefilled sequence's prompt blocks into a ``KVChain``.
 
@@ -728,7 +730,7 @@ def export_chain(cache: PagedKVCache, seq_id,
                    blocks=owned[:nb], src=cache)
 
 
-def import_chain(dst: PagedKVCache, chain: KVChain, seq_id,
+def import_chain(dst: PagedKVCache, chain: KVChain, seq_id,  # hot-path
                  total_len: int) -> Optional[ImportResult]:
     """Make a chain resident in ``dst`` under ``seq_id``, reserving the
     sequence's full decode budget (``total_len``) at admission — the decode

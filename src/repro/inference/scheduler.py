@@ -106,6 +106,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.sanitizer import named_lock
 from repro.core import tokenizer as tok
 from repro.inference.paged_kv import (PagedKVCache, cdiv, export_chain,
                                       import_chain)
@@ -236,7 +237,7 @@ class ContinuousBatchingScheduler:
         self.cache = self._new_cache()
         self.dcache = (self.cache if tiers == 1
                        else self._new_cache(prefix=False))
-        self._queue: Deque[SchedRequest] = deque()
+        self._queue: Deque[SchedRequest] = deque()  # guarded-by: _qlock
         self._prefilling: Deque[SchedRequest] = deque()
         # sealed chains waiting for decode-pool admission (FIFO; only ever
         # non-empty in tiered mode when the decode pool is momentarily full)
@@ -245,8 +246,8 @@ class ContinuousBatchingScheduler:
         # host callbacks to run at the next step boundary (shared-prefix
         # export/import — they touch pools/allocators, so they must run on
         # this thread between device calls); (fn, Future) pairs
-        self._boundary_tasks: Deque[Tuple[Any, Future]] = deque()
-        self._qlock = threading.Lock()
+        self._boundary_tasks: Deque[Tuple[Any, Future]] = deque()  # guarded-by: _qlock
+        self._qlock = named_lock("scheduler._qlock")
         self._wake = threading.Event()
         self._stop = threading.Event()
         self._seq_ids = itertools.count()
@@ -535,7 +536,7 @@ class ContinuousBatchingScheduler:
                 len(self._active) + len(self._prefilling))
         self.metrics["weight_swaps"] += 1
 
-    def _swap_buffers(self, old, new):
+    def _swap_buffers(self, old, new):  # cold-path: once per weight swap
         """Copy ``new`` param values into ``old``'s device storage (buffer
         donation), so a swap costs one device-to-device copy and no extra
         peak memory.  Falls back to a plain pointer swap when the trees do
@@ -715,7 +716,7 @@ class ContinuousBatchingScheduler:
         for req in list(self._prefilling):   # FIFO: one chunk each per pass
             self._prefill_chunk_once(req)
 
-    def _prefill_step_batched(self) -> None:
+    def _prefill_step_batched(self) -> None:  # hot-path: ≤1 sync per pass
         """One batched prefill pass: every prefilling request advances one
         chunk, via ONE vmapped program per (bucket, chunk) group (padded to
         a power-of-two row count) and ONE deferred host readback for all
@@ -790,7 +791,7 @@ class ContinuousBatchingScheduler:
                 self._finish_prefill(reqs[i], int(h_toks[i]),
                                      float(h_lps[i]), rngs2[i], pv)
 
-    def _prefill_chunk_once(self, req: SchedRequest) -> None:
+    def _prefill_chunk_once(self, req: SchedRequest) -> None:  # hot-path
         eng = self.engine
         plen = len(req.prompt_ids)
         csz = min(self._effective_chunk(), req.bucket)
@@ -821,10 +822,11 @@ class ContinuousBatchingScheduler:
             return        # more chunks next iterations (the sampled token
         #                   is garbage until the last prompt row exists —
         #                   the host only reads it off the final chunk)
-        t = int(tok0)     # device sync — may raise; until the request is
-        #                   removed in _finish_prefill, _fail_all can still
-        #                   resolve it
-        self._finish_prefill(req, t, float(lp0), rng, pv)
+        # ONE budgeted sync for both outputs via the sanctioned hook — may
+        # raise; until the request is removed in _finish_prefill, _fail_all
+        # can still resolve it
+        tok0, lp0 = self._readback((tok0, lp0))
+        self._finish_prefill(req, int(tok0), float(lp0), rng, pv)
 
     def _publish(self, req: SchedRequest, tokens) -> int:
         """Publish prefill-computed prompt blocks into the prefix index and
@@ -842,6 +844,7 @@ class ContinuousBatchingScheduler:
                     pass
         return pinned
 
+    # hot-path
     def _finish_prefill(self, req: SchedRequest, t: int, lp: float,
                         rng, pv: int) -> None:
         """Join tail shared by the batched and per-request prefill paths:
@@ -872,7 +875,7 @@ class ContinuousBatchingScheduler:
         self._handoff.append(req)
         self._admit_handoff()
 
-    def _admit_handoff(self) -> None:
+    def _admit_handoff(self) -> None:  # hot-path: handoff drain, no syncs
         """Drain the handoff stage in FIFO order: admit each sealed chain
         into the decode pool (full decode reservation), copy its KV when the
         pools differ, free the prefill-side sequence, and join the decode
@@ -978,7 +981,7 @@ class ContinuousBatchingScheduler:
         return jax.jit(chunk, donate_argnums=(1, 2))
 
     # -- step: advance every in-flight sequence one token --------------------
-    def _step_once(self) -> None:
+    def _step_once(self) -> None:  # hot-path: one _readback per decode step
         acts = self._active
         n = len(acts)
         Bb = 1
@@ -1010,8 +1013,10 @@ class ContinuousBatchingScheduler:
             params, cache.kp, cache.vp,
             jnp.asarray(tokens), jnp.asarray(positions), jnp.asarray(bts),
             jnp.stack(rngs))
-        nxt = np.asarray(nxt)
-        lps = np.asarray(lps)
+        # the step's ONE host sync: both outputs in a single transfer via
+        # the sanctioned hook (np.asarray'ing each separately paid two
+        # device round-trips per decoded token — the PR 8 bug class)
+        nxt, lps = self._readback((nxt, lps))
 
         self.metrics["steps"] += 1
         self.metrics["step_slots"] += Bb

@@ -34,6 +34,7 @@ from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field, replace
 from typing import Any, Callable, Dict, List, Optional
 
+from repro.analysis.sanitizer import named_lock
 from repro.core.proxy import InferenceBackend, ProxyGateway
 from repro.core.reconstruct import build as build_trajectory
 from repro.core.types import SessionResult, Trajectory
@@ -44,6 +45,16 @@ from repro.rollout.runtime import Runtime, make_runtime
 from repro.rollout.types import PipelineConfig, Session
 
 _STAGES = ("init", "run", "recon", "eval")
+
+# reprolint guarded-by registry: these GatewayNode fields are touched from
+# stage-worker threads AND the submit/cancel/status client threads
+_GUARDED = {
+    "_live": "_lock",
+    "_cancelled": "_lock",
+    "_busy": "_lock",
+    "metrics": "_lock",
+    "prefix_metrics": "_lock",
+}
 
 
 @dataclass
@@ -113,7 +124,7 @@ class GatewayNode:
         self._stop = threading.Event()
         self._live: Dict[str, _Live] = {}
         self._cancelled: set = set()
-        self._lock = threading.Lock()
+        self._lock = named_lock("gateway._lock")
         self._workers = {s: 0 for s in _STAGES}     # configured per stage
         self._busy = {s: 0 for s in _STAGES}        # currently in stage body
         self.metrics: Dict[str, Any] = {
@@ -189,6 +200,7 @@ class GatewayNode:
             in_flight = {s: l.session.status for s, l in self._live.items()}
             busy = dict(self._busy)
             workers = dict(self._workers)
+            metrics = dict(self.metrics)
         total_workers = sum(workers.values()) or 1
         return {
             "gateway_id": self.gateway_id,
@@ -204,7 +216,7 @@ class GatewayNode:
             "utilization": sum(busy.values()) / total_workers,
             "pool": self.pool.stats() if self.pool is not None else None,
             "backend": self._backend_status(),
-            "metrics": dict(self.metrics),
+            "metrics": metrics,
         }
 
     def _backend_status(self) -> Optional[Dict[str, Any]]:
@@ -217,13 +229,15 @@ class GatewayNode:
         sched = getattr(eng, "scheduler_stats", None)
         if stats is None and sched is None:
             return None
+        with self._lock:
+            shared_prefix = dict(self.prefix_metrics)
         return {
             "stats": dict(stats) if isinstance(stats, dict) else None,
             "scheduler": sched() if callable(sched) else None,
             "prefix": self.proxy.prefix_stats(),
             # shared-prefix resolution counters (None until a service-level
             # index is attached via attach_prefix_service)
-            "shared_prefix": (dict(self.prefix_metrics)
+            "shared_prefix": (shared_prefix
                               if self._prefix_service is not None else None),
             # live policy version + per-version record histogram (hot swaps)
             "policy_version": getattr(eng, "policy_version", None),
@@ -265,7 +279,8 @@ class GatewayNode:
         if self._prefix_service is None:
             return
         self._prefix_service.publish(self._prefix_node, tokens)
-        self.prefix_metrics["shared_prefix_published"] += 1
+        with self._lock:
+            self.prefix_metrics["shared_prefix_published"] += 1
 
     def _resolve_prefix(self, prompt_ids) -> None:
         """Engine pre-submission resolver: when the shared index knows a
@@ -278,26 +293,30 @@ class GatewayNode:
             return
         matched, holders = svc.match(prompt_ids)
         if matched == 0:
-            self.prefix_metrics["shared_prefix_misses"] += 1
+            with self._lock:
+                self.prefix_metrics["shared_prefix_misses"] += 1
             return
         if self._prefix_node in holders:
             # this node already holds the deepest published block — the
             # local prefix cache serves it without any transfer
-            self.prefix_metrics["shared_prefix_hits"] += 1
-            self.prefix_metrics["shared_prefix_local_hits"] += 1
+            with self._lock:
+                self.prefix_metrics["shared_prefix_hits"] += 1
+                self.prefix_metrics["shared_prefix_local_hits"] += 1
             return
         payload = svc.fetch(prompt_ids, exclude=(self._prefix_node,))
         if payload is None:
-            self.prefix_metrics["shared_prefix_misses"] += 1
+            with self._lock:
+                self.prefix_metrics["shared_prefix_misses"] += 1
             return
         imported = self.proxy.backend.import_prefix(payload)
         if imported > 0:
             # this node now holds the prefix too — index it so later
             # sessions (and peers) resolve straight to it
             svc.publish(self._prefix_node, payload["tokens"])
-        self.prefix_metrics["shared_prefix_hits"] += 1
-        self.prefix_metrics["shared_prefix_imports"] += 1
-        self.prefix_metrics["shared_prefix_imported_tokens"] += imported
+        with self._lock:
+            self.prefix_metrics["shared_prefix_hits"] += 1
+            self.prefix_metrics["shared_prefix_imports"] += 1
+            self.prefix_metrics["shared_prefix_imported_tokens"] += imported
 
     def backpressure(self) -> float:
         """Dispatch score: sessions in flight plus queued work, normalized
@@ -375,12 +394,15 @@ class GatewayNode:
         t0 = time.monotonic()
         s = live.session
         try:
-            if s.session_id in self._cancelled:
+            with self._lock:
+                cancelled = s.session_id in self._cancelled
+            if cancelled:
                 self._terminal(live, "cancelled")
                 return False
             live.runtime = self._acquire_runtime(s)
             live.stage_t["init"] = time.monotonic() - t0
-            self.metrics["init_s"] += live.stage_t["init"]
+            with self._lock:
+                self.metrics["init_s"] += live.stage_t["init"]
             self._log_stage(s.session_id, "init", t0)
             s.status = "ready"
             return True
@@ -413,10 +435,11 @@ class GatewayNode:
         s.status = "postrun"
         dt = time.monotonic() - t0
         live.stage_t["run"] = dt
-        self.metrics["run_busy_s"] += dt
+        with self._lock:
+            self.metrics["run_busy_s"] += dt
         self._log_stage(s.session_id, "run", t0)
 
-    def _prewarm(self, s: Session) -> Runtime:
+    def _prewarm(self, s: Session) -> Runtime:  # thread-entry: executor body
         return self._acquire_runtime(s)
 
     def _stage_recon(self, live: _Live) -> None:
@@ -460,7 +483,8 @@ class GatewayNode:
         finally:
             self._release_runtime(s, self._detach_runtime(live))
             live.stage_t["recon"] = time.monotonic() - t0
-            self.metrics["recon_s"] += live.stage_t["recon"]
+            with self._lock:
+                self.metrics["recon_s"] += live.stage_t["recon"]
             self._log_stage(s.session_id, "recon", t0)
 
     def _stage_eval(self, live: _Live) -> None:
@@ -507,7 +531,8 @@ class GatewayNode:
                                if f.exception() is None else None))
             self.proxy.delete_session(s.session_id)
             live.stage_t["eval"] = time.monotonic() - t0
-            self.metrics["eval_s"] += live.stage_t["eval"]
+            with self._lock:
+                self.metrics["eval_s"] += live.stage_t["eval"]
             self._log_stage(s.session_id, "eval", t0)
             self._terminal(live, result.status, result)
 
@@ -534,26 +559,28 @@ class GatewayNode:
             if proceed is not False and dst is not None:
                 dst.put(live)    # blocks when the downstream buffer is full
 
-    def _init_worker(self):
+    def _init_worker(self):  # thread-entry
         self._pump(self._init_q, "init", self._stage_init, self._ready_q)
 
-    def _run_worker(self):
+    def _run_worker(self):  # thread-entry
         def body(live):
             s = live.session
-            if s.session_id in self._cancelled:
+            with self._lock:
+                cancelled = s.session_id in self._cancelled
+            if cancelled:
                 self._terminal(live, "cancelled")
                 return False
             self._stage_run(live)
             return True
         self._pump(self._ready_q, "run", body, self._recon_q)
 
-    def _recon_worker(self):
+    def _recon_worker(self):  # thread-entry
         self._pump(self._recon_q, "recon", self._stage_recon, self._eval_q)
 
-    def _eval_worker(self):
+    def _eval_worker(self):  # thread-entry
         self._pump(self._eval_q, "eval", self._stage_eval)
 
-    def _serial_worker(self):
+    def _serial_worker(self):  # thread-entry
         """Baseline mode: one worker, every stage inline, no prewarm pool."""
         while not self._stop.is_set():
             try:
@@ -563,7 +590,9 @@ class GatewayNode:
             if not self._tracked("init", self._stage_init, live):
                 continue
             s = live.session
-            if s.session_id in self._cancelled:
+            with self._lock:
+                cancelled = s.session_id in self._cancelled
+            if cancelled:
                 self._terminal(live, "cancelled")
                 continue
             self._tracked("run", self._stage_run, live)

@@ -39,6 +39,7 @@ import threading
 import zlib
 from typing import Any, Dict, Iterator, List, Optional, Tuple
 
+from repro.analysis.sanitizer import named_lock
 from repro.core.types import SessionResult, Trace, Trajectory
 from repro.rollout.types import AgentSpec, RuntimeSpec, TaskRequest
 
@@ -66,8 +67,8 @@ class Journal:
         self._q: "queue.Queue[Any]" = queue.Queue(maxsize=max_queue)
         self._poll = poll_interval
         self._closed = False
-        self._lock = threading.Lock()
-        self.counters = {"appended": 0, "written": 0, "batches": 0,
+        self._lock = named_lock("journal._lock")
+        self.counters = {"appended": 0, "written": 0, "batches": 0,  # guarded-by: _lock
                          "bytes": 0, "flushes": 0}
         self._writer = threading.Thread(target=self._write_loop,
                                         name="journal-writer", daemon=True)

@@ -34,6 +34,8 @@ import hashlib
 import threading
 from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 
+from repro.analysis.sanitizer import named_lock
+
 
 def affinity_key(session) -> str:
     """Stable routing key for prefix-affine dispatch: sessions that share
@@ -76,12 +78,12 @@ class SharedPrefixIndex:
         assert block_size > 0 and max_entries > 0
         self.block_size = block_size
         self.max_entries = max_entries
-        self._lock = threading.Lock()
+        self._lock = named_lock("prefix_service._lock")
         self._root = _Node((), None)
-        self._exporters: Dict[str, Optional[Callable]] = {}
-        self._count = 0
-        self._tick = 0
-        self.metrics: Dict[str, int] = {
+        self._exporters: Dict[str, Optional[Callable]] = {}  # guarded-by: _lock
+        self._count = 0  # guarded-by: _lock
+        self._tick = 0  # guarded-by: _lock
+        self.metrics: Dict[str, int] = {  # guarded-by: _lock
             "publishes": 0, "published_blocks": 0, "queries": 0,
             "hits": 0, "fetches": 0, "fetch_failures": 0, "evictions": 0,
         }
@@ -104,7 +106,7 @@ class SharedPrefixIndex:
             self._exporters.pop(node_id, None)
             self._forget(self._root, node_id)
 
-    def _forget(self, node: _Node, node_id: str) -> None:
+    def _forget(self, node: _Node, node_id: str) -> None:  # holds: _lock
         for key, child in list(node.children.items()):
             self._forget(child, node_id)
             child.holders.discard(node_id)
@@ -211,7 +213,7 @@ class SharedPrefixIndex:
         return None
 
     # -- eviction -------------------------------------------------------------
-    def _evict_leaf(self) -> None:
+    def _evict_leaf(self) -> None:  # holds: _lock
         """Drop the least-recently-touched leaf (O(entries) scan — this
         runs once per over-budget publish on the service control plane,
         not on the engines' admission hot path)."""

@@ -25,6 +25,7 @@ from __future__ import annotations
 import threading
 from typing import Callable, Dict, List, Optional, Tuple
 
+from repro.analysis.sanitizer import named_lock
 from repro.rollout.runtime import Runtime, make_runtime
 from repro.rollout.types import RuntimeSpec
 
@@ -34,15 +35,17 @@ class RuntimePrewarmPool:
                  factory: Callable[[RuntimeSpec], Runtime] = make_runtime):
         self._capacity = capacity
         self._factory = factory
-        self._lock = threading.Lock()
+        self._lock = named_lock("prewarm._lock")
         self._wake = threading.Event()
         self._closed = False
-        self._warm: Dict[str, List[Runtime]] = {}
-        # key -> (spec to build from, warm target); registered on first checkout
+        self._warm: Dict[str, List[Runtime]] = {}  # guarded-by: _lock
+        # key -> (spec to build from, warm target); registered on first
+        # checkout; guarded-by: _lock
         self._targets: Dict[str, Tuple[RuntimeSpec, int]] = {}
-        self._epoch: Dict[str, int] = {}
-        self._building = 0            # cold starts in flight on the filler
-        self.stats_counters = {"hits": 0, "misses": 0, "prewarmed": 0,
+        self._epoch: Dict[str, int] = {}  # guarded-by: _lock
+        # cold starts in flight on the filler; guarded-by: _lock
+        self._building = 0
+        self.stats_counters = {"hits": 0, "misses": 0, "prewarmed": 0,  # guarded-by: _lock
                                "returned": 0, "discarded": 0,
                                "invalidated": 0, "renew_failures": 0}
         self._filler = threading.Thread(target=self._fill_loop,
@@ -146,10 +149,10 @@ class RuntimePrewarmPool:
             rt.stop()
 
     # -- background filler ---------------------------------------------------
-    def _total_warm(self) -> int:
+    def _total_warm(self) -> int:  # holds: _lock
         return sum(len(v) for v in self._warm.values()) + self._building
 
-    def _next_deficit(self) -> Optional[Tuple[str, RuntimeSpec, int]]:
+    def _next_deficit(self) -> Optional[Tuple[str, RuntimeSpec, int]]:  # holds: _lock
         """Pick the key furthest below target (must hold the lock)."""
         best = None
         for key, (spec, target) in self._targets.items():

@@ -21,6 +21,7 @@ import time
 from abc import ABC, abstractmethod
 from typing import Dict, Optional, Tuple
 
+from repro.analysis.sanitizer import named_lock
 from repro.rollout.types import RuntimeSpec
 
 
@@ -74,11 +75,11 @@ class LocalRuntime(Runtime):
 
     def __init__(self, spec: RuntimeSpec):
         self.spec = spec
-        self.fs: Dict[str, str] = {}
+        self.fs: Dict[str, str] = {}  # guarded-by: _lock
         self.started = False
         self.cancelled = False
-        self._lock = threading.Lock()
-        self._warm_fs: Optional[Dict[str, str]] = None
+        self._lock = named_lock("local_runtime._lock")
+        self._warm_fs: Optional[Dict[str, str]] = None  # guarded-by: _lock
 
     def start(self) -> None:
         with self._lock:

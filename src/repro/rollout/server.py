@@ -33,6 +33,7 @@ from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Union
 
+from repro.analysis.sanitizer import named_lock
 from repro.core.types import SessionResult
 from repro.rollout import journal as J
 from repro.rollout.admission import DEFAULT_TRAINER, AdmissionController
@@ -112,30 +113,33 @@ class RolloutServer:
         module docstring).  Dispatch becomes prefix-affine either way:
         same-conversation sessions stick to one node before falling back
         to backpressure ranking."""
-        self._tasks: Dict[str, _TaskState] = {}
-        self._nodes: Dict[str, _NodeState] = {}
-        self._session_index: Dict[str, str] = {}   # session_id -> task_id
-        self._hb_stops: Dict[str, threading.Event] = {}
-        self._lock = threading.RLock()
+        self._tasks: Dict[str, _TaskState] = {}  # guarded-by: _lock
+        self._nodes: Dict[str, _NodeState] = {}  # guarded-by: _lock
+        # session_id -> task_id; guarded-by: _lock
+        self._session_index: Dict[str, str] = {}
+        self._hb_stops: Dict[str, threading.Event] = {}  # guarded-by: _lock
+        self._lock = named_lock("rollout_server._lock", reentrant=True)
         # per-trainer fetch wakeups (push/ack notify; naps only backstop
         # time-based redelivery eligibility) — all share the server lock
-        self._fetch_cvs: Dict[str, threading.Condition] = {}
+        self._fetch_cvs: Dict[str, threading.Condition] = {}  # guarded-by: _lock
         self._heartbeat_timeout = heartbeat_timeout
         self._max_attempts = max_session_attempts
         self._admission = AdmissionController(quantum=admission_quantum)
         self._admission.register(DEFAULT_TRAINER, weight=1.0)
         self._admission_limit = admission_limit
         self._redeliver_timeout = redeliver_timeout
-        self._inflight: set = set()     # admitted, not yet terminal
-        self._callback_errors = 0       # swallowed trainer-callback raises
+        # admitted, not yet terminal; guarded-by: _lock
+        self._inflight: set = set()
+        # swallowed trainer-callback raises; guarded-by: _lock
+        self._callback_errors = 0
         # service-level shared prefix index (PR 9) + prefix-affine routing:
         # sticky conversation-key -> node_id LRU consulted before the
         # backpressure min() in _dispatch
         self._prefix_index: Optional[SharedPrefixIndex] = \
             SharedPrefixIndex() if shared_prefix else None
-        self._affinity: "OrderedDict[str, str]" = OrderedDict()
-        self._affinity_hits = 0
-        self._affinity_misses = 0
+        self._affinity: "OrderedDict[str, str]" = OrderedDict()  # guarded-by: _lock
+        self._affinity_hits = 0  # guarded-by: _lock
+        self._affinity_misses = 0  # guarded-by: _lock
         self._stop = threading.Event()
         # -- durability: open the WAL and rebuild state from it BEFORE the
         # monitor starts dispatching anything
@@ -256,7 +260,7 @@ class RolloutServer:
             return True
         return self._journal.flush(timeout)
 
-    def _fetch_cv(self, trainer_id: str) -> threading.Condition:
+    def _fetch_cv(self, trainer_id: str) -> threading.Condition:  # holds: _lock
         """The trainer's fetch-wakeup Condition (caller holds the lock)."""
         cv = self._fetch_cvs.get(trainer_id)
         if cv is None:
@@ -385,15 +389,16 @@ class RolloutServer:
                     pass           # optimization; registration must succeed
         # re-registration (the only way a dead node rejoins): retire the
         # previous heartbeat thread before installing fresh state
-        old_stop = self._hb_stops.pop(gateway.gateway_id, None)
-        if old_stop is not None:
-            old_stop.set()
         with self._lock:
+            old_stop = self._hb_stops.pop(gateway.gateway_id, None)
             self._nodes[gateway.gateway_id] = _NodeState(
                 gateway=gateway, last_heartbeat=time.monotonic())
+        if old_stop is not None:
+            old_stop.set()
         if auto_heartbeat:
             stop = threading.Event()
-            self._hb_stops[gateway.gateway_id] = stop
+            with self._lock:
+                self._hb_stops[gateway.gateway_id] = stop
 
             def _beat():
                 while not stop.is_set() and not self._stop.is_set():
@@ -413,11 +418,11 @@ class RolloutServer:
     def kill_node(self, node_id: str) -> None:
         """Simulate a node failure: stop heartbeats and freeze the gateway.
         The monitor loop detects the missing heartbeat and reschedules."""
-        stop = self._hb_stops.pop(node_id, None)
+        with self._lock:
+            stop = self._hb_stops.pop(node_id, None)
+            st = self._nodes.get(node_id)
         if stop is not None:
             stop.set()
-        with self._lock:
-            st = self._nodes.get(node_id)
         if st is not None:
             st.gateway.shutdown()
 
@@ -479,7 +484,7 @@ class RolloutServer:
         return task.task_id
 
     # -- admission -------------------------------------------------------------
-    def _slots_free(self) -> Optional[int]:
+    def _slots_free(self) -> Optional[int]:  # holds: _lock
         """Admission slots currently open (None = unbounded).  Caller holds
         the lock."""
         limit = self._admission_limit

@@ -23,6 +23,7 @@ from typing import Any, Callable, Dict, List, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.sanitizer import named_lock
 from repro.configs.base import ModelConfig
 from repro.data.batcher import GroupBatcher
 from repro.inference.engine import Engine
@@ -90,16 +91,18 @@ class AsyncGRPOTrainer:
                       "step": jnp.int32(0)}
         self._train_step = jax.jit(make_train_step(cfg, tcfg.grpo, tcfg.adamw))
         self._task_counter = 0
-        self._inflight = 0
-        self._inflight_lock = threading.Lock()
-        self._open_tasks: Dict[str, int] = {}      # task_id -> samples left
+        self._inflight = 0  # guarded-by: _inflight_lock
+        self._inflight_lock = named_lock("trainer._inflight_lock")
+        # task_id -> samples left; guarded-by: _inflight_lock
+        self._open_tasks: Dict[str, int] = {}
         # the open TaskRequests themselves, kept so reconnect() can resubmit
         # any task a restarted server lost (bounded by inflight_tasks)
-        self._open_requests: Dict[str, TaskRequest] = {}
-        self._task_versions: Dict[str, int] = {}   # task_id -> policy_version
+        self._open_requests: Dict[str, TaskRequest] = {}  # guarded-by: _inflight_lock
+        # task_id -> policy_version; guarded-by: _inflight_lock
+        self._task_versions: Dict[str, int] = {}
         # per-open-task redelivery dedupe: dropped with the task, so the
         # memory footprint is bounded by inflight_tasks, not run length
-        self._task_seen: Dict[str, set] = {}
+        self._task_seen: Dict[str, set] = {}  # guarded-by: _inflight_lock
         self.history: List[Dict[str, Any]] = []
         self.ckpt = (CKPT.AsyncCheckpointer(tcfg.ckpt_dir)
                      if tcfg.ckpt_dir else None)
@@ -220,6 +223,9 @@ class AsyncGRPOTrainer:
         with self._inflight_lock:
             self.server = server
             open_ids = list(self._open_tasks)
+            # snapshot under the lock: the ingest thread deletes entries
+            # concurrently as redelivered results close their tasks
+            open_requests = dict(self._open_requests)
         if self.tcfg.use_result_queue:
             server.register_trainer(self.trainer_id, weight=self.tcfg.weight,
                                     stale_policy=self.tcfg.stale_policy)
@@ -227,7 +233,7 @@ class AsyncGRPOTrainer:
             try:
                 server.poll(task_id)
             except KeyError:
-                task = self._open_requests.get(task_id)
+                task = open_requests.get(task_id)
                 if task is not None:
                     server.submit_task(task)
 
